@@ -1,0 +1,58 @@
+//! End-to-end pretraining driver (the EXPERIMENTS.md §E2E run): trains
+//! the dense, SFA and short-embedding variants for a few hundred steps
+//! on the synthetic corpus via the AOT train_step, logs the loss curve,
+//! evaluates held-out PPL, and prints the Table-1-shaped comparison —
+//! all three layers composing (Pallas kernel → JAX model → Rust loop).
+//!
+//! Run: `cargo run --release --example pretrain_e2e -- \
+//!          [artifacts] [steps] [variants,comma,separated]`
+
+use sfa::runtime::Runtime;
+use sfa::train::experiments;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let dir = args.next().unwrap_or_else(|| "artifacts".into());
+    let steps: usize = args.next().map(|s| s.parse().unwrap()).unwrap_or(200);
+    let variants: Vec<String> = args
+        .next()
+        .unwrap_or_else(|| "dense,sfa_k8,sfa_k16,short_d32".into())
+        .split(',')
+        .map(str::to_string)
+        .collect();
+
+    let rt = Runtime::new(&dir)?;
+    println!(
+        "pretraining {} variants for {steps} steps each on the Zipf corpus \
+         (preset {}, {} params/variant)",
+        variants.len(),
+        rt.manifest.preset,
+        rt.manifest
+            .variant(&variants[0])
+            .map(|v| v.params.iter().map(|p| p.numel()).sum::<usize>())
+            .unwrap_or(0),
+    );
+    let (table, reports) = experiments::table1(&rt, &variants, steps, 1e-3, 4)?;
+    table.print();
+
+    // Loss curves (Fig-10-style stability check) to stdout tail + file.
+    let mut log = String::new();
+    for r in &reports {
+        log.push_str(&format!("# {}\n", r.variant));
+        for (i, l) in r.losses.iter().enumerate() {
+            log.push_str(&format!("{i}\t{l}\n"));
+        }
+        let every = (r.losses.len() / 8).max(1);
+        let curve: Vec<String> = r
+            .losses
+            .iter()
+            .step_by(every)
+            .map(|l| format!("{l:.3}"))
+            .collect();
+        println!("loss[{}]: {}", r.variant, curve.join(" -> "));
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/pretrain_loss_curves.tsv", log)?;
+    println!("loss curves written to results/pretrain_loss_curves.tsv");
+    Ok(())
+}

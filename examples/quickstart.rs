@@ -1,0 +1,87 @@
+//! Quickstart: the three-layer stack in one file.
+//!
+//! 1. load the AOT artifacts (L2 JAX model + L1 FlashSFA kernel,
+//!    compiled to HLO by `make artifacts`);
+//! 2. run a few training steps of the SFA variant from Rust;
+//! 3. generate tokens through the serving path (prefill + sparse-KV
+//!    decode);
+//! 4. compare the CPU FlashSFA engine against dense attention on one
+//!    head — the paper's core speed/quality trade in miniature.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sfa::attention::dense::DenseAttention;
+use sfa::attention::flash_dense::FlashDense;
+use sfa::attention::flash_sfa::FlashSfa;
+use sfa::attention::Engine;
+use sfa::coordinator::engine::{Engine as GenEngine, Sampling};
+use sfa::coordinator::request::GenRequest;
+use sfa::runtime::Runtime;
+use sfa::train::corpus::CorpusKind;
+use sfa::train::experiments;
+use sfa::util::matrix::Matrix;
+use sfa::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+
+    // --- 1+2: train the SFA variant for a handful of steps ------------
+    println!("== loading artifacts from {dir:?} and training sfa_k8 ==");
+    let rt = Runtime::new(&dir)?;
+    let (trainer, report) = experiments::train_variant(
+        &rt, "sfa_k8", CorpusKind::Zipf, 5, 1e-3, 42, 1,
+    )?;
+    println!(
+        "5 steps: loss {:.3} -> {:.3} ({:.0} tok/s)",
+        report.losses[0], report.final_loss, report.tokens_per_s
+    );
+    let vocab = rt.manifest.variant("sfa_k8")?.cfg_usize("vocab")?;
+    let ppl = experiments::eval_ppl(&trainer, CorpusKind::Zipf, vocab, 1, 7)?;
+    println!("held-out PPL after 5 steps: {ppl:.1}");
+
+    // --- 3: serving path (prefill + sparse-KV decode) ------------------
+    println!("\n== generating through the SFA serving path ==");
+    let mut engine = GenEngine::new(&rt, "sfa_k8", 1, Sampling::Temperature(1.0), 7)?;
+    let prompt: Vec<i32> = (1..20).map(|i| (i * 3) % vocab as i32).collect();
+    let responses = engine.run_wave(&[GenRequest::new(0, prompt, 12)], 0)?;
+    println!(
+        "generated {:?} (TTFT {:.0}ms, total {:.0}ms)",
+        responses[0].tokens,
+        responses[0].ttft_s * 1e3,
+        responses[0].total_s * 1e3
+    );
+
+    // --- 4: CPU FlashSFA engine vs dense --------------------------------
+    println!("\n== CPU FlashSFA vs dense attention (one head, n=2048, d=128) ==");
+    let mut rng = Rng::new(0);
+    let n = 2048;
+    let d = 128;
+    let q = Matrix::randn(n, d, &mut rng, 1.0);
+    let k = Matrix::randn(n, d, &mut rng, 1.0);
+    let v = Matrix::randn(n, d, &mut rng, 1.0);
+
+    let t0 = std::time::Instant::now();
+    let dense_out = FlashDense::default().forward(&q, &k, &v, true);
+    let t_dense = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let sfa_out = FlashSfa::new(8).forward(&q, &k, &v, true);
+    let t_sfa = t0.elapsed();
+
+    // Quality proxy: how close is SFA's output to exact attention?
+    let exact = DenseAttention.forward(&q, &k, &v, true);
+    let mut err = 0f32;
+    for i in 0..exact.data.len() {
+        err += (sfa_out.data[i] - exact.data[i]).powi(2);
+    }
+    let rel = err.sqrt() / exact.fro_norm();
+    println!(
+        "dense(flash): {:.1}ms | flash_sfa(k=8): {:.1}ms | speedup {:.2}x | \
+         rel. output distance {rel:.3}",
+        t_dense.as_secs_f64() * 1e3,
+        t_sfa.as_secs_f64() * 1e3,
+        t_dense.as_secs_f64() / t_sfa.as_secs_f64(),
+    );
+    let _ = dense_out;
+    println!("\nquickstart OK");
+    Ok(())
+}

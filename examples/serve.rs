@@ -1,0 +1,61 @@
+//! Serving example: the full coordinator stack under a synthetic open
+//! loop — router → batcher → engine workers → AOT prefill/decode with
+//! the (sparse) KV cache. Reports TTFT/TPOT/throughput, comparing the
+//! dense and SFA variants (the Latency columns of paper Tables 1/10).
+//!
+//! Run: `cargo run --release --example serve -- [artifacts] [requests]`
+
+use std::time::{Duration, Instant};
+
+use sfa::coordinator::router::{Router, RouterConfig};
+use sfa::coordinator::ServeMetrics;
+use sfa::runtime::Runtime;
+use sfa::util::rng::Rng;
+
+fn drive(dir: &str, variant: &str, n_requests: usize, vocab: i32, prefill_seq: usize)
+    -> anyhow::Result<ServeMetrics>
+{
+    let router = Router::start(RouterConfig {
+        artifact_dir: dir.to_string(),
+        variant: variant.to_string(),
+        workers: 1, // single-core testbed; bump on bigger hosts
+        batch_size: 4,
+        max_wait: Duration::from_millis(20),
+        sampling_temperature: Some(0.8),
+    });
+    let mut rng = Rng::new(42);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let plen = rng.range(8, prefill_seq.min(96));
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
+            router.submit(prompt, 16)
+        })
+        .collect();
+    let mut metrics = ServeMetrics::default();
+    for rx in rxs {
+        metrics.record(&rx.recv()?);
+    }
+    metrics.wall_s = t0.elapsed().as_secs_f64();
+    router.shutdown()?;
+    Ok(metrics)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let dir = args.next().unwrap_or_else(|| "artifacts".into());
+    let n_requests: usize = args.next().map(|s| s.parse().unwrap()).unwrap_or(8);
+
+    let rt = Runtime::new(&dir)?;
+    let prefill_seq = rt.manifest.prefill_seq;
+    let vocab = rt.manifest.variant("dense")?.cfg_usize("vocab")? as i32;
+    drop(rt);
+
+    for variant in ["dense", "sfa_k8"] {
+        println!("== serving {n_requests} requests with {variant} ==");
+        let m = drive(&dir, variant, n_requests, vocab, prefill_seq)?;
+        println!("{}\n", m.summary());
+    }
+    Ok(())
+}

@@ -1,0 +1,440 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per variant v ∈ {dense, sfa_k8, sfa_k16, short_d32, ...} this writes:
+
+    artifacts/<v>/train_step.hlo.txt
+    artifacts/<v>/eval_step.hlo.txt
+    artifacts/<v>/logits.hlo.txt
+    artifacts/<v>/prefill_b{B}.hlo.txt
+    artifacts/<v>/decode_b{B}.hlo.txt
+    artifacts/<v>/adapt_step.hlo.txt        (sfa variants only)
+    artifacts/<v>/weights.npz               (seeded initial params)
+    artifacts/manifest.json                 (shapes/dtypes/arg order)
+
+Python runs ONCE at build time (`make artifacts`); the Rust coordinator
+is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape: tuple[int, ...], dtype: str) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, DTYPES[dtype])
+
+
+def _param_specs(cfg: M.ModelConfig, prefix: str) -> list[dict]:
+    p = M.init_params(cfg, 0)
+    return [
+        {"name": f"{prefix}{n}", "shape": list(p[n].shape), "dtype": "f32"}
+        for n in sorted(p)
+    ]
+
+
+def _shape_of(s: dict) -> jax.ShapeDtypeStruct:
+    return spec(tuple(s["shape"]), s["dtype"])
+
+
+# ---------------------------------------------------------------------------
+# Entry-point builders: each returns (flat_fn, input_specs, output_specs)
+# ---------------------------------------------------------------------------
+
+def _train_cfg(cfg: M.ModelConfig) -> M.ModelConfig:
+    """Training entries use the masked-dense SFA formulation instead of
+    the Pallas kernel: the two are mathematically identical (both sides
+    are tested equal, python/tests/test_model.py::
+    test_sfa_pallas_equals_ref_path) and autodiff through the masked
+    form IS the straight-through estimator (Eq. 6), but XLA fuses the
+    dense-masked graph far better than the interpret-mode kernel loops,
+    which matters for the CPU training throughput. The serving entries
+    (prefill/decode) and eval_step keep the FlashSFA kernel on the hot
+    path."""
+    import dataclasses
+    return dataclasses.replace(cfg, use_pallas=False)
+
+
+def build_train_step(cfg: M.ModelConfig, batch: int, seq: int):
+    cfg = _train_cfg(cfg)
+    names = M.param_names(cfg)
+    np_ = len(names)
+    inputs = (
+        _param_specs(cfg, "param:")
+        + _param_specs(cfg, "adam_m:")
+        + _param_specs(cfg, "adam_v:")
+        + [
+            {"name": "step", "shape": [], "dtype": "f32"},
+            {"name": "lr", "shape": [], "dtype": "f32"},
+            {"name": "tokens", "shape": [batch, seq], "dtype": "i32"},
+        ]
+    )
+    outputs = (
+        _param_specs(cfg, "param:")
+        + _param_specs(cfg, "adam_m:")
+        + _param_specs(cfg, "adam_v:")
+        + [
+            {"name": "step", "shape": [], "dtype": "f32"},
+            {"name": "loss", "shape": [], "dtype": "f32"},
+        ]
+    )
+
+    def fn(*flat):
+        params = M.unflatten_params(names, flat[:np_])
+        m = M.unflatten_params(names, flat[np_ : 2 * np_])
+        v = M.unflatten_params(names, flat[2 * np_ : 3 * np_])
+        step, lr, tokens = flat[3 * np_ :]
+        p2, m2, v2, step2, loss = M.train_step(cfg, params, m, v, step, lr, tokens)
+        return tuple(
+            M.flatten_params(p2) + M.flatten_params(m2) + M.flatten_params(v2)
+            + [step2, loss]
+        )
+
+    return fn, inputs, outputs
+
+
+def build_adapt_step(cfg: M.ModelConfig, batch: int, seq: int):
+    """Eq. 8 fine-tuning step: SFA student + stop-grad dense teacher."""
+    assert cfg.attn == "sfa"
+    cfg = _train_cfg(cfg)
+    cfg_dense = M.make_config(cfg.name, "dense", rope=cfg.rope)
+    names = M.param_names(cfg)
+    np_ = len(names)
+    inputs = (
+        _param_specs(cfg, "param:")
+        + _param_specs(cfg, "adam_m:")
+        + _param_specs(cfg, "adam_v:")
+        + [
+            {"name": "step", "shape": [], "dtype": "f32"},
+            {"name": "lr", "shape": [], "dtype": "f32"},
+            {"name": "lambda", "shape": [], "dtype": "f32"},
+            {"name": "tokens", "shape": [batch, seq], "dtype": "i32"},
+        ]
+    )
+    outputs = (
+        _param_specs(cfg, "param:")
+        + _param_specs(cfg, "adam_m:")
+        + _param_specs(cfg, "adam_v:")
+        + [
+            {"name": "step", "shape": [], "dtype": "f32"},
+            {"name": "loss", "shape": [], "dtype": "f32"},
+        ]
+    )
+
+    def fn(*flat):
+        params = M.unflatten_params(names, flat[:np_])
+        m = M.unflatten_params(names, flat[np_ : 2 * np_])
+        v = M.unflatten_params(names, flat[2 * np_ : 3 * np_])
+        step, lr, lam, tokens = flat[3 * np_ :]
+        p2, m2, v2, step2, loss = M.adapt_step(
+            cfg, cfg_dense, params, m, v, step, lr, lam, tokens
+        )
+        return tuple(
+            M.flatten_params(p2) + M.flatten_params(m2) + M.flatten_params(v2)
+            + [step2, loss]
+        )
+
+    return fn, inputs, outputs
+
+
+def build_eval_step(cfg: M.ModelConfig, batch: int, seq: int):
+    names = M.param_names(cfg)
+    inputs = _param_specs(cfg, "param:") + [
+        {"name": "tokens", "shape": [batch, seq], "dtype": "i32"}
+    ]
+    outputs = [{"name": "loss", "shape": [], "dtype": "f32"}]
+
+    def fn(*flat):
+        params = M.unflatten_params(names, flat[: len(names)])
+        tokens = flat[len(names)]
+        return (M.lm_loss(cfg, params, tokens),)
+
+    return fn, inputs, outputs
+
+
+def build_logits(cfg: M.ModelConfig, batch: int, seq: int):
+    names = M.param_names(cfg)
+    inputs = _param_specs(cfg, "param:") + [
+        {"name": "tokens", "shape": [batch, seq], "dtype": "i32"}
+    ]
+    outputs = [{"name": "logits", "shape": [batch, seq, cfg.vocab], "dtype": "f32"}]
+
+    def fn(*flat):
+        params = M.unflatten_params(names, flat[: len(names)])
+        tokens = flat[len(names)]
+        logits, _ = M.forward(cfg, params, tokens)
+        return (logits,)
+
+    return fn, inputs, outputs
+
+
+def build_qk_acts(cfg: M.ModelConfig, batch: int, seq: int):
+    """Per-layer Q/K activations for the Fig. 7 / Fig. 11 analyses."""
+    names = M.param_names(cfg)
+    inputs = _param_specs(cfg, "param:") + [
+        {"name": "tokens", "shape": [batch, seq], "dtype": "i32"}
+    ]
+    dq = cfg.qk_head_dim
+    outputs = []
+    for i in range(cfg.n_layers):
+        for which in ("q", "k"):
+            outputs.append({
+                "name": f"acts.l{i:02d}.{which}",
+                "shape": [batch, cfg.n_heads, seq, dq],
+                "dtype": "f32",
+            })
+    # qk_activations doesn't touch every parameter (no lm head, no last
+    # MLP); XLA prunes unused entry parameters, which would break the
+    # manifest's positional contract. A checksum output keeps every
+    # parameter live.
+    outputs.append({"name": "param_checksum", "shape": [], "dtype": "f32"})
+
+    def fn(*flat):
+        params = M.unflatten_params(names, flat[: len(names)])
+        tokens = flat[len(names)]
+        acts = M.qk_activations(cfg, params, tokens)
+        flat_out = []
+        for q, k in acts:
+            flat_out.extend([q, k])
+        checksum = sum(jax.numpy.sum(p) for p in params.values())
+        flat_out.append(checksum)
+        return tuple(flat_out)
+
+    return fn, inputs, outputs
+
+
+def build_prefill(cfg: M.ModelConfig, batch: int, seq: int):
+    names = M.param_names(cfg)
+    inputs = _param_specs(cfg, "param:") + [
+        {"name": "tokens", "shape": [batch, seq], "dtype": "i32"},
+        {"name": "lengths", "shape": [batch], "dtype": "i32"},
+    ]
+    outputs = [{"name": "logits_last", "shape": [batch, cfg.vocab], "dtype": "f32"}] + [
+        {"name": n, "shape": list(s), "dtype": d}
+        for n, s, d in M.cache_shapes(cfg, batch)
+    ]
+
+    def fn(*flat):
+        params = M.unflatten_params(names, flat[: len(names)])
+        tokens, lengths = flat[len(names) :]
+        last, caches = M.prefill(cfg, params, tokens, lengths)
+        return tuple([last] + M.flatten_caches(cfg, caches))
+
+    return fn, inputs, outputs
+
+
+def build_decode_step(cfg: M.ModelConfig, batch: int, _seq: int):
+    names = M.param_names(cfg)
+    cache_sp = [
+        {"name": n, "shape": list(s), "dtype": d}
+        for n, s, d in M.cache_shapes(cfg, batch)
+    ]
+    inputs = (
+        _param_specs(cfg, "param:")
+        + cache_sp
+        + [
+            {"name": "token", "shape": [batch], "dtype": "i32"},
+            {"name": "pos", "shape": [batch], "dtype": "i32"},
+        ]
+    )
+    outputs = [{"name": "logits", "shape": [batch, cfg.vocab], "dtype": "f32"}] + cache_sp
+
+    def fn(*flat):
+        params = M.unflatten_params(names, flat[: len(names)])
+        nc = len(cache_sp)
+        caches = M.unflatten_caches(cfg, flat[len(names) : len(names) + nc])
+        token, pos = flat[len(names) + nc :]
+        logits, new_caches = M.decode_step(cfg, params, caches, token, pos)
+        return tuple([logits] + M.flatten_caches(cfg, new_caches))
+
+    return fn, inputs, outputs
+
+
+# ---------------------------------------------------------------------------
+# Variant compilation
+# ---------------------------------------------------------------------------
+
+def parse_variant(cfg_name: str, variant: str, rope: bool, **over) -> M.ModelConfig:
+    """'dense' | 'sfa_k8' | 'sfa_k16' | 'short_d32' | 'window_w64' -> config."""
+    if variant == "dense":
+        return M.make_config(cfg_name, "dense", rope=rope, **over)
+    if variant.startswith("sfa_k"):
+        return M.make_config(cfg_name, "sfa", sparsity=int(variant[5:]), rope=rope, **over)
+    if variant.startswith("short_d"):
+        return M.make_config(cfg_name, "short", short_d=int(variant[7:]), rope=rope, **over)
+    if variant.startswith("window_w"):
+        return M.make_config(cfg_name, "window", window=int(variant[8:]), rope=rope, **over)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def lower_entry(fn, input_specs: list[dict]) -> str:
+    shapes = [_shape_of(s) for s in input_specs]
+    lowered = jax.jit(fn).lower(*shapes)
+    return to_hlo_text(lowered)
+
+
+def save_weights(cfg: M.ModelConfig, path: str, seed: int) -> None:
+    params = M.init_params(cfg, seed)
+    # Order-prefixed keys so any reader can restore the flattening order.
+    arrays = {
+        f"{i:04d}|{n}": np.asarray(params[n])
+        for i, n in enumerate(sorted(params))
+    }
+    np.savez(path, **arrays)
+
+
+def compile_variant(
+    cfg: M.ModelConfig,
+    out_dir: str,
+    entries: list[str],
+    train_batch: int,
+    serve_batches: list[int],
+    prefill_seq: int,
+    seed: int,
+    verbose: bool = True,
+) -> dict:
+    variant = M.variant_name(cfg)
+    vdir = os.path.join(out_dir, variant)
+    os.makedirs(vdir, exist_ok=True)
+
+    manifest_entries: dict[str, dict] = {}
+
+    def emit(entry_name: str, builder, batch: int, seq: int):
+        t0 = time.time()
+        fn, ins, outs = builder(cfg, batch, seq)
+        text = lower_entry(fn, ins)
+        fname = f"{entry_name}.hlo.txt"
+        with open(os.path.join(vdir, fname), "w") as f:
+            f.write(text)
+        manifest_entries[entry_name] = {
+            "file": f"{variant}/{fname}",
+            "inputs": ins,
+            "outputs": outs,
+            "batch": batch,
+            "seq": seq,
+        }
+        if verbose:
+            print(
+                f"  [{variant}] {entry_name}: {len(ins)} in / {len(outs)} out, "
+                f"{len(text) / 1e6:.1f} MB hlo, {time.time() - t0:.1f}s"
+            )
+
+    seq = cfg.max_seq
+    if "train" in entries:
+        emit("train_step", build_train_step, train_batch, seq)
+    if "eval" in entries:
+        emit("eval_step", build_eval_step, train_batch, seq)
+    if "logits" in entries:
+        emit("logits", build_logits, train_batch, seq)
+    if "adapt" in entries and cfg.attn == "sfa":
+        emit("adapt_step", build_adapt_step, train_batch, seq)
+    if "acts" in entries:
+        emit("qk_acts", build_qk_acts, min(train_batch, 4), seq)
+    if "serve" in entries and cfg.attn in ("dense", "sfa"):
+        for b in serve_batches:
+            emit(f"prefill_b{b}", build_prefill, b, prefill_seq)
+            emit(f"decode_b{b}", build_decode_step, b, seq)
+
+    weights = f"{variant}/weights.npz"
+    save_weights(cfg, os.path.join(out_dir, weights), seed)
+
+    return {
+        "config": cfg.to_json_dict(),
+        "params": [
+            {"name": n, "shape": list(s.shape), "dtype": "f32"}
+            for n, s in sorted(M.init_params(cfg, 0).items())
+        ],
+        "weights": weights,
+        "entries": manifest_entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument(
+        "--variants", default="dense,sfa_k8,sfa_k16,short_d32",
+        help="comma-separated: dense | sfa_k<K> | short_d<D> | window_w<W>",
+    )
+    ap.add_argument(
+        "--entries", default="train,eval,logits,serve,adapt,acts",
+        help="comma-separated subset of train,eval,logits,serve,adapt,acts",
+    )
+    ap.add_argument("--train-batch", type=int, default=8)
+    ap.add_argument("--serve-batches", default="1,4")
+    ap.add_argument("--prefill-seq", type=int, default=0,
+                    help="prompt bucket length (default max_seq // 2)")
+    ap.add_argument("--rope", action="store_true")
+    ap.add_argument("--seed", type=int, default=42)
+    # Architecture overrides for ablation artifact sets (paper Fig. 9's
+    # d_head sweep): e.g. --d-head 32 --n-heads 8 keeps d_model fixed.
+    ap.add_argument("--d-head", type=int, default=0)
+    ap.add_argument("--n-heads", type=int, default=0)
+    ap.add_argument("--max-seq", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = args.entries.split(",")
+    serve_batches = [int(b) for b in args.serve_batches.split(",") if b]
+
+    manifest: dict = {
+        "preset": args.preset,
+        "seed": args.seed,
+        "train_batch": args.train_batch,
+        "serve_batches": serve_batches,
+        "variants": {},
+    }
+    over = {}
+    if args.d_head:
+        over["d_head"] = args.d_head
+    if args.n_heads:
+        over["n_heads"] = args.n_heads
+    if args.max_seq:
+        over["max_seq"] = args.max_seq
+
+    t0 = time.time()
+    for variant in args.variants.split(","):
+        cfg = parse_variant(args.preset, variant, args.rope, **over)
+        prefill_seq = args.prefill_seq or cfg.max_seq // 2
+        manifest["prefill_seq"] = prefill_seq
+        manifest["max_seq"] = cfg.max_seq
+        print(f"[aot] compiling variant {variant} "
+              f"({M.count_params(cfg) / 1e6:.2f}M params)")
+        manifest["variants"][M.variant_name(cfg)] = compile_variant(
+            cfg, args.out_dir, entries, args.train_batch, serve_batches,
+            prefill_seq, args.seed,
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest.json ({time.time() - t0:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

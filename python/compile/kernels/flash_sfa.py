@@ -1,0 +1,279 @@
+"""FlashSFA — IO-aware Sparse Feature Attention as a Pallas kernel.
+
+This is the TPU adaptation of the paper's CUDA kernel (App. C):
+FlashAttention-style tiling + online softmax, with the dense tile
+matmul replaced by *feature-overlap* scoring over top-k sparse Q/K
+codes (paper Eq. 5).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation)
+----------------------------------------------------
+CUDA FlashSFA walks CSR(Q) rows and per-feature CSC(K) posting lists
+with binary search + register scatter-adds. TPUs have no efficient
+scatter into registers, but they have a wide VPU, so we keep the
+fixed-k padded sparse format (values[n,k], indices[n,k]) — the natural
+output of row-wise top-k — and express the support intersection as a
+branch-free masked k×k outer product per (Bq, Bk) tile:
+
+    S[i,j] = (1/sqrt(d)) * sum_{a,b} qv[i,a] * kv[j,b] * [qi[i,a] == kj[j,b]]
+
+This costs Θ(Bq·Bk·k²) per tile — the same k² scaling the posting-list
+intersection achieves for balanced supports — while staying fully
+vectorizable. BlockSpec expresses the HBM↔VMEM schedule the CUDA kernel
+expressed with threadblocks; the online-softmax running (m, l, acc)
+are the fori_loop carry across key tiles.
+
+VMEM budget per grid step (fp32):
+    match/prod tensors:  Bq*Bk*k*k * 4 bytes   (dominant)
+    score tile:          Bq*Bk * 4
+    q codes:             2*Bq*k * 4, k codes: 2*Bk*k * 4, v tile: Bk*dv * 4
+Defaults Bq=Bk=32, k<=16 keep the dominant term <= 1 MiB (fits VMEM
+with double-buffering headroom); see DESIGN.md §Perf for the estimate.
+
+MUST run with interpret=True on CPU (real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute).
+
+Gradient: custom_vjp straight-through estimator (paper Eq. 6). The
+backward densifies the sparse codes and runs the standard attention
+backward, then gathers grads at the selected coordinates — gradients
+flow only through the active supports, and never differentiate through
+the Pallas forward.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Kernel
+# ---------------------------------------------------------------------------
+
+def _flash_sfa_kernel(
+    qv_ref, qi_ref, kv_ref, ki_ref, v_ref, o_ref,
+    *,
+    d_orig: int,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    n_kv: int,
+    kv_valid: int,
+):
+    """One grid step = one query tile; loops over key tiles (online softmax)."""
+    iq = pl.program_id(0)
+    qv = qv_ref[...]            # (Bq, k)
+    qi = qi_ref[...]            # (Bq, k) int32
+    block_q_, k = qv.shape
+    dv = v_ref.shape[-1]
+    inv_sqrt_d = 1.0 / math.sqrt(d_orig)
+
+    row_ids = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    n_k_tiles = n_kv // block_k
+    if causal:
+        # Key tiles strictly above the diagonal band contribute nothing:
+        # last needed tile covers column (iq+1)*block_q - 1.
+        num_tiles = jnp.minimum(
+            (iq * block_q + block_q + block_k - 1) // block_k, n_k_tiles
+        )
+    else:
+        num_tiles = n_k_tiles
+
+    def body(jk, carry):
+        m_run, l_run, acc = carry
+        kv_t = kv_ref[pl.ds(jk * block_k, block_k), :]
+        ki_t = ki_ref[pl.ds(jk * block_k, block_k), :]
+        v_t = v_ref[pl.ds(jk * block_k, block_k), :]
+
+        # Feature-overlap scoring: masked k×k outer product (Eq. 5).
+        match = qi[:, None, :, None] == ki_t[None, :, None, :]
+        prod = qv[:, None, :, None] * kv_t[None, :, None, :]
+        s = jnp.where(match, prod, 0.0).sum(axis=(2, 3)) * inv_sqrt_d  # (Bq,Bk)
+
+        col_ids = jk * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        ok = col_ids < kv_valid
+        if causal:
+            ok = ok & (col_ids <= row_ids)
+        s = jnp.where(ok, s, NEG_INF)
+
+        # Online softmax update (FlashAttention recurrence).
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_run * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v_t
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, dv), jnp.float32)
+    m_f, l_f, acc_f = jax.lax.fori_loop(0, num_tiles, body, (m0, l0, acc0))
+
+    out = jnp.where(l_f[:, None] > 0.0, acc_f / l_f[:, None], 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+
+def _flash_sfa_fwd_impl(
+    q_vals, q_idx, k_vals, k_idx, v,
+    d_orig: int, causal: bool, block_q: int, block_k: int, interpret: bool,
+):
+    n_q, k = q_vals.shape
+    n_kv = k_vals.shape[0]
+    dv = v.shape[-1]
+    if causal and n_q != n_kv:
+        raise ValueError(f"causal FlashSFA requires n_q == n_kv, got {n_q} vs {n_kv}")
+
+    qv = _pad_rows(q_vals, block_q)
+    qi = _pad_rows(q_idx, block_q)
+    kv = _pad_rows(k_vals, block_k)
+    ki = _pad_rows(k_idx, block_k)
+    vp = _pad_rows(v, block_k)
+    n_q_p, n_kv_p = qv.shape[0], kv.shape[0]
+
+    kernel = functools.partial(
+        _flash_sfa_kernel,
+        d_orig=d_orig,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv=n_kv_p,
+        kv_valid=n_kv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_q_p // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, k), lambda i: (i, 0)),   # q values tile
+            pl.BlockSpec((block_q, k), lambda i: (i, 0)),   # q indices tile
+            pl.BlockSpec((n_kv_p, k), lambda i: (0, 0)),    # full K values
+            pl.BlockSpec((n_kv_p, k), lambda i: (0, 0)),    # full K indices
+            pl.BlockSpec((n_kv_p, dv), lambda i: (0, 0)),   # full V
+        ],
+        out_specs=pl.BlockSpec((block_q, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q_p, dv), v.dtype),
+        interpret=interpret,
+    )(qv, qi, kv, ki, vp)
+    return out[:n_q]
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper (straight-through backward, Eq. 6)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def flash_sfa(
+    q_vals: jax.Array,
+    q_idx: jax.Array,
+    k_vals: jax.Array,
+    k_idx: jax.Array,
+    v: jax.Array,
+    d_orig: int,
+    causal: bool = True,
+    block_q: int = 32,
+    block_k: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    """softmax(Q̃ K̃ᵀ/√d) V over top-k sparse codes, never materializing n×n.
+
+    Args:
+      q_vals/q_idx: padded top-k query codes, shape (n_q, k) / int32.
+      k_vals/k_idx: padded top-k key codes, shape (n_kv, k) / int32.
+      v: dense values, shape (n_kv, d_v).
+      d_orig: the dense head dimension d (for the 1/sqrt(d) scale).
+      causal: apply the causal mask (requires n_q == n_kv).
+    Returns: (n_q, d_v) attention output, exact w.r.t. the sparse codes.
+    """
+    return _flash_sfa_fwd_impl(
+        q_vals, q_idx, k_vals, k_idx, v, d_orig, causal, block_q, block_k, interpret
+    )
+
+
+def _flash_sfa_vjp_fwd(q_vals, q_idx, k_vals, k_idx, v,
+                       d_orig, causal, block_q, block_k, interpret):
+    o = _flash_sfa_fwd_impl(
+        q_vals, q_idx, k_vals, k_idx, v, d_orig, causal, block_q, block_k, interpret
+    )
+    return o, (q_vals, q_idx, k_vals, k_idx, v)
+
+
+def _flash_sfa_vjp_bwd(d_orig, causal, block_q, block_k, interpret, res, do):
+    """Standard attention backward on the densified codes, gathered back to
+    the active supports (straight-through, paper Eq. 6)."""
+    q_vals, q_idx, k_vals, k_idx, v = res
+    n_q, kk = q_vals.shape
+    n_kv = k_vals.shape[0]
+    scale = 1.0 / math.sqrt(d_orig)
+
+    qs = jnp.zeros((n_q, d_orig), q_vals.dtype).at[
+        jnp.arange(n_q)[:, None], q_idx
+    ].set(q_vals)
+    ks = jnp.zeros((n_kv, d_orig), k_vals.dtype).at[
+        jnp.arange(n_kv)[:, None], k_idx
+    ].set(k_vals)
+
+    s = (qs @ ks.T) * scale
+    if causal:
+        mask = jnp.arange(n_kv)[None, :] <= jnp.arange(n_q)[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+
+    dv_ = p.T @ do
+    dp = do @ v.T
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dqs = (ds @ ks) * scale
+    dks = (ds.T @ qs) * scale
+
+    dq_vals = jnp.take_along_axis(dqs, q_idx, axis=1)
+    dk_vals = jnp.take_along_axis(dks, k_idx, axis=1)
+    # Integer index inputs receive no gradient.
+    return dq_vals, None, dk_vals, None, dv_
+
+
+flash_sfa.defvjp(_flash_sfa_vjp_fwd, _flash_sfa_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Dense-head convenience wrapper (top-k + kernel), vmap-friendly.
+# ---------------------------------------------------------------------------
+
+def sfa_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    sparsity: int,
+    causal: bool = True,
+    block_q: int = 32,
+    block_k: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    """Full SFA head: top-k sparsify dense q/k (Eq. 3-4), then FlashSFA."""
+    from . import ref
+
+    d = q.shape[-1]
+    q_vals, q_idx = ref.topk_codes(q, sparsity)
+    k_vals, k_idx = ref.topk_codes(k, sparsity)
+    return flash_sfa(
+        q_vals, q_idx, k_vals, k_idx, v,
+        d, causal, block_q, block_k, interpret,
+    )

@@ -1,0 +1,170 @@
+"""Pure-jnp reference oracles for SFA / FlashSFA.
+
+These are the CORE correctness signal: every Pallas kernel in this
+package is tested (pytest + hypothesis) against the functions here.
+
+All functions operate on a single head: q, k of shape (n, d), v of
+shape (n, d_v). Batch / head axes are added by the caller with
+``jax.vmap`` (mirrors how model.py composes them).
+
+Scaling convention (paper §3.1, Eq. 5): scores are divided by sqrt(d)
+where d is the *dense* head dimension — NOT k — so SFA is a drop-in
+replacement whose logits approximate the dense logits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+                 # on padded / fully-masked rows.
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification (paper Eq. 3-4)
+# ---------------------------------------------------------------------------
+
+def _topk_indices(x_abs: jax.Array, k: int) -> jax.Array:
+    """Indices of the k largest entries per row, ties toward lower index.
+
+    Implemented with a stable descending argsort rather than
+    ``jax.lax.top_k``: recent jax lowers top_k to the `topk` HLO opcode,
+    which the runtime's XLA 0.5.1 text parser cannot parse. `sort` is
+    ancient and round-trips fine (DESIGN.md §Artifact contract).
+    """
+    order = jnp.argsort(-x_abs, axis=1, stable=True)
+    return order[:, :k].astype(jnp.int32)
+
+
+def topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the k largest-|x| entries per row.
+
+    Ties are broken toward the lower index (same as jax.lax.top_k).
+    """
+    idx = _topk_indices(jnp.abs(x), k)
+    return jnp.zeros(x.shape, bool).at[
+        jnp.arange(x.shape[0])[:, None], idx
+    ].set(True)
+
+
+def topk_sparsify(x: jax.Array, k: int) -> jax.Array:
+    """Dense tensor with all but the top-k |x| entries per row zeroed.
+
+    Gradient behaviour: the mask is computed from stop_gradient(x), so
+    autodiff through this function IS the straight-through estimator of
+    paper Eq. 6 — gradients flow only through selected coordinates.
+    """
+    mask = topk_mask(jax.lax.stop_gradient(x), k)
+    return jnp.where(mask, x, 0.0)
+
+
+def topk_codes(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Padded sparse codes: (values (n,k), indices (n,k) int32).
+
+    Entries are ordered by descending |value| (jax.lax.top_k order).
+    values keep their sign; indices are column ids in [0, d).
+    Gradient: STE — d(values)[i,a] scatters back to x[i, indices[i,a]].
+    """
+    idx = _topk_indices(jnp.abs(jax.lax.stop_gradient(x)), k)
+    vals = jnp.take_along_axis(x, idx, axis=1)
+    return vals, idx
+
+
+def densify(vals: jax.Array, idx: jax.Array, d: int) -> jax.Array:
+    """Inverse of topk_codes: scatter padded codes back to (n, d) dense."""
+    n = vals.shape[0]
+    return jnp.zeros((n, d), vals.dtype).at[
+        jnp.arange(n)[:, None], idx
+    ].set(vals)
+
+
+# ---------------------------------------------------------------------------
+# Attention references
+# ---------------------------------------------------------------------------
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Standard softmax(q k^T / sqrt(d)) v with optional causal mask."""
+    d = q.shape[-1]
+    scale = (1.0 / jnp.sqrt(d)) if scale is None else scale
+    s = (q @ k.T) * scale
+    if causal:
+        n, m = s.shape
+        mask = jnp.arange(m)[None, :] <= jnp.arange(n)[:, None] + (m - n)
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v
+
+
+def sfa_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    sparsity: int,
+    causal: bool = True,
+) -> jax.Array:
+    """SFA by densified top-k codes (paper Eq. 3-5), the oracle for FlashSFA.
+
+    Exactly softmax(Topk(q) Topk(k)^T / sqrt(d)) v. Autodiff through this
+    function implements the straight-through backward of Eq. 6.
+    """
+    d = q.shape[-1]
+    qs = topk_sparsify(q, sparsity)
+    ks = topk_sparsify(k, sparsity)
+    return attention_ref(qs, ks, v, causal=causal, scale=1.0 / jnp.sqrt(d))
+
+
+def sfa_scores_ref(
+    q: jax.Array, k: jax.Array, *, sparsity: int, causal: bool = True
+) -> jax.Array:
+    """Pre-softmax SFA score matrix (for FLOP-counting and tests)."""
+    d = q.shape[-1]
+    s = (topk_sparsify(q, sparsity) @ topk_sparsify(k, sparsity).T) / jnp.sqrt(d)
+    if causal:
+        n = s.shape[0]
+        mask = jnp.arange(n)[None, :] <= jnp.arange(n)[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+    return s
+
+
+def sfa_attention_from_codes_ref(
+    q_vals: jax.Array,
+    q_idx: jax.Array,
+    k_vals: jax.Array,
+    k_idx: jax.Array,
+    v: jax.Array,
+    *,
+    d_orig: int,
+    causal: bool = True,
+) -> jax.Array:
+    """Oracle taking the padded sparse codes directly (FlashSFA's interface)."""
+    qs = densify(q_vals, q_idx, d_orig)
+    ks = densify(k_vals, k_idx, d_orig)
+    return attention_ref(qs, ks, v, causal=causal, scale=1.0 / jnp.sqrt(d_orig))
+
+
+# ---------------------------------------------------------------------------
+# Feature-overlap scoring (paper Eq. 5) — structural reference used to test
+# that the masked-outer-product formulation equals the posting-list sum.
+# ---------------------------------------------------------------------------
+
+def overlap_score_ref(
+    q_vals: jax.Array,
+    q_idx: jax.Array,
+    k_vals: jax.Array,
+    k_idx: jax.Array,
+    d_orig: int,
+) -> jax.Array:
+    """s_ij = (1/sqrt(d)) * sum_{u in S_i ∩ S_j} q̃_iu k̃_ju, via the
+    masked k×k outer product used by the Pallas kernel."""
+    match = q_idx[:, None, :, None] == k_idx[None, :, None, :]
+    prod = q_vals[:, None, :, None] * k_vals[None, :, None, :]
+    return jnp.where(match, prod, 0.0).sum(axis=(2, 3)) / jnp.sqrt(d_orig)

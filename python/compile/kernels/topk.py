@@ -1,0 +1,90 @@
+"""Pallas row-wise top-k selection — the RTopK analog (paper App. C.5).
+
+The paper sparsifies Q/K with the RTopK CUDA kernel (Xie et al., 2024):
+one warp per row, GPU-parallel selection, O(Nd) total. On TPU/Pallas the
+natural mapping is one *row tile* per grid step with the selection done
+as k unrolled iterative-max passes over the row held in VMEM — k is a
+small compile-time constant (2..32), so the unroll is cheap and fully
+vectorized across the row tile (the VPU analog of RTopK's warp-per-row).
+
+Interface mirrors ref.topk_codes: returns (values (n,k), indices (n,k)
+int32), entries ordered by descending |value|, values keep their sign.
+
+Gradient: custom_vjp straight-through — d(values)[i,a] scatters back to
+x[i, indices[i,a]] (paper Eq. 6). Indices get no gradient.
+
+MUST run with interpret=True on CPU (real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, k: int):
+    """One grid step selects top-k per row for a (block_rows, d) tile."""
+    x = x_ref[...]
+    absx = jnp.abs(x)
+    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    # k unrolled iterative-max passes. Ties break toward the lower index
+    # (same as jax.lax.top_k) because argmax returns the first maximum.
+    for a in range(k):
+        best = jnp.argmax(absx, axis=-1).astype(jnp.int32)  # (rows,)
+        onehot = cols == best[:, None]
+        val = jnp.sum(jnp.where(onehot, x, 0.0), axis=-1)
+        vals_ref[:, a] = val
+        idx_ref[:, a] = best
+        # Knock the selected coordinate out for the next pass.
+        absx = jnp.where(onehot, NEG_INF, absx)
+
+
+def _topk_fwd_impl(x: jax.Array, k: int, block_rows: int, interpret: bool):
+    n, d = x.shape
+    assert n % block_rows == 0, (n, block_rows)
+    kernel = functools.partial(_topk_kernel, k=k)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), x.dtype),
+            jax.ShapeDtypeStruct((n, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+    return vals, idx
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def topk_pallas(
+    x: jax.Array, k: int, block_rows: int = 64, interpret: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """Row-wise top-|x| selection as a Pallas kernel (values, indices)."""
+    return _topk_fwd_impl(x, k, block_rows, interpret)
+
+
+def _topk_vjp_fwd(x, k, block_rows, interpret):
+    vals, idx = _topk_fwd_impl(x, k, block_rows, interpret)
+    return (vals, idx), (idx, jnp.zeros_like(x))
+
+
+def _topk_vjp_bwd(k, block_rows, interpret, res, g):
+    idx, zeros = res
+    g_vals, _g_idx = g  # indices are integer outputs: no gradient
+    n = zeros.shape[0]
+    dx = zeros.at[jnp.arange(n)[:, None], idx].add(g_vals.astype(zeros.dtype))
+    return (dx,)
+
+
+topk_pallas.defvjp(_topk_vjp_fwd, _topk_vjp_bwd)

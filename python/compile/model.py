@@ -1,0 +1,632 @@
+"""L2 — GPT-2-style decoder LM with pluggable attention (paper §4.1).
+
+Variants (paper Table 1 / Table 10):
+  dense  — standard causal softmax attention (the "Dense (full)" baseline)
+  sfa    — Sparse Feature Attention: top-k sparse Q/K codes scored by
+           feature overlap via the FlashSFA Pallas kernel (L1)
+  short  — "short embeddings": Q/K projected to a reduced per-head dim
+           (the paper's Dense(d=X) baseline; V stays full width)
+  window — Longformer-style local causal window (token-level sparsity
+           baseline, used by the Table 10/11 orthogonality experiments)
+
+Everything here is build-time Python: ``aot.py`` lowers the entry points
+(train_step / eval_step / logits / prefill / decode_step / adapt_step)
+to HLO text, and the Rust L3 coordinator drives the compiled artifacts.
+
+Parameters are a flat ``{name: array}`` dict; flattening order is
+``sorted(params)`` and is recorded in the manifest, so Rust can treat
+them as an opaque ordered buffer list.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.flash_sfa import flash_sfa
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + attention-variant configuration.
+
+    ``attn`` selects the scoring rule; all other compute is identical so
+    quality/latency differences are attributable to attention alone
+    (paper's controlled comparison).
+    """
+
+    name: str = "small"
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 64
+    max_seq: int = 256
+    attn: str = "dense"          # dense | sfa | short | window
+    sparsity: int = 8            # k for the sfa variant
+    short_d: int = 32            # per-head Q/K width for the short variant
+    window: int = 64             # window size for the window variant
+    rope: bool = False           # rotary positions (Qwen3 track)
+    use_pallas: bool = True      # route SFA through the FlashSFA kernel
+    block_q: int = 32            # FlashSFA tile sizes
+    block_k: int = 32
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.short_d if self.attn == "short" else self.d_head
+
+    def validate(self) -> None:
+        assert self.attn in ("dense", "sfa", "short", "window"), self.attn
+        assert self.d_model == self.n_heads * self.d_head, (
+            "d_model must equal n_heads * d_head"
+        )
+        if self.attn == "sfa":
+            assert 1 <= self.sparsity <= self.d_head
+        if self.rope:
+            assert self.qk_head_dim % 2 == 0
+
+    def to_json_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+PRESETS: dict[str, dict[str, Any]] = {
+    # CPU-friendly default used by smoke tests.
+    "tiny": dict(vocab=256, d_model=128, n_layers=2, n_heads=2, d_head=64,
+                 max_seq=128),
+    # Default preset for the end-to-end training example.
+    "small": dict(vocab=512, d_model=256, n_layers=4, n_heads=4, d_head=64,
+                  max_seq=256),
+    # NIAH long-context track (paper §4.2): small vocab, longer sequences.
+    "niah": dict(vocab=64, d_model=128, n_layers=2, n_heads=4, d_head=32,
+                 max_seq=512),
+    "medium": dict(vocab=1024, d_model=512, n_layers=8, n_heads=8, d_head=64,
+                   max_seq=512),
+    # Paper-scale configs (Table 4) — compile targets, not CI defaults.
+    "gpt2-124m": dict(vocab=50257, d_model=768, n_layers=12, n_heads=12,
+                      d_head=64, max_seq=1024),
+    "gpt2-350m": dict(vocab=50257, d_model=1024, n_layers=24, n_heads=16,
+                      d_head=64, max_seq=1024),
+}
+
+
+def make_config(preset: str, attn: str = "dense", **over: Any) -> ModelConfig:
+    base = dict(PRESETS[preset])
+    base.update(over)
+    cfg = ModelConfig(name=preset, attn=attn, **base)
+    cfg.validate()
+    return cfg
+
+
+def variant_name(cfg: ModelConfig) -> str:
+    """Canonical artifact-directory name for a config's attention variant."""
+    if cfg.attn == "sfa":
+        return f"sfa_k{cfg.sparsity}"
+    if cfg.attn == "short":
+        return f"short_d{cfg.short_d}"
+    if cfg.attn == "window":
+        return f"window_w{cfg.window}"
+    return "dense"
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / flattening
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 42) -> dict[str, jax.Array]:
+    """GPT-2-style init: N(0, 0.02), output projections scaled 1/sqrt(2L)."""
+    key = jax.random.PRNGKey(seed)
+    p: dict[str, jax.Array] = {}
+
+    def nrm(key, shape, std=0.02):
+        return (std * jax.random.normal(key, shape)).astype(jnp.float32)
+
+    keys = iter(jax.random.split(key, 16 * cfg.n_layers + 8))
+    p["tok_emb"] = nrm(next(keys), (cfg.vocab, cfg.d_model))
+    p["pos_emb"] = nrm(next(keys), (cfg.max_seq, cfg.d_model), 0.01)
+    dq = cfg.qk_head_dim
+    resid_std = 0.02 / math.sqrt(2 * cfg.n_layers)
+    for i in range(cfg.n_layers):
+        pre = f"l{i:02d}."
+        p[pre + "ln1.g"] = jnp.ones((cfg.d_model,))
+        p[pre + "ln1.b"] = jnp.zeros((cfg.d_model,))
+        p[pre + "attn.wq"] = nrm(next(keys), (cfg.d_model, cfg.n_heads * dq))
+        p[pre + "attn.wk"] = nrm(next(keys), (cfg.d_model, cfg.n_heads * dq))
+        p[pre + "attn.wv"] = nrm(next(keys), (cfg.d_model, cfg.n_heads * cfg.d_head))
+        p[pre + "attn.wo"] = nrm(
+            next(keys), (cfg.n_heads * cfg.d_head, cfg.d_model), resid_std
+        )
+        p[pre + "ln2.g"] = jnp.ones((cfg.d_model,))
+        p[pre + "ln2.b"] = jnp.zeros((cfg.d_model,))
+        p[pre + "mlp.w1"] = nrm(next(keys), (cfg.d_model, 4 * cfg.d_model))
+        p[pre + "mlp.b1"] = jnp.zeros((4 * cfg.d_model,))
+        p[pre + "mlp.w2"] = nrm(next(keys), (4 * cfg.d_model, cfg.d_model), resid_std)
+        p[pre + "mlp.b2"] = jnp.zeros((cfg.d_model,))
+    p["lnf.g"] = jnp.ones((cfg.d_model,))
+    p["lnf.b"] = jnp.zeros((cfg.d_model,))
+    return p
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    return sorted(init_params(cfg, 0).keys())
+
+
+def flatten_params(p: dict[str, jax.Array]) -> list[jax.Array]:
+    return [p[k] for k in sorted(p)]
+
+
+def unflatten_params(names: list[str], flat: tuple) -> dict[str, jax.Array]:
+    return dict(zip(names, flat))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(int(x.size) for x in init_params(cfg, 0).values())
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def layer_norm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))
+
+
+def rope_tables(seq: int, dim: int) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables of shape (seq, dim//2)."""
+    pos = jnp.arange(seq)[:, None]
+    inv = 10000.0 ** (-jnp.arange(0, dim, 2) / dim)[None, :]
+    ang = pos * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., seq, dim); cos/sin (seq, dim//2). Rotates consecutive pairs."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape)
+
+
+def apply_rope_at(x: jax.Array, pos: jax.Array, dim: int, max_seq: int) -> jax.Array:
+    """x (B, H, dim) rotated by per-row positions pos (B,)."""
+    cos, sin = rope_tables(max_seq, dim)
+    c = cos[pos][:, None, :]  # (B,1,dim/2)
+    s = sin[pos][:, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,H*dh) -> (B,H,S,dh)"""
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    """(B,H,S,dh) -> (B,S,H*dh)"""
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+# ---------------------------------------------------------------------------
+# Attention variants (single head, vmapped over batch*heads)
+# ---------------------------------------------------------------------------
+
+def _head_attention(cfg: ModelConfig) -> Callable[[jax.Array, jax.Array, jax.Array], jax.Array]:
+    """Returns a (S,dq),(S,dq),(S,dv) -> (S,dv) causal attention fn."""
+    if cfg.attn == "sfa":
+        if cfg.use_pallas:
+            def fn(q, k, v):
+                d = q.shape[-1]
+                qv, qi = ref.topk_codes(q, cfg.sparsity)
+                kv, ki = ref.topk_codes(k, cfg.sparsity)
+                return flash_sfa(qv, qi, kv, ki, v, d, True,
+                                 cfg.block_q, cfg.block_k, True)
+        else:
+            def fn(q, k, v):
+                return ref.sfa_attention_ref(q, k, v, sparsity=cfg.sparsity)
+        return fn
+    if cfg.attn == "window":
+        def fn(q, k, v):
+            d = q.shape[-1]
+            s = (q @ k.T) / jnp.sqrt(d)
+            n = s.shape[0]
+            i = jnp.arange(n)[:, None]
+            j = jnp.arange(n)[None, :]
+            mask = (j <= i) & (i - j < cfg.window)
+            s = jnp.where(mask, s, NEG_INF)
+            return jax.nn.softmax(s, -1) @ v
+        return fn
+    # dense & short share the dense scoring rule (short just has smaller dq).
+    def fn(q, k, v):
+        return ref.attention_ref(q, k, v, causal=True)
+    return fn
+
+
+def _attention_block(
+    cfg: ModelConfig, params: dict, layer: int, x: jax.Array,
+    collect_cache: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    """Full multi-head attention over (B,S,d_model) hidden states."""
+    pre = f"l{layer:02d}.attn."
+    b, s, _ = x.shape
+    dq = cfg.qk_head_dim
+    q = _split_heads(x @ params[pre + "wq"], cfg.n_heads)  # (B,H,S,dq)
+    k = _split_heads(x @ params[pre + "wk"], cfg.n_heads)
+    v = _split_heads(x @ params[pre + "wv"], cfg.n_heads)
+
+    if cfg.rope:
+        cos, sin = rope_tables(s, dq)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    head_fn = _head_attention(cfg)
+    qf = q.reshape(b * cfg.n_heads, s, dq)
+    kf = k.reshape(b * cfg.n_heads, s, dq)
+    vf = v.reshape(b * cfg.n_heads, s, cfg.d_head)
+    of = jax.vmap(head_fn)(qf, kf, vf)
+    o = _merge_heads(of.reshape(b, cfg.n_heads, s, cfg.d_head))
+    out = o @ params[pre + "wo"]
+
+    cache = None
+    if collect_cache:
+        if cfg.attn == "sfa":
+            kv, ki = jax.vmap(lambda kk: ref.topk_codes(kk, cfg.sparsity))(kf)
+            cache = {
+                "k_vals": kv.reshape(b, cfg.n_heads, s, cfg.sparsity),
+                "k_idx": ki.reshape(b, cfg.n_heads, s, cfg.sparsity),
+                "v": vf.reshape(b, cfg.n_heads, s, cfg.d_head),
+            }
+        else:
+            cache = {
+                "k": kf.reshape(b, cfg.n_heads, s, dq),
+                "v": vf.reshape(b, cfg.n_heads, s, cfg.d_head),
+            }
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(
+    cfg: ModelConfig, params: dict, tokens: jax.Array,
+    collect_cache: bool = False,
+) -> tuple[jax.Array, list[dict] | None]:
+    """tokens (B,S) int32 -> logits (B,S,vocab) [+ per-layer KV caches]."""
+    _, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s][None, :, :]
+    caches: list[dict] = []
+    for i in range(cfg.n_layers):
+        pre = f"l{i:02d}."
+        h = layer_norm(x, params[pre + "ln1.g"], params[pre + "ln1.b"])
+        a, cache = _attention_block(cfg, params, i, h, collect_cache)
+        x = x + a
+        if collect_cache:
+            caches.append(cache)
+        h = layer_norm(x, params[pre + "ln2.g"], params[pre + "ln2.b"])
+        m = gelu(h @ params[pre + "mlp.w1"] + params[pre + "mlp.b1"])
+        x = x + m @ params[pre + "mlp.w2"] + params[pre + "mlp.b2"]
+    x = layer_norm(x, params["lnf.g"], params["lnf.b"])
+    logits = x @ params["tok_emb"].T  # tied embeddings
+    return logits, (caches if collect_cache else None)
+
+
+def qk_activations(
+    cfg: ModelConfig, params: dict, tokens: jax.Array,
+) -> list[tuple[jax.Array, jax.Array]]:
+    """Per-layer post-RoPE Q/K activations, shape (B,H,S,dq) each —
+    feeds the Fig. 7 load-balance entropy and Fig. 11 SVD analyses."""
+    _, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s][None, :, :]
+    out: list[tuple[jax.Array, jax.Array]] = []
+    dq = cfg.qk_head_dim
+    for i in range(cfg.n_layers):
+        pre = f"l{i:02d}."
+        h = layer_norm(x, params[pre + "ln1.g"], params[pre + "ln1.b"])
+        q = _split_heads(h @ params[pre + "attn.wq"], cfg.n_heads)
+        k = _split_heads(h @ params[pre + "attn.wk"], cfg.n_heads)
+        if cfg.rope:
+            cos, sin = rope_tables(s, dq)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        out.append((q, k))
+        a, _ = _attention_block(cfg, params, i, h)
+        x = x + a
+        h = layer_norm(x, params[pre + "ln2.g"], params[pre + "ln2.b"])
+        m = gelu(h @ params[pre + "mlp.w1"] + params[pre + "mlp.b1"])
+        x = x + m @ params[pre + "mlp.w2"] + params[pre + "mlp.b2"]
+    return out
+
+
+def lm_loss(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    """Next-token cross entropy over positions 0..S-2 (mean, nats)."""
+    logits, _ = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def adapt_loss(
+    cfg_sfa: ModelConfig, cfg_dense: ModelConfig, params: dict,
+    tokens: jax.Array, lam: jax.Array,
+) -> jax.Array:
+    """Paper Eq. 8: L_LM(SFA) + λ · mean_h ‖Õ_h − stopgrad(O_h)‖²_F.
+
+    Both paths share the same weights; the dense path is stop-gradiented
+    so the regularizer only pulls the sparse attention outputs toward the
+    dense teacher (SFA adaptation of a dense-pretrained model, §5).
+    """
+    loss_lm = lm_loss(cfg_sfa, params, tokens)
+
+    _, s = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s][None, :, :]
+    reg = 0.0
+    for i in range(cfg_sfa.n_layers):
+        pre = f"l{i:02d}."
+        h = layer_norm(x, params[pre + "ln1.g"], params[pre + "ln1.b"])
+        a_sfa, _ = _attention_block(cfg_sfa, params, i, h)
+        a_dense, _ = _attention_block(cfg_dense, params, i, h)
+        reg = reg + jnp.mean((a_sfa - jax.lax.stop_gradient(a_dense)) ** 2)
+        # Advance hidden state along the *sparse* path (the student).
+        x = x + a_sfa
+        hh = layer_norm(x, params[pre + "ln2.g"], params[pre + "ln2.b"])
+        m = gelu(hh @ params[pre + "mlp.w1"] + params[pre + "mlp.b1"])
+        x = x + m @ params[pre + "mlp.w2"] + params[pre + "mlp.b2"]
+    reg = reg / cfg_sfa.n_layers
+    return loss_lm + lam * reg
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step
+# ---------------------------------------------------------------------------
+
+B1, B2, EPS, WD, CLIP = 0.9, 0.95, 1e-8, 0.1, 1.0
+
+
+def _global_norm(tree: dict) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in tree.values()))
+
+
+def adamw_update(
+    params: dict, grads: dict, m: dict, v: dict, step: jax.Array, lr: jax.Array,
+) -> tuple[dict, dict, dict]:
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, CLIP / (gnorm + 1e-12))
+    t = step + 1.0
+    new_p, new_m, new_v = {}, {}, {}
+    for k_ in params:
+        g = grads[k_] * scale
+        m2 = B1 * m[k_] + (1 - B1) * g
+        v2 = B2 * v[k_] + (1 - B2) * g * g
+        mhat = m2 / (1 - B1**t)
+        vhat = v2 / (1 - B2**t)
+        upd = mhat / (jnp.sqrt(vhat) + EPS)
+        if params[k_].ndim >= 2:  # decoupled weight decay on matrices only
+            upd = upd + WD * params[k_]
+        new_p[k_] = params[k_] - lr * upd
+        new_m[k_] = m2
+        new_v[k_] = v2
+    return new_p, new_m, new_v
+
+
+def train_step(
+    cfg: ModelConfig, params: dict, m: dict, v: dict,
+    step: jax.Array, lr: jax.Array, tokens: jax.Array,
+) -> tuple[dict, dict, dict, jax.Array, jax.Array]:
+    loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, tokens))(params)
+    new_p, new_m, new_v = adamw_update(params, grads, m, v, step, lr)
+    return new_p, new_m, new_v, step + 1.0, loss
+
+
+def adapt_step(
+    cfg_sfa: ModelConfig, cfg_dense: ModelConfig, params: dict, m: dict, v: dict,
+    step: jax.Array, lr: jax.Array, lam: jax.Array, tokens: jax.Array,
+) -> tuple[dict, dict, dict, jax.Array, jax.Array]:
+    loss, grads = jax.value_and_grad(
+        lambda p: adapt_loss(cfg_sfa, cfg_dense, p, tokens, lam)
+    )(params)
+    new_p, new_m, new_v = adamw_update(params, grads, m, v, step, lr)
+    return new_p, new_m, new_v, step + 1.0, loss
+
+
+# ---------------------------------------------------------------------------
+# Serving path: prefill + decode with (sparse) KV cache
+# ---------------------------------------------------------------------------
+
+def prefill(
+    cfg: ModelConfig, params: dict, tokens: jax.Array, lengths: jax.Array,
+) -> tuple[jax.Array, list[dict]]:
+    """Process padded prompts (B,S); return last-position logits + caches.
+
+    ``lengths`` (B,) gives each prompt's true length; logits are gathered
+    at position lengths-1 (causality makes padding past the true length
+    harmless for earlier positions). Caches are padded to max_seq so the
+    decode loop can append in place.
+    """
+    logits, caches = forward(cfg, params, tokens, collect_cache=True)
+    last = jnp.take_along_axis(
+        logits, (lengths - 1)[:, None, None], axis=1
+    )[:, 0, :]
+    assert caches is not None
+    s = tokens.shape[1]
+    pad = cfg.max_seq - s
+    padded: list[dict] = []
+    for c in caches:
+        padded.append({
+            k_: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            for k_, a in c.items()
+        })
+    return last, padded
+
+
+def _decode_attention_dense(
+    q: jax.Array, kc: jax.Array, vc: jax.Array, pos: jax.Array,
+) -> jax.Array:
+    """q (B,H,dq), kc (B,H,S,dq), vc (B,H,S,dv), pos (B,) -> (B,H,dv)."""
+    dq = q.shape[-1]
+    s = jnp.einsum("bhd,bhsd->bhs", q, kc) / jnp.sqrt(dq)
+    smax = kc.shape[2]
+    ok = jnp.arange(smax)[None, None, :] <= pos[:, None, None]
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vc)
+
+
+def _decode_attention_sfa(
+    cfg: ModelConfig, q: jax.Array, kc_vals: jax.Array, kc_idx: jax.Array,
+    vc: jax.Array, pos: jax.Array,
+) -> jax.Array:
+    """Feature-overlap decode scoring against the sparse K cache.
+
+    q (B,H,dq) dense query; kc_vals/kc_idx (B,H,S,k); vc (B,H,S,dv).
+    The K cache stores only O(S·k) numbers per head (the paper's ~2d/3k
+    KV-memory saving, App. J); the score is the masked k×k overlap sum.
+    """
+    b, h, dq = q.shape
+    qv, qi = ref.topk_codes(q.reshape(b * h, dq), cfg.sparsity)
+    qv = qv.reshape(b, h, cfg.sparsity)
+    qi = qi.reshape(b, h, cfg.sparsity)
+    match = qi[:, :, None, :, None] == kc_idx[:, :, :, None, :]  # (B,H,S,k,k)
+    prod = qv[:, :, None, :, None] * kc_vals[:, :, :, None, :]
+    s = jnp.where(match, prod, 0.0).sum(axis=(3, 4)) / jnp.sqrt(dq)
+    smax = kc_vals.shape[2]
+    ok = jnp.arange(smax)[None, None, :] <= pos[:, None, None]
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhs,bhsd->bhd", p, vc)
+
+
+def _scatter_time(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """cache (B,H,S,d), new (B,H,d), pos (B,) -> cache with row pos written."""
+    def one(c, n, p):  # (H,S,d), (H,d), ()
+        return jax.lax.dynamic_update_slice_in_dim(c, n[:, None, :], p, axis=1)
+    return jax.vmap(one)(cache, new, pos)
+
+
+def decode_step(
+    cfg: ModelConfig, params: dict, caches: list[dict],
+    token: jax.Array, pos: jax.Array,
+) -> tuple[jax.Array, list[dict]]:
+    """One autoregressive step. token (B,) i32; pos (B,) i32 (0-based slot
+    the new token occupies). Returns next-token logits (B,vocab) and the
+    updated caches."""
+    b = token.shape[0]
+    x = params["tok_emb"][token] + params["pos_emb"][pos]  # (B,d_model)
+    x = x[:, None, :]  # (B,1,d)
+    new_caches: list[dict] = []
+    dq = cfg.qk_head_dim
+    for i in range(cfg.n_layers):
+        pre = f"l{i:02d}."
+        h = layer_norm(x, params[pre + "ln1.g"], params[pre + "ln1.b"])
+        q = (h[:, 0] @ params[pre + "attn.wq"]).reshape(b, cfg.n_heads, dq)
+        k = (h[:, 0] @ params[pre + "attn.wk"]).reshape(b, cfg.n_heads, dq)
+        v = (h[:, 0] @ params[pre + "attn.wv"]).reshape(b, cfg.n_heads, cfg.d_head)
+        if cfg.rope:
+            q = apply_rope_at(q, pos, dq, cfg.max_seq)
+            k = apply_rope_at(k, pos, dq, cfg.max_seq)
+        c = caches[i]
+        if cfg.attn == "sfa":
+            kv, ki = ref.topk_codes(k.reshape(b * cfg.n_heads, dq), cfg.sparsity)
+            kv = kv.reshape(b, cfg.n_heads, cfg.sparsity)
+            ki = ki.reshape(b, cfg.n_heads, cfg.sparsity)
+            kc_vals = _scatter_time(c["k_vals"], kv, pos)
+            kc_idx = _scatter_time(c["k_idx"], ki, pos)
+            vc = _scatter_time(c["v"], v, pos)
+            o = _decode_attention_sfa(cfg, q, kc_vals, kc_idx, vc, pos)
+            new_caches.append({"k_vals": kc_vals, "k_idx": kc_idx, "v": vc})
+        else:
+            kc = _scatter_time(c["k"], k, pos)
+            vc = _scatter_time(c["v"], v, pos)
+            o = _decode_attention_dense(q, kc, vc, pos)
+            new_caches.append({"k": kc, "v": vc})
+        x = x + (o.reshape(b, 1, cfg.n_heads * cfg.d_head) @ params[pre + "attn.wo"])
+        h2 = layer_norm(x, params[pre + "ln2.g"], params[pre + "ln2.b"])
+        mm = gelu(h2 @ params[pre + "mlp.w1"] + params[pre + "mlp.b1"])
+        x = x + mm @ params[pre + "mlp.w2"] + params[pre + "mlp.b2"]
+    x = layer_norm(x, params["lnf.g"], params["lnf.b"])
+    logits = (x @ params["tok_emb"].T)[:, 0, :]
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache (de)flattening for the AOT boundary
+# ---------------------------------------------------------------------------
+
+def _cache_keys(cfg: ModelConfig) -> list[str]:
+    return ["k_vals", "k_idx", "v"] if cfg.attn == "sfa" else ["k", "v"]
+
+
+def cache_entry_names(cfg: ModelConfig) -> list[str]:
+    return [
+        f"cache.l{i:02d}.{k}" for i in range(cfg.n_layers) for k in _cache_keys(cfg)
+    ]
+
+
+def flatten_caches(cfg: ModelConfig, caches: list[dict]) -> list[jax.Array]:
+    return [caches[i][k] for i in range(cfg.n_layers) for k in _cache_keys(cfg)]
+
+
+def unflatten_caches(cfg: ModelConfig, flat: tuple) -> list[dict]:
+    keys = _cache_keys(cfg)
+    out = []
+    it = iter(flat)
+    for _ in range(cfg.n_layers):
+        out.append({k: next(it) for k in keys})
+    return out
+
+
+def cache_shapes(cfg: ModelConfig, batch: int) -> list[tuple[str, tuple[int, ...], str]]:
+    """(name, shape, dtype) per flattened cache tensor at max_seq capacity."""
+    b, h, s = batch, cfg.n_heads, cfg.max_seq
+    out: list[tuple[str, tuple[int, ...], str]] = []
+    for i in range(cfg.n_layers):
+        if cfg.attn == "sfa":
+            out.append((f"cache.l{i:02d}.k_vals", (b, h, s, cfg.sparsity), "f32"))
+            out.append((f"cache.l{i:02d}.k_idx", (b, h, s, cfg.sparsity), "i32"))
+            out.append((f"cache.l{i:02d}.v", (b, h, s, cfg.d_head), "f32"))
+        else:
+            out.append((f"cache.l{i:02d}.k", (b, h, s, cfg.qk_head_dim), "f32"))
+            out.append((f"cache.l{i:02d}.v", (b, h, s, cfg.d_head), "f32"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV-cache memory accounting (paper Appendix J)
+# ---------------------------------------------------------------------------
+
+def kv_cache_bytes(cfg: ModelConfig, seq: int, batch: int = 1,
+                   s_val: int = 4, s_idx: int = 4, s_ptr: int = 4) -> int:
+    """Bytes of K+V cache for one model instance at context length seq.
+
+    For SFA the K half stores CSR-style (values + indices [+ indptr]);
+    V stays dense (the paper keeps V dense). Defaults reflect our f32/i32
+    artifacts; pass s_val=2, s_idx=1, s_ptr=4 for the paper's
+    fp16/int8/int32 setting (App. J ratio ≈ 2d/(3k+4)).
+    """
+    h, L = cfg.n_heads, cfg.n_layers
+    v_bytes = L * batch * h * seq * cfg.d_head * s_val
+    if cfg.attn == "sfa":
+        k_bytes = L * batch * h * (
+            seq * cfg.sparsity * (s_val + s_idx) + (seq + 1) * s_ptr
+        )
+    else:
+        k_bytes = L * batch * h * seq * cfg.qk_head_dim * s_val
+    return k_bytes + v_bytes

@@ -1,0 +1,137 @@
+"""AOT path: manifest correctness, weights round-trip, HLO text sanity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = "/tmp/sfa_aot_pytest"
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    """Compile a minimal tiny artifact set once per test session."""
+    subprocess.run(
+        [
+            sys.executable, "-m", "compile.aot",
+            "--out-dir", ART, "--preset", "tiny",
+            "--variants", "dense,sfa_k4",
+            "--entries", "train,eval,serve",
+            "--train-batch", "2", "--serve-batches", "1",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+class TestVariantParsing:
+    def test_parse_variants(self):
+        assert aot.parse_variant("tiny", "dense", False).attn == "dense"
+        c = aot.parse_variant("tiny", "sfa_k8", False)
+        assert c.attn == "sfa" and c.sparsity == 8
+        c = aot.parse_variant("tiny", "short_d16", False)
+        assert c.attn == "short" and c.short_d == 16
+        c = aot.parse_variant("tiny", "window_w32", False)
+        assert c.attn == "window" and c.window == 32
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError):
+            aot.parse_variant("tiny", "bogus", False)
+
+
+class TestManifest:
+    def test_variants_present(self, artifacts):
+        assert set(artifacts["variants"]) == {"dense", "sfa_k4"}
+
+    def test_files_exist(self, artifacts):
+        for v in artifacts["variants"].values():
+            assert os.path.exists(os.path.join(ART, v["weights"]))
+            for e in v["entries"].values():
+                assert os.path.exists(os.path.join(ART, e["file"]))
+
+    def test_param_list_matches_model(self, artifacts):
+        cfg = M.make_config("tiny", "dense")
+        names = M.param_names(cfg)
+        man = [p["name"] for p in artifacts["variants"]["dense"]["params"]]
+        assert man == names
+
+    def test_train_step_arity(self, artifacts):
+        v = artifacts["variants"]["dense"]
+        np_ = len(v["params"])
+        e = v["entries"]["train_step"]
+        assert len(e["inputs"]) == 3 * np_ + 3   # params, m, v, step, lr, tokens
+        assert len(e["outputs"]) == 3 * np_ + 2  # ... step, loss
+
+    def test_decode_io_symmetry(self, artifacts):
+        """decode outputs (minus logits) must match its cache inputs, so the
+        Rust engine can feed step t outputs straight into step t+1."""
+        for v in artifacts["variants"].values():
+            e = v["entries"]["decode_b1"]
+            cache_in = [i for i in e["inputs"] if i["name"].startswith("cache.")]
+            cache_out = [o for o in e["outputs"] if o["name"].startswith("cache.")]
+            assert [c["name"] for c in cache_in] == [c["name"] for c in cache_out]
+            assert [c["shape"] for c in cache_in] == [c["shape"] for c in cache_out]
+
+    def test_prefill_outputs_match_decode_cache_inputs(self, artifacts):
+        for v in artifacts["variants"].values():
+            pre = v["entries"]["prefill_b1"]["outputs"][1:]
+            dec = [i for i in v["entries"]["decode_b1"]["inputs"]
+                   if i["name"].startswith("cache.")]
+            assert [p["name"] for p in pre] == [d["name"] for d in dec]
+            assert [p["shape"] for p in pre] == [d["shape"] for d in dec]
+
+    def test_shapes_match_model_config(self, artifacts):
+        v = artifacts["variants"]["sfa_k4"]
+        cfg = M.make_config("tiny", "sfa", sparsity=4)
+        params = M.init_params(cfg, 0)
+        for p in v["params"]:
+            assert tuple(p["shape"]) == tuple(params[p["name"]].shape)
+
+
+class TestWeights:
+    def test_weights_roundtrip_order(self, artifacts):
+        cfg = M.make_config("tiny", "dense")
+        expected = M.init_params(cfg, artifacts["seed"])
+        with np.load(os.path.join(ART, "dense/weights.npz")) as z:
+            keys = sorted(z.files)
+            names = [k.split("|", 1)[1] for k in keys]
+            assert names == sorted(expected)
+            for key, name in zip(keys, names):
+                np.testing.assert_allclose(
+                    z[key], np.asarray(expected[name]), rtol=1e-6
+                )
+
+    def test_weights_deterministic_per_seed(self, artifacts):
+        cfg = M.make_config("tiny", "dense")
+        a = M.init_params(cfg, 42)["tok_emb"]
+        b = M.init_params(cfg, 42)["tok_emb"]
+        c = M.init_params(cfg, 43)["tok_emb"]
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.abs(np.asarray(a) - np.asarray(c)).max() > 0
+
+
+class TestHloText:
+    def test_hlo_is_parseable_text(self, artifacts):
+        path = os.path.join(ART, artifacts["variants"]["dense"]["entries"]
+                            ["eval_step"]["file"])
+        text = open(path).read()
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_no_topk_opcode(self, artifacts):
+        """XLA 0.5.1's parser rejects the `topk` HLO op; our lowering must
+        only emit `sort`-based selection (DESIGN.md §Artifact contract)."""
+        for v in artifacts["variants"].values():
+            for e in v["entries"].values():
+                text = open(os.path.join(ART, e["file"])).read()
+                for line in text.splitlines():
+                    ls = line.strip()
+                    assert not ls.startswith("topk") and " topk(" not in ls, (
+                        e["file"])

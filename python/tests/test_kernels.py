@@ -1,0 +1,301 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes / sparsity / block sizes; assert_allclose
+against the reference for forward AND straight-through backward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_sfa import flash_sfa, sfa_attention
+from compile.kernels.topk import topk_pallas
+
+jax.config.update("jax_enable_x64", False)
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def rand(shape, seed, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ref.py self-consistency
+# ---------------------------------------------------------------------------
+
+class TestReferences:
+    def test_topk_mask_counts(self):
+        x = rand((17, 33), 0)
+        for k in (1, 4, 33):
+            m = ref.topk_mask(x, k)
+            np.testing.assert_array_equal(np.asarray(m.sum(axis=1)), k)
+
+    def test_topk_sparsify_keeps_largest(self):
+        x = jnp.array([[3.0, -5.0, 1.0, 0.5]])
+        np.testing.assert_allclose(
+            ref.topk_sparsify(x, 2), jnp.array([[3.0, -5.0, 0.0, 0.0]])
+        )
+
+    def test_topk_codes_roundtrip(self):
+        x = rand((16, 32), 1)
+        vals, idx = ref.topk_codes(x, 8)
+        dense = ref.densify(vals, idx, 32)
+        np.testing.assert_allclose(dense, ref.topk_sparsify(x, 8), rtol=1e-6)
+
+    def test_topk_codes_orders_by_magnitude(self):
+        x = rand((8, 16), 2)
+        vals, _ = ref.topk_codes(x, 5)
+        mags = np.abs(np.asarray(vals))
+        assert (np.diff(mags, axis=1) <= 1e-7).all()
+
+    def test_full_k_equals_dense(self):
+        """k = d must reduce SFA to dense attention exactly."""
+        q, k_, v = rand((24, 16), 3), rand((24, 16), 4), rand((24, 16), 5)
+        np.testing.assert_allclose(
+            ref.sfa_attention_ref(q, k_, v, sparsity=16),
+            ref.attention_ref(q, k_, v),
+            rtol=1e-5, atol=1e-6,
+        )
+
+    def test_causal_mask_no_future_leak(self):
+        """Changing future keys/values must not change past outputs."""
+        q, k_, v = rand((32, 16), 6), rand((32, 16), 7), rand((32, 16), 8)
+        o1 = ref.sfa_attention_ref(q, k_, v, sparsity=4)
+        k2 = k_.at[20:].set(99.0)
+        v2 = v.at[20:].set(-99.0)
+        o2 = ref.sfa_attention_ref(q, k2, v2, sparsity=4)
+        np.testing.assert_allclose(o1[:20], o2[:20], rtol=1e-6)
+
+    def test_overlap_score_equals_matmul(self):
+        """Masked k×k outer product == densified sparse matmul (Eq. 5)."""
+        q, k_ = rand((20, 32), 9), rand((20, 32), 10)
+        qv, qi = ref.topk_codes(q, 6)
+        kv, ki = ref.topk_codes(k_, 6)
+        s_overlap = ref.overlap_score_ref(qv, qi, kv, ki, 32)
+        s_dense = (
+            ref.topk_sparsify(q, 6) @ ref.topk_sparsify(k_, 6).T
+        ) / jnp.sqrt(32.0)
+        np.testing.assert_allclose(s_overlap, s_dense, rtol=1e-5, atol=1e-6)
+
+    def test_softmax_rows_sum_to_one(self):
+        q, k_ = rand((16, 8), 11), rand((16, 8), 12)
+        s = ref.sfa_scores_ref(q, k_, sparsity=4)
+        p = jax.nn.softmax(s, axis=-1)
+        np.testing.assert_allclose(np.asarray(p.sum(axis=-1)), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas top-k vs reference
+# ---------------------------------------------------------------------------
+
+class TestTopkPallas:
+    @pytest.mark.parametrize("n,d,k,br", [
+        (64, 32, 4, 32), (64, 32, 8, 64), (128, 64, 16, 32),
+        (32, 128, 2, 32), (64, 16, 16, 16),
+    ])
+    def test_matches_ref(self, n, d, k, br):
+        x = rand((n, d), n + d + k)
+        tv, ti = topk_pallas(x, k, br)
+        rv, ri = ref.topk_codes(x, k)
+        np.testing.assert_allclose(
+            ref.densify(tv, ti, d), ref.densify(rv, ri, d), rtol=1e-6
+        )
+
+    def test_selects_all_when_k_equals_d(self):
+        x = rand((32, 8), 13)
+        tv, ti = topk_pallas(x, 8, 32)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(ref.densify(tv, ti, 8)), axis=1),
+            np.sort(np.asarray(x), axis=1), rtol=1e-6,
+        )
+
+    def test_signs_preserved(self):
+        x = -jnp.abs(rand((32, 16), 14))  # all-negative input
+        tv, _ = topk_pallas(x, 4, 32)
+        assert (np.asarray(tv) < 0).all()
+
+    def test_indices_unique_per_row(self):
+        x = rand((64, 32), 15)
+        _, ti = topk_pallas(x, 8, 32)
+        ti = np.asarray(ti)
+        for row in ti:
+            assert len(set(row.tolist())) == 8
+
+    def test_ste_gradient(self):
+        x = rand((64, 32), 16)
+        g_kernel = jax.grad(lambda a: jnp.sum(topk_pallas(a, 8, 32)[0] ** 3))(x)
+        g_ref = jax.grad(lambda a: jnp.sum(ref.topk_codes(a, 8)[0] ** 3))(x)
+        np.testing.assert_allclose(g_kernel, g_ref, rtol=1e-5, atol=1e-6)
+
+    def test_gradient_zero_off_support(self):
+        x = rand((32, 32), 17)
+        g = jax.grad(lambda a: jnp.sum(topk_pallas(a, 4, 32)[0]))(x)
+        mask = np.asarray(ref.topk_mask(x, 4))
+        assert (np.asarray(g)[~mask] == 0).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_tiles=st.integers(1, 3),
+        d=st.sampled_from([16, 32, 64, 128]),
+        k=st.integers(1, 16),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, n_tiles, d, k, seed):
+        k = min(k, d)
+        n = 32 * n_tiles
+        x = rand((n, d), seed)
+        tv, ti = topk_pallas(x, k, 32)
+        rv, ri = ref.topk_codes(x, k)
+        np.testing.assert_allclose(
+            ref.densify(tv, ti, d), ref.densify(rv, ri, d), rtol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# FlashSFA vs reference
+# ---------------------------------------------------------------------------
+
+class TestFlashSFA:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("n,d,k,dv", [
+        (64, 64, 8, 64), (128, 128, 16, 64), (96, 32, 4, 32), (32, 64, 2, 128),
+    ])
+    def test_matches_ref(self, n, d, k, dv, causal):
+        q, k_, v = rand((n, d), 1), rand((n, d), 2), rand((n, dv), 3)
+        o = sfa_attention(q, k_, v, sparsity=k, causal=causal)
+        o_ref = ref.sfa_attention_ref(q, k_, v, sparsity=k, causal=causal)
+        np.testing.assert_allclose(o, o_ref, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("bq,bk", [(16, 16), (32, 64), (64, 32), (128, 128)])
+    def test_block_size_invariance(self, bq, bk):
+        """Output must not depend on the tiling schedule."""
+        q, k_, v = rand((128, 64), 4), rand((128, 64), 5), rand((128, 64), 6)
+        o = sfa_attention(q, k_, v, sparsity=8, block_q=bq, block_k=bk)
+        o_ref = ref.sfa_attention_ref(q, k_, v, sparsity=8)
+        np.testing.assert_allclose(o, o_ref, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("n", [33, 50, 65, 127])
+    def test_non_divisible_lengths(self, n):
+        q, k_, v = rand((n, 32), 7), rand((n, 32), 8), rand((n, 32), 9)
+        o = sfa_attention(q, k_, v, sparsity=4)
+        o_ref = ref.sfa_attention_ref(q, k_, v, sparsity=4)
+        np.testing.assert_allclose(o, o_ref, rtol=RTOL, atol=ATOL)
+
+    def test_cross_attention_shapes(self):
+        """Non-causal with n_q != n_kv (encoder-decoder style)."""
+        q = rand((40, 32), 10)
+        k_, v = rand((72, 32), 11), rand((72, 16), 12)
+        qv, qi = ref.topk_codes(q, 4)
+        kv, ki = ref.topk_codes(k_, 4)
+        o = flash_sfa(qv, qi, kv, ki, v, 32, False)
+        o_ref = ref.sfa_attention_from_codes_ref(
+            qv, qi, kv, ki, v, d_orig=32, causal=False
+        )
+        np.testing.assert_allclose(o, o_ref, rtol=RTOL, atol=ATOL)
+
+    def test_causal_requires_equal_lengths(self):
+        qv, qi = ref.topk_codes(rand((32, 32), 13), 4)
+        kv, ki = ref.topk_codes(rand((64, 32), 14), 4)
+        with pytest.raises(ValueError, match="n_q == n_kv"):
+            flash_sfa(qv, qi, kv, ki, rand((64, 16), 15), 32, True)
+
+    def test_no_future_leak(self):
+        q = rand((64, 32), 16)
+        k1, v1 = rand((64, 32), 17), rand((64, 32), 18)
+        k2 = k1.at[40:].set(7.0)
+        v2 = v1.at[40:].set(-7.0)
+        o1 = sfa_attention(q, k1, v1, sparsity=4)
+        o2 = sfa_attention(q, k2, v2, sparsity=4)
+        np.testing.assert_allclose(o1[:40], o2[:40], rtol=1e-6)
+
+    def test_extreme_logits_stable(self):
+        """Online softmax must survive large-magnitude scores (no inf/nan)."""
+        q, k_, v = rand((64, 32), 19, 30.0), rand((64, 32), 20, 30.0), rand((64, 32), 21)
+        o = sfa_attention(q, k_, v, sparsity=8)
+        assert np.isfinite(np.asarray(o)).all()
+        o_ref = ref.sfa_attention_ref(q, k_, v, sparsity=8)
+        np.testing.assert_allclose(o, o_ref, rtol=1e-4, atol=1e-4)
+
+    def test_ste_gradients_match_ref(self):
+        q, k_, v = rand((64, 64), 22), rand((64, 64), 23), rand((64, 64), 24)
+
+        def loss_kernel(q, k_, v):
+            return jnp.sum(sfa_attention(q, k_, v, sparsity=8) ** 2)
+
+        def loss_ref(q, k_, v):
+            return jnp.sum(ref.sfa_attention_ref(q, k_, v, sparsity=8) ** 2)
+
+        g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k_, v)
+        g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k_, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+    def test_grad_zero_off_support(self):
+        q, k_, v = rand((32, 32), 25), rand((32, 32), 26), rand((32, 32), 27)
+        gq = jax.grad(
+            lambda a: jnp.sum(sfa_attention(a, k_, v, sparsity=4))
+        )(q)
+        mask = np.asarray(ref.topk_mask(q, 4))
+        assert (np.asarray(gq)[~mask] == 0).all()
+
+    def test_vmap_heads(self):
+        qh, kh, vh = rand((3, 64, 32), 28), rand((3, 64, 32), 29), rand((3, 64, 32), 30)
+        f = lambda a, b, c: sfa_attention(a, b, c, sparsity=4)
+        fr = lambda a, b, c: ref.sfa_attention_ref(a, b, c, sparsity=4)
+        np.testing.assert_allclose(
+            jax.vmap(f)(qh, kh, vh), jax.vmap(fr)(qh, kh, vh), rtol=RTOL, atol=ATOL
+        )
+
+    def test_jit_compatible(self):
+        q, k_, v = rand((64, 32), 31), rand((64, 32), 32), rand((64, 32), 33)
+        f = jax.jit(lambda a, b, c: sfa_attention(a, b, c, sparsity=4))
+        np.testing.assert_allclose(
+            f(q, k_, v), ref.sfa_attention_ref(q, k_, v, sparsity=4),
+            rtol=RTOL, atol=ATOL,
+        )
+
+    def test_k_equals_d_matches_dense_flash(self):
+        """Sanity: with k == d FlashSFA computes plain dense attention."""
+        q, k_, v = rand((64, 16), 34), rand((64, 16), 35), rand((64, 16), 36)
+        o = sfa_attention(q, k_, v, sparsity=16)
+        np.testing.assert_allclose(
+            o, ref.attention_ref(q, k_, v), rtol=RTOL, atol=ATOL
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([32, 48, 64, 96, 128]),
+        d=st.sampled_from([16, 32, 64, 128]),
+        k=st.sampled_from([2, 4, 8, 16]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, n, d, k, causal, seed):
+        k = min(k, d)
+        q, k_, v = rand((n, d), seed), rand((n, d), seed + 1), rand((n, d), seed + 2)
+        o = sfa_attention(q, k_, v, sparsity=k, causal=causal)
+        o_ref = ref.sfa_attention_ref(q, k_, v, sparsity=k, causal=causal)
+        np.testing.assert_allclose(o, o_ref, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        dtype=st.sampled_from(["float32", "bfloat16"]),
+        seed=st.integers(0, 2**10),
+    )
+    def test_dtype_sweep(self, dtype, seed):
+        dt = jnp.dtype(dtype)
+        q = rand((64, 32), seed).astype(dt)
+        k_ = rand((64, 32), seed + 1).astype(dt)
+        v = rand((64, 32), seed + 2).astype(dt)
+        o = sfa_attention(q, k_, v, sparsity=4)
+        o_ref = ref.sfa_attention_ref(q, k_, v, sparsity=4)
+        tol = 1e-4 if dtype == "float32" else 5e-2
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(o_ref, np.float32),
+            rtol=tol, atol=tol,
+        )

@@ -1,0 +1,29 @@
+//! `cargo bench --bench attention_kernels`
+//!
+//! Regenerates the kernel-level comparisons:
+//!   * Fig 3 — latency vs sparsity at module levels (score-only vs full
+//!     attention) at one context;
+//!   * Table 8 — top-k selection latency (partial-select RTopK analog
+//!     vs full-sort torch.topk analog) and its share of attention time;
+//!   * Table 10/11 latency block — token-sparse / low-rank / kernel /
+//!     quant baselines and their "+SFA" compositions.
+
+use sfa::bench::figures;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let budget = env_f64("SFA_BENCH_BUDGET", 0.15);
+    let ctx = env_usize("SFA_BENCH_CTX", 1024);
+
+    figures::fig3(ctx, 128, &[2, 8, 16, 32], budget).print();
+    figures::table8(&[1024, 4096, 8192], 128, 16, budget).print();
+    figures::table10_latency(ctx, 128, 8, budget).print();
+    figures::table7(ctx, 128, 8, budget).print();
+}

@@ -1,0 +1,116 @@
+//! `cargo bench --bench coordinator`
+//!
+//! L3 coordinator micro-benchmarks (artifact-independent):
+//!   * decode-path KV caches: dense vs SFA-sparse vs pruned policies
+//!     across context lengths (the TTNT story, Fig 5/6b + Table 11);
+//!   * paged KV-cache allocator throughput;
+//!   * batcher admission overhead (must be negligible vs a decode step).
+
+use std::time::Duration;
+
+use sfa::attention::decode::{
+    DenseKvCache, H2oPolicy, PrunedKvCache, QuestPolicy, SparseKvCache,
+};
+use sfa::attention::Scorer;
+use sfa::bench::harness::bench;
+use sfa::bench::table::{fmt_speedup, fmt_time, Table};
+use sfa::coordinator::request::GenRequest;
+use sfa::coordinator::Batcher;
+use sfa::kv_cache::paged::SlotLayout;
+use sfa::kv_cache::PagedKvCache;
+use sfa::util::matrix::Matrix;
+use sfa::util::rng::Rng;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let budget = env_f64("SFA_BENCH_BUDGET", 0.1);
+    let d = 128;
+    let k = 8;
+
+    // --- decode path across context lengths --------------------------
+    let mut t = Table::new(
+        "Decode (TTNT) — dense vs SFA cache vs pruning policies (d=128, k=8)",
+        &["ctx", "dense", "sfa", "sfa speedup", "h2o(b=512)", "quest(p=16)"],
+    );
+    for ctx in [2048usize, 8192, 32768] {
+        let mut rng = Rng::new(0);
+        let keys = Matrix::randn(ctx, d, &mut rng, 1.0);
+        let vals = Matrix::randn(ctx, d, &mut rng, 1.0);
+        let q: Vec<f32> = rng.normal_vec(d, 1.0);
+
+        let mut dense = DenseKvCache::new(d, d);
+        let mut sparse = SparseKvCache::new(d, d, k);
+        let mut h2o = PrunedKvCache::new(d, d, H2oPolicy::new(512, 64), Scorer::Dense);
+        let mut quest = PrunedKvCache::new(
+            d, d, QuestPolicy::new(16, 64, d), Scorer::Dense,
+        );
+        for i in 0..ctx {
+            dense.append(keys.row(i), vals.row(i));
+            sparse.append(keys.row(i), vals.row(i));
+            h2o.append(keys.row(i), vals.row(i));
+            quest.policy.ingest_key(i, keys.row(i));
+            quest.append(keys.row(i), vals.row(i));
+        }
+        quest.policy.set_query(&q);
+        let mut out = vec![0f32; d];
+        let rd = bench("dense", budget, || {
+            dense.decode(&q, &mut out);
+            std::hint::black_box(&out);
+        });
+        let rs = bench("sfa", budget, || {
+            sparse.decode(&q, &mut out);
+            std::hint::black_box(&out);
+        });
+        let rh = bench("h2o", budget, || {
+            h2o.decode(&q, &mut out);
+            std::hint::black_box(&out);
+        });
+        let rq = bench("quest", budget, || {
+            quest.decode(&q, &mut out);
+            std::hint::black_box(&out);
+        });
+        t.row(vec![
+            ctx.to_string(),
+            fmt_time(rd.median_s),
+            fmt_time(rs.median_s),
+            fmt_speedup(rd.median_s / rs.median_s),
+            fmt_time(rh.median_s),
+            fmt_time(rq.median_s),
+        ]);
+    }
+    t.print();
+
+    // --- paged allocator ------------------------------------------------
+    let layout = SlotLayout::Sparse { k: 8, d_v: 64 };
+    let payload = vec![0.5f32; layout.floats_per_token()];
+    let r = bench("paged append+free", 0.3, || {
+        let mut cache = PagedKvCache::new(4096, 16, layout);
+        let s = cache.create_seq();
+        for _ in 0..1024 {
+            cache.append(s, &payload).unwrap();
+        }
+        cache.free(s).unwrap();
+    });
+    println!(
+        "\npaged cache: 1024 appends+free in {} ({:.1}M tokens/s)",
+        fmt_time(r.median_s),
+        1024.0 / r.median_s / 1e6
+    );
+
+    // --- batcher --------------------------------------------------------
+    let r = bench("batcher", 0.2, || {
+        let mut b = Batcher::new(8, Duration::from_millis(5));
+        for i in 0..64 {
+            b.push(GenRequest::new(i, vec![1, 2, 3], 4));
+        }
+        let now = std::time::Instant::now();
+        while b.next_batch(now).is_some() {}
+    });
+    println!(
+        "batcher: 64 requests through admission in {} — negligible vs any decode step",
+        fmt_time(r.median_s)
+    );
+}

@@ -1,0 +1,56 @@
+//! `cargo bench --bench flops_tables`
+//!
+//! Regenerates the analytic cost tables (no wall-clock, instant):
+//!   * Table 6 — TFLOPs / INOPs per configuration (B=8, H=8);
+//!   * Fig 5 — FLOPs + KV-cache scaling with context;
+//!   * Fig 1b — headline FLOP/KV reductions at the default config;
+//!   * Appendix J — dense/CSR memory ratio grid;
+//! plus the Eq. 7 validation: measured overlap counts vs the n²k²/d
+//! prediction on sampled Gaussian features.
+
+use sfa::analysis::flops::measured_vs_predicted_overlaps;
+use sfa::bench::figures;
+use sfa::bench::Table;
+use sfa::sparse::memory::{memory_ratio, paper_ratio_approx, Widths};
+
+fn main() {
+    figures::table6(&[8192, 16384, 32768, 65536]).print();
+    figures::fig5(&[1024, 4096, 16384, 65536, 262144], 64, 4).print();
+    figures::fig1(131072).print();
+
+    let mut t = Table::new(
+        "Appendix J — dense/CSR memory ratio (fp16/int8/int32)",
+        &["d", "k", "exact", "2d/(3k+4)"],
+    );
+    for &d in &[64usize, 128, 256, 1024] {
+        for &k in &[4usize, 8, 16, 32] {
+            if k >= d {
+                continue;
+            }
+            t.row(vec![
+                d.to_string(),
+                k.to_string(),
+                format!("{:.2}", memory_ratio(65536, d, k, Widths::PAPER)),
+                format!("{:.2}", paper_ratio_approx(d, k)),
+            ]);
+        }
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "Eq. 7 validation — measured vs predicted overlap pairs",
+        &["n", "d", "k", "measured", "n²k²/d", "ratio"],
+    );
+    for (n, d, k) in [(512, 64, 8), (1024, 128, 16), (512, 128, 4), (2048, 128, 8)] {
+        let (m, p) = measured_vs_predicted_overlaps(n, d, k, 7);
+        t.row(vec![
+            n.to_string(),
+            d.to_string(),
+            k.to_string(),
+            m.to_string(),
+            p.to_string(),
+            format!("{:.2}", m as f64 / p as f64),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,73 @@
+//! `cargo bench --bench latency_tables`
+//!
+//! Regenerates the latency grids: paper Table 9 / Fig 4 (forward
+//! latency vs context × head-dim × sparsity) and Fig 6 (log-log TTFT /
+//! TTNT scaling with fitted exponents).
+//!
+//! Context lengths default to the single-core CPU-feasible range; the
+//! 64k-128k paper columns are produced by the power-law extrapolation
+//! printed at the end (see EXPERIMENTS.md for the audit trail).
+//! Override via env: SFA_BENCH_CTXS=1024,4096 SFA_BENCH_BUDGET=0.3
+
+use sfa::analysis::costmodel::PowerLaw;
+use sfa::bench::figures;
+
+fn env_list(name: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(name)
+        .ok()
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let budget = env_f64("SFA_BENCH_BUDGET", 0.15);
+    let ctxs = env_list("SFA_BENCH_CTXS", &[512, 1024, 2048]);
+    let dims = env_list("SFA_BENCH_DIMS", &[64, 128]);
+    let ks = env_list("SFA_BENCH_KS", &[2, 8, 32]);
+
+    figures::table9(&ctxs, &dims, &ks, budget).print();
+
+    let (a, b) = figures::fig6(&ctxs, 128, 8, budget);
+    a.print();
+    b.print();
+
+    // 128k extrapolation from the measured sweep (Table 1/10 columns).
+    println!("\n## Latency@128k extrapolation (power-law fit over measured ctxs)");
+    for (label, engine_k) in [("dense", None), ("sfa_k8", Some(8))] {
+        let times: Vec<f64> = ctxs
+            .iter()
+            .map(|&n| {
+                use sfa::attention::Engine;
+                use sfa::util::matrix::Matrix;
+                use sfa::util::rng::Rng;
+                let mut rng = Rng::new(1);
+                let q = Matrix::randn(n, 128, &mut rng, 1.0);
+                let k = Matrix::randn(n, 128, &mut rng, 1.0);
+                let v = Matrix::randn(n, 128, &mut rng, 1.0);
+                let t0 = std::time::Instant::now();
+                match engine_k {
+                    None => {
+                        sfa::attention::flash_dense::FlashDense::default()
+                            .forward(&q, &k, &v, true);
+                    }
+                    Some(kk) => {
+                        sfa::attention::flash_sfa::FlashSfa::new(kk)
+                            .forward(&q, &k, &v, true);
+                    }
+                }
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        let pl = PowerLaw::fit(&ctxs, &times);
+        println!(
+            "  {label}: alpha={:.2} R2={:.4} predicted t(131072)={:.1}s",
+            pl.alpha,
+            pl.r2(&ctxs, &times),
+            pl.predict(131072)
+        );
+    }
+}

@@ -1,0 +1,105 @@
+//! Latency scaling fits + extrapolation.
+//!
+//! CPU wall-clock at 128k-dense is hours, so the Latency@128k columns
+//! (Tables 1/10) are produced the way App. B.1 analyzes them: measure
+//! a sweep of feasible context lengths, fit log(t) = α·log(n) + c
+//! (the paper observes α ≈ 2 for prefill, ≈ 1 for decode), and
+//! extrapolate. Both measured points and the fit are reported in
+//! EXPERIMENTS.md so the extrapolation is auditable.
+
+/// Least-squares fit of y = a·x + b.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let a = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let b = (sy - a * sx) / n;
+    (a, b)
+}
+
+/// Power-law latency model t(n) = c·n^α fit in log-log space.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerLaw {
+    pub alpha: f64,
+    pub log_c: f64,
+}
+
+impl PowerLaw {
+    pub fn fit(ns: &[usize], times_s: &[f64]) -> PowerLaw {
+        let xs: Vec<f64> = ns.iter().map(|&n| (n as f64).ln()).collect();
+        let ys: Vec<f64> = times_s.iter().map(|&t| t.max(1e-12).ln()).collect();
+        let (alpha, log_c) = linear_fit(&xs, &ys);
+        PowerLaw { alpha, log_c }
+    }
+
+    pub fn predict(&self, n: usize) -> f64 {
+        (self.log_c + self.alpha * (n as f64).ln()).exp()
+    }
+
+    /// R² of the fit on the training points.
+    pub fn r2(&self, ns: &[usize], times_s: &[f64]) -> f64 {
+        let ys: Vec<f64> = times_s.iter().map(|&t| t.ln()).collect();
+        let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+        let ss_tot: f64 = ys.iter().map(|y| (y - mean) * (y - mean)).sum();
+        let ss_res: f64 = ns
+            .iter()
+            .zip(&ys)
+            .map(|(&n, y)| {
+                let p = self.log_c + self.alpha * (n as f64).ln();
+                (y - p) * (y - p)
+            })
+            .sum();
+        1.0 - ss_res / ss_tot.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0];
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-9);
+        assert!((b - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recovers_quadratic_exponent() {
+        let ns = [1024usize, 2048, 4096, 8192];
+        let ts: Vec<f64> = ns.iter().map(|&n| 3e-9 * (n as f64).powi(2)).collect();
+        let pl = PowerLaw::fit(&ns, &ts);
+        assert!((pl.alpha - 2.0).abs() < 1e-6);
+        let pred = pl.predict(131072);
+        let exact = 3e-9 * (131072f64).powi(2);
+        assert!((pred - exact).abs() / exact < 1e-6);
+    }
+
+    #[test]
+    fn r2_near_one_for_clean_power_law() {
+        let ns = [512usize, 1024, 2048, 4096, 8192];
+        let ts: Vec<f64> = ns.iter().map(|&n| 1e-7 * (n as f64).powf(1.5)).collect();
+        let pl = PowerLaw::fit(&ns, &ts);
+        assert!(pl.r2(&ns, &ts) > 0.9999);
+    }
+
+    #[test]
+    fn noisy_fit_still_reasonable() {
+        let ns = [1024usize, 2048, 4096, 8192, 16384];
+        // ±10% multiplicative noise.
+        let noise = [1.05, 0.95, 1.08, 0.93, 1.02];
+        let ts: Vec<f64> = ns
+            .iter()
+            .zip(noise)
+            .map(|(&n, z)| 2e-9 * (n as f64).powi(2) * z)
+            .collect();
+        let pl = PowerLaw::fit(&ns, &ts);
+        assert!((pl.alpha - 2.0).abs() < 0.1, "{}", pl.alpha);
+    }
+}

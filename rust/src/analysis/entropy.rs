@@ -1,0 +1,85 @@
+//! Top-k selection load balance (paper Fig. 7 / App. F): normalized
+//! entropy of the feature-index histogram per head. High entropy
+//! (≈0.9+) means the supports spread across dimensions — the property
+//! Eq. 7's balanced-load cost model assumes.
+
+use crate::sparse::topk_codes;
+use crate::util::matrix::Matrix;
+use crate::util::stats::normalized_entropy;
+
+/// Histogram of selected feature ids for one activation matrix.
+pub fn selection_histogram(x: &Matrix, k: usize) -> Vec<u64> {
+    let codes = topk_codes(x, k);
+    let mut counts = vec![0u64; x.cols];
+    for i in 0..codes.rows {
+        for (&f, &v) in codes.row_idx(i).iter().zip(codes.row_vals(i)) {
+            if v != 0.0 {
+                counts[f as usize] += 1;
+            }
+        }
+    }
+    counts
+}
+
+/// Normalized entropy of top-k selection (Fig. 7 cell value).
+pub fn selection_entropy(x: &Matrix, k: usize) -> f64 {
+    normalized_entropy(&selection_histogram(x, k))
+}
+
+/// Per-(layer, head) entropy grid from stacked activations.
+/// `acts[layer][head]` is the (n, d) activation matrix.
+pub fn entropy_grid(acts: &[Vec<Matrix>], k: usize) -> Vec<Vec<f64>> {
+    acts.iter()
+        .map(|heads| heads.iter().map(|m| selection_entropy(m, k)).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gaussian_features_are_balanced() {
+        // Isotropic activations select nearly uniformly: entropy > 0.95
+        // (the paper reports 0.85–0.98 on trained models).
+        let mut rng = Rng::new(0);
+        let x = Matrix::randn(512, 64, &mut rng, 1.0);
+        let e = selection_entropy(&x, 8);
+        assert!(e > 0.95, "entropy {e}");
+    }
+
+    #[test]
+    fn collapsed_features_have_low_entropy() {
+        // Activations dominated by 2 fixed dimensions.
+        let mut rng = Rng::new(1);
+        let mut x = Matrix::randn(512, 64, &mut rng, 0.1);
+        for i in 0..512 {
+            x.set(i, 3, 10.0);
+            x.set(i, 17, -9.0);
+        }
+        // Two active dims out of 64: H = ln2/ln64 ≈ 0.167 ≪ balanced.
+        let e = selection_entropy(&x, 2);
+        assert!(e < 0.2, "entropy {e}");
+    }
+
+    #[test]
+    fn histogram_counts_sum_to_nk() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::randn(100, 32, &mut rng, 1.0);
+        let h = selection_histogram(&x, 4);
+        assert_eq!(h.iter().sum::<u64>(), 400);
+    }
+
+    #[test]
+    fn grid_shape_matches_input() {
+        let mut rng = Rng::new(3);
+        let acts: Vec<Vec<Matrix>> = (0..3)
+            .map(|_| (0..2).map(|_| Matrix::randn(64, 16, &mut rng, 1.0)).collect())
+            .collect();
+        let g = entropy_grid(&acts, 4);
+        assert_eq!(g.len(), 3);
+        assert!(g.iter().all(|row| row.len() == 2));
+        assert!(g.iter().flatten().all(|&e| (0.0..=1.0).contains(&e)));
+    }
+}

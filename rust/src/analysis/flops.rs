@@ -1,0 +1,204 @@
+//! FLOP / INOP cost model for attention variants (paper Table 6 and
+//! the Fig. 1b / Fig. 5 "49% FLOPs" headline).
+//!
+//! Conventions (calibrated to reproduce Table 6's dense entries
+//! exactly): one multiply-add = 2 FLOPs, no causal halving (the paper's
+//! counts are for the full n×n computation), counts are per
+//! (batch × heads) and scaled by both.
+
+use crate::sparse::csc_feat::CscFeat;
+use crate::sparse::topk_codes;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Workload shape for the cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnShape {
+    pub batch: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub d_head: usize,
+    pub d_v: usize,
+}
+
+impl AttnShape {
+    /// Paper Table 6 setting: Batch=8, Heads=8, d_v = d.
+    pub fn table6(seq: usize, d: usize) -> Self {
+        AttnShape { batch: 8, heads: 8, seq, d_head: d, d_v: d }
+    }
+
+    fn bh(&self) -> u64 {
+        (self.batch * self.heads) as u64
+    }
+}
+
+/// Cost report in raw operation counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Cost {
+    pub flops: u64,
+    pub inops: u64,
+}
+
+impl Cost {
+    pub fn tflops(&self) -> f64 {
+        self.flops as f64 / 1e12
+    }
+
+    pub fn ginops(&self) -> f64 {
+        self.inops as f64 / 1e9
+    }
+}
+
+/// Dense attention forward: QKᵀ (2n²d) + softmax (≈5n²) + PV (2n²d_v).
+pub fn dense_forward(s: AttnShape) -> Cost {
+    let n = s.seq as u64;
+    let qk = 2 * n * n * s.d_head as u64;
+    let soft = 5 * n * n;
+    let pv = 2 * n * n * s.d_v as u64;
+    Cost { flops: s.bh() * (qk + soft + pv), inops: 0 }
+}
+
+/// SFA forward (FlashSFA):
+/// * scoring FLOPs: 2·E where E = n²k²/d expected overlaps (Eq. 7);
+/// * softmax over all keys (the sparse semantics keep n-wide rows);
+/// * PV stays dense (paper App. B.2: "a large proportion of the FLOPs
+///   in the sparse version come from P@V");
+/// * INOPs: posting-list traversal (one index read per overlap) plus
+///   per-(row, feature, tile) binary searches.
+pub fn sfa_forward(s: AttnShape, k: usize, block_k: usize) -> Cost {
+    let n = s.seq as u64;
+    let e = n * n * (k * k) as u64 / s.d_head as u64; // Eq. 7
+    let scoring = 2 * e;
+    let soft = 5 * n * n;
+    let pv = 2 * n * n * s.d_v as u64;
+    let topk = 2 * n * s.d_head as u64; // RTopK is O(nd)
+    // Index reads: one per overlap; binary searches: per query row,
+    // per active feature, per key tile, ~log2(posting length).
+    let tiles = n.div_ceil(block_k as u64);
+    let posting_len = (n * k as u64 / s.d_head as u64).max(1);
+    let bsearch = n * k as u64 * tiles * (64 - posting_len.leading_zeros() as u64).max(1);
+    Cost {
+        flops: s.bh() * (scoring + soft + pv + topk),
+        inops: s.bh() * (2 * e + bsearch),
+    }
+}
+
+/// Dense decode step (TTNT): one query over a cache of length n.
+pub fn dense_decode(s: AttnShape) -> Cost {
+    let n = s.seq as u64;
+    let qk = 2 * n * s.d_head as u64;
+    let soft = 5 * n;
+    let pv = 2 * n * s.d_v as u64;
+    Cost { flops: s.bh() * (qk + soft + pv), inops: 0 }
+}
+
+/// SFA decode step: E_row = n·k²/d expected overlaps for the one query.
+pub fn sfa_decode(s: AttnShape, k: usize) -> Cost {
+    let n = s.seq as u64;
+    let e = n * (k * k) as u64 / s.d_head as u64;
+    let soft = 5 * n;
+    let pv = 2 * n * s.d_v as u64;
+    let topk = 2 * s.d_head as u64;
+    Cost {
+        flops: s.bh() * (2 * e + soft + pv + topk),
+        inops: s.bh() * (2 * e + k as u64 * 16),
+    }
+}
+
+/// Fractional FLOP saving of SFA vs dense at the same shape (the
+/// paper's Fig. 1b "reduces FLOPs by 49%" aggregates QK-stage savings
+/// over the full model; here we report the attention-only fraction).
+pub fn flop_saving(s: AttnShape, k: usize) -> f64 {
+    1.0 - sfa_forward(s, k, 64).flops as f64 / dense_forward(s).flops as f64
+}
+
+/// Measure the *actual* overlap count on sampled Gaussian features and
+/// compare with the Eq. 7 prediction (validation path for Table 6).
+pub fn measured_vs_predicted_overlaps(
+    n: usize, d: usize, k: usize, seed: u64,
+) -> (u64, u64) {
+    let mut rng = Rng::new(seed);
+    let q = Matrix::randn(n, d, &mut rng, 1.0);
+    let kk = Matrix::randn(n, d, &mut rng, 1.0);
+    let qf = CscFeat::from_codes(&topk_codes(&q, k));
+    let kf = CscFeat::from_codes(&topk_codes(&kk, k));
+    let measured = CscFeat::predicted_overlaps(&qf.degrees(), &kf.degrees());
+    let predicted = (n as u64 * n as u64 * (k * k) as u64) / d as u64;
+    (measured, predicted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table6_dense_entries() {
+        // Table 6: Dense_128 @ 8192 = 2.23 TFLOPs; @ 65536 = 142.67;
+        // Dense_64 @ 8192 = 1.12. Our model counts QK+PV (+small
+        // softmax term), no causal halving, ×64 batch-heads.
+        let t = |seq, d| dense_forward(AttnShape::table6(seq, d)).tflops();
+        assert!((t(8192, 128) - 2.23).abs() / 2.23 < 0.02, "{}", t(8192, 128));
+        assert!((t(65536, 128) - 142.67).abs() / 142.67 < 0.02);
+        assert!((t(8192, 64) - 1.12).abs() / 1.12 < 0.03);
+        assert!((t(16384, 64) - 4.48).abs() / 4.48 < 0.03);
+    }
+
+    #[test]
+    fn sfa_flops_dominated_by_pv_as_in_table6() {
+        // Table 6: Sparse_8/128 @ 8192 = 1.13 TFLOPs ≈ half of dense —
+        // i.e. the PV stage; the sparse QK term is negligible.
+        let c = sfa_forward(AttnShape::table6(8192, 128), 8, 64);
+        assert!((c.tflops() - 1.13).abs() / 1.13 < 0.05, "{}", c.tflops());
+        let c16 = sfa_forward(AttnShape::table6(8192, 128), 16, 64);
+        let c32 = sfa_forward(AttnShape::table6(8192, 128), 32, 64);
+        assert!(c16.tflops() < c32.tflops());
+        assert!((c32.tflops() - 1.20).abs() / 1.20 < 0.08, "{}", c32.tflops());
+    }
+
+    #[test]
+    fn inops_scale_linearly_in_overlaps() {
+        let s = AttnShape::table6(16384, 128);
+        let i8_ = sfa_forward(s, 8, 64).ginops();
+        let i16 = sfa_forward(s, 16, 64).ginops();
+        let i32_ = sfa_forward(s, 32, 64).ginops();
+        // Table 6 shape: INOPs roughly double k=8→16→32 (29.4/39.9/58.7
+        // at 16k — super-linear in k via the k² overlap term, damped by
+        // the k·log binary-search term).
+        assert!(i16 > 1.3 * i8_ && i32_ > 1.5 * i16, "{i8_} {i16} {i32_}");
+    }
+
+    #[test]
+    fn headline_flop_saving_near_half() {
+        // Fig. 1b: "reduces FLOPs by 49%" (d=128, k=16): attention-only
+        // saving should be just under 50% (PV is preserved).
+        let s = flop_saving(AttnShape::table6(32768, 128), 16);
+        assert!((0.40..0.52).contains(&s), "saving {s}");
+    }
+
+    #[test]
+    fn decode_costs_scale_linearly_in_context() {
+        let a = dense_decode(AttnShape::table6(8192, 128)).flops;
+        let b = dense_decode(AttnShape::table6(16384, 128)).flops;
+        assert!((b as f64 / a as f64 - 2.0).abs() < 0.01);
+        let a = sfa_decode(AttnShape::table6(8192, 128), 8).flops;
+        let b = sfa_decode(AttnShape::table6(16384, 128), 8).flops;
+        assert!((b as f64 / a as f64 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn eq7_prediction_matches_measured_overlaps() {
+        // Gaussian features have near-balanced supports: measured
+        // overlap count within 2× of n²k²/d (and never below ~0.8×).
+        for (n, d, k) in [(256, 64, 8), (512, 128, 16), (256, 128, 4)] {
+            let (measured, predicted) = measured_vs_predicted_overlaps(n, d, k, 7);
+            let ratio = measured as f64 / predicted as f64;
+            assert!((0.8..2.0).contains(&ratio), "n={n} d={d} k={k}: {ratio}");
+        }
+    }
+
+    #[test]
+    fn sfa_decode_cheaper_than_dense_decode() {
+        let s = AttnShape::table6(65536, 128);
+        assert!(sfa_decode(s, 8).flops < dense_decode(s).flops);
+    }
+}

@@ -1,0 +1,18 @@
+//! Measurement & modeling: the quantitative backbone of the paper's
+//! evaluation tables that are *models* rather than wall-clock runs.
+//!
+//! * [`flops`] — FLOP / INOP cost model (Table 6), validated against
+//!   instrumented SpGEMM counts
+//! * [`bandwidth`] — bytes-moved model + host memory-bandwidth
+//!   microbench (Table 7)
+//! * [`entropy`] — top-k feature-selection load balance (Fig. 7)
+//! * [`svd`] — Jacobi eigensolver + effective rank (Fig. 11)
+//! * [`costmodel`] — power-law latency fit + extrapolation to contexts
+//!   too large to measure on CPU (the 128k columns of Tables 1/10)
+
+pub mod bandwidth;
+pub mod costmodel;
+pub mod entropy;
+pub mod flops;
+pub mod pallas_est;
+pub mod svd;

@@ -1,0 +1,157 @@
+//! Spectral analysis for Fig. 11 (App. L): effective rank of Q/K
+//! activations. Eigenvalues of the d×d covariance XᵀX are computed
+//! with a cyclic Jacobi eigensolver (d ≤ a few hundred, so O(d³)
+//! sweeps are fine); the effective rank at energy threshold τ is the
+//! number of leading eigenvalues whose cumulative sum reaches τ of the
+//! total.
+
+use crate::util::matrix::Matrix;
+
+/// Symmetric d×d covariance XᵀX / n.
+pub fn covariance(x: &Matrix) -> Matrix {
+    let d = x.cols;
+    let mut c = Matrix::zeros(d, d);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        for a in 0..d {
+            let xa = row[a];
+            if xa == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(a);
+            for (b, &xb) in row.iter().enumerate() {
+                crow[b] += xa * xb;
+            }
+        }
+    }
+    let inv = 1.0 / x.rows as f32;
+    for v in c.data.iter_mut() {
+        *v *= inv;
+    }
+    c
+}
+
+/// Eigenvalues of a symmetric matrix by cyclic Jacobi rotations,
+/// descending order.
+pub fn symmetric_eigenvalues(a: &Matrix, sweeps: usize) -> Vec<f32> {
+    assert_eq!(a.rows, a.cols);
+    let d = a.rows;
+    let mut m = a.clone();
+    for _ in 0..sweeps {
+        let mut off = 0.0f32;
+        for p in 0..d {
+            for q in (p + 1)..d {
+                off += m.get(p, q).abs();
+            }
+        }
+        if off < 1e-9 {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply the rotation J(p, q, θ) on both sides.
+                for i in 0..d {
+                    let aip = m.get(i, p);
+                    let aiq = m.get(i, q);
+                    m.set(i, p, c * aip - s * aiq);
+                    m.set(i, q, s * aip + c * aiq);
+                }
+                for i in 0..d {
+                    let api = m.get(p, i);
+                    let aqi = m.get(q, i);
+                    m.set(p, i, c * api - s * aqi);
+                    m.set(q, i, s * api + c * aqi);
+                }
+            }
+        }
+    }
+    let mut eig: Vec<f32> = (0..d).map(|i| m.get(i, i)).collect();
+    eig.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    eig
+}
+
+/// Effective rank at cumulative-energy threshold τ (Fig. 11: τ = 0.9).
+pub fn effective_rank(x: &Matrix, tau: f32) -> usize {
+    let eig = symmetric_eigenvalues(&covariance(x), 30);
+    let total: f32 = eig.iter().map(|&e| e.max(0.0)).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut acc = 0.0;
+    for (i, &e) in eig.iter().enumerate() {
+        acc += e.max(0.0);
+        if acc >= tau * total {
+            return i + 1;
+        }
+    }
+    eig.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eigenvalues_of_diagonal_matrix() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, v) in [3.0, 1.0, 4.0, 1.5].iter().enumerate() {
+            a.set(i, i, *v);
+        }
+        let eig = symmetric_eigenvalues(&a, 10);
+        assert_eq!(eig.len(), 4);
+        assert!((eig[0] - 4.0).abs() < 1e-5);
+        assert!((eig[3] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eigenvalue_sum_equals_trace() {
+        let mut rng = Rng::new(0);
+        let x = Matrix::randn(32, 12, &mut rng, 1.0);
+        let c = covariance(&x);
+        let trace: f32 = (0..12).map(|i| c.get(i, i)).sum();
+        let eig = symmetric_eigenvalues(&c, 30);
+        let sum: f32 = eig.iter().sum();
+        assert!((trace - sum).abs() / trace < 1e-3, "{trace} vs {sum}");
+    }
+
+    #[test]
+    fn full_rank_gaussian_has_high_effective_rank() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(1024, 32, &mut rng, 1.0);
+        let r = effective_rank(&x, 0.9);
+        assert!(r >= 26, "effective rank {r}");
+    }
+
+    #[test]
+    fn planted_low_rank_detected() {
+        // X = U S: rank 5. Fig. 11's finding is that trained Q/K live
+        // on such low-dimensional manifolds (≈50-60 of 128).
+        let mut rng = Rng::new(2);
+        let u = Matrix::randn(512, 5, &mut rng, 1.0);
+        let s = Matrix::randn(5, 64, &mut rng, 1.0);
+        let x = u.matmul(&s);
+        let r = effective_rank(&x, 0.9);
+        assert!(r <= 5, "effective rank {r}");
+    }
+
+    #[test]
+    fn effective_rank_monotone_in_tau() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(256, 24, &mut rng, 1.0);
+        let r5 = effective_rank(&x, 0.5);
+        let r9 = effective_rank(&x, 0.9);
+        let r99 = effective_rank(&x, 0.99);
+        assert!(r5 <= r9 && r9 <= r99);
+    }
+}

@@ -1,0 +1,578 @@
+//! Decode-path (KV-cache) attention: one query token against a growing
+//! key/value cache — the paper's TTNT scenario (Fig. 5/6, App. B.1).
+//!
+//! * [`DenseKvCache`] — standard dense cache, O(len·d) per step.
+//! * [`SparseKvCache`] — SFA cache: keys stored as top-k codes in
+//!   *incremental feature-wise posting lists*, O(len·k²/d) expected
+//!   score work per step, and App-J memory (values+indices only).
+//! * [`KvPolicy`] + [`PrunedKvCache`] — training-free token-pruning
+//!   baselines (H2O, SnapKV-style, Quest) for the Table 11 comparison,
+//!   each composable with the SFA scorer (the "+SFA" rows).
+
+use crate::attention::{Scorer, NEG_INF};
+use crate::sparse::csr::TopkCodes;
+use crate::sparse::topk_codes;
+use crate::util::matrix::Matrix;
+
+/// Softmax + weighted V-sum over an explicit (key id, score) set.
+fn softmax_weighted_sum(
+    scores: &[(u32, f32)],
+    v_row: impl Fn(usize) -> *const f32,
+    d_v: usize,
+    out: &mut [f32],
+) {
+    let m = scores.iter().fold(NEG_INF, |a, &(_, s)| a.max(s));
+    out.fill(0.0);
+    if m <= NEG_INF {
+        return;
+    }
+    let mut l = 0.0;
+    for &(_, s) in scores {
+        l += (s - m).exp();
+    }
+    let inv = 1.0 / l;
+    for &(j, s) in scores {
+        let w = (s - m).exp() * inv;
+        let vp = v_row(j as usize);
+        unsafe {
+            for t in 0..d_v {
+                out[t] += w * *vp.add(t);
+            }
+        }
+    }
+}
+
+fn topk_row(q: &[f32], k: usize) -> (Vec<f32>, Vec<u16>) {
+    let m = Matrix::from_vec(1, q.len(), q.to_vec());
+    let c = topk_codes(&m, k);
+    (c.vals, c.idx)
+}
+
+// ---------------------------------------------------------------------------
+// Dense cache
+// ---------------------------------------------------------------------------
+
+/// Dense KV cache for one head.
+#[derive(Debug, Clone)]
+pub struct DenseKvCache {
+    pub d: usize,
+    pub d_v: usize,
+    pub keys: Vec<f32>,
+    pub values: Vec<f32>,
+    pub len: usize,
+}
+
+impl DenseKvCache {
+    pub fn new(d: usize, d_v: usize) -> Self {
+        DenseKvCache { d, d_v, keys: Vec::new(), values: Vec::new(), len: 0 }
+    }
+
+    pub fn append(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.d);
+        assert_eq!(v.len(), self.d_v);
+        self.keys.extend_from_slice(k);
+        self.values.extend_from_slice(v);
+        self.len += 1;
+    }
+
+    /// One decode step: softmax(q·Kᵀ/√d)·V over the whole cache.
+    pub fn decode(&self, q: &[f32], out: &mut [f32]) {
+        let scale = 1.0 / (self.d as f32).sqrt();
+        let mut scores = Vec::with_capacity(self.len);
+        for j in 0..self.len {
+            let krow = &self.keys[j * self.d..(j + 1) * self.d];
+            let mut acc = 0.0;
+            for t in 0..self.d {
+                acc += q[t] * krow[t];
+            }
+            scores.push((j as u32, acc * scale));
+        }
+        let values = &self.values;
+        let dv = self.d_v;
+        softmax_weighted_sum(&scores, |j| values[j * dv..].as_ptr(), dv, out);
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.keys.len() + self.values.len()) * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse (SFA) cache
+// ---------------------------------------------------------------------------
+
+/// SFA KV cache: top-k key codes in growable feature-wise posting
+/// lists (token ids stay ascending because appends are in order), plus
+/// dense V. This is the Rust twin of the L2 sparse decode cache.
+#[derive(Debug, Clone)]
+pub struct SparseKvCache {
+    pub d: usize,
+    pub d_v: usize,
+    pub k: usize,
+    /// posting[f] = ascending (token, value) pairs for feature f.
+    posting: Vec<Vec<(u32, f32)>>,
+    values: Vec<f32>,
+    pub len: usize,
+}
+
+impl SparseKvCache {
+    pub fn new(d: usize, d_v: usize, k: usize) -> Self {
+        SparseKvCache {
+            d,
+            d_v,
+            k,
+            posting: vec![Vec::new(); d],
+            values: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Append a *dense* key (top-k happens here) + dense value.
+    pub fn append(&mut self, key: &[f32], v: &[f32]) {
+        assert_eq!(key.len(), self.d);
+        let (vals, idx) = topk_row(key, self.k);
+        for (&val, &f) in vals.iter().zip(&idx) {
+            if val != 0.0 {
+                self.posting[f as usize].push((self.len as u32, val));
+            }
+        }
+        self.values.extend_from_slice(v);
+        self.len += 1;
+    }
+
+    /// One decode step: sparsify q, walk its features' posting lists
+    /// (scores default to 0 for keys with no overlap — all cached keys
+    /// participate in the softmax, matching the L1/L2 semantics).
+    pub fn decode(&self, q: &[f32], out: &mut [f32]) {
+        let scale = 1.0 / (self.d as f32).sqrt();
+        let (qv, qi) = topk_row(q, self.k);
+        let mut acc = vec![0f32; self.len];
+        for (&val, &f) in qv.iter().zip(&qi) {
+            if val == 0.0 {
+                continue;
+            }
+            for &(tok, kv) in &self.posting[f as usize] {
+                acc[tok as usize] += val * kv;
+            }
+        }
+        let scores: Vec<(u32, f32)> = acc
+            .iter()
+            .enumerate()
+            .map(|(j, &s)| (j as u32, s * scale))
+            .collect();
+        let values = &self.values;
+        let dv = self.d_v;
+        softmax_weighted_sum(&scores, |j| values[j * dv..].as_ptr(), dv, out);
+    }
+
+    /// Appendix-J style byte accounting (vals+indices for K, dense V).
+    pub fn bytes(&self, w: crate::sparse::memory::Widths) -> usize {
+        let k_nnz: usize = self.posting.iter().map(|p| p.len()).sum();
+        k_nnz * (w.s_val + w.s_idx) + (self.len + 1) * w.s_ptr
+            + self.values.len() * w.s_val
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Token-pruning policies (Table 11 baselines)
+// ---------------------------------------------------------------------------
+
+/// Which keys a pruning policy retains for the current step.
+pub trait KvPolicy: Send {
+    fn name(&self) -> String;
+    /// Called once per decode step *before* scoring; returns the key ids
+    /// to score against (always includes the most recent keys).
+    fn select(&mut self, cache_len: usize) -> Vec<u32>;
+    /// Called after scoring with the (key, prob) pairs so stateful
+    /// policies (H2O) can update their statistics.
+    fn observe(&mut self, probs: &[(u32, f32)]);
+}
+
+/// H2O: keep `budget` heavy hitters by cumulative attention mass plus a
+/// `recent` tail window (Zhang et al. 2023).
+pub struct H2oPolicy {
+    pub budget: usize,
+    pub recent: usize,
+    cumulative: Vec<f32>,
+}
+
+impl H2oPolicy {
+    pub fn new(budget: usize, recent: usize) -> Self {
+        H2oPolicy { budget, recent, cumulative: Vec::new() }
+    }
+}
+
+impl KvPolicy for H2oPolicy {
+    fn name(&self) -> String {
+        format!("h2o(b={},r={})", self.budget, self.recent)
+    }
+
+    fn select(&mut self, cache_len: usize) -> Vec<u32> {
+        self.cumulative.resize(cache_len, 0.0);
+        let recent_lo = cache_len.saturating_sub(self.recent);
+        let mut heavy: Vec<u32> = (0..recent_lo as u32).collect();
+        if heavy.len() > self.budget {
+            heavy.select_nth_unstable_by(self.budget - 1, |&a, &b| {
+                self.cumulative[b as usize]
+                    .partial_cmp(&self.cumulative[a as usize])
+                    .unwrap()
+            });
+            heavy.truncate(self.budget);
+        }
+        heavy.extend(recent_lo as u32..cache_len as u32);
+        heavy.sort_unstable();
+        heavy
+    }
+
+    fn observe(&mut self, probs: &[(u32, f32)]) {
+        for &(j, p) in probs {
+            self.cumulative[j as usize] += p;
+        }
+    }
+}
+
+/// SnapKV-style: a fixed retained set chosen once (at prefill end, from
+/// pooled recent-query attention) plus the recent tail.
+pub struct SnapKvPolicy {
+    pub keep: Vec<u32>,
+    pub recent: usize,
+}
+
+impl KvPolicy for SnapKvPolicy {
+    fn name(&self) -> String {
+        format!("snapkv(keep={},r={})", self.keep.len(), self.recent)
+    }
+
+    fn select(&mut self, cache_len: usize) -> Vec<u32> {
+        let recent_lo = cache_len.saturating_sub(self.recent) as u32;
+        let mut set: Vec<u32> = self.keep.iter().copied().filter(|&j| j < recent_lo).collect();
+        set.extend(recent_lo..cache_len as u32);
+        set.sort_unstable();
+        set.dedup();
+        set
+    }
+
+    fn observe(&mut self, _probs: &[(u32, f32)]) {}
+}
+
+/// Quest-style page selection: summarize pages of `page` keys by
+/// per-dimension min/max; per step keep the `budget` pages with the
+/// highest upper-bound score for the current query.
+pub struct QuestPolicy {
+    pub page: usize,
+    pub budget_pages: usize,
+    pub d: usize,
+    page_min: Vec<f32>,
+    page_max: Vec<f32>,
+    n_pages: usize,
+    /// Query for the current step (set via [`QuestPolicy::set_query`]).
+    q: Vec<f32>,
+}
+
+impl QuestPolicy {
+    pub fn new(page: usize, budget_pages: usize, d: usize) -> Self {
+        QuestPolicy {
+            page,
+            budget_pages,
+            d,
+            page_min: Vec::new(),
+            page_max: Vec::new(),
+            n_pages: 0,
+            q: vec![0.0; d],
+        }
+    }
+
+    /// Update page summaries with a freshly appended key.
+    pub fn ingest_key(&mut self, key_id: usize, key: &[f32]) {
+        let pg = key_id / self.page;
+        if pg >= self.n_pages {
+            self.n_pages = pg + 1;
+            self.page_min.resize(self.n_pages * self.d, f32::INFINITY);
+            self.page_max.resize(self.n_pages * self.d, f32::NEG_INFINITY);
+        }
+        for t in 0..self.d {
+            let i = pg * self.d + t;
+            self.page_min[i] = self.page_min[i].min(key[t]);
+            self.page_max[i] = self.page_max[i].max(key[t]);
+        }
+    }
+
+    pub fn set_query(&mut self, q: &[f32]) {
+        self.q.copy_from_slice(q);
+    }
+
+    fn page_bound(&self, pg: usize) -> f32 {
+        let mut b = 0.0;
+        for t in 0..self.d {
+            let q = self.q[t];
+            let lo = self.page_min[pg * self.d + t];
+            let hi = self.page_max[pg * self.d + t];
+            b += (q * lo).max(q * hi);
+        }
+        b
+    }
+}
+
+impl KvPolicy for QuestPolicy {
+    fn name(&self) -> String {
+        format!("quest(page={},pages={})", self.page, self.budget_pages)
+    }
+
+    fn select(&mut self, cache_len: usize) -> Vec<u32> {
+        let n_pages = cache_len.div_ceil(self.page);
+        let mut pages: Vec<usize> = (0..n_pages).collect();
+        if pages.len() > self.budget_pages {
+            pages.select_nth_unstable_by(self.budget_pages - 1, |&a, &b| {
+                self.page_bound(b).partial_cmp(&self.page_bound(a)).unwrap()
+            });
+            pages.truncate(self.budget_pages);
+        }
+        // Always include the newest page (recency, as in Quest).
+        if n_pages > 0 && !pages.contains(&(n_pages - 1)) {
+            pages.push(n_pages - 1);
+        }
+        let mut keys = Vec::with_capacity(pages.len() * self.page);
+        for pg in pages {
+            let lo = pg * self.page;
+            let hi = ((pg + 1) * self.page).min(cache_len);
+            keys.extend(lo as u32..hi as u32);
+        }
+        keys.sort_unstable();
+        keys
+    }
+
+    fn observe(&mut self, _probs: &[(u32, f32)]) {}
+}
+
+/// Dense KV cache + pruning policy + pluggable scorer (Table 11 rows
+/// and their "+SFA" compositions).
+pub struct PrunedKvCache<P: KvPolicy> {
+    pub cache: DenseKvCache,
+    pub policy: P,
+    pub scorer: Scorer,
+    /// Cached top-k key codes (built lazily when scorer is SFA).
+    key_codes: Option<TopkCodes>,
+}
+
+impl<P: KvPolicy> PrunedKvCache<P> {
+    pub fn new(d: usize, d_v: usize, policy: P, scorer: Scorer) -> Self {
+        PrunedKvCache { cache: DenseKvCache::new(d, d_v), policy, scorer, key_codes: None }
+    }
+
+    pub fn append(&mut self, k: &[f32], v: &[f32]) {
+        self.cache.append(k, v);
+        if let Scorer::Sfa { k: kk } = self.scorer {
+            let (vals, idx) = topk_row(k, kk);
+            match &mut self.key_codes {
+                Some(codes) => {
+                    codes.vals.extend_from_slice(&vals);
+                    codes.idx.extend_from_slice(&idx);
+                    codes.rows += 1;
+                }
+                None => {
+                    self.key_codes = Some(TopkCodes {
+                        rows: 1,
+                        dim: self.cache.d,
+                        k: kk,
+                        vals,
+                        idx,
+                    });
+                }
+            }
+        }
+    }
+
+    pub fn decode(&mut self, q: &[f32], out: &mut [f32]) {
+        let selected = self.policy.select(self.cache.len);
+        let scale = 1.0 / (self.cache.d as f32).sqrt();
+        let mut scores = Vec::with_capacity(selected.len());
+        match self.scorer {
+            Scorer::Dense => {
+                for &j in &selected {
+                    let krow = &self.cache.keys
+                        [j as usize * self.cache.d..(j as usize + 1) * self.cache.d];
+                    let mut acc = 0.0;
+                    for t in 0..self.cache.d {
+                        acc += q[t] * krow[t];
+                    }
+                    scores.push((j, acc * scale));
+                }
+            }
+            Scorer::Sfa { k: kk } => {
+                let (qv, qi) = topk_row(q, kk);
+                let codes = self.key_codes.as_ref().expect("codes built on append");
+                let qcodes = TopkCodes {
+                    rows: 1, dim: self.cache.d, k: kk, vals: qv, idx: qi,
+                };
+                for &j in &selected {
+                    scores.push((j, qcodes.overlap_dot(0, codes, j as usize) * scale));
+                }
+            }
+        }
+        // softmax over the retained set
+        let m = scores.iter().fold(NEG_INF, |a, &(_, s)| a.max(s));
+        let mut probs: Vec<(u32, f32)> = Vec::with_capacity(scores.len());
+        let mut l = 0.0;
+        for &(j, s) in &scores {
+            let e = (s - m).exp();
+            l += e;
+            probs.push((j, e));
+        }
+        for p in probs.iter_mut() {
+            p.1 /= l;
+        }
+        out.fill(0.0);
+        for &(j, w) in &probs {
+            let vrow = self.cache.values
+                [j as usize * self.cache.d_v..(j as usize + 1) * self.cache.d_v]
+                .as_ptr();
+            unsafe {
+                for t in 0..self.cache.d_v {
+                    out[t] += w * *vrow.add(t);
+                }
+            }
+        }
+        self.policy.observe(&probs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::DenseAttention;
+    use crate::attention::Engine;
+    use crate::util::rng::Rng;
+
+    fn fill_caches(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        (
+            Matrix::randn(n, d, &mut rng, 1.0),
+            Matrix::randn(n, d, &mut rng, 1.0),
+            Matrix::randn(n, d, &mut rng, 1.0),
+        )
+    }
+
+    #[test]
+    fn dense_decode_matches_last_row_of_forward() {
+        let (q, k, v) = fill_caches(24, 16, 0);
+        let mut cache = DenseKvCache::new(16, 16);
+        for i in 0..24 {
+            cache.append(k.row(i), v.row(i));
+        }
+        let mut out = vec![0f32; 16];
+        cache.decode(q.row(23), &mut out);
+        let full = DenseAttention.forward(&q, &k, &v, true);
+        for t in 0..16 {
+            assert!((out[t] - full.get(23, t)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sparse_decode_matches_sfa_reference_last_row() {
+        let (q, k, v) = fill_caches(32, 32, 1);
+        let mut cache = SparseKvCache::new(32, 32, 4);
+        for i in 0..32 {
+            cache.append(k.row(i), v.row(i));
+        }
+        let mut out = vec![0f32; 32];
+        cache.decode(q.row(31), &mut out);
+        let full = crate::attention::dense::SfaReference { k: 4 }
+            .forward(&q, &k, &v, true);
+        for t in 0..32 {
+            assert!((out[t] - full.get(31, t)).abs() < 1e-5, "t={t}");
+        }
+    }
+
+    #[test]
+    fn sparse_cache_uses_less_memory() {
+        let (_, k, v) = fill_caches(512, 64, 2);
+        let mut dense = DenseKvCache::new(64, 64);
+        let mut sparse = SparseKvCache::new(64, 64, 8);
+        for i in 0..512 {
+            dense.append(k.row(i), v.row(i));
+            sparse.append(k.row(i), v.row(i));
+        }
+        let w = crate::sparse::memory::Widths::OURS;
+        assert!(sparse.bytes(w) < dense.bytes());
+    }
+
+    #[test]
+    fn h2o_respects_budget_and_recency() {
+        let mut p = H2oPolicy::new(4, 2);
+        // Simulate 20 cached tokens with mass concentrated on key 3.
+        let sel = p.select(20);
+        assert!(sel.len() <= 4 + 2);
+        p.observe(&[(3, 0.9), (0, 0.1)]);
+        let sel = p.select(20);
+        assert!(sel.contains(&3));
+        assert!(sel.contains(&18) && sel.contains(&19), "recent tail kept");
+    }
+
+    #[test]
+    fn snapkv_keeps_fixed_set() {
+        let mut p = SnapKvPolicy { keep: vec![1, 5, 9], recent: 2 };
+        let sel = p.select(30);
+        for j in [1, 5, 9, 28, 29] {
+            assert!(sel.contains(&j));
+        }
+        assert_eq!(sel.len(), 5);
+    }
+
+    #[test]
+    fn quest_selects_high_bound_pages() {
+        let d = 4;
+        let mut p = QuestPolicy::new(4, 1, d);
+        // 3 pages; page 1 has large-magnitude keys.
+        for i in 0..12 {
+            let scale = if (4..8).contains(&i) { 10.0 } else { 0.1 };
+            let key = vec![scale; d];
+            p.ingest_key(i, &key);
+        }
+        p.set_query(&[1.0, 1.0, 1.0, 1.0]);
+        let sel = p.select(12);
+        // Budget page 1 (+always newest page 2).
+        assert!(sel.contains(&4) && sel.contains(&7), "{sel:?}");
+        assert!(sel.contains(&11));
+        assert!(!sel.contains(&0));
+    }
+
+    #[test]
+    fn pruned_cache_with_full_budget_matches_dense() {
+        let (q, k, v) = fill_caches(16, 8, 3);
+        let mut pruned = PrunedKvCache::new(
+            8, 8, H2oPolicy::new(1000, 1000), Scorer::Dense,
+        );
+        let mut dense = DenseKvCache::new(8, 8);
+        for i in 0..16 {
+            pruned.append(k.row(i), v.row(i));
+            dense.append(k.row(i), v.row(i));
+        }
+        let mut a = vec![0f32; 8];
+        let mut b = vec![0f32; 8];
+        pruned.decode(q.row(15), &mut a);
+        dense.decode(q.row(15), &mut b);
+        for t in 0..8 {
+            assert!((a[t] - b[t]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn pruned_cache_sfa_scorer_matches_sparse_cache_full_budget() {
+        let (q, k, v) = fill_caches(20, 16, 4);
+        let mut pruned = PrunedKvCache::new(
+            16, 16, H2oPolicy::new(1000, 1000), Scorer::Sfa { k: 4 },
+        );
+        let mut sparse = SparseKvCache::new(16, 16, 4);
+        for i in 0..20 {
+            pruned.append(k.row(i), v.row(i));
+            sparse.append(k.row(i), v.row(i));
+        }
+        let mut a = vec![0f32; 16];
+        let mut b = vec![0f32; 16];
+        pruned.decode(q.row(19), &mut a);
+        sparse.decode(q.row(19), &mut b);
+        for t in 0..16 {
+            assert!((a[t] - b[t]).abs() < 1e-5, "t={t}: {} vs {}", a[t], b[t]);
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Naive dense attention: materializes the full n×n score matrix.
+//! The correctness oracle for every other engine, and the "standard
+//! attention" end of the paper's Figure 2.
+
+use crate::attention::{Engine, NEG_INF};
+use crate::util::matrix::Matrix;
+
+/// Materializing softmax(QKᵀ/√d)V.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DenseAttention;
+
+/// Row-wise softmax in place; entries ≤ NEG_INF are treated as masked.
+pub fn softmax_rows(s: &mut Matrix) {
+    for i in 0..s.rows {
+        let row = s.row_mut(i);
+        let m = row.iter().fold(NEG_INF, |a, &b| a.max(b));
+        if m <= NEG_INF {
+            row.fill(0.0);
+            continue;
+        }
+        let mut l = 0.0;
+        for x in row.iter_mut() {
+            if *x <= NEG_INF {
+                *x = 0.0;
+            } else {
+                *x = (*x - m).exp();
+                l += *x;
+            }
+        }
+        let inv = 1.0 / l;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Scores QKᵀ·scale with optional causal mask.
+pub fn scores(q: &Matrix, k: &Matrix, scale: f32, causal: bool) -> Matrix {
+    assert_eq!(q.cols, k.cols);
+    let mut s = q.matmul(&k.transpose());
+    for v in s.data.iter_mut() {
+        *v *= scale;
+    }
+    if causal {
+        for i in 0..s.rows {
+            let row = s.row_mut(i);
+            for x in row.iter_mut().skip(i + 1) {
+                *x = NEG_INF;
+            }
+        }
+    }
+    s
+}
+
+impl Engine for DenseAttention {
+    fn name(&self) -> String {
+        "dense".into()
+    }
+
+    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+        let scale = 1.0 / (q.cols as f32).sqrt();
+        let mut s = scores(q, k, scale, causal);
+        softmax_rows(&mut s);
+        s.matmul(v)
+    }
+}
+
+/// Dense attention over *pre-sparsified* Q/K (the materializing SFA
+/// reference: softmax(Topk(Q)·Topk(K)ᵀ/√d)·V). Oracle for FlashSFA.
+#[derive(Debug, Clone, Copy)]
+pub struct SfaReference {
+    pub k: usize,
+}
+
+impl Engine for SfaReference {
+    fn name(&self) -> String {
+        format!("sfa_ref_k{}", self.k)
+    }
+
+    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+        let qc = crate::sparse::topk_codes(q, self.k).densify();
+        let kc = crate::sparse::topk_codes(k, self.k).densify();
+        DenseAttention.forward(&qc, &kc, v, causal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::qkv;
+    use crate::util::matrix::assert_close;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let (q, k, _) = qkv(8, 16, 16, 0);
+        let mut s = scores(&q, &k, 0.25, true);
+        softmax_rows(&mut s);
+        for i in 0..8 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            // causal: no mass beyond the diagonal
+            for j in i + 1..8 {
+                assert_eq!(s.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_scores_average_values() {
+        let q = Matrix::zeros(4, 8);
+        let k = Matrix::zeros(4, 8);
+        let mut v = Matrix::zeros(4, 2);
+        for i in 0..4 {
+            v.set(i, 0, i as f32);
+        }
+        let out = DenseAttention.forward(&q, &k, &v, false);
+        // all scores equal -> output = mean of V rows
+        for i in 0..4 {
+            assert!((out.get(i, 0) - 1.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn causal_first_row_copies_v0() {
+        let (q, k, v) = qkv(6, 8, 4, 1);
+        let out = DenseAttention.forward(&q, &k, &v, true);
+        for t in 0..4 {
+            assert!((out.get(0, t) - v.get(0, t)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sfa_reference_with_full_k_equals_dense() {
+        let (q, k, v) = qkv(12, 16, 8, 2);
+        let a = SfaReference { k: 16 }.forward(&q, &k, &v, true);
+        let b = DenseAttention.forward(&q, &k, &v, true);
+        assert_close(&a, &b, 1e-5, 1e-6);
+    }
+}

@@ -1,0 +1,269 @@
+//! FlashSFA on CPU — a structurally faithful port of the paper's CUDA
+//! kernel (App. C, Algorithm 1).
+//!
+//! Pipeline per query tile (rows [i0, i0+Br)):
+//!
+//! 1. walk the CSR-style top-k codes of each query row (lines 3-8);
+//! 2. for every active feature f, BINARY_SEARCH_RANGE the feature-wise
+//!    CSC posting list of K̃ down to the current key tile (line 10);
+//! 3. scatter-add qv·kv into the Br×Bc score buffer (lines 11-15) —
+//!    the CPU analog of the register-resident 2×2 thread patches: each
+//!    (r, c) score cell is owned by exactly one accumulation pass, so
+//!    no synchronization is needed;
+//! 4. causal-mask the tile, fold it into the online-softmax state, and
+//!    stream V rows (lines 21-32).
+//!
+//! Keys with empty support intersection keep score 0 — they still
+//! participate in the softmax, which is exactly the semantics of
+//! softmax(Q̃K̃ᵀ/√d)V (the paper's "mathematically identical" claim).
+//!
+//! Work per tile is proportional to the number of posting-list hits,
+//! i.e. Θ(n²k²/d) overall for balanced supports (paper Eq. 7), while
+//! the n×n score matrix is never materialized.
+
+use crate::attention::online_softmax::OnlineSoftmax;
+use crate::attention::{Engine, NEG_INF};
+use crate::sparse::{topk_codes, CscFeat, TopkCodes};
+use crate::util::matrix::Matrix;
+use crate::util::threadpool::{parallel_for_dynamic, SendPtr};
+
+#[derive(Debug, Clone, Copy)]
+pub struct FlashSfa {
+    /// Feature sparsity budget k (paper Eq. 3-4).
+    pub k: usize,
+    pub block_q: usize,
+    pub block_k: usize,
+    pub threads: usize,
+}
+
+impl FlashSfa {
+    pub fn new(k: usize) -> Self {
+        FlashSfa {
+            k,
+            block_q: 64,
+            block_k: 64,
+            threads: crate::util::threadpool::default_threads(),
+        }
+    }
+
+    /// Forward over pre-computed sparse codes (the kernel boundary the
+    /// Pallas twin exposes; `forward` adds the top-k step).
+    pub fn forward_codes(
+        &self,
+        q_codes: &TopkCodes,
+        k_feat: &CscFeat,
+        v: &Matrix,
+        d_orig: usize,
+        causal: bool,
+    ) -> Matrix {
+        assert_eq!(k_feat.n_tokens, v.rows);
+        let n_q = q_codes.rows;
+        let n_kv = k_feat.n_tokens;
+        if causal {
+            assert_eq!(n_q, n_kv, "causal FlashSFA requires n_q == n_kv");
+        }
+        let scale = 1.0 / (d_orig as f32).sqrt();
+        let mut out = Matrix::zeros(n_q, v.cols);
+        let n_tiles = n_q.div_ceil(self.block_q);
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+
+        let kq = q_codes.k;
+        parallel_for_dynamic(n_tiles, self.threads, 1, move |tile| {
+            let i0 = tile * self.block_q;
+            let br = self.block_q.min(n_q - i0);
+            let mut os = OnlineSoftmax::new(br, v.cols);
+            let mut score_tile = vec![0f32; br * self.block_k];
+
+            // §Perf iteration 1 (EXPERIMENTS.md): key tiles are scanned
+            // in ascending j, so each (query row, feature) pair walks
+            // its posting list monotonically — one cursor per pair
+            // replaces the per-tile BINARY_SEARCH_RANGE with O(1)
+            // amortized advancement (each posting hit is consumed
+            // exactly once per query tile).
+            let mut cursors: Vec<u32> = Vec::with_capacity(br * kq);
+            for r in 0..br {
+                for &f in q_codes.row_idx(i0 + r) {
+                    cursors.push(k_feat.indptr[f as usize]);
+                }
+            }
+
+            let j_end = if causal { (i0 + br).min(n_kv) } else { n_kv };
+            let mut j0 = 0;
+            while j0 < j_end {
+                let bc = self.block_k.min(j_end - j0);
+                score_tile[..br * bc].fill(0.0);
+                let tile_hi = (j0 + bc) as u32;
+
+                // Lines 3-15: feature-overlap accumulation.
+                for r in 0..br {
+                    let i = i0 + r;
+                    let srow = &mut score_tile[r * bc..(r + 1) * bc];
+                    let idx = q_codes.row_idx(i);
+                    let vals = q_codes.row_vals(i);
+                    for (slot, (&f, &qv)) in idx.iter().zip(vals).enumerate() {
+                        if qv == 0.0 {
+                            continue;
+                        }
+                        let end = k_feat.indptr[f as usize + 1];
+                        let mut c = cursors[r * kq + slot];
+                        while c < end {
+                            let tok = k_feat.token_ids[c as usize];
+                            if tok >= tile_hi {
+                                break;
+                            }
+                            srow[tok as usize - j0] += qv * k_feat.vals[c as usize];
+                            c += 1;
+                        }
+                        cursors[r * kq + slot] = c;
+                    }
+                    // Scale + causal mask (line 21).
+                    for (c, s) in srow.iter_mut().enumerate() {
+                        *s *= scale;
+                        if causal && j0 + c > i {
+                            *s = NEG_INF;
+                        }
+                    }
+                }
+
+                // Lines 22-32: online softmax + V streaming.
+                let vdata = &v.data;
+                let vcols = v.cols;
+                os.update(&score_tile[..br * bc], bc, |c| {
+                    vdata[(j0 + c) * vcols..].as_ptr()
+                });
+                j0 += bc;
+            }
+
+            // SAFETY: tiles own disjoint output row ranges.
+            let out_slice = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.get().add(i0 * v.cols), br * v.cols)
+            };
+            os.finish(out_slice);
+        });
+        out
+    }
+}
+
+impl Engine for FlashSfa {
+    fn name(&self) -> String {
+        format!("flash_sfa(k={})", self.k)
+    }
+
+    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+        assert_eq!(q.cols, k.cols);
+        let q_codes = topk_codes(q, self.k);
+        let k_codes = topk_codes(k, self.k);
+        let k_feat = CscFeat::from_codes(&k_codes);
+        self.forward_codes(&q_codes, &k_feat, v, q.cols, causal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::{DenseAttention, SfaReference};
+    use crate::attention::testutil::qkv;
+    use crate::util::matrix::assert_close;
+    use crate::util::prop::check;
+
+    #[test]
+    fn matches_materializing_reference() {
+        check("flash_sfa == sfa_ref", 24, |g| {
+            let n = g.usize_in(1..80);
+            let d = *g.choose(&[16usize, 32, 64, 128]);
+            let k = *g.choose(&[2usize, 4, 8]);
+            let causal = g.bool();
+            let bq = *g.choose(&[8usize, 32, 64]);
+            let bk = *g.choose(&[8usize, 32, 64]);
+            let (q, kk, v) = qkv(n, d, d.min(32), g.seed);
+            let engine = FlashSfa { k: k.min(d), block_q: bq, block_k: bk, threads: 2 };
+            let a = engine.forward(&q, &kk, &v, causal);
+            let b = SfaReference { k: k.min(d) }.forward(&q, &kk, &v, causal);
+            assert_close(&a, &b, 3e-5, 3e-6);
+        });
+    }
+
+    #[test]
+    fn k_equals_d_matches_dense() {
+        let (q, k, v) = qkv(48, 32, 32, 1);
+        let a = FlashSfa { k: 32, block_q: 16, block_k: 16, threads: 2 }
+            .forward(&q, &k, &v, true);
+        let b = DenseAttention.forward(&q, &k, &v, true);
+        assert_close(&a, &b, 3e-5, 3e-6);
+    }
+
+    #[test]
+    fn tiling_invariance() {
+        let (q, k, v) = qkv(100, 64, 48, 2);
+        let base = FlashSfa { k: 8, block_q: 100, block_k: 100, threads: 1 }
+            .forward(&q, &k, &v, true);
+        for (bq, bk) in [(8, 8), (16, 64), (64, 16), (32, 100)] {
+            let other = FlashSfa { k: 8, block_q: bq, block_k: bk, threads: 3 }
+                .forward(&q, &k, &v, true);
+            assert_close(&other, &base, 2e-5, 2e-6);
+        }
+    }
+
+    #[test]
+    fn causal_no_future_leak() {
+        let (q, mut k, mut v) = qkv(64, 32, 32, 3);
+        let engine = FlashSfa::new(4);
+        let o1 = engine.forward(&q, &k, &v, true);
+        // Corrupt the future half of K and V.
+        for i in 40..64 {
+            k.row_mut(i).fill(9.0);
+            v.row_mut(i).fill(-9.0);
+        }
+        let o2 = engine.forward(&q, &k, &v, true);
+        assert_close(&o1.head_rows(40), &o2.head_rows(40), 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn empty_overlap_rows_attend_uniformly() {
+        // Query supports disjoint from key supports -> all scores equal
+        // (zero), so output = causal running mean of V.
+        let n = 8;
+        let d = 16;
+        let mut q = Matrix::zeros(n, d);
+        let mut k = Matrix::zeros(n, d);
+        let mut v = Matrix::zeros(n, 1);
+        for i in 0..n {
+            q.set(i, 0, 5.0);
+            q.set(i, 1, 4.0);
+            k.set(i, 8, 5.0);
+            k.set(i, 9, 4.0);
+            v.set(i, 0, i as f32);
+        }
+        let out = FlashSfa { k: 2, block_q: 4, block_k: 4, threads: 1 }
+            .forward(&q, &k, &v, true);
+        for i in 0..n {
+            let mean = (0..=i).sum::<usize>() as f32 / (i + 1) as f32;
+            assert!((out.get(i, 0) - mean).abs() < 1e-5, "row {i}");
+        }
+    }
+
+    #[test]
+    fn cross_attention_non_causal() {
+        // n_q != n_kv is allowed without the causal mask.
+        let (q, _, _) = qkv(24, 32, 32, 4);
+        let (_, k, v) = qkv(56, 32, 32, 5);
+        let qc = topk_codes(&q, 4);
+        let kc = topk_codes(&k, 4);
+        let kf = CscFeat::from_codes(&kc);
+        let eng = FlashSfa { k: 4, block_q: 16, block_k: 16, threads: 2 };
+        let a = eng.forward_codes(&qc, &kf, &v, 32, false);
+        let b = DenseAttention.forward(&qc.densify(), &kc.densify(), &v, false);
+        assert_close(&a, &b, 3e-5, 3e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "causal FlashSFA requires")]
+    fn causal_rejects_mismatched_lengths() {
+        let (q, _, _) = qkv(8, 16, 16, 6);
+        let (_, k, v) = qkv(12, 16, 16, 7);
+        let qc = topk_codes(&q, 2);
+        let kc = topk_codes(&k, 2);
+        let kf = CscFeat::from_codes(&kc);
+        FlashSfa::new(2).forward_codes(&qc, &kf, &v, 16, true);
+    }
+}

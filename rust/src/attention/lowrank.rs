@@ -1,0 +1,179 @@
+//! Loki-style low-rank key attention (Table 10/11 "Low-Rank" rows):
+//! training-free PCA of the key matrix; scores are computed in the
+//! rank-r projected space (Singhania et al., 2024). Composable with
+//! the SFA scorer on the projected coordinates ("+SFA").
+
+use crate::attention::dense::softmax_rows;
+use crate::attention::{Engine, Scorer};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// Top-r PCA basis of the rows of `x` via orthogonal (subspace) power
+/// iteration on the covariance XᵀX. Returns (d, r) column-orthonormal.
+pub fn pca_basis(x: &Matrix, r: usize, iters: usize, seed: u64) -> Matrix {
+    let d = x.cols;
+    assert!(r <= d);
+    let mut rng = Rng::new(seed);
+    let mut basis = Matrix::randn(d, r, &mut rng, 1.0);
+    orthonormalize(&mut basis);
+    for _ in 0..iters {
+        // B <- Xᵀ(X B), then re-orthonormalize (one subspace iteration).
+        let xb = x.matmul(&basis); // (n, r)
+        let mut nb = Matrix::zeros(d, r);
+        for i in 0..x.rows {
+            let xrow = x.row(i);
+            let xbrow = xb.row(i);
+            for t in 0..d {
+                let xt = xrow[t];
+                if xt == 0.0 {
+                    continue;
+                }
+                let nrow = nb.row_mut(t);
+                for c in 0..r {
+                    nrow[c] += xt * xbrow[c];
+                }
+            }
+        }
+        basis = nb;
+        orthonormalize(&mut basis);
+    }
+    basis
+}
+
+/// Modified Gram-Schmidt on columns.
+fn orthonormalize(m: &mut Matrix) {
+    let (d, r) = (m.rows, m.cols);
+    for c in 0..r {
+        for prev in 0..c {
+            let mut dot = 0.0;
+            for i in 0..d {
+                dot += m.get(i, c) * m.get(i, prev);
+            }
+            for i in 0..d {
+                let v = m.get(i, c) - dot * m.get(i, prev);
+                m.set(i, c, v);
+            }
+        }
+        let mut norm = 0.0;
+        for i in 0..d {
+            norm += m.get(i, c) * m.get(i, c);
+        }
+        let norm = norm.sqrt().max(1e-12);
+        for i in 0..d {
+            m.set(i, c, m.get(i, c) / norm);
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct LowRankAttention {
+    /// Projection rank r « d.
+    pub rank: usize,
+    pub power_iters: usize,
+    pub seed: u64,
+    pub scorer: Scorer,
+}
+
+impl LowRankAttention {
+    pub fn new(rank: usize) -> Self {
+        LowRankAttention { rank, power_iters: 6, seed: 0, scorer: Scorer::Dense }
+    }
+}
+
+impl Engine for LowRankAttention {
+    fn name(&self) -> String {
+        format!("lowrank_r{}+{}", self.rank, self.scorer.label())
+    }
+
+    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+        let basis = pca_basis(k, self.rank, self.power_iters, self.seed);
+        let qp = q.matmul(&basis); // (n, r)
+        let kp = k.matmul(&basis);
+        // NOTE: Loki keeps the original softmax temperature (scale by
+        // √d of the original space).
+        let scale_fix = (self.rank as f32 / q.cols as f32).sqrt();
+        match self.scorer {
+            Scorer::Dense => {
+                let mut s = crate::attention::dense::scores(&qp, &kp, scale_fix / (self.rank as f32).sqrt(), causal);
+                softmax_rows(&mut s);
+                s.matmul(v)
+            }
+            Scorer::Sfa { k: kk } => {
+                let qc = crate::sparse::topk_codes(&qp, kk.min(self.rank)).densify();
+                let kc = crate::sparse::topk_codes(&kp, kk.min(self.rank)).densify();
+                let mut s = crate::attention::dense::scores(&qc, &kc, scale_fix / (self.rank as f32).sqrt(), causal);
+                softmax_rows(&mut s);
+                s.matmul(v)
+            }
+        }
+    }
+}
+
+/// Helper used by tests + Fig 11: effective rank (#components holding
+/// `tau` of the spectral energy) of a matrix, via the PCA residual.
+pub fn reconstruction_error(x: &Matrix, basis: &Matrix) -> f32 {
+    // ‖X − X B Bᵀ‖_F / ‖X‖_F
+    let proj = x.matmul(basis).matmul(&basis.transpose());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (a, b) in x.data.iter().zip(&proj.data) {
+        num += (a - b) * (a - b);
+        den += a * a;
+    }
+    (num / den.max(1e-20)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::DenseAttention;
+    use crate::attention::testutil::qkv;
+    use crate::util::matrix::assert_close;
+
+    #[test]
+    fn basis_is_orthonormal() {
+        let (_, k, _) = qkv(64, 32, 32, 0);
+        let b = pca_basis(&k, 8, 5, 1);
+        let g = b.transpose().matmul(&b);
+        for i in 0..8 {
+            for j in 0..8 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((g.get(i, j) - expect).abs() < 1e-4, "{i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_rank_matches_dense() {
+        let (q, k, v) = qkv(24, 16, 16, 2);
+        let a = LowRankAttention { rank: 16, power_iters: 8, seed: 0, scorer: Scorer::Dense }
+            .forward(&q, &k, &v, true);
+        let b = DenseAttention.forward(&q, &k, &v, true);
+        // Full-rank projection is a rotation; scores are preserved.
+        assert_close(&a, &b, 5e-3, 5e-3);
+    }
+
+    #[test]
+    fn pca_captures_planted_low_rank_structure() {
+        // K = U S with rank 4 planted; rank-4 PCA must reconstruct well.
+        let mut rng = Rng::new(3);
+        let u = Matrix::randn(64, 4, &mut rng, 1.0);
+        let s = Matrix::randn(4, 32, &mut rng, 1.0);
+        let k = u.matmul(&s);
+        let basis = pca_basis(&k, 4, 10, 4);
+        assert!(reconstruction_error(&k, &basis) < 1e-3);
+        // Rank-2 cannot.
+        let basis2 = pca_basis(&k, 2, 10, 5);
+        assert!(reconstruction_error(&k, &basis2) > 0.1);
+    }
+
+    #[test]
+    fn sfa_composition_runs_and_is_finite() {
+        let (q, k, v) = qkv(32, 32, 16, 6);
+        let out = LowRankAttention {
+            rank: 16, power_iters: 4, seed: 0, scorer: Scorer::Sfa { k: 4 },
+        }
+        .forward(&q, &k, &v, true);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+}

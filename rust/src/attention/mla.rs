@@ -1,0 +1,110 @@
+//! Multi-head Latent Attention (DeepSeek-V2-style, Table 10 "MLA"):
+//! keys/values are compressed through a shared low-dimensional latent
+//! vector c = x W_down; per-head K/V are re-expanded at score time but
+//! only the latent is cached. "MLA + SFA" applies top-k feature
+//! sparsity to the latent codes — the paper's composition row.
+
+use crate::attention::dense::{scores, softmax_rows};
+use crate::attention::{Engine, Scorer};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct MlaAttention {
+    /// Latent dimension r (paper caches only this per token).
+    pub latent: usize,
+    pub seed: u64,
+    pub scorer: Scorer,
+}
+
+impl MlaAttention {
+    pub fn new(latent: usize) -> Self {
+        MlaAttention { latent, seed: 0, scorer: Scorer::Dense }
+    }
+}
+
+impl Engine for MlaAttention {
+    fn name(&self) -> String {
+        format!("mla_r{}+{}", self.latent, self.scorer.label())
+    }
+
+    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+        let d = q.cols;
+        let r = self.latent;
+        let mut rng = Rng::new(self.seed);
+        // Shared down-projection for K and V (the latent cache) and an
+        // up-projection absorbed into the query (the MLA trick:
+        // qᵀ(W_uk c) = (W_ukᵀ q)ᵀ c, so scores live in latent space).
+        let w_down = Matrix::randn(d, r, &mut rng, (1.0 / d as f32).sqrt());
+        let w_down_v = Matrix::randn(v.cols, r, &mut rng, (1.0 / v.cols as f32).sqrt());
+        let w_uk = Matrix::randn(r, d, &mut rng, (1.0 / r as f32).sqrt());
+        let w_uv = Matrix::randn(r, v.cols, &mut rng, (1.0 / r as f32).sqrt());
+
+        let c_kv = k.matmul(&w_down); // (n, r): the only cached tensor
+        let q_lat = q.matmul(&w_uk.transpose()); // (n, r)
+        let v_lat = v.matmul(&w_down_v); // compress V through the latent too
+        let v_expand = |m: &Matrix| m.matmul(&w_uv); // (n, d_v)
+
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut s = match self.scorer {
+            Scorer::Dense => scores(&q_lat, &c_kv, scale, causal),
+            Scorer::Sfa { k: kk } => {
+                let kk = kk.min(r);
+                let qs = crate::sparse::topk_codes(&q_lat, kk).densify();
+                let ks = crate::sparse::topk_codes(&c_kv, kk).densify();
+                scores(&qs, &ks, scale, causal)
+            }
+        };
+        softmax_rows(&mut s);
+        v_expand(&s.matmul(&v_lat))
+    }
+}
+
+/// Latent-cache bytes per token (the MLA memory claim): r values vs
+/// 2·d for dense K+V.
+pub fn mla_cache_bytes_per_token(latent: usize, s_val: usize) -> usize {
+    latent * s_val
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::qkv;
+
+    #[test]
+    fn output_finite_and_causal() {
+        let (q, mut k, mut v) = qkv(40, 32, 32, 0);
+        let eng = MlaAttention::new(8);
+        let o1 = eng.forward(&q, &k, &v, true);
+        assert!(o1.data.iter().all(|x| x.is_finite()));
+        for i in 30..40 {
+            k.row_mut(i).fill(3.0);
+            v.row_mut(i).fill(-3.0);
+        }
+        let o2 = eng.forward(&q, &k, &v, true);
+        crate::util::matrix::assert_close(&o1.head_rows(30), &o2.head_rows(30), 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn sfa_composition_finite() {
+        let (q, k, v) = qkv(32, 32, 16, 1);
+        let eng = MlaAttention { latent: 16, seed: 2, scorer: Scorer::Sfa { k: 4 } };
+        let out = eng.forward(&q, &k, &v, true);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn cache_saving_vs_dense() {
+        // MLA caches r floats/token vs 2d for K+V (paper Table 10's
+        // dramatic decode advantage).
+        assert!(mla_cache_bytes_per_token(16, 2) < 2 * 64 * 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (q, k, v) = qkv(16, 16, 16, 3);
+        let a = MlaAttention { latent: 8, seed: 7, scorer: Scorer::Dense }.forward(&q, &k, &v, true);
+        let b = MlaAttention { latent: 8, seed: 7, scorer: Scorer::Dense }.forward(&q, &k, &v, true);
+        crate::util::matrix::assert_close(&a, &b, 0.0, 0.0);
+    }
+}

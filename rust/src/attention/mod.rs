@@ -1,0 +1,78 @@
+//! Attention engines — the CPU perf substrate for every latency table
+//! and figure in the paper (DESIGN.md §Substitutions: the A800/CUDA
+//! kernels are ported to structurally-faithful CPU engines; relative
+//! shapes, crossovers and scaling exponents are the reproduction
+//! target, not absolute milliseconds).
+//!
+//! * [`dense`] — naive materializing softmax attention (the reference)
+//! * [`flash_dense`] — tiled online-softmax dense attention
+//!   (FlashAttention-2 analog; the paper's "Dense" baseline kernel)
+//! * [`flash_sfa`] — the FlashSFA engine: posting-list intersection +
+//!   online softmax, App. C Algorithm 1
+//! * [`window`] — Longformer-style local attention (token sparsity),
+//!   composable with the SFA scorer (Table 10/11 "+SFA" rows)
+//! * [`decode`] — single-query decode attention + KV-pruning policies
+//!   (H2O / SnapKV / Quest) and their SFA compositions
+//! * [`lowrank`] — Loki-style PCA-projected keys (training-free)
+//! * [`performer`] — FAVOR+ positive random features (kernel baseline)
+//! * [`mla`] — multi-head latent attention (shared KV compression),
+//!   composable with SFA on the latent vector
+//! * [`quant`] — simulated int8 quantization of Q/K scoring (QAT row)
+
+pub mod decode;
+pub mod dense;
+pub mod flash_dense;
+pub mod flash_sfa;
+pub mod lowrank;
+pub mod mla;
+pub mod online_softmax;
+pub mod performer;
+pub mod quant;
+pub mod window;
+
+use crate::util::matrix::Matrix;
+
+/// How retained query-key pairs are scored (feature-level axis).
+/// Token-level methods (window, KV pruning) take a `Scorer` so the
+/// paper's orthogonal compositions are first-class (Tables 10/11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scorer {
+    /// Full d-dimensional dot product.
+    Dense,
+    /// Feature-overlap scoring over top-k sparse codes (SFA, Eq. 5).
+    Sfa { k: usize },
+}
+
+impl Scorer {
+    pub fn label(&self) -> String {
+        match self {
+            Scorer::Dense => "dense".into(),
+            Scorer::Sfa { k } => format!("sfa_k{k}"),
+        }
+    }
+}
+
+/// A forward (prefill-style) attention engine over one head.
+pub trait Engine: Sync {
+    fn name(&self) -> String;
+
+    /// q (n, d), k (n, d), v (n, d_v) -> (n, d_v).
+    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix;
+}
+
+pub(crate) const NEG_INF: f32 = -1.0e30;
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub fn qkv(n: usize, d: usize, dv: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        (
+            Matrix::randn(n, d, &mut rng, 1.0),
+            Matrix::randn(n, d, &mut rng, 1.0),
+            Matrix::randn(n, dv, &mut rng, 1.0),
+        )
+    }
+}

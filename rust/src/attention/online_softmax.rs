@@ -1,0 +1,183 @@
+//! The FlashAttention online-softmax recurrence (paper §3.2), shared by
+//! the flash-dense and FlashSFA engines.
+//!
+//! State per query row: running max m, running denominator l, and the
+//! un-normalized output accumulator acc (length d_v). Feeding score
+//! tiles in any left-to-right order and calling [`OnlineSoftmax::finish`]
+//! yields exactly softmax(S)·V without materializing S.
+
+use crate::attention::NEG_INF;
+
+/// Online softmax state for a block of query rows.
+#[derive(Debug, Clone)]
+pub struct OnlineSoftmax {
+    pub rows: usize,
+    pub d_v: usize,
+    pub m: Vec<f32>,
+    pub l: Vec<f32>,
+    pub acc: Vec<f32>, // rows × d_v, row-major
+}
+
+impl OnlineSoftmax {
+    pub fn new(rows: usize, d_v: usize) -> Self {
+        OnlineSoftmax {
+            rows,
+            d_v,
+            m: vec![NEG_INF; rows],
+            l: vec![0.0; rows],
+            acc: vec![0.0; rows * d_v],
+        }
+    }
+
+    /// Consume one score tile: `scores` is rows × tile_w (row-major),
+    /// `v_tile` is tile_w × d_v (row-major slice accessor).
+    ///
+    /// Masked-out entries must already be NEG_INF in `scores`.
+    pub fn update(&mut self, scores: &[f32], tile_w: usize, v_tile: impl Fn(usize) -> *const f32) {
+        debug_assert_eq!(scores.len(), self.rows * tile_w);
+        for r in 0..self.rows {
+            let srow = &scores[r * tile_w..(r + 1) * tile_w];
+            let mut tile_max = NEG_INF;
+            for &s in srow {
+                tile_max = tile_max.max(s);
+            }
+            if tile_max <= NEG_INF {
+                continue; // fully masked tile for this row
+            }
+            let m_new = self.m[r].max(tile_max);
+            let alpha = if self.m[r] <= NEG_INF { 0.0 } else { (self.m[r] - m_new).exp() };
+            let acc_row = &mut self.acc[r * self.d_v..(r + 1) * self.d_v];
+            if alpha != 1.0 {
+                for a in acc_row.iter_mut() {
+                    *a *= alpha;
+                }
+                self.l[r] *= alpha;
+            }
+            let mut lsum = 0.0;
+            for (c, &s) in srow.iter().enumerate() {
+                if s <= NEG_INF {
+                    continue;
+                }
+                let p = (s - m_new).exp();
+                lsum += p;
+                // acc += p * v_row(c)
+                let vp = v_tile(c);
+                unsafe {
+                    for t in 0..self.d_v {
+                        acc_row[t] += p * *vp.add(t);
+                    }
+                }
+            }
+            self.l[r] += lsum;
+            self.m[r] = m_new;
+        }
+    }
+
+    /// Normalize into the output block (rows × d_v). Rows that never saw
+    /// an unmasked score produce zeros.
+    pub fn finish(self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.rows * self.d_v);
+        for r in 0..self.rows {
+            let l = self.l[r];
+            let acc_row = &self.acc[r * self.d_v..(r + 1) * self.d_v];
+            let out_row = &mut out[r * self.d_v..(r + 1) * self.d_v];
+            if l > 0.0 {
+                let inv = 1.0 / l;
+                for (o, a) in out_row.iter_mut().zip(acc_row) {
+                    *o = a * inv;
+                }
+            } else {
+                out_row.fill(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::matrix::{assert_close, Matrix};
+    use crate::util::prop::check;
+
+    /// Naive reference: softmax over the full row then weighted sum.
+    fn naive(scores: &Matrix, v: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(scores.rows, v.cols);
+        for i in 0..scores.rows {
+            let row = scores.row(i);
+            let m = row.iter().fold(NEG_INF, |a, &b| a.max(b));
+            if m <= NEG_INF {
+                continue;
+            }
+            let exps: Vec<f32> = row.iter().map(|&s| if s <= NEG_INF { 0.0 } else { (s - m).exp() }).collect();
+            let l: f32 = exps.iter().sum();
+            for (j, &p) in exps.iter().enumerate() {
+                if p == 0.0 {
+                    continue;
+                }
+                for t in 0..v.cols {
+                    out.data[i * v.cols + t] += p / l * v.get(j, t);
+                }
+            }
+        }
+        out
+    }
+
+    fn run_tiled(scores: &Matrix, v: &Matrix, tile_w: usize) -> Matrix {
+        let mut os = OnlineSoftmax::new(scores.rows, v.cols);
+        let n = scores.cols;
+        let mut j0 = 0;
+        while j0 < n {
+            let w = tile_w.min(n - j0);
+            let mut tile = vec![0f32; scores.rows * w];
+            for r in 0..scores.rows {
+                tile[r * w..(r + 1) * w].copy_from_slice(&scores.row(r)[j0..j0 + w]);
+            }
+            let vdata = &v.data;
+            let cols = v.cols;
+            os.update(&tile, w, |c| vdata[(j0 + c) * cols..].as_ptr());
+            j0 += w;
+        }
+        let mut out = Matrix::zeros(scores.rows, v.cols);
+        os.finish(&mut out.data);
+        out
+    }
+
+    #[test]
+    fn matches_naive_any_tiling() {
+        check("online softmax == naive", 48, |g| {
+            let n = g.usize_in(1..40);
+            let rows = g.usize_in(1..6);
+            let dv = g.usize_in(1..10);
+            let tile = g.usize_in(1..n + 1);
+            let s = Matrix::from_vec(rows, n, g.vec_normal(rows * n, 3.0));
+            let v = Matrix::from_vec(n, dv, g.vec_normal(n * dv, 1.0));
+            let a = run_tiled(&s, &v, tile);
+            let b = naive(&s, &v);
+            assert_close(&a, &b, 1e-5, 1e-6);
+        });
+    }
+
+    #[test]
+    fn handles_masked_entries() {
+        let mut s = Matrix::from_vec(2, 4, vec![1.0, NEG_INF, 0.5, NEG_INF,
+                                                NEG_INF, NEG_INF, NEG_INF, NEG_INF]);
+        let v = Matrix::from_vec(4, 2, vec![1., 0., 0., 1., 2., 2., 3., 3.]);
+        let out = run_tiled(&s, &v, 2);
+        let expected = naive(&s, &v);
+        assert_close(&out, &expected, 1e-6, 1e-7);
+        // Fully masked row yields zeros.
+        assert_eq!(&out.data[2..4], &[0.0, 0.0]);
+        s.set(0, 0, 1.0);
+    }
+
+    #[test]
+    fn numerically_stable_for_large_scores() {
+        let s = Matrix::from_vec(1, 3, vec![500.0, 499.0, -500.0]);
+        let v = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let out = run_tiled(&s, &v, 1);
+        assert!(out.data[0].is_finite());
+        let e = 1.0 / (1.0 + (-1.0f32).exp());
+        let expect = e * 1.0 + (1.0 - e) * 2.0;
+        assert!((out.data[0] - expect).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,184 @@
+//! Performer / FAVOR+ random-feature attention (Choromanski et al.,
+//! 2021) — the kernel-approximation baseline of Table 11. Linear-time
+//! but *approximate*; the paper contrasts this with SFA's exactness
+//! over learned supports.
+
+use crate::attention::Engine;
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PerformerAttention {
+    /// Number of random features m.
+    pub features: usize,
+    pub seed: u64,
+}
+
+impl PerformerAttention {
+    pub fn new(features: usize) -> Self {
+        PerformerAttention { features, seed: 0 }
+    }
+
+    /// Positive random features φ(x) = exp(ωᵀx̂ − ‖x̂‖²/2)/√m with
+    /// x̂ = x / d^(1/4) (so φ(q)·φ(k) ≈ exp(qᵀk/√d), the softmax kernel).
+    fn phi(&self, x: &Matrix, omega: &Matrix) -> Matrix {
+        let d = x.cols;
+        let root = (d as f32).powf(0.25);
+        let mut xs = x.clone();
+        for v in xs.data.iter_mut() {
+            *v /= root;
+        }
+        let proj = xs.matmul(omega); // (n, m)
+        let mut out = Matrix::zeros(x.rows, self.features);
+        let inv_sqrt_m = 1.0 / (self.features as f32).sqrt();
+        for i in 0..x.rows {
+            let norm2: f32 = xs.row(i).iter().map(|v| v * v).sum();
+            let prow = proj.row(i);
+            let orow = out.row_mut(i);
+            for (o, &p) in orow.iter_mut().zip(prow) {
+                // Clamp the exponent for numerical robustness.
+                *o = (p - 0.5 * norm2).clamp(-30.0, 30.0).exp() * inv_sqrt_m;
+            }
+        }
+        out
+    }
+}
+
+impl Engine for PerformerAttention {
+    fn name(&self) -> String {
+        format!("performer_m{}", self.features)
+    }
+
+    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+        let d = q.cols;
+        let mut rng = Rng::new(self.seed);
+        let omega = Matrix::randn(d, self.features, &mut rng, 1.0);
+        let qf = self.phi(q, &omega); // (n, m)
+        let kf = self.phi(k, &omega); // (n, m)
+        let n = q.rows;
+        let m = self.features;
+        let dv = v.cols;
+        let mut out = Matrix::zeros(n, dv);
+        if causal {
+            // Prefix-sum linear attention: S_t = Σ_{j<=t} φ(k_j) v_jᵀ,
+            // z_t = Σ_{j<=t} φ(k_j); o_t = (φ(q_t)ᵀ S_t) / (φ(q_t)ᵀ z_t).
+            let mut s = vec![0f32; m * dv];
+            let mut z = vec![0f32; m];
+            for t in 0..n {
+                let kf_row = kf.row(t);
+                let v_row = v.row(t);
+                for a in 0..m {
+                    let kfa = kf_row[a];
+                    if kfa != 0.0 {
+                        z[a] += kfa;
+                        let srow = &mut s[a * dv..(a + 1) * dv];
+                        for (sv, &vv) in srow.iter_mut().zip(v_row) {
+                            *sv += kfa * vv;
+                        }
+                    }
+                }
+                let qf_row = qf.row(t);
+                let mut denom = 1e-9;
+                for a in 0..m {
+                    denom += qf_row[a] * z[a];
+                }
+                let orow = out.row_mut(t);
+                for a in 0..m {
+                    let qa = qf_row[a];
+                    if qa != 0.0 {
+                        let srow = &s[a * dv..(a + 1) * dv];
+                        for (o, &sv) in orow.iter_mut().zip(srow) {
+                            *o += qa * sv;
+                        }
+                    }
+                }
+                for o in orow.iter_mut() {
+                    *o /= denom;
+                }
+            }
+        } else {
+            // O = φ(Q) (φ(K)ᵀ V) / (φ(Q) (φ(K)ᵀ 1))
+            let ktv = kf.transpose().matmul(v); // (m, dv)
+            let num = qf.matmul(&ktv); // (n, dv)
+            let mut z = vec![0f32; m];
+            for i in 0..n {
+                for (a, &x) in kf.row(i).iter().enumerate() {
+                    z[a] += x;
+                }
+            }
+            for i in 0..n {
+                let mut denom = 1e-9;
+                for (a, &x) in qf.row(i).iter().enumerate() {
+                    denom += x * z[a];
+                }
+                for t in 0..dv {
+                    out.set(i, t, num.get(i, t) / denom);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::DenseAttention;
+    use crate::attention::testutil::qkv;
+
+    #[test]
+    fn approximates_dense_attention() {
+        // With many random features the estimate should be close in a
+        // relative-Frobenius sense (it is a Monte-Carlo approximation
+        // whose variance grows with the score magnitude, so the test
+        // uses moderate-scale inputs).
+        let (mut q, mut k, v) = qkv(32, 16, 16, 0);
+        for x in q.data.iter_mut() {
+            *x *= 0.5;
+        }
+        for x in k.data.iter_mut() {
+            *x *= 0.5;
+        }
+        let approx = PerformerAttention { features: 1024, seed: 1 }.forward(&q, &k, &v, false);
+        let exact = DenseAttention.forward(&q, &k, &v, false);
+        let mut err = Matrix::zeros(32, 16);
+        for i in 0..err.data.len() {
+            err.data[i] = approx.data[i] - exact.data[i];
+        }
+        let rel = err.fro_norm() / exact.fro_norm();
+        assert!(rel < 0.35, "relative error {rel}");
+    }
+
+    #[test]
+    fn causal_output_finite_and_causal() {
+        let (q, mut k, mut v) = qkv(48, 16, 16, 2);
+        let eng = PerformerAttention { features: 64, seed: 3 };
+        let o1 = eng.forward(&q, &k, &v, true);
+        assert!(o1.data.iter().all(|x| x.is_finite()));
+        for i in 30..48 {
+            k.row_mut(i).fill(5.0);
+            v.row_mut(i).fill(-5.0);
+        }
+        let o2 = eng.forward(&q, &k, &v, true);
+        crate::util::matrix::assert_close(&o1.head_rows(30), &o2.head_rows(30), 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn more_features_reduce_error() {
+        let (q, k, v) = qkv(24, 8, 8, 4);
+        let exact = DenseAttention.forward(&q, &k, &v, false);
+        let errs: Vec<f32> = [16, 1024]
+            .iter()
+            .map(|&m| {
+                let approx = PerformerAttention { features: m, seed: 5 }
+                    .forward(&q, &k, &v, false);
+                let mut diff = 0.0;
+                for i in 0..exact.data.len() {
+                    diff += (approx.data[i] - exact.data[i]).powi(2);
+                }
+                diff.sqrt() / exact.fro_norm()
+            })
+            .collect();
+        assert!(errs[1] < errs[0], "{errs:?}");
+    }
+}

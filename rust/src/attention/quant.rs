@@ -1,0 +1,120 @@
+//! Simulated 8-bit quantization of Q/K scoring (Table 10 "Quant" row,
+//! QAT-style: per-row symmetric int8 with f32 scale). Composable with
+//! SFA ("SFA (quant)"): the top-k sparse values are quantized, halving
+//! the sparse-cache value bytes again.
+
+use crate::attention::dense::{softmax_rows, DenseAttention};
+use crate::attention::{Engine, Scorer};
+use crate::util::matrix::Matrix;
+
+/// Per-row symmetric int8 quantization: returns (codes, scales).
+pub fn quantize_rows(x: &Matrix) -> (Vec<i8>, Vec<f32>) {
+    let mut codes = vec![0i8; x.rows * x.cols];
+    let mut scales = vec![0f32; x.rows];
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let maxabs = row.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        let scale = if maxabs == 0.0 { 1.0 } else { maxabs / 127.0 };
+        scales[i] = scale;
+        for (c, &v) in codes[i * x.cols..(i + 1) * x.cols].iter_mut().zip(row) {
+            *c = (v / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (codes, scales)
+}
+
+/// Dequantize back to f32 (the simulation half of fake-quant).
+pub fn dequantize_rows(codes: &[i8], scales: &[f32], rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        let s = scales[i];
+        for j in 0..cols {
+            m.set(i, j, codes[i * cols + j] as f32 * s);
+        }
+    }
+    m
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct QuantAttention {
+    pub scorer: Scorer,
+}
+
+impl Engine for QuantAttention {
+    fn name(&self) -> String {
+        format!("quant8+{}", self.scorer.label())
+    }
+
+    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+        let fake = |m: &Matrix| {
+            let (c, s) = quantize_rows(m);
+            dequantize_rows(&c, &s, m.rows, m.cols)
+        };
+        match self.scorer {
+            Scorer::Dense => DenseAttention.forward(&fake(q), &fake(k), v, causal),
+            Scorer::Sfa { k: kk } => {
+                // Quantize the sparse *values* (indices are already ints).
+                let qs = fake(&crate::sparse::topk_codes(q, kk).densify());
+                let ks = fake(&crate::sparse::topk_codes(k, kk).densify());
+                let scale = 1.0 / (q.cols as f32).sqrt();
+                let mut s = crate::attention::dense::scores(&qs, &ks, scale, causal);
+                softmax_rows(&mut s);
+                s.matmul(v)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::qkv;
+
+    #[test]
+    fn quantization_roundtrip_error_bounded() {
+        let (q, _, _) = qkv(16, 32, 32, 0);
+        let (c, s) = quantize_rows(&q);
+        let deq = dequantize_rows(&c, &s, 16, 32);
+        for i in 0..16 {
+            let maxabs = q.row(i).iter().fold(0f32, |a, &b| a.max(b.abs()));
+            let step = maxabs / 127.0;
+            for j in 0..32 {
+                assert!((q.get(i, j) - deq.get(i, j)).abs() <= 0.5 * step + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_row_handled() {
+        let m = Matrix::zeros(2, 4);
+        let (c, s) = quantize_rows(&m);
+        assert!(c.iter().all(|&x| x == 0));
+        assert!(s.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn quant_attention_close_to_dense() {
+        let (q, k, v) = qkv(24, 16, 16, 1);
+        let a = QuantAttention { scorer: Scorer::Dense }.forward(&q, &k, &v, true);
+        let b = DenseAttention.forward(&q, &k, &v, true);
+        let mut err = 0.0;
+        for i in 0..a.data.len() {
+            err += (a.data[i] - b.data[i]).powi(2);
+        }
+        let rel = err.sqrt() / b.fro_norm();
+        assert!(rel < 0.05, "int8 scoring should be near-lossless: {rel}");
+    }
+
+    #[test]
+    fn sfa_quant_close_to_sfa() {
+        let (q, k, v) = qkv(24, 32, 16, 2);
+        let a = QuantAttention { scorer: Scorer::Sfa { k: 8 } }.forward(&q, &k, &v, true);
+        let b = crate::attention::dense::SfaReference { k: 8 }.forward(&q, &k, &v, true);
+        let mut err = 0.0;
+        for i in 0..a.data.len() {
+            err += (a.data[i] - b.data[i]).powi(2);
+        }
+        let rel = err.sqrt() / b.fro_norm();
+        assert!(rel < 0.05, "{rel}");
+    }
+}

@@ -1,0 +1,149 @@
+//! Longformer-style local window attention — the paper's token-level
+//! sparsity baseline (Tables 10/11), composable with the SFA scorer:
+//! the "+SFA (k=8)" rows apply feature-overlap scoring to the retained
+//! window pairs, multiplying the two sparsity axes.
+
+use crate::attention::{Engine, Scorer, NEG_INF};
+use crate::sparse::{topk_codes, TopkCodes};
+use crate::util::matrix::Matrix;
+use crate::util::threadpool::{parallel_for_dynamic, SendPtr};
+
+#[derive(Debug, Clone, Copy)]
+pub struct WindowAttention {
+    /// Causal window width: query i attends to keys (i-window, i].
+    pub window: usize,
+    pub scorer: Scorer,
+    pub threads: usize,
+}
+
+impl WindowAttention {
+    pub fn new(window: usize, scorer: Scorer) -> Self {
+        WindowAttention { window, scorer, threads: crate::util::threadpool::default_threads() }
+    }
+
+    fn row_forward(
+        &self,
+        i: usize,
+        q: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        codes: Option<(&TopkCodes, &TopkCodes)>,
+        out: &mut [f32],
+    ) {
+        let d = q.cols;
+        let scale = 1.0 / (d as f32).sqrt();
+        let lo = i.saturating_sub(self.window - 1);
+        let width = i - lo + 1;
+        let mut scores = vec![NEG_INF; width];
+        match codes {
+            None => {
+                let qrow = q.row(i);
+                for (c, s) in scores.iter_mut().enumerate() {
+                    let krow = k.row(lo + c);
+                    let mut acc = 0.0;
+                    for t in 0..d {
+                        acc += qrow[t] * krow[t];
+                    }
+                    *s = acc * scale;
+                }
+            }
+            Some((qc, kc)) => {
+                for (c, s) in scores.iter_mut().enumerate() {
+                    *s = qc.overlap_dot(i, kc, lo + c) * scale;
+                }
+            }
+        }
+        // softmax over the window + weighted V sum
+        let m = scores.iter().fold(NEG_INF, |a, &b| a.max(b));
+        let mut l = 0.0;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        out.fill(0.0);
+        for (c, &p) in scores.iter().enumerate() {
+            let w = p / l;
+            let vrow = v.row(lo + c);
+            for (o, &x) in out.iter_mut().zip(vrow) {
+                *o += w * x;
+            }
+        }
+    }
+}
+
+impl Engine for WindowAttention {
+    fn name(&self) -> String {
+        format!("longformer_w{}+{}", self.window, self.scorer.label())
+    }
+
+    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+        assert!(causal, "window attention is defined causally here");
+        assert_eq!(q.rows, k.rows);
+        let codes = match self.scorer {
+            Scorer::Dense => None,
+            Scorer::Sfa { k: kk } => Some((topk_codes(q, kk), topk_codes(k, kk))),
+        };
+        let mut out = Matrix::zeros(q.rows, v.cols);
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let vcols = v.cols;
+        parallel_for_dynamic(q.rows, self.threads, 16, |i| {
+            let out_slice = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.get().add(i * vcols), vcols)
+            };
+            self.row_forward(
+                i, q, k, v,
+                codes.as_ref().map(|(a, b)| (a, b)),
+                out_slice,
+            );
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::{DenseAttention, SfaReference};
+    use crate::attention::testutil::qkv;
+    use crate::util::matrix::assert_close;
+
+    #[test]
+    fn full_window_matches_dense() {
+        let (q, k, v) = qkv(32, 16, 16, 0);
+        let a = WindowAttention::new(1000, Scorer::Dense).forward(&q, &k, &v, true);
+        let b = DenseAttention.forward(&q, &k, &v, true);
+        assert_close(&a, &b, 2e-5, 2e-6);
+    }
+
+    #[test]
+    fn full_window_sfa_matches_sfa_reference() {
+        let (q, k, v) = qkv(32, 32, 16, 1);
+        let a = WindowAttention::new(1000, Scorer::Sfa { k: 4 }).forward(&q, &k, &v, true);
+        let b = SfaReference { k: 4 }.forward(&q, &k, &v, true);
+        assert_close(&a, &b, 2e-5, 2e-6);
+    }
+
+    #[test]
+    fn window_one_copies_own_value() {
+        let (q, k, v) = qkv(16, 8, 8, 2);
+        let out = WindowAttention::new(1, Scorer::Dense).forward(&q, &k, &v, true);
+        assert_close(&out, &v, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn out_of_window_keys_ignored() {
+        let (q, mut k, mut v) = qkv(64, 16, 8, 3);
+        let w = WindowAttention::new(8, Scorer::Dense);
+        let o1 = w.forward(&q, &k, &v, true);
+        // Corrupt everything more than 8 positions before the end.
+        for i in 0..48 {
+            k.row_mut(i).fill(7.0);
+            v.row_mut(i).fill(-7.0);
+        }
+        let o2 = w.forward(&q, &k, &v, true);
+        // Last row's window is [56..64]: unaffected.
+        for t in 0..8 {
+            assert!((o1.get(63, t) - o2.get(63, t)).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,406 @@
+//! Regeneration drivers for the paper's latency/cost tables & figures.
+//!
+//! Each function returns the printed [`Table`]s so both `cargo bench`
+//! targets and the `sfa bench <item>` CLI share one implementation.
+//! Absolute milliseconds are CPU-testbed numbers; the reproduction
+//! target is the *shape* — who wins, crossover points, scaling
+//! exponents (DESIGN.md §Substitutions).
+
+use crate::analysis::bandwidth::{
+    dense_flash_bytes, effective_bandwidth, flash_sfa_bytes, measure_stream_bandwidth,
+};
+use crate::analysis::costmodel::PowerLaw;
+use crate::analysis::flops::{dense_forward, sfa_forward, AttnShape};
+use crate::attention::decode::{DenseKvCache, SparseKvCache};
+use crate::attention::dense::DenseAttention;
+use crate::attention::flash_dense::FlashDense;
+use crate::attention::flash_sfa::FlashSfa;
+use crate::attention::Engine;
+use crate::bench::harness::{bench, BenchResult};
+use crate::bench::table::{fmt_speedup, fmt_time, Table};
+use crate::sparse::memory::{kv_cache_bytes_dense, kv_cache_bytes_sfa, Widths};
+use crate::sparse::topk::{topk_with, TopkAlgo};
+use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+
+fn qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    (
+        Matrix::randn(n, d, &mut rng, 1.0),
+        Matrix::randn(n, d, &mut rng, 1.0),
+        Matrix::randn(n, d, &mut rng, 1.0),
+    )
+}
+
+fn run_forward(engine: &dyn Engine, n: usize, d: usize, budget_s: f64) -> BenchResult {
+    let (q, k, v) = qkv(n, d, 42);
+    bench(&engine.name(), budget_s, || {
+        std::hint::black_box(engine.forward(&q, &k, &v, true));
+    })
+}
+
+/// Fig. 3: latency vs sparsity at different modular levels (score-only,
+/// +softmax+PV fused, full layer ≈ flash path) at one context length.
+pub fn fig3(ctx: usize, d: usize, ks: &[usize], budget_s: f64) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 3 — latency vs sparsity at module levels (ctx={ctx}, d={d})"),
+        &["level", "variant", "median", "speedup vs dense"],
+    );
+    let (q, k, _v) = qkv(ctx, d, 1);
+    // Level 1: scoring only (dot-product module).
+    let dense_score = bench("dense-score", budget_s, || {
+        std::hint::black_box(crate::attention::dense::scores(&q, &k, 1.0, true));
+    });
+    t.row(vec!["score".into(), "dense".into(), fmt_time(dense_score.median_s), "1.00x".into()]);
+    for &kk in ks {
+        let qc = crate::sparse::topk_codes(&q, kk);
+        let kc = crate::sparse::topk_codes(&k, kk);
+        let kf = crate::sparse::CscFeat::from_codes(&kc);
+        let r = bench(&format!("sfa-score k={kk}"), budget_s, || {
+            std::hint::black_box(crate::sparse::spgemm::spgemm_scores(&qc, &kf, 1.0, true));
+        });
+        t.row(vec![
+            "score".into(),
+            format!("sfa_k{kk}"),
+            fmt_time(r.median_s),
+            fmt_speedup(dense_score.median_s / r.median_s),
+        ]);
+    }
+    // Level 2: full attention (score+softmax+PV), flash engines.
+    let dense_full = run_forward(&FlashDense::default(), ctx, d, budget_s);
+    t.row(vec!["attention".into(), "dense(flash)".into(), fmt_time(dense_full.median_s), "1.00x".into()]);
+    for &kk in ks {
+        let r = run_forward(&FlashSfa::new(kk), ctx, d, budget_s);
+        t.row(vec![
+            "attention".into(),
+            format!("flash_sfa_k{kk}"),
+            fmt_time(r.median_s),
+            fmt_speedup(dense_full.median_s / r.median_s),
+        ]);
+    }
+    // Level 3: naive materializing attention for reference ("module
+    // levels compound": gains grow with more of the stack included).
+    let dense_naive = run_forward(&DenseAttention, ctx, d, budget_s);
+    t.row(vec![
+        "attention".into(),
+        "dense(naive)".into(),
+        fmt_time(dense_naive.median_s),
+        fmt_speedup(dense_full.median_s / dense_naive.median_s),
+    ]);
+    t
+}
+
+/// Fig. 4 / Table 9: the latency grid over (d, k, ctx).
+pub fn table9(ctxs: &[usize], dims: &[usize], ks: &[usize], budget_s: f64) -> Table {
+    let mut t = Table::new(
+        "Table 9 / Fig 4 — forward latency (ms) vs context, dim, sparsity",
+        &["variant", "ctx", "median", "speedup vs dense"],
+    );
+    for &d in dims {
+        for &ctx in ctxs {
+            let dense = run_forward(
+                &FlashDense::default(),
+                ctx,
+                d,
+                budget_s,
+            );
+            t.row(vec![
+                format!("Dense_{d}"),
+                ctx.to_string(),
+                fmt_time(dense.median_s),
+                "1.00x".into(),
+            ]);
+            for &kk in ks {
+                if kk >= d {
+                    continue;
+                }
+                let r = run_forward(&FlashSfa::new(kk), ctx, d, budget_s);
+                t.row(vec![
+                    format!("Sparse_{kk}/{d}"),
+                    ctx.to_string(),
+                    fmt_time(r.median_s),
+                    fmt_speedup(dense.median_s / r.median_s),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig. 5: FLOPs and KV-cache bytes vs context (cost model).
+pub fn fig5(ctxs: &[usize], d: usize, k: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Fig 5 — FLOPs & KV-cache scaling (d={d}, k={k}, fp16/int8 widths)"),
+        &["ctx", "dense TFLOPs", "SFA TFLOPs", "FLOP ratio",
+          "dense KV MB", "SFA KV MB", "KV saving"],
+    );
+    for &ctx in ctxs {
+        let shape = AttnShape::table6(ctx, d);
+        let df = dense_forward(shape).tflops();
+        let sf = sfa_forward(shape, k, 64).tflops();
+        let w = Widths::PAPER;
+        let dkv = kv_cache_bytes_dense(ctx, d, w) as f64 / 1e6;
+        let skv = kv_cache_bytes_sfa(ctx, d, k, w) as f64 / 1e6;
+        t.row(vec![
+            ctx.to_string(),
+            format!("{df:.2}"),
+            format!("{sf:.2}"),
+            format!("{:.2}x", df / sf),
+            format!("{dkv:.1}"),
+            format!("{skv:.1}"),
+            format!("{:.0}%", (1.0 - skv / dkv) * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Fig. 6: log-log TTFT & TTNT scaling + fitted exponents.
+pub fn fig6(ctxs: &[usize], d: usize, k: usize, budget_s: f64) -> (Table, Table) {
+    let mut prefill = Table::new(
+        &format!("Fig 6a — TTFT (prefill) scaling, d={d}"),
+        &["ctx", "dense", "sfa", "speedup"],
+    );
+    let mut dense_pts = Vec::new();
+    let mut sfa_pts = Vec::new();
+    for &ctx in ctxs {
+        let dense = run_forward(&FlashDense::default(), ctx, d, budget_s);
+        let sfa = run_forward(&FlashSfa::new(k), ctx, d, budget_s);
+        dense_pts.push(dense.median_s);
+        sfa_pts.push(sfa.median_s);
+        prefill.row(vec![
+            ctx.to_string(),
+            fmt_time(dense.median_s),
+            fmt_time(sfa.median_s),
+            fmt_speedup(dense.median_s / sfa.median_s),
+        ]);
+    }
+    let pl_dense = PowerLaw::fit(ctxs, &dense_pts);
+    let pl_sfa = PowerLaw::fit(ctxs, &sfa_pts);
+    prefill.row(vec![
+        "fit α".into(),
+        format!("{:.2}", pl_dense.alpha),
+        format!("{:.2}", pl_sfa.alpha),
+        "-".into(),
+    ]);
+
+    let mut decode = Table::new(
+        &format!("Fig 6b — TTNT (decode w/ KV cache) vs context, d={d}"),
+        &["ctx", "dense", "sfa", "speedup"],
+    );
+    for &ctx in ctxs {
+        let mut rng = Rng::new(3);
+        let keys = Matrix::randn(ctx, d, &mut rng, 1.0);
+        let vals = Matrix::randn(ctx, d, &mut rng, 1.0);
+        let q: Vec<f32> = rng.normal_vec(d, 1.0);
+        let mut dc = DenseKvCache::new(d, d);
+        let mut sc = SparseKvCache::new(d, d, k);
+        for i in 0..ctx {
+            dc.append(keys.row(i), vals.row(i));
+            sc.append(keys.row(i), vals.row(i));
+        }
+        let mut out = vec![0f32; d];
+        let rd = bench("dense-decode", budget_s, || {
+            dc.decode(&q, &mut out);
+            std::hint::black_box(&out);
+        });
+        let rs = bench("sfa-decode", budget_s, || {
+            sc.decode(&q, &mut out);
+            std::hint::black_box(&out);
+        });
+        decode.row(vec![
+            ctx.to_string(),
+            fmt_time(rd.median_s),
+            fmt_time(rs.median_s),
+            fmt_speedup(rd.median_s / rs.median_s),
+        ]);
+    }
+    (prefill, decode)
+}
+
+/// Table 6: TFLOPs / INOPs per configuration (cost model, validated
+/// against instrumented engine counts in analysis::flops tests).
+pub fn table6(ctxs: &[usize]) -> Table {
+    let mut t = Table::new(
+        "Table 6 — operation counts (B=8, H=8)",
+        &["config", "ctx", "TFLOPs", "GINOPs"],
+    );
+    for (d, ks) in [(128usize, vec![32usize, 16, 8]), (64usize, vec![16, 8, 4])] {
+        for &ctx in ctxs {
+            let dense = dense_forward(AttnShape::table6(ctx, d));
+            t.row(vec![
+                format!("Dense_{d}"),
+                ctx.to_string(),
+                format!("{:.2}", dense.tflops()),
+                "-".into(),
+            ]);
+            for &kk in &ks {
+                let c = sfa_forward(AttnShape::table6(ctx, d), kk, 64);
+                t.row(vec![
+                    format!("Sparse_{kk}/{d}"),
+                    ctx.to_string(),
+                    format!("{:.2}", c.tflops()),
+                    format!("{:.2}", c.ginops()),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Table 7: memory bandwidth with and without compute.
+pub fn table7(ctx: usize, d: usize, k: usize, budget_s: f64) -> Table {
+    let mut t = Table::new(
+        "Table 7 — effective bandwidth (GB/s): kernels are compute-bound",
+        &["kernel", "GB/s"],
+    );
+    let stream = measure_stream_bandwidth(64 << 20, 5);
+    let w = Widths::OURS;
+    let dense = run_forward(&FlashDense::default(), ctx, d, budget_s);
+    let sfa = run_forward(&FlashSfa::new(k), ctx, d, budget_s);
+    let dense_bw = effective_bandwidth(dense_flash_bytes(ctx, d, d, 64, w), dense.median_s);
+    let sfa_bw = effective_bandwidth(flash_sfa_bytes(ctx, d, d, k, 64, w), sfa.median_s);
+    t.row(vec!["dense (full kernel)".into(), format!("{dense_bw:.2}")]);
+    t.row(vec!["stream (w/o compute)".into(), format!("{stream:.2}")]);
+    t.row(vec![format!("flash_sfa k={k} (full kernel)"), format!("{sfa_bw:.2}")]);
+    t.row(vec!["stream (w/o compute)".into(), format!("{stream:.2}")]);
+    t
+}
+
+/// Table 8: top-k selection latency, partial-select (RTopK analog) vs
+/// full-sort (torch.topk analog), plus share of total attention time.
+pub fn table8(ctxs: &[usize], d: usize, k: usize, budget_s: f64) -> Table {
+    let mut t = Table::new(
+        &format!("Table 8 — top-k selection latency (d={d}, k={k})"),
+        &["ctx", "full-sort", "partial-select", "speedup", "% of attention fwd"],
+    );
+    for &ctx in ctxs {
+        let mut rng = Rng::new(7);
+        let x = Matrix::randn(ctx, d, &mut rng, 1.0);
+        let full = bench("full-sort", budget_s, || {
+            std::hint::black_box(topk_with(&x, k, TopkAlgo::FullSort));
+        });
+        let part = bench("partial", budget_s, || {
+            std::hint::black_box(topk_with(&x, k, TopkAlgo::PartialSelect));
+        });
+        let attn = run_forward(&FlashSfa::new(k), ctx, d, budget_s * 0.5);
+        t.row(vec![
+            ctx.to_string(),
+            fmt_time(full.median_s),
+            fmt_time(part.median_s),
+            fmt_speedup(full.median_s / part.median_s),
+            format!("{:.2}%", 100.0 * part.median_s / attn.median_s),
+        ]);
+    }
+    t
+}
+
+/// Table 10/11 latency block: token-sparse / feature-level baselines and
+/// their SFA compositions at one context length.
+pub fn table10_latency(ctx: usize, d: usize, k: usize, budget_s: f64) -> Table {
+    use crate::attention::lowrank::LowRankAttention;
+    use crate::attention::mla::MlaAttention;
+    use crate::attention::performer::PerformerAttention;
+    use crate::attention::quant::QuantAttention;
+    use crate::attention::window::WindowAttention;
+    use crate::attention::Scorer;
+
+    let mut t = Table::new(
+        &format!("Table 10/11 — forward latency of methods & SFA compositions (ctx={ctx}, d={d})"),
+        &["category", "variant", "median", "speedup vs dense"],
+    );
+    let dense = run_forward(&FlashDense::default(), ctx, d, budget_s);
+    let mut add = |cat: &str, engine: &dyn Engine| {
+        let r = run_forward(engine, ctx, d, budget_s);
+        t.row(vec![
+            cat.into(),
+            engine.name(),
+            fmt_time(r.median_s),
+            fmt_speedup(dense.median_s / r.median_s),
+        ]);
+    };
+    add("dense", &FlashDense::default());
+    add("feature", &FlashSfa::new(k));
+    add("token", &WindowAttention::new(ctx / 8, Scorer::Dense));
+    add("token+SFA", &WindowAttention::new(ctx / 8, Scorer::Sfa { k }));
+    add("feature", &LowRankAttention::new(d / 4));
+    add("feature+SFA", &LowRankAttention {
+        rank: d / 4, power_iters: 6, seed: 0, scorer: Scorer::Sfa { k },
+    });
+    add("feature", &MlaAttention::new(d / 4));
+    add("feature+SFA", &MlaAttention {
+        latent: d / 4, seed: 0, scorer: Scorer::Sfa { k },
+    });
+    add("feature", &QuantAttention { scorer: Scorer::Dense });
+    add("feature+SFA", &QuantAttention { scorer: Scorer::Sfa { k } });
+    add("kernel", &PerformerAttention::new(2 * d));
+    t
+}
+
+/// Fig 1b headline: FLOPs + KV reductions at the default config.
+pub fn fig1(ctx: usize) -> Table {
+    let mut t = Table::new(
+        "Fig 1b — headline efficiency (d=128, k=16, fp16/int8)",
+        &["metric", "dense", "sfa", "reduction"],
+    );
+    let shape = AttnShape::table6(ctx, 128);
+    let df = dense_forward(shape).tflops();
+    let sf = sfa_forward(shape, 16, 64).tflops();
+    let w = Widths::PAPER;
+    let dkv = kv_cache_bytes_dense(ctx, 128, w) as f64 / 1e6;
+    let skv = kv_cache_bytes_sfa(ctx, 128, 16, w) as f64 / 1e6;
+    t.row(vec![
+        "attention TFLOPs".into(),
+        format!("{df:.2}"),
+        format!("{sf:.2}"),
+        format!("{:.0}%", (1.0 - sf / df) * 100.0),
+    ]);
+    t.row(vec![
+        "KV-cache MB".into(),
+        format!("{dkv:.0}"),
+        format!("{skv:.0}"),
+        format!("{:.0}%", (1.0 - skv / dkv) * 100.0),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Smoke tests with tiny budgets: every driver runs end-to-end and
+    // produces a sane table; absolute timing is not asserted.
+
+    #[test]
+    fn fig5_table_has_expected_shape() {
+        let t = fig5(&[1024, 4096], 64, 4);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.render().contains("KV saving"));
+    }
+
+    #[test]
+    fn table6_matches_paper_dense_columns() {
+        let t = table6(&[8192]);
+        let rendered = t.render();
+        assert!(rendered.contains("Dense_128"));
+        // Spot value: Dense_128@8192 = 2.23 TFLOPs in the paper; our
+        // count lands within rounding (2.22-2.23).
+        assert!(
+            rendered.contains("2.23") || rendered.contains("2.22"),
+            "{rendered}"
+        );
+    }
+
+    #[test]
+    fn fig1_headline_near_paper_numbers() {
+        let t = fig1(131072);
+        let r = t.render();
+        // FLOPs reduction ≈ 49%, KV ≈ 41% (paper Fig. 1b).
+        assert!(r.contains("%"), "{r}");
+    }
+
+    #[test]
+    fn small_latency_sweep_runs() {
+        let t = table9(&[256], &[64], &[8], 0.02);
+        assert!(t.rows.len() >= 2);
+    }
+}

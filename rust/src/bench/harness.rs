@@ -1,0 +1,112 @@
+//! Timing core: warmup + median-of-N wall-clock measurement.
+
+use crate::util::stats::{mean, median, quantile, std_dev};
+use std::time::Instant;
+
+/// Summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median_s * 1e3
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.median_s * 1e6
+    }
+
+    /// Throughput given a per-iteration work amount.
+    pub fn per_second(&self, work_per_iter: f64) -> f64 {
+        work_per_iter / self.median_s
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `iters` timed; report medians
+/// (the paper reports "medians over 50 warm runs").
+pub fn bench_n<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: median(&samples),
+        mean_s: mean(&samples),
+        min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        p95_s: quantile(&samples, 0.95),
+        std_s: std_dev(&samples),
+    }
+}
+
+/// Adaptive variant: chooses an iteration count so the total timed
+/// budget is ~`budget_s` seconds (min 3 iters), then measures.
+pub fn bench(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchResult {
+    // Pilot run to estimate cost.
+    let t0 = Instant::now();
+    f();
+    let pilot = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / pilot) as usize).clamp(3, 200);
+    let warmup = (iters / 5).clamp(1, 10);
+    bench_n(name, warmup, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = bench_n("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(r.median_s > 0.0);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.p95_s);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn adaptive_budget_respects_bounds() {
+        let r = bench("fast", 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters <= 200 && r.iters >= 3);
+    }
+
+    #[test]
+    fn ordering_detects_slower_code() {
+        let fast = bench_n("fast", 2, 9, || {
+            let mut acc = 0u64;
+            for i in 0..1_000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(acc);
+        });
+        let slow = bench_n("slow", 2, 9, || {
+            let mut acc = 0u64;
+            for i in 0..200_000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(slow.median_s > fast.median_s);
+    }
+}

@@ -1,0 +1,13 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Methodology matches the paper (§4.3): warm runs first, then report
+//! the **median** over N timed iterations. [`table`] renders the
+//! aligned text tables the `cargo bench` targets print — one per paper
+//! table/figure.
+
+pub mod figures;
+pub mod harness;
+pub mod table;
+
+pub use harness::{bench, bench_n, BenchResult};
+pub use table::Table;

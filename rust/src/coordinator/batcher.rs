@@ -1,0 +1,121 @@
+//! Batch formation policy: a size-or-deadline admission queue.
+//!
+//! Requests accumulate until either `max_batch` are waiting (fire a
+//! full batch) or the oldest request has waited `max_wait` (fire a
+//! partial batch padded with idle slots). This is the classic
+//! continuous-batching admission rule; wave execution is handled by
+//! the engine.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::GenRequest;
+
+#[derive(Debug)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    queue: VecDeque<GenRequest>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
+        assert!(max_batch >= 1);
+        Batcher { max_batch, max_wait, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: GenRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Should a batch fire right now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(oldest) => now.duration_since(oldest.submitted) >= self.max_wait,
+            None => false,
+        }
+    }
+
+    /// Pop up to `max_batch` requests if the policy says fire.
+    pub fn next_batch(&mut self, now: Instant) -> Option<Vec<GenRequest>> {
+        if !self.ready(now) {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_batch);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// Time until the deadline policy would fire (None if queue empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|oldest| {
+            self.max_wait
+                .saturating_sub(now.duration_since(oldest.submitted))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> GenRequest {
+        GenRequest::new(id, vec![1, 2, 3], 4)
+    }
+
+    #[test]
+    fn fires_on_full_batch() {
+        let mut b = Batcher::new(2, Duration::from_secs(3600));
+        b.push(req(0));
+        let now = Instant::now();
+        assert!(b.next_batch(now).is_none());
+        b.push(req(1));
+        let batch = b.next_batch(now).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn fires_on_deadline_with_partial_batch() {
+        let mut b = Batcher::new(8, Duration::from_millis(0));
+        b.push(req(0));
+        let batch = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn respects_max_batch_when_overfull() {
+        let mut b = Batcher::new(2, Duration::from_secs(3600));
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        let batch = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending(), 3);
+        // FIFO order preserved.
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(batch[1].id, 1);
+    }
+
+    #[test]
+    fn empty_queue_never_ready() {
+        let b = Batcher::new(1, Duration::from_millis(0));
+        assert!(!b.ready(Instant::now()));
+        assert!(b.time_to_deadline(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn deadline_countdown() {
+        let mut b = Batcher::new(8, Duration::from_secs(10));
+        b.push(req(0));
+        let ttl = b.time_to_deadline(Instant::now()).unwrap();
+        assert!(ttl <= Duration::from_secs(10));
+        assert!(ttl >= Duration::from_secs(9));
+    }
+}

@@ -1,0 +1,233 @@
+//! Generation engine: executes one batch *wave* — batched prefill via
+//! the AOT `prefill_b{B}` entry, then a decode loop over `decode_b{B}`
+//! until every slot has produced its tokens.
+//!
+//! The KV caches (dense arrays for the dense variant, top-k value +
+//! index tensors for SFA — the paper's App-J memory layout) are opaque
+//! literals threaded from prefill's outputs through each decode step's
+//! inputs: the decode tuple is IO-symmetric by construction (see
+//! python/tests/test_aot.py::test_decode_io_symmetry).
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::rng::Rng;
+
+/// Sampling policy for next-token selection.
+#[derive(Debug, Clone, Copy)]
+pub enum Sampling {
+    Greedy,
+    /// Softmax sampling with temperature.
+    Temperature(f32),
+}
+
+pub struct Engine<'rt> {
+    pub runtime: &'rt Runtime,
+    pub variant: String,
+    pub batch_size: usize,
+    pub sampling: Sampling,
+    params: Vec<xla::Literal>,
+    prefill_seq: usize,
+    max_seq: usize,
+    vocab: usize,
+    rng: Rng,
+    /// Cumulative decode steps across waves (metrics).
+    pub decode_steps: u64,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(
+        runtime: &'rt Runtime,
+        variant: &str,
+        batch_size: usize,
+        sampling: Sampling,
+        seed: u64,
+    ) -> Result<Engine<'rt>> {
+        let v = runtime.manifest.variant(variant)?;
+        let pre = v.entry(&format!("prefill_b{batch_size}")).context(
+            "variant was not compiled with this serve batch size",
+        )?;
+        let params = runtime.load_weights(variant)?;
+        Ok(Engine {
+            runtime,
+            variant: variant.to_string(),
+            batch_size,
+            sampling,
+            params,
+            prefill_seq: pre.seq,
+            max_seq: runtime.manifest.max_seq,
+            vocab: v.cfg_usize("vocab")?,
+            rng: Rng::new(seed),
+            decode_steps: 0,
+        })
+    }
+
+    /// Replace the model weights (e.g. with a trained checkpoint).
+    pub fn set_params(&mut self, params: Vec<xla::Literal>) -> Result<()> {
+        if params.len() != self.params.len() {
+            bail!("param count mismatch");
+        }
+        self.params = params;
+        Ok(())
+    }
+
+    fn sample(&mut self, logits_row: &[f32]) -> i32 {
+        match self.sampling {
+            Sampling::Greedy => argmax(logits_row) as i32,
+            Sampling::Temperature(t) => {
+                let inv = 1.0 / t.max(1e-4);
+                let m = logits_row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let weights: Vec<f64> =
+                    logits_row.iter().map(|&x| (((x - m) * inv) as f64).exp()).collect();
+                let total: f64 = weights.iter().sum();
+                let mut u = self.rng.next_f64() * total;
+                for (i, w) in weights.iter().enumerate() {
+                    u -= w;
+                    if u <= 0.0 {
+                        return i as i32;
+                    }
+                }
+                (weights.len() - 1) as i32
+            }
+        }
+    }
+
+    /// Execute one wave over up to `batch_size` requests. Padding slots
+    /// (when the batcher fires a partial batch) replay slot 0's prompt
+    /// and are discarded.
+    pub fn run_wave(&mut self, requests: &[GenRequest], worker: usize) -> Result<Vec<GenResponse>> {
+        if requests.is_empty() || requests.len() > self.batch_size {
+            bail!("wave must have 1..={} requests", self.batch_size);
+        }
+        let b = self.batch_size;
+        let wave_start = Instant::now();
+
+        // --- Prefill -----------------------------------------------------
+        let mut tokens = vec![0i32; b * self.prefill_seq];
+        let mut lengths = vec![1i32; b];
+        for (slot, req) in requests.iter().enumerate() {
+            let plen = req.prompt.len().min(self.prefill_seq);
+            if plen == 0 {
+                bail!("empty prompt (request {})", req.id);
+            }
+            tokens[slot * self.prefill_seq..slot * self.prefill_seq + plen]
+                .copy_from_slice(&req.prompt[req.prompt.len() - plen..]);
+            lengths[slot] = plen as i32;
+        }
+        // Idle slots replay request 0 (results discarded).
+        for slot in requests.len()..b {
+            let plen = lengths[0] as usize;
+            let src: Vec<i32> =
+                tokens[0..plen].to_vec();
+            tokens[slot * self.prefill_seq..slot * self.prefill_seq + plen]
+                .copy_from_slice(&src);
+            lengths[slot] = lengths[0];
+        }
+
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 2);
+        for p in &self.params {
+            args.push(crate::train::trainer::clone_literal(p)?);
+        }
+        args.push(HostTensor::I32(tokens, vec![b, self.prefill_seq]).to_literal()?);
+        args.push(HostTensor::I32(lengths.clone(), vec![b]).to_literal()?);
+        let entry = format!("prefill_b{b}");
+        let mut outs = self.runtime.run(&self.variant, &entry, &args)?;
+        let logits_last = HostTensor::from_literal(&outs.remove(0))?;
+        let mut caches = outs; // per-layer cache tensors, opaque
+
+        // First sampled token per slot.
+        let lf = logits_last.as_f32()?;
+        let mut current: Vec<i32> = (0..b)
+            .map(|slot| self.sample(&lf[slot * self.vocab..(slot + 1) * self.vocab]))
+            .collect();
+        let ttft = wave_start.elapsed().as_secs_f64();
+
+        let mut generated: Vec<Vec<i32>> = (0..b).map(|s| vec![current[s]]).collect();
+        let mut pos: Vec<i32> = lengths.clone(); // slot's next write position
+        let max_new = requests.iter().map(|r| r.max_new).max().unwrap_or(1);
+
+        // --- Decode loop ---------------------------------------------------
+        let decode_entry = format!("decode_b{b}");
+        for _step in 1..max_new {
+            // Stop early if every live slot is done.
+            let live = requests
+                .iter()
+                .enumerate()
+                .any(|(s, r)| generated[s].len() < r.max_new && (pos[s] as usize) < self.max_seq);
+            if !live {
+                break;
+            }
+            let mut args: Vec<xla::Literal> =
+                Vec::with_capacity(self.params.len() + caches.len() + 2);
+            for p in &self.params {
+                args.push(crate::train::trainer::clone_literal(p)?);
+            }
+            args.extend(caches.drain(..));
+            args.push(HostTensor::I32(current.clone(), vec![b]).to_literal()?);
+            let clamped: Vec<i32> = pos
+                .iter()
+                .map(|&p| p.min(self.max_seq as i32 - 1))
+                .collect();
+            args.push(HostTensor::I32(clamped, vec![b]).to_literal()?);
+            let mut outs = self.runtime.run(&self.variant, &decode_entry, &args)?;
+            let logits = HostTensor::from_literal(&outs.remove(0))?;
+            caches = outs;
+            self.decode_steps += 1;
+            let lf = logits.as_f32()?;
+            for slot in 0..b {
+                let tok = self.sample(&lf[slot * self.vocab..(slot + 1) * self.vocab]);
+                current[slot] = tok;
+                pos[slot] += 1;
+                if slot < requests.len()
+                    && generated[slot].len() < requests[slot].max_new
+                    && (pos[slot] as usize) < self.max_seq
+                {
+                    generated[slot].push(tok);
+                }
+            }
+        }
+
+        let total = wave_start.elapsed().as_secs_f64();
+        Ok(requests
+            .iter()
+            .enumerate()
+            .map(|(slot, req)| GenResponse {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: generated[slot].clone(),
+                ttft_s: ttft,
+                total_s: total,
+                worker,
+            })
+            .collect())
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+        assert_eq!(argmax(&[-3.0]), 0);
+    }
+
+    // Engine integration tests (against real artifacts) live in
+    // rust/tests/integration.rs.
+}

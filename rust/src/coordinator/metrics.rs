@@ -1,0 +1,97 @@
+//! Serving metrics: TTFT / TPOT / end-to-end latency / throughput —
+//! the quantities behind the paper's "Decode" and "Forward" latency
+//! columns (Tables 1/10) and the Speed@N multipliers (Table 2).
+
+use crate::coordinator::request::GenResponse;
+use crate::util::stats::{mean, median, quantile};
+
+#[derive(Debug, Default, Clone)]
+pub struct ServeMetrics {
+    pub ttft_s: Vec<f64>,
+    pub tpot_s: Vec<f64>,
+    pub total_s: Vec<f64>,
+    pub tokens_out: u64,
+    pub requests: u64,
+    pub wall_s: f64,
+}
+
+impl ServeMetrics {
+    pub fn record(&mut self, r: &GenResponse) {
+        self.ttft_s.push(r.ttft_s);
+        if r.tokens.len() > 1 {
+            self.tpot_s.push(r.tpot_s());
+        }
+        self.total_s.push(r.total_s);
+        self.tokens_out += r.tokens.len() as u64;
+        self.requests += 1;
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / self.wall_s
+    }
+
+    pub fn summary(&self) -> String {
+        if self.requests == 0 {
+            return "no requests served".into();
+        }
+        format!(
+            "requests={} tokens={} wall={:.2}s thpt={:.1} tok/s | \
+             TTFT p50={:.1}ms p95={:.1}ms | TPOT p50={:.1}ms | e2e p50={:.1}ms mean={:.1}ms",
+            self.requests,
+            self.tokens_out,
+            self.wall_s,
+            self.throughput_tok_s(),
+            median(&self.ttft_s) * 1e3,
+            quantile(&self.ttft_s, 0.95) * 1e3,
+            if self.tpot_s.is_empty() { 0.0 } else { median(&self.tpot_s) * 1e3 },
+            median(&self.total_s) * 1e3,
+            mean(&self.total_s) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(n_tokens: usize, ttft: f64, total: f64) -> GenResponse {
+        GenResponse {
+            id: 0,
+            prompt_len: 8,
+            tokens: vec![1; n_tokens],
+            ttft_s: ttft,
+            total_s: total,
+            worker: 0,
+        }
+    }
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = ServeMetrics::default();
+        m.record(&resp(10, 0.1, 1.0));
+        m.record(&resp(20, 0.2, 2.0));
+        m.wall_s = 2.0;
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.tokens_out, 30);
+        assert!((m.throughput_tok_s() - 15.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("requests=2"), "{s}");
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = ServeMetrics::default();
+        assert_eq!(m.summary(), "no requests served");
+        assert_eq!(m.throughput_tok_s(), 0.0);
+    }
+
+    #[test]
+    fn single_token_skips_tpot() {
+        let mut m = ServeMetrics::default();
+        m.record(&resp(1, 0.1, 0.1));
+        assert!(m.tpot_s.is_empty());
+    }
+}

@@ -1,0 +1,24 @@
+//! The serving coordinator — L3's systems contribution, shaped like a
+//! miniature vLLM router/worker stack:
+//!
+//! * [`request`] — request/response types
+//! * [`batcher`] — admission queue + batch former (size/deadline policy)
+//! * [`engine`] — generation engine: drives the AOT prefill/decode
+//!   executables for one batch wave (sparse or dense KV caches live
+//!   inside the executable's cache tensors)
+//! * [`router`] — multi-worker dispatch: each worker owns a PJRT
+//!   runtime on its own thread; requests flow through the shared queue
+//! * [`metrics`] — TTFT / TTNT / throughput accounting (the serving
+//!   quantities Tables 1/10 report)
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use batcher::Batcher;
+pub use engine::Engine;
+pub use metrics::ServeMetrics;
+pub use request::{GenRequest, GenResponse};
+pub use router::Router;

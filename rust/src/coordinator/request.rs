@@ -1,0 +1,66 @@
+//! Request/response types crossing the coordinator boundary.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// A generation request (token-level API; tokenization is the
+/// caller's concern in this synthetic-vocab reproduction).
+#[derive(Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub submitted: Instant,
+    /// Channel the response is delivered on.
+    pub reply: Option<Sender<GenResponse>>,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new: usize) -> GenRequest {
+        GenRequest { id, prompt, max_new, submitted: Instant::now(), reply: None }
+    }
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Time to first token (prefill + first sample), seconds.
+    pub ttft_s: f64,
+    /// Total request latency, seconds.
+    pub total_s: f64,
+    /// Which worker served it (router observability).
+    pub worker: usize,
+}
+
+impl GenResponse {
+    /// Time-per-output-token over the decode phase.
+    pub fn tpot_s(&self) -> f64 {
+        if self.tokens.len() <= 1 {
+            return 0.0;
+        }
+        (self.total_s - self.ttft_s) / (self.tokens.len() - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpot_math() {
+        let r = GenResponse {
+            id: 0,
+            prompt_len: 4,
+            tokens: vec![1, 2, 3, 4, 5],
+            ttft_s: 0.2,
+            total_s: 1.0,
+            worker: 0,
+        };
+        assert!((r.tpot_s() - 0.2).abs() < 1e-12);
+        let single = GenResponse { tokens: vec![1], ..r };
+        assert_eq!(single.tpot_s(), 0.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Multi-worker router: a shared admission queue feeding N engine
+//! workers, each with its own PJRT runtime on its own OS thread (the
+//! PJRT handles are !Send, so workers own their runtimes end-to-end —
+//! the same process-per-device shape as a vLLM deployment, collapsed
+//! onto threads for the CPU testbed).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::engine::{Engine, Sampling};
+use crate::coordinator::request::{GenRequest, GenResponse};
+use crate::runtime::Runtime;
+
+struct Shared {
+    queue: Mutex<(Batcher, bool)>, // (batcher, shutdown)
+    cv: Condvar,
+}
+
+/// Router over N worker threads.
+pub struct Router {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+/// Configuration for the worker pool.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    pub artifact_dir: String,
+    pub variant: String,
+    pub workers: usize,
+    pub batch_size: usize,
+    pub max_wait: Duration,
+    pub sampling_temperature: Option<f32>,
+}
+
+impl Router {
+    pub fn start(cfg: RouterConfig) -> Router {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new((Batcher::new(cfg.batch_size, cfg.max_wait), false)),
+            cv: Condvar::new(),
+        });
+        let workers = (0..cfg.workers)
+            .map(|w| {
+                let shared = shared.clone();
+                let cfg = cfg.clone();
+                std::thread::Builder::new()
+                    .name(format!("sfa-worker-{w}"))
+                    .spawn(move || worker_loop(w, shared, cfg))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Router {
+            shared,
+            workers,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Submit a prompt; returns the channel the response arrives on.
+    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Receiver<GenResponse> {
+        let (tx, rx): (Sender<GenResponse>, Receiver<GenResponse>) = channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut req = GenRequest::new(id, prompt, max_new);
+        req.reply = Some(tx);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.0.push(req);
+        }
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    /// Graceful shutdown: drain the queue, join workers.
+    pub fn shutdown(self) -> Result<()> {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.1 = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers {
+            w.join().expect("worker panicked")?;
+        }
+        Ok(())
+    }
+}
+
+fn worker_loop(worker: usize, shared: Arc<Shared>, cfg: RouterConfig) -> Result<()> {
+    // Each worker owns its runtime (PJRT handles are thread-local).
+    let runtime = Runtime::new(&cfg.artifact_dir)?;
+    let sampling = match cfg.sampling_temperature {
+        Some(t) => Sampling::Temperature(t),
+        None => Sampling::Greedy,
+    };
+    let mut engine = Engine::new(
+        &runtime,
+        &cfg.variant,
+        cfg.batch_size,
+        sampling,
+        0x5EED ^ worker as u64,
+    )?;
+    loop {
+        // Wait for a fireable batch or shutdown.
+        let batch = {
+            let mut guard = shared.queue.lock().unwrap();
+            loop {
+                let now = Instant::now();
+                if let Some(batch) = guard.0.next_batch(now) {
+                    break Some(batch);
+                }
+                if guard.1 {
+                    // Shutdown: drain stragglers regardless of deadline.
+                    if guard.0.pending() > 0 {
+                        let all = guard.0.next_batch(now + cfg.max_wait);
+                        break all;
+                    }
+                    break None;
+                }
+                let wait = guard
+                    .0
+                    .time_to_deadline(now)
+                    .unwrap_or(Duration::from_millis(50))
+                    .min(Duration::from_millis(50));
+                let (g, _) = shared
+                    .cv
+                    .wait_timeout(guard, wait.max(Duration::from_millis(1)))
+                    .unwrap();
+                guard = g;
+            }
+        };
+        let Some(batch) = batch else { return Ok(()) };
+        let responses = engine.run_wave(&batch, worker)?;
+        for (req, resp) in batch.iter().zip(responses) {
+            if let Some(tx) = &req.reply {
+                let _ = tx.send(resp); // receiver may have gone away
+            }
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Whole-model KV-cache byte accounting (Fig. 1b "41% KV reduction",
+//! Fig. 5 memory curves). Mirrors `python/compile/model.py::
+//! kv_cache_bytes` so L2 and L3 agree on the memory story.
+
+use crate::sparse::memory::{csr_bytes, dense_bytes, Widths};
+
+/// Model-level shape parameters needed for cache accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    /// Per-head Q/K dim (differs from d_head for "short" baselines).
+    pub qk_dim: usize,
+    /// SFA sparsity (None = dense cache).
+    pub sparsity: Option<usize>,
+}
+
+impl CacheConfig {
+    /// Total K+V cache bytes at context `seq` for `batch` sequences.
+    pub fn bytes(&self, seq: usize, batch: usize, w: Widths) -> usize {
+        let per_head_v = dense_bytes(seq, self.d_head, w);
+        let per_head_k = match self.sparsity {
+            Some(k) => csr_bytes(seq, k, w),
+            None => dense_bytes(seq, self.qk_dim, w),
+        };
+        self.n_layers * self.n_heads * batch * (per_head_k + per_head_v)
+    }
+
+    /// Fractional saving vs a dense config with the same architecture.
+    pub fn saving_vs_dense(&self, seq: usize, w: Widths) -> f64 {
+        let dense = CacheConfig { sparsity: None, qk_dim: self.d_head, ..*self };
+        1.0 - self.bytes(seq, 1, w) as f64 / dense.bytes(seq, 1, w) as f64
+    }
+
+    /// Max context length that fits in `budget` bytes (batch 1) — the
+    /// "orders of magnitude longer context" claim quantified (§3.1).
+    pub fn max_context_for_budget(&self, budget: usize, w: Widths) -> usize {
+        // bytes() is linear in seq up to the +1 indptr term; solve directly.
+        let per_tok = self.bytes(4096, 1, w).saturating_sub(self.bytes(2048, 1, w)) as f64
+            / 2048.0;
+        (budget as f64 / per_tok) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qwen_like(sparsity: Option<usize>) -> CacheConfig {
+        CacheConfig { n_layers: 28, n_heads: 8, d_head: 128, qk_dim: 128, sparsity }
+    }
+
+    #[test]
+    fn sfa_saves_about_forty_percent_at_default_config() {
+        // Paper Fig. 1b: ~41% KV reduction at d=128, k=16 (fp16/int8).
+        let s = qwen_like(Some(16)).saving_vs_dense(131072, Widths::PAPER);
+        assert!((0.35..0.45).contains(&s), "saving {s}");
+    }
+
+    #[test]
+    fn saving_grows_as_k_shrinks() {
+        let w = Widths::PAPER;
+        let s16 = qwen_like(Some(16)).saving_vs_dense(8192, w);
+        let s8 = qwen_like(Some(8)).saving_vs_dense(8192, w);
+        let s4 = qwen_like(Some(4)).saving_vs_dense(8192, w);
+        assert!(s4 > s8 && s8 > s16);
+    }
+
+    #[test]
+    fn max_context_extends_with_sparsity() {
+        let w = Widths::PAPER;
+        let budget = 8 << 30; // 8 GiB
+        let dense_ctx = qwen_like(None).max_context_for_budget(budget, w);
+        let sfa_ctx = qwen_like(Some(16)).max_context_for_budget(budget, w);
+        assert!(sfa_ctx as f64 > 1.5 * dense_ctx as f64,
+                "{sfa_ctx} vs {dense_ctx}");
+    }
+
+    #[test]
+    fn bytes_scale_linearly_in_batch_and_layers() {
+        let cfg = qwen_like(Some(8));
+        let w = Widths::OURS;
+        assert_eq!(cfg.bytes(1024, 4, w), 4 * cfg.bytes(1024, 1, w));
+        let half = CacheConfig { n_layers: 14, ..cfg };
+        assert_eq!(cfg.bytes(1024, 1, w), 2 * half.bytes(1024, 1, w));
+    }
+}

@@ -1,0 +1,13 @@
+//! KV-cache management for the serving coordinator.
+//!
+//! Two layers:
+//! * [`paged`] — a vLLM-style paged allocator: fixed-size pages, a page
+//!   table per sequence, copy-free append, reference-counted sharing.
+//!   SFA shrinks the K-page payload to top-k codes (App. J memory).
+//! * [`accounting`] — byte accounting across whole model instances
+//!   (drives Fig. 1b / Fig. 5 KV-memory curves).
+
+pub mod accounting;
+pub mod paged;
+
+pub use paged::{PageError, PagedKvCache, SeqId};

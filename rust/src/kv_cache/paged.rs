@@ -1,0 +1,289 @@
+//! Paged KV-cache allocator (vLLM-style), with a dense and a sparse
+//! (SFA top-k codes) page payload.
+//!
+//! The coordinator assigns each live sequence a page table; pages are
+//! allocated on append and freed when the sequence finishes. Prefix
+//! sharing is supported through per-page reference counts (fork).
+
+use std::collections::HashMap;
+
+/// Sequence handle.
+pub type SeqId = u64;
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum PageError {
+    OutOfPages,
+    UnknownSeq,
+}
+
+/// Payload layout of one token slot inside a page.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotLayout {
+    /// Dense K (d) + dense V (d_v) floats.
+    Dense { d: usize, d_v: usize },
+    /// SFA: k key values + k key indices + dense V.
+    Sparse { k: usize, d_v: usize },
+}
+
+impl SlotLayout {
+    /// f32/u16 payload floats-equivalent per token (indices packed two
+    /// per float slot for accounting purposes).
+    pub fn floats_per_token(&self) -> usize {
+        match *self {
+            SlotLayout::Dense { d, d_v } => d + d_v,
+            SlotLayout::Sparse { k, d_v } => k + k.div_ceil(2) + d_v,
+        }
+    }
+}
+
+/// A paged KV cache for one layer-head group.
+#[derive(Debug)]
+pub struct PagedKvCache {
+    pub page_size: usize,
+    pub layout: SlotLayout,
+    /// Backing store: one Vec<f32> per page (allocated lazily).
+    pages: Vec<Vec<f32>>,
+    free_list: Vec<u32>,
+    ref_counts: Vec<u32>,
+    /// seq -> (page ids, token count)
+    tables: HashMap<SeqId, (Vec<u32>, usize)>,
+    next_seq: SeqId,
+    max_pages: usize,
+}
+
+impl PagedKvCache {
+    pub fn new(max_pages: usize, page_size: usize, layout: SlotLayout) -> Self {
+        PagedKvCache {
+            page_size,
+            layout,
+            pages: Vec::new(),
+            free_list: Vec::new(),
+            ref_counts: Vec::new(),
+            tables: HashMap::new(),
+            next_seq: 0,
+            max_pages,
+        }
+    }
+
+    fn alloc_page(&mut self) -> Result<u32, PageError> {
+        if let Some(p) = self.free_list.pop() {
+            self.ref_counts[p as usize] = 1;
+            return Ok(p);
+        }
+        if self.pages.len() >= self.max_pages {
+            return Err(PageError::OutOfPages);
+        }
+        let id = self.pages.len() as u32;
+        self.pages
+            .push(vec![0.0; self.page_size * self.layout.floats_per_token()]);
+        self.ref_counts.push(1);
+        Ok(id)
+    }
+
+    /// Register a new sequence; returns its handle.
+    pub fn create_seq(&mut self) -> SeqId {
+        let id = self.next_seq;
+        self.next_seq += 1;
+        self.tables.insert(id, (Vec::new(), 0));
+        id
+    }
+
+    /// Append one token's payload; allocates a page on boundary crossing.
+    pub fn append(&mut self, seq: SeqId, payload: &[f32]) -> Result<(), PageError> {
+        let fpt = self.layout.floats_per_token();
+        assert_eq!(payload.len(), fpt, "payload must match layout");
+        // Determine state first (split borrows around alloc_page).
+        let (n_pages, len) = {
+            let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
+            (table.len(), *len)
+        };
+        let slot = len % self.page_size;
+        let page_id = if slot == 0 {
+            let p = self.alloc_page()?;
+            let (table, _) = self.tables.get_mut(&seq).unwrap();
+            table.push(p);
+            p
+        } else {
+            let (table, _) = self.tables.get(&seq).unwrap();
+            table[n_pages - 1]
+        };
+        // Copy-on-write if the page is shared.
+        let page_id = if self.ref_counts[page_id as usize] > 1 {
+            let copy = self.alloc_page()?;
+            self.ref_counts[page_id as usize] -= 1;
+            let src = self.pages[page_id as usize].clone();
+            self.pages[copy as usize].copy_from_slice(&src);
+            let (table, _) = self.tables.get_mut(&seq).unwrap();
+            *table.last_mut().unwrap() = copy;
+            copy
+        } else {
+            page_id
+        };
+        let page = &mut self.pages[page_id as usize];
+        page[slot * fpt..(slot + 1) * fpt].copy_from_slice(payload);
+        let (_, len) = self.tables.get_mut(&seq).unwrap();
+        *len += 1;
+        Ok(())
+    }
+
+    /// Read one token slot.
+    pub fn get(&self, seq: SeqId, pos: usize) -> Result<&[f32], PageError> {
+        let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
+        assert!(pos < *len, "pos {pos} >= len {len}");
+        let fpt = self.layout.floats_per_token();
+        let page = table[pos / self.page_size];
+        let slot = pos % self.page_size;
+        Ok(&self.pages[page as usize][slot * fpt..(slot + 1) * fpt])
+    }
+
+    /// Fork a sequence sharing all current pages (prefix caching).
+    pub fn fork(&mut self, seq: SeqId) -> Result<SeqId, PageError> {
+        let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?.clone();
+        for &p in &table {
+            self.ref_counts[p as usize] += 1;
+        }
+        let id = self.next_seq;
+        self.next_seq += 1;
+        self.tables.insert(id, (table, len));
+        Ok(id)
+    }
+
+    /// Free a sequence, returning pages whose refcount drops to zero.
+    pub fn free(&mut self, seq: SeqId) -> Result<usize, PageError> {
+        let (table, _) = self.tables.remove(&seq).ok_or(PageError::UnknownSeq)?;
+        let mut freed = 0;
+        for p in table {
+            let rc = &mut self.ref_counts[p as usize];
+            *rc -= 1;
+            if *rc == 0 {
+                self.free_list.push(p);
+                freed += 1;
+            }
+        }
+        Ok(freed)
+    }
+
+    pub fn seq_len(&self, seq: SeqId) -> Option<usize> {
+        self.tables.get(&seq).map(|(_, l)| *l)
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.pages.len() - self.free_list.len()
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.pages_in_use() * self.page_size * self.layout.floats_per_token() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn payload(layout: SlotLayout, tag: f32) -> Vec<f32> {
+        vec![tag; layout.floats_per_token()]
+    }
+
+    #[test]
+    fn append_and_get_roundtrip() {
+        let layout = SlotLayout::Dense { d: 4, d_v: 4 };
+        let mut c = PagedKvCache::new(16, 4, layout);
+        let s = c.create_seq();
+        for i in 0..10 {
+            c.append(s, &payload(layout, i as f32)).unwrap();
+        }
+        assert_eq!(c.seq_len(s), Some(10));
+        for i in 0..10 {
+            assert_eq!(c.get(s, i).unwrap()[0], i as f32);
+        }
+        assert_eq!(c.pages_in_use(), 3); // ceil(10/4)
+    }
+
+    #[test]
+    fn out_of_pages_reported() {
+        let layout = SlotLayout::Dense { d: 2, d_v: 2 };
+        let mut c = PagedKvCache::new(2, 2, layout);
+        let s = c.create_seq();
+        for _ in 0..4 {
+            c.append(s, &payload(layout, 0.0)).unwrap();
+        }
+        assert_eq!(c.append(s, &payload(layout, 0.0)), Err(PageError::OutOfPages));
+    }
+
+    #[test]
+    fn free_recycles_pages() {
+        let layout = SlotLayout::Dense { d: 2, d_v: 2 };
+        let mut c = PagedKvCache::new(2, 2, layout);
+        let s = c.create_seq();
+        for _ in 0..4 {
+            c.append(s, &payload(layout, 1.0)).unwrap();
+        }
+        assert_eq!(c.free(s).unwrap(), 2);
+        assert_eq!(c.pages_in_use(), 0);
+        let s2 = c.create_seq();
+        for _ in 0..4 {
+            c.append(s2, &payload(layout, 2.0)).unwrap();
+        }
+        assert_eq!(c.get(s2, 3).unwrap()[0], 2.0);
+    }
+
+    #[test]
+    fn fork_shares_then_copies_on_write() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(8, 2, layout);
+        let a = c.create_seq();
+        c.append(a, &payload(layout, 1.0)).unwrap();
+        let b = c.fork(a).unwrap();
+        assert_eq!(c.pages_in_use(), 1, "fork shares pages");
+        // Appending to the fork must not disturb the parent (CoW).
+        c.append(b, &payload(layout, 9.0)).unwrap();
+        c.append(a, &payload(layout, 5.0)).unwrap();
+        assert_eq!(c.get(a, 1).unwrap()[0], 5.0);
+        assert_eq!(c.get(b, 1).unwrap()[0], 9.0);
+        assert_eq!(c.get(b, 0).unwrap()[0], 1.0);
+    }
+
+    #[test]
+    fn sparse_layout_is_smaller() {
+        let dense = SlotLayout::Dense { d: 64, d_v: 64 };
+        let sparse = SlotLayout::Sparse { k: 8, d_v: 64 };
+        assert!(sparse.floats_per_token() < dense.floats_per_token());
+        // App-J shape: K-payload shrinks from d to ~1.5k.
+        assert_eq!(sparse.floats_per_token(), 8 + 4 + 64);
+    }
+
+    #[test]
+    fn unknown_seq_errors() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(2, 2, layout);
+        assert_eq!(c.free(42), Err(PageError::UnknownSeq));
+        assert_eq!(
+            c.append(42, &payload(layout, 0.0)),
+            Err(PageError::UnknownSeq)
+        );
+    }
+
+    #[test]
+    fn property_len_and_bytes_track_appends() {
+        check("paged cache bookkeeping", 24, |g| {
+            let page_size = g.usize_in(1..8);
+            let layout = SlotLayout::Sparse { k: 4, d_v: 8 };
+            let mut c = PagedKvCache::new(1024, page_size, layout);
+            let n_seqs = g.usize_in(1..5);
+            let seqs: Vec<SeqId> = (0..n_seqs).map(|_| c.create_seq()).collect();
+            let mut lens = vec![0usize; n_seqs];
+            for _ in 0..g.usize_in(0..64) {
+                let i = g.usize_in(0..n_seqs);
+                c.append(seqs[i], &vec![0.5; layout.floats_per_token()]).unwrap();
+                lens[i] += 1;
+            }
+            let mut expect_pages = 0;
+            for (i, &s) in seqs.iter().enumerate() {
+                assert_eq!(c.seq_len(s), Some(lens[i]));
+                expect_pages += lens[i].div_ceil(page_size);
+            }
+            assert_eq!(c.pages_in_use(), expect_pages);
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! # SFA — Sparse Feature Attention, end to end
+//!
+//! Production-quality reproduction of *"Scaling Attention via Feature
+//! Sparsity"* as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas, build time)** — the FlashSFA kernel and a row-wise
+//!   top-k kernel live in `python/compile/kernels/`; they lower (with
+//!   `interpret=True`) into the model HLO.
+//! * **L2 (JAX, build time)** — a GPT-2-style LM with pluggable
+//!   attention (`dense | sfa | short | window`) in
+//!   `python/compile/model.py`, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **L3 (this crate, run time)** — everything else: the PJRT runtime
+//!   that executes the artifacts, the serving coordinator (router /
+//!   continuous batcher / scheduler / KV-cache manager), the training
+//!   driver, the CPU FlashSFA engine used for the paper's latency
+//!   benchmarks, every baseline it is compared against, and the
+//!   benchmark harness that regenerates each table and figure.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `sfa` binary is self-contained.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | offline-environment substrates: RNG, JSON, CLI, stats, thread pool, matrices, mini property testing |
+//! | [`sparse`] | CSR / feature-wise CSC formats, row-wise top-k, Gustavson SpGEMM, App-J memory model |
+//! | [`attention`] | the CPU FlashSFA engine (paper App. C Algorithm 1) plus dense/flash/token-sparse/low-rank/kernel baselines |
+//! | [`kv_cache`] | paged dense + sparse KV caches with eviction policies (H2O/SnapKV-style) |
+//! | [`runtime`] | PJRT client, artifact registry, executable cache |
+//! | [`coordinator`] | request router, continuous batcher, prefill/decode scheduler, generation engine |
+//! | [`train`] | corpus + NIAH generators, training loop over the AOT'd train_step, PPL / retrieval eval |
+//! | [`analysis`] | FLOP/INOP counter, bandwidth model, top-k entropy, SVD effective rank, latency cost model |
+//! | [`bench`] | median-of-N micro-bench harness + paper table/figure regeneration |
+
+pub mod analysis;
+pub mod attention;
+pub mod bench;
+pub mod coordinator;
+pub mod kv_cache;
+pub mod runtime;
+pub mod sparse;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

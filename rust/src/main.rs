@@ -1,0 +1,399 @@
+//! `sfa` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   info                         artifact/manifest summary
+//!   train   --variant V          train one variant, log losses
+//!   serve   --requests N         synthetic serving load through the router
+//!   exp     table1|table2|table3|fig8|table12     training experiments
+//!   bench   fig1|fig3|fig5|fig6|table6|table7|table8|table9|table10
+//!   analyze entropy|svd|memory   Fig 7 / Fig 11 / App J analyses
+
+use anyhow::{bail, Result};
+
+use sfa::bench::figures;
+use sfa::coordinator::router::{Router, RouterConfig};
+use sfa::coordinator::ServeMetrics;
+use sfa::runtime::{HostTensor, Runtime};
+use sfa::train::corpus::CorpusKind;
+use sfa::train::experiments;
+use sfa::train::trainer::Trainer;
+use sfa::util::cli::Args;
+use sfa::util::rng::Rng;
+
+const USAGE: &str = "\
+sfa — Sparse Feature Attention coordinator
+USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
+  sfa info    [--artifacts DIR]
+  sfa train   [--artifacts DIR] --variant sfa_k8 --steps 100 --lr 1e-3 --corpus zipf|niah
+  sfa serve   [--artifacts DIR] --variant sfa_k8 --requests 16 --workers 2 --batch 4 --max-new 16
+  sfa exp     table1|table2|table3|fig8|table12 [--steps N] [--artifacts DIR]
+  sfa bench   fig1|fig3|fig5|fig6|table6|table7|table8|table9|table10 [--budget SECS]
+  sfa analyze entropy|svd|memory [--variant V] [--steps N]
+";
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&argv, 2)?;
+    match args.command.first().map(|s| s.as_str()) {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("analyze") => cmd_analyze(&args),
+        _ => {
+            print!("{USAGE}");
+            bail!("unknown command {:?}", args.command)
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts_dir(args))?;
+    let m = &rt.manifest;
+    println!(
+        "artifacts: {:?}\npreset={} seed={} train_batch={} serve_batches={:?} \
+         prefill_seq={} max_seq={}",
+        m.dir, m.preset, m.seed, m.train_batch, m.serve_batches, m.prefill_seq, m.max_seq
+    );
+    for (name, v) in &m.variants {
+        let n_params: usize = v.params.iter().map(|p| p.numel()).sum();
+        println!(
+            "  {name}: {:.2}M params, entries: {}",
+            n_params as f64 / 1e6,
+            v.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts_dir(args))?;
+    let variant = args.str_or("variant", "sfa_k8");
+    let steps = args.usize_or("steps", 100)?;
+    let lr = args.f64_or("lr", 1e-3)? as f32;
+    let corpus = CorpusKind::parse(&args.str_or("corpus", "zipf"))
+        .ok_or_else(|| anyhow::anyhow!("--corpus must be zipf or niah"))?;
+    let (trainer, report) = experiments::train_variant(
+        &rt, &variant, corpus, steps, lr, args.u64_or("seed", 42)?, 10,
+    )?;
+    println!(
+        "trained {variant}: final loss {:.4}, {:.0} tok/s, wall {:.1}s",
+        report.final_loss, report.tokens_per_s, report.wall_s
+    );
+    let vocab = rt.manifest.variant(&variant)?.cfg_usize("vocab")?;
+    let ppl = experiments::eval_ppl(&trainer, corpus, vocab, 4, 777)?;
+    println!("held-out PPL: {ppl:.3}");
+    if let Some(path) = args.get("checkpoint") {
+        trainer.save_checkpoint(path)?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let variant = args.str_or("variant", "sfa_k8");
+    let n_requests = args.usize_or("requests", 16)?;
+    let workers = args.usize_or("workers", 2)?;
+    let batch = args.usize_or("batch", 4)?;
+    let max_new = args.usize_or("max-new", 16)?;
+    let rt = Runtime::new(&dir)?;
+    let vocab = rt.manifest.variant(&variant)?.cfg_usize("vocab")? as i32;
+    let prefill_seq = rt.manifest.prefill_seq;
+    drop(rt);
+
+    let router = Router::start(RouterConfig {
+        artifact_dir: dir,
+        variant,
+        workers,
+        batch_size: batch,
+        max_wait: std::time::Duration::from_millis(50),
+        sampling_temperature: None,
+    });
+    let mut rng = Rng::new(args.u64_or("seed", 1)?);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let plen = rng.range(4, prefill_seq.min(64));
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
+            router.submit(prompt, max_new)
+        })
+        .collect();
+    let mut metrics = ServeMetrics::default();
+    for rx in rxs {
+        let resp = rx.recv()?;
+        metrics.record(&resp);
+    }
+    metrics.wall_s = t0.elapsed().as_secs_f64();
+    router.shutdown()?;
+    println!("{}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let rt = Runtime::new(artifacts_dir(args))?;
+    let lr = args.f64_or("lr", 1e-3)? as f32;
+    let eval_batches = args.usize_or("eval-batches", 4)?;
+    match args.command.get(1).map(|s| s.as_str()) {
+        Some("table1") => {
+            let steps = args.usize_or("steps", 200)?;
+            let variants = args.str_list_or(
+                "variants", &["dense", "sfa_k8", "sfa_k16", "short_d32"],
+            );
+            let (t, reports) = experiments::table1(&rt, &variants, steps, lr, eval_batches)?;
+            t.print();
+            if let Some(path) = args.get("loss-log") {
+                let mut out = String::new();
+                for r in &reports {
+                    for (i, l) in r.losses.iter().enumerate() {
+                        out.push_str(&format!("{}\t{}\t{}\n", r.variant, i, l));
+                    }
+                }
+                std::fs::write(path, out)?;
+            }
+        }
+        Some("table2") => {
+            let steps = args.usize_or("steps", 300)?;
+            let variants =
+                args.str_list_or("variants", &["dense", "sfa_k2", "sfa_k8", "short_d16"]);
+            let lengths = args.usize_list_or("lengths", &[64, 128, 256, 512])?;
+            experiments::table2(&rt, &variants, steps, lr, &lengths, eval_batches)?.print();
+        }
+        Some("table3") => {
+            let pre = args.usize_or("pre-steps", 200)?;
+            let ft = args.usize_or("ft-steps", 60)?;
+            let lam = args.f64_or("lambda", 1.0)? as f32;
+            let variant = args.str_or("variant", "sfa_k8");
+            experiments::table3(&rt, &variant, pre, ft, lr, lam, eval_batches)?.print();
+        }
+        Some("fig8") => {
+            let steps = args.usize_or("steps", 150)?;
+            let ks = args.usize_list_or("ks", &[2, 4, 8, 16])?;
+            let (t, curves) = experiments::fig8(&rt, &ks, steps, lr, eval_batches)?;
+            t.print();
+            if let Some(path) = args.get("loss-log") {
+                let mut out = String::new();
+                for (k, losses) in &curves {
+                    for (i, l) in losses.iter().enumerate() {
+                        out.push_str(&format!("k{}\t{}\t{}\n", k, i, l));
+                    }
+                }
+                std::fs::write(path, out)?;
+                println!("loss curves written to {path} (Fig 10 data)");
+            }
+        }
+        Some("table12") => {
+            let steps = args.usize_or("steps", 200)?;
+            let variants = args.str_list_or("variants", &["dense", "sfa_k8"]);
+            let lengths = args.usize_list_or("lengths", &[64, 128, 256])?;
+            experiments::table12(&rt, &variants, steps, lr, &lengths, eval_batches)?.print();
+        }
+        other => bail!("unknown experiment {other:?} — see README §Experiments"),
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let budget = args.f64_or("budget", 0.5)?;
+    match args.command.get(1).map(|s| s.as_str()) {
+        Some("fig1") => figures::fig1(args.usize_or("ctx", 131072)?).print(),
+        Some("fig3") => figures::fig3(
+            args.usize_or("ctx", 4096)?,
+            args.usize_or("d", 128)?,
+            &args.usize_list_or("ks", &[2, 8, 16, 32])?,
+            budget,
+        )
+        .print(),
+        Some("fig5") => figures::fig5(
+            &args.usize_list_or("ctxs", &[1024, 4096, 16384, 65536, 262144])?,
+            args.usize_or("d", 64)?,
+            args.usize_or("k", 4)?,
+        )
+        .print(),
+        Some("fig6") => {
+            let (a, b) = figures::fig6(
+                &args.usize_list_or("ctxs", &[512, 1024, 2048, 4096, 8192])?,
+                args.usize_or("d", 128)?,
+                args.usize_or("k", 8)?,
+                budget,
+            );
+            a.print();
+            b.print();
+        }
+        Some("table6") => {
+            figures::table6(&args.usize_list_or("ctxs", &[8192, 16384, 32768, 65536])?).print()
+        }
+        Some("table7") => figures::table7(
+            args.usize_or("ctx", 4096)?,
+            args.usize_or("d", 128)?,
+            args.usize_or("k", 8)?,
+            budget,
+        )
+        .print(),
+        Some("table8") => figures::table8(
+            &args.usize_list_or("ctxs", &[1024, 4096, 8192, 16384, 32768, 65536])?,
+            args.usize_or("d", 128)?,
+            args.usize_or("k", 16)?,
+            budget,
+        )
+        .print(),
+        Some("table9") | Some("fig4") => figures::table9(
+            &args.usize_list_or("ctxs", &[1024, 4096, 8192, 16384])?,
+            &args.usize_list_or("dims", &[64, 128, 256])?,
+            &args.usize_list_or("ks", &[2, 4, 8, 16, 32])?,
+            budget,
+        )
+        .print(),
+        Some("table10") => figures::table10_latency(
+            args.usize_or("ctx", 4096)?,
+            args.usize_or("d", 128)?,
+            args.usize_or("k", 8)?,
+            budget,
+        )
+        .print(),
+        other => bail!("unknown bench target {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    match args.command.get(1).map(|s| s.as_str()) {
+        Some("memory") => {
+            use sfa::sparse::memory::{memory_ratio, paper_ratio_approx, Widths};
+            let mut t = sfa::bench::Table::new(
+                "Appendix J — dense/CSR memory ratio (fp16/int8/int32 widths)",
+                &["d", "k", "exact ratio", "2d/(3k+4)"],
+            );
+            for &d in &[64usize, 128, 256, 1024] {
+                for &k in &[4usize, 8, 16, 32] {
+                    if k >= d {
+                        continue;
+                    }
+                    t.row(vec![
+                        d.to_string(),
+                        k.to_string(),
+                        format!("{:.2}", memory_ratio(65536, d, k, Widths::PAPER)),
+                        format!("{:.2}", paper_ratio_approx(d, k)),
+                    ]);
+                }
+            }
+            t.print();
+        }
+        Some(which @ ("entropy" | "svd")) => {
+            let rt = Runtime::new(artifacts_dir(args))?;
+            let variant = args.str_or("variant", "sfa_k8");
+            let steps = args.usize_or("steps", 50)?;
+            let k = args.usize_or("k", 8)?;
+            // Short training run so the activations are "trained", then
+            // pull per-layer Q/K via the qk_acts artifact.
+            let (trainer, _) = experiments::train_variant(
+                &rt, &variant, CorpusKind::Zipf, steps,
+                args.f64_or("lr", 1e-3)? as f32, 42, 0,
+            )?;
+            let acts = qk_acts(&rt, &trainer, &variant)?;
+            if which == "entropy" {
+                let mut t = sfa::bench::Table::new(
+                    &format!(
+                        "Fig 7 — top-{k} selection entropy per (layer, head), \
+                         {variant}, {steps} steps"
+                    ),
+                    &["layer", "tensor", "per-head entropy"],
+                );
+                for (layer, (qs, ks_)) in acts.iter().enumerate() {
+                    for (name, heads) in [("Q", qs), ("K", ks_)] {
+                        let es: Vec<String> = heads
+                            .iter()
+                            .map(|m| {
+                                format!(
+                                    "{:.3}",
+                                    sfa::analysis::entropy::selection_entropy(m, k)
+                                )
+                            })
+                            .collect();
+                        t.row(vec![layer.to_string(), name.into(), es.join(" ")]);
+                    }
+                }
+                t.print();
+            } else {
+                let tau = args.f64_or("tau", 0.9)? as f32;
+                let mut t = sfa::bench::Table::new(
+                    &format!("Fig 11 — effective rank (τ={tau}) per (layer, head), {variant}"),
+                    &["layer", "tensor", "d_head", "per-head effective rank"],
+                );
+                for (layer, (qs, ks_)) in acts.iter().enumerate() {
+                    for (name, heads) in [("Q", qs), ("K", ks_)] {
+                        let rs: Vec<String> = heads
+                            .iter()
+                            .map(|m| sfa::analysis::svd::effective_rank(m, tau).to_string())
+                            .collect();
+                        t.row(vec![
+                            layer.to_string(),
+                            name.into(),
+                            heads[0].cols.to_string(),
+                            rs.join(" "),
+                        ]);
+                    }
+                }
+                t.print();
+            }
+        }
+        other => bail!("unknown analysis {other:?}"),
+    }
+    Ok(())
+}
+
+/// Run the qk_acts artifact on a fresh corpus batch and split the
+/// outputs into per-layer, per-head matrices of shape (B·S, dq).
+fn qk_acts(
+    rt: &Runtime,
+    trainer: &Trainer,
+    variant: &str,
+) -> Result<Vec<(Vec<sfa::util::matrix::Matrix>, Vec<sfa::util::matrix::Matrix>)>> {
+    use sfa::util::matrix::Matrix;
+    let v = rt.manifest.variant(variant)?;
+    let e = v.entry("qk_acts")?;
+    let vocab = v.cfg_usize("vocab")?;
+    let (b, s) = (e.batch, e.seq);
+    let mut corpus = sfa::train::ZipfCorpus::new(vocab, 123);
+    let tokens = corpus.batch(b, s);
+    let mut args_: Vec<xla::Literal> = Vec::new();
+    for p in trainer.params() {
+        args_.push(sfa::train::trainer::clone_literal(p)?);
+    }
+    args_.push(HostTensor::I32(tokens, vec![b, s]).to_literal()?);
+    let outs = rt.run(variant, "qk_acts", &args_)?;
+    // Outputs alternate q, k per layer; each is (B, H, S, dq).
+    let mut layers = Vec::new();
+    let mut it = outs.iter();
+    while let (Some(q), Some(k)) = (it.next(), it.next()) {
+        let mut pair = (Vec::new(), Vec::new());
+        for (lit, dst) in [(q, &mut pair.0), (k, &mut pair.1)] {
+            let t = HostTensor::from_literal(lit)?;
+            let shape = t.shape().to_vec();
+            let (bb, h, ss, dq) = (shape[0], shape[1], shape[2], shape[3]);
+            let data = t.as_f32()?;
+            for head in 0..h {
+                let mut m = Matrix::zeros(bb * ss, dq);
+                for batch in 0..bb {
+                    for pos in 0..ss {
+                        let src = ((batch * h + head) * ss + pos) * dq;
+                        let dst_row = batch * ss + pos;
+                        m.row_mut(dst_row).copy_from_slice(&data[src..src + dq]);
+                    }
+                }
+                dst.push(m);
+            }
+        }
+        layers.push(pair);
+    }
+    Ok(layers)
+}

@@ -1,0 +1,257 @@
+//! PJRT client wrapper + executable cache + host-tensor interchange.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Compiled executables are cached per (variant, entry); the tuple
+//! output of every entry is decomposed back into per-tensor literals so
+//! step t's outputs can feed step t+1's inputs directly.
+//!
+//! A `Runtime` is deliberately single-threaded (!Send raw PJRT handles);
+//! the coordinator gives each engine worker its own `Runtime`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+use xla::FromRawBytes;
+
+use crate::runtime::manifest::{Dtype, Manifest, TensorSpec};
+
+/// Host-side tensor for data interchange with the artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len(),
+            HostTensor::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let (ty, dims, bytes): (xla::ElementType, &[usize], Vec<u8>) = match self {
+            HostTensor::F32(d, s) => (
+                xla::ElementType::F32,
+                s,
+                d.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+            HostTensor::I32(d, s) => (
+                xla::ElementType::S32,
+                s,
+                d.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(ty, dims, &bytes)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32(lit.to_vec::<f32>()?, dims)),
+            xla::ElementType::S32 => Ok(HostTensor::I32(lit.to_vec::<i32>()?, dims)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Zero-initialized tensor matching a manifest spec (used for the
+    /// AdamW m/v state and fresh KV caches).
+    pub fn zeros(spec: &TensorSpec) -> HostTensor {
+        match spec.dtype {
+            Dtype::F32 => HostTensor::F32(vec![0.0; spec.numel()], spec.shape.clone()),
+            Dtype::I32 => HostTensor::I32(vec![0; spec.numel()], spec.shape.clone()),
+        }
+    }
+}
+
+/// PJRT runtime over one artifact directory.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: RefCell<HashMap<(String, String), Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { manifest, client, exes: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) an entry's executable.
+    pub fn executable(
+        &self,
+        variant: &str,
+        entry: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = (variant.to_string(), entry.to_string());
+        if let Some(exe) = self.exes.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let e = self.manifest.variant(variant)?.entry(entry)?;
+        let path = self.manifest.dir.join(&e.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let exe = self
+            .client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .with_context(|| format!("compiling {variant}/{entry}"))?;
+        eprintln!(
+            "[runtime] compiled {variant}/{entry} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry with literal inputs; returns per-output literals
+    /// (the single tuple output is decomposed).
+    pub fn run(
+        &self,
+        variant: &str,
+        entry: &str,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let e = self.manifest.variant(variant)?.entry(entry)?;
+        if args.len() != e.inputs.len() {
+            bail!(
+                "{variant}/{entry}: expected {} inputs, got {}",
+                e.inputs.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(variant, entry)?;
+        let result = exe.execute::<xla::Literal>(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != e.outputs.len() {
+            bail!(
+                "{variant}/{entry}: manifest promises {} outputs, executable returned {}",
+                e.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Load the seeded initial weights for a variant, in manifest
+    /// (sorted-name) order.
+    pub fn load_weights(&self, variant: &str) -> Result<Vec<xla::Literal>> {
+        let v = self.manifest.variant(variant)?;
+        let path = self.manifest.dir.join(&v.weights);
+        let mut named = xla::Literal::read_npz(
+            path.to_str().context("non-utf8 path")?,
+            &(),
+        )?;
+        // Keys are "NNNN|name": sort restores the flattening order.
+        named.sort_by(|a, b| a.0.cmp(&b.0));
+        if named.len() != v.params.len() {
+            bail!(
+                "{variant}: weights.npz has {} arrays, manifest lists {}",
+                named.len(),
+                v.params.len()
+            );
+        }
+        for ((key, lit), spec) in named.iter().zip(&v.params) {
+            let name = key.split_once('|').map(|x| x.1).unwrap_or(key);
+            if name != spec.name {
+                bail!("weights order mismatch: {name} vs {}", spec.name);
+            }
+            let dims: Vec<usize> = lit
+                .array_shape()?
+                .dims()
+                .iter()
+                .map(|&d| d as usize)
+                .collect();
+            if dims != spec.shape {
+                bail!("{variant}/{name}: npz shape {dims:?} != manifest {:?}", spec.shape);
+            }
+        }
+        Ok(named.into_iter().map(|(_, l)| l).collect())
+    }
+
+    /// Zero literals for a list of specs (opt-state / cache init).
+    pub fn zeros(&self, specs: &[TensorSpec]) -> Result<Vec<xla::Literal>> {
+        specs.iter().map(|s| HostTensor::zeros(s).to_literal()).collect()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip_f32() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn host_tensor_roundtrip_i32() {
+        let t = HostTensor::I32(vec![-1, 0, 7, 42], vec![4]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(3.5);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[3.5]);
+        assert!(back.shape().is_empty());
+    }
+
+    #[test]
+    fn zeros_match_spec() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![3, 4],
+            dtype: Dtype::I32,
+        };
+        let t = HostTensor::zeros(&spec);
+        assert_eq!(t.numel(), 12);
+        assert!(t.as_i32().unwrap().iter().all(|&x| x == 0));
+    }
+
+    // Integration tests against real artifacts live in rust/tests/.
+}

@@ -1,0 +1,248 @@
+//! Typed view of `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`). The manifest is the only metadata channel
+//! between build-time Python and the runtime: input/output order,
+//! shapes and dtypes of every compiled entry point, plus the parameter
+//! flattening order.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// Shape + dtype + logical name of one tensor at an entry boundary.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: Dtype::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One compiled entry point (train_step, prefill_b4, ...).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// One compiled attention variant (dense, sfa_k8, ...).
+#[derive(Debug, Clone)]
+pub struct VariantManifest {
+    pub name: String,
+    pub params: Vec<TensorSpec>,
+    pub weights: String,
+    pub entries: BTreeMap<String, Entry>,
+    /// Raw model-config JSON (vocab, d_model, sparsity, ...).
+    pub config: Json,
+}
+
+impl VariantManifest {
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("variant {} has no entry {name:?} (have: {:?})",
+                self.name, self.entries.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.config.get(key)?.as_usize()
+    }
+}
+
+/// The whole artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub seed: u64,
+    pub train_batch: usize,
+    pub serve_batches: Vec<usize>,
+    pub prefill_seq: usize,
+    pub max_seq: usize,
+    pub variants: BTreeMap<String, VariantManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut variants = BTreeMap::new();
+        for (name, vj) in j.get("variants")?.as_obj()? {
+            let mut entries = BTreeMap::new();
+            for (ename, ej) in vj.get("entries")?.as_obj()? {
+                entries.insert(
+                    ename.clone(),
+                    Entry {
+                        name: ename.clone(),
+                        file: ej.get("file")?.as_str()?.to_string(),
+                        inputs: ej
+                            .get("inputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(TensorSpec::from_json)
+                            .collect::<Result<_>>()?,
+                        outputs: ej
+                            .get("outputs")?
+                            .as_arr()?
+                            .iter()
+                            .map(TensorSpec::from_json)
+                            .collect::<Result<_>>()?,
+                        batch: ej.get("batch")?.as_usize()?,
+                        seq: ej.get("seq")?.as_usize()?,
+                    },
+                );
+            }
+            variants.insert(
+                name.clone(),
+                VariantManifest {
+                    name: name.clone(),
+                    params: vj
+                        .get("params")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    weights: vj.get("weights")?.as_str()?.to_string(),
+                    entries,
+                    config: vj.get("config")?.clone(),
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            preset: j.get("preset")?.as_str()?.to_string(),
+            seed: j.get("seed")?.as_f64()? as u64,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            serve_batches: j
+                .get("serve_batches")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            prefill_seq: j.opt("prefill_seq").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
+            max_seq: j.opt("max_seq").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantManifest> {
+        self.variants.get(name).with_context(|| {
+            format!(
+                "no variant {name:?} in {:?} (have: {:?})",
+                self.dir,
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "tiny", "seed": 42, "train_batch": 2,
+      "serve_batches": [1], "prefill_seq": 64, "max_seq": 128,
+      "variants": {
+        "sfa_k4": {
+          "config": {"vocab": 256, "d_model": 128, "sparsity": 4},
+          "params": [
+            {"name": "tok_emb", "shape": [256, 128], "dtype": "f32"}
+          ],
+          "weights": "sfa_k4/weights.npz",
+          "entries": {
+            "eval_step": {
+              "file": "sfa_k4/eval_step.hlo.txt", "batch": 2, "seq": 128,
+              "inputs": [
+                {"name": "param:tok_emb", "shape": [256, 128], "dtype": "f32"},
+                {"name": "tokens", "shape": [2, 128], "dtype": "i32"}
+              ],
+              "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+            }
+          }
+        }
+      }
+    }"#;
+
+    fn write_sample(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+    }
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join("sfa_manifest_test");
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.train_batch, 2);
+        let v = m.variant("sfa_k4").unwrap();
+        assert_eq!(v.cfg_usize("sparsity").unwrap(), 4);
+        let e = v.entry("eval_step").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[1].dtype, Dtype::I32);
+        assert_eq!(e.inputs[1].numel(), 256);
+        assert_eq!(e.outputs[0].shape.len(), 0);
+    }
+
+    #[test]
+    fn missing_variant_is_informative() {
+        let dir = std::env::temp_dir().join("sfa_manifest_test2");
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let err = format!("{:#}", m.variant("dense").unwrap_err());
+        assert!(err.contains("sfa_k4"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_is_informative() {
+        let err = format!(
+            "{:#}",
+            Manifest::load("/nonexistent/artifacts").unwrap_err()
+        );
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! and executes them on the request path. Python is never involved —
+//! the HLO text + weights.npz + manifest.json are the entire contract
+//! (DESIGN.md §Artifact & manifest contract).
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json`
+//! * [`client`] — PJRT client wrapper + lazy executable cache + typed
+//!   literal helpers
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{HostTensor, Runtime};
+pub use manifest::{Dtype, Entry, Manifest, TensorSpec, VariantManifest};

@@ -1,0 +1,220 @@
+//! Feature-wise CSC posting lists — the paper's CSC_feat(K) format
+//! (App. C.3): for every feature id f, the ascending list of key/token
+//! ids that activate f, with their values. The FlashSFA inner loop
+//! walks the query row's features and binary-searches each posting list
+//! down to the current key tile (App. C Algorithm 1, line 10).
+
+use crate::sparse::csr::TopkCodes;
+
+/// Posting lists over features: column = feature id, rows = token ids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscFeat {
+    /// Number of tokens (keys).
+    pub n_tokens: usize,
+    /// Dense feature dimension d.
+    pub dim: usize,
+    /// len dim+1; posting list for feature f is tokens[indptr[f]..indptr[f+1]].
+    pub indptr: Vec<u32>,
+    /// Token ids, ascending within each posting list.
+    pub token_ids: Vec<u32>,
+    /// Key values aligned with `token_ids`.
+    pub vals: Vec<f32>,
+}
+
+impl CscFeat {
+    /// Build from padded top-k key codes by counting sort over features.
+    /// O(n·k + d); token ids come out ascending per feature because we
+    /// scan tokens in order.
+    pub fn from_codes(codes: &TopkCodes) -> CscFeat {
+        let d = codes.dim;
+        let mut counts = vec![0u32; d + 1];
+        for t in 0..codes.rows {
+            for (&f, &v) in codes.row_idx(t).iter().zip(codes.row_vals(t)) {
+                if v != 0.0 {
+                    counts[f as usize + 1] += 1;
+                }
+            }
+        }
+        for f in 0..d {
+            counts[f + 1] += counts[f];
+        }
+        let indptr = counts.clone();
+        let nnz = indptr[d] as usize;
+        let mut token_ids = vec![0u32; nnz];
+        let mut vals = vec![0f32; nnz];
+        let mut cursor = indptr.clone();
+        for t in 0..codes.rows {
+            for (&f, &v) in codes.row_idx(t).iter().zip(codes.row_vals(t)) {
+                if v != 0.0 {
+                    let slot = cursor[f as usize] as usize;
+                    token_ids[slot] = t as u32;
+                    vals[slot] = v;
+                    cursor[f as usize] += 1;
+                }
+            }
+        }
+        CscFeat { n_tokens: codes.rows, dim: d, indptr, token_ids, vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.token_ids.len()
+    }
+
+    /// Posting list (token ids, values) for a feature.
+    pub fn posting(&self, f: usize) -> (&[u32], &[f32]) {
+        let r = self.indptr[f] as usize..self.indptr[f + 1] as usize;
+        (&self.token_ids[r.clone()], &self.vals[r])
+    }
+
+    /// BINARY_SEARCH_RANGE (App. C Algorithm 1, line 10): the sub-range
+    /// of feature f's posting list whose token ids fall in [lo, hi).
+    /// Returns absolute offsets into `token_ids` / `vals`.
+    pub fn posting_range(&self, f: usize, lo: u32, hi: u32) -> std::ops::Range<usize> {
+        let start = self.indptr[f] as usize;
+        let end = self.indptr[f + 1] as usize;
+        let list = &self.token_ids[start..end];
+        let a = list.partition_point(|&t| t < lo);
+        let b = list.partition_point(|&t| t < hi);
+        start + a..start + b
+    }
+
+    /// Per-feature degree histogram deg(u) (paper Eq. 7's load-balance
+    /// quantity; also feeds the Fig. 7 entropy analysis).
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.dim)
+            .map(|f| self.indptr[f + 1] - self.indptr[f])
+            .collect()
+    }
+
+    /// Predicted number of query-key overlap pairs Σ_u deg_q(u)·deg_k(u)
+    /// (paper Eq. 7 generalized to distinct Q/K supports).
+    pub fn predicted_overlaps(q_degrees: &[u32], k_degrees: &[u32]) -> u64 {
+        q_degrees
+            .iter()
+            .zip(k_degrees)
+            .map(|(&a, &b)| a as u64 * b as u64)
+            .sum()
+    }
+
+    /// Structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.dim + 1 {
+            return Err("indptr length".into());
+        }
+        if *self.indptr.last().unwrap() as usize != self.nnz() {
+            return Err("indptr end".into());
+        }
+        for f in 0..self.dim {
+            let (toks, _) = self.posting(f);
+            for w in toks.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("posting list {f} not strictly ascending"));
+                }
+            }
+            if let Some(&last) = toks.last() {
+                if last as usize >= self.n_tokens {
+                    return Err("token id out of range".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::topk::topk_codes;
+    use crate::util::matrix::Matrix;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn fixture(n: usize, d: usize, k: usize, seed: u64) -> (TopkCodes, CscFeat) {
+        let mut rng = Rng::new(seed);
+        let m = Matrix::randn(n, d, &mut rng, 1.0);
+        let codes = topk_codes(&m, k);
+        let feat = CscFeat::from_codes(&codes);
+        (codes, feat)
+    }
+
+    #[test]
+    fn nnz_conserved() {
+        let (codes, feat) = fixture(32, 64, 8, 0);
+        feat.validate().unwrap();
+        assert_eq!(feat.nnz(), codes.rows * codes.k); // gaussian: no zeros
+    }
+
+    #[test]
+    fn transpose_consistency() {
+        // Every (token, feature, value) triple in the codes appears in
+        // exactly the right posting list.
+        let (codes, feat) = fixture(16, 32, 4, 1);
+        for t in 0..codes.rows {
+            for (&f, &v) in codes.row_idx(t).iter().zip(codes.row_vals(t)) {
+                let (toks, vals) = feat.posting(f as usize);
+                let pos = toks.binary_search(&(t as u32)).expect("token in posting");
+                assert_eq!(vals[pos], v);
+            }
+        }
+    }
+
+    #[test]
+    fn posting_range_matches_linear_scan() {
+        check("binary search range", 48, |g| {
+            let n = g.usize_in(4..64);
+            let d = 32;
+            let k = g.usize_in(1..9);
+            let (_, feat) = fixture(n, d, k, g.seed);
+            let f = g.usize_in(0..d);
+            let lo = g.usize_in(0..n) as u32;
+            let hi = (lo + g.usize_in(0..n + 1) as u32).min(n as u32);
+            let r = feat.posting_range(f, lo, hi);
+            let (toks, _) = feat.posting(f);
+            let expected: Vec<u32> = toks.iter().copied().filter(|&t| t >= lo && t < hi).collect();
+            let got: Vec<u32> = feat.token_ids[r].to_vec();
+            assert_eq!(got, expected);
+        });
+    }
+
+    #[test]
+    fn degrees_sum_to_nnz() {
+        let (_, feat) = fixture(24, 48, 6, 2);
+        let sum: u32 = feat.degrees().iter().sum();
+        assert_eq!(sum as usize, feat.nnz());
+    }
+
+    #[test]
+    fn predicted_overlaps_eq7_balanced_approximation() {
+        // With Gaussian features the supports should be roughly balanced,
+        // so Σ deg² should be within ~2x of d·(nk/d)² (paper Eq. 7).
+        let n = 256;
+        let d = 64;
+        let k = 8;
+        let (_, feat) = fixture(n, d, k, 3);
+        let deg = feat.degrees();
+        let actual = CscFeat::predicted_overlaps(&deg, &deg) as f64;
+        let ideal = d as f64 * ((n * k) as f64 / d as f64).powi(2);
+        assert!(actual >= ideal, "Cauchy-Schwarz: balanced is the minimum");
+        assert!(actual < 2.0 * ideal, "supports badly imbalanced: {actual} vs {ideal}");
+    }
+
+    #[test]
+    fn empty_features_have_empty_postings() {
+        // Force all tokens onto feature 0..k by making those huge.
+        let mut m = Matrix::zeros(8, 16);
+        for i in 0..8 {
+            for j in 0..4 {
+                m.set(i, j, 100.0 + j as f32);
+            }
+            for j in 4..16 {
+                m.set(i, j, 0.001);
+            }
+        }
+        let codes = topk_codes(&m, 4);
+        let feat = CscFeat::from_codes(&codes);
+        for f in 4..16 {
+            assert_eq!(feat.posting(f).0.len(), 0);
+        }
+        assert_eq!(feat.posting(0).0.len(), 8);
+    }
+}

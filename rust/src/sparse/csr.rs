@@ -1,0 +1,251 @@
+//! CSR storage (paper §2 "Sparse formats for efficient storage") and the
+//! fixed-k padded code format produced by row-wise top-k.
+//!
+//! Index width follows the paper's choice (App. B/J): feature ids fit in
+//! u16 for any d ≤ 65,535 (u8 would cover the d ≤ 256 configs; we keep
+//! u16 for uniformity and count bytes for both in [`super::memory`]).
+
+use crate::util::matrix::Matrix;
+
+/// Padded top-k sparse codes: exactly `k` (value, feature) pairs per row,
+/// ordered by descending |value|. The natural output of row-wise top-k
+/// and the input format of the FlashSFA kernels (both Pallas and CPU).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopkCodes {
+    pub rows: usize,
+    /// Dense feature dimension d the codes were selected from.
+    pub dim: usize,
+    /// Nonzeros per row.
+    pub k: usize,
+    /// len rows*k, row-major.
+    pub vals: Vec<f32>,
+    /// len rows*k, feature ids.
+    pub idx: Vec<u16>,
+}
+
+impl TopkCodes {
+    pub fn row_vals(&self, i: usize) -> &[f32] {
+        &self.vals[i * self.k..(i + 1) * self.k]
+    }
+
+    pub fn row_idx(&self, i: usize) -> &[u16] {
+        &self.idx[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Scatter back to a dense matrix (inverse of top-k up to dropped
+    /// coordinates) — the oracle-side of kernel tests.
+    pub fn densify(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.dim);
+        for i in 0..self.rows {
+            let row = m.row_mut(i);
+            for (v, &f) in self.row_vals(i).iter().zip(self.row_idx(i)) {
+                row[f as usize] = *v;
+            }
+        }
+        m
+    }
+
+    /// Dot product of two code rows over their support intersection
+    /// (paper Eq. 5, unscaled). O(k²) pairwise compare — the scalar
+    /// reference for the engines' vectorized versions.
+    pub fn overlap_dot(&self, i: usize, other: &TopkCodes, j: usize) -> f32 {
+        let (av, ai) = (self.row_vals(i), self.row_idx(i));
+        let (bv, bi) = (other.row_vals(j), other.row_idx(j));
+        let mut acc = 0.0;
+        for (x, &fx) in av.iter().zip(ai) {
+            for (y, &fy) in bv.iter().zip(bi) {
+                if fx == fy {
+                    acc += x * y;
+                }
+            }
+        }
+        acc
+    }
+}
+
+/// General CSR sparse matrix (u32 indptr, u16 column indices, f32 data),
+/// matching the paper's storage layout (§2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u16>,
+    pub data: Vec<f32>,
+}
+
+impl CsrMatrix {
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.indptr[i] as usize..self.indptr[i + 1] as usize
+    }
+
+    /// Build from padded codes (drops explicit zeros, sorts each row's
+    /// indices ascending — canonical CSR ordering).
+    pub fn from_codes(codes: &TopkCodes) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(codes.rows + 1);
+        let mut indices = Vec::with_capacity(codes.rows * codes.k);
+        let mut data = Vec::with_capacity(codes.rows * codes.k);
+        indptr.push(0u32);
+        let mut row: Vec<(u16, f32)> = Vec::with_capacity(codes.k);
+        for i in 0..codes.rows {
+            row.clear();
+            for (v, &f) in codes.row_vals(i).iter().zip(codes.row_idx(i)) {
+                if *v != 0.0 {
+                    row.push((f, *v));
+                }
+            }
+            row.sort_unstable_by_key(|&(f, _)| f);
+            for &(f, v) in &row {
+                indices.push(f);
+                data.push(v);
+            }
+            indptr.push(indices.len() as u32);
+        }
+        CsrMatrix { rows: codes.rows, cols: codes.dim, indptr, indices, data }
+    }
+
+    /// Build from a dense matrix keeping all nonzeros.
+    pub fn from_dense(m: &Matrix) -> CsrMatrix {
+        assert!(m.cols <= u16::MAX as usize + 1);
+        let mut indptr = vec![0u32];
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for i in 0..m.rows {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u16);
+                    data.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        CsrMatrix { rows: m.rows, cols: m.cols, indptr, indices, data }
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let row = m.row_mut(i);
+            for t in self.row_range(i) {
+                row[self.indices[t] as usize] = self.data[t];
+            }
+        }
+        m
+    }
+
+    /// Structural invariants (used by property tests + debug assertions).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.rows + 1 {
+            return Err(format!("indptr len {} != rows+1 {}", self.indptr.len(), self.rows + 1));
+        }
+        if self.indptr[0] != 0 || *self.indptr.last().unwrap() as usize != self.nnz() {
+            return Err("indptr endpoints wrong".into());
+        }
+        for w in self.indptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("indptr not monotone".into());
+            }
+        }
+        for i in 0..self.rows {
+            let r = self.row_range(i);
+            for t in r.clone() {
+                if self.indices[t] as usize >= self.cols {
+                    return Err(format!("col {} out of bounds", self.indices[t]));
+                }
+            }
+            for t in r.start + 1..r.end {
+                if self.indices[t - 1] >= self.indices[t] {
+                    return Err(format!("row {i} indices not strictly ascending"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::topk::topk_codes;
+    use crate::util::matrix::assert_close;
+    use crate::util::rng::Rng;
+
+    fn codes_fixture(rows: usize, dim: usize, k: usize, seed: u64) -> (Matrix, TopkCodes) {
+        let mut rng = Rng::new(seed);
+        let m = Matrix::randn(rows, dim, &mut rng, 1.0);
+        let c = topk_codes(&m, k);
+        (m, c)
+    }
+
+    #[test]
+    fn densify_preserves_topk_entries() {
+        let (m, c) = codes_fixture(8, 32, 4, 0);
+        let d = c.densify();
+        // Each row of d has exactly k nonzeros, all matching m.
+        for i in 0..8 {
+            let nnz = d.row(i).iter().filter(|&&x| x != 0.0).count();
+            assert_eq!(nnz, 4);
+            for j in 0..32 {
+                if d.get(i, j) != 0.0 {
+                    assert_eq!(d.get(i, j), m.get(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let (_, c) = codes_fixture(16, 64, 8, 1);
+        let csr = CsrMatrix::from_codes(&c);
+        csr.validate().unwrap();
+        assert_close(&csr.to_dense(), &c.densify(), 1e-7, 0.0);
+    }
+
+    #[test]
+    fn csr_from_dense_roundtrip() {
+        let (m, _) = codes_fixture(8, 16, 4, 2);
+        let csr = CsrMatrix::from_dense(&m);
+        csr.validate().unwrap();
+        assert_close(&csr.to_dense(), &m, 0.0, 0.0);
+        assert_eq!(csr.nnz(), 8 * 16); // gaussian entries are all nonzero
+    }
+
+    #[test]
+    fn overlap_dot_matches_dense_dot() {
+        let (_, a) = codes_fixture(6, 32, 5, 3);
+        let (_, b) = codes_fixture(6, 32, 5, 4);
+        let da = a.densify();
+        let db = b.densify();
+        for i in 0..6 {
+            for j in 0..6 {
+                let dense: f32 = da.row(i).iter().zip(db.row(j)).map(|(x, y)| x * y).sum();
+                let sparse = a.overlap_dot(i, &b, j);
+                assert!((dense - sparse).abs() < 1e-5, "{dense} vs {sparse}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_drops_explicit_zeros() {
+        let codes = TopkCodes {
+            rows: 1, dim: 8, k: 3,
+            vals: vec![1.0, 0.0, -2.0],
+            idx: vec![3, 5, 7],
+        };
+        let csr = CsrMatrix::from_codes(&codes);
+        assert_eq!(csr.nnz(), 2);
+        csr.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let (_, c) = codes_fixture(4, 16, 2, 5);
+        let mut csr = CsrMatrix::from_codes(&c);
+        csr.indices[0] = 999; // out of bounds for cols=16
+        assert!(csr.validate().is_err());
+    }
+}

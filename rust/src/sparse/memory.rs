@@ -1,0 +1,144 @@
+//! Appendix-J memory accounting: CSR vs dense storage for Q/K features
+//! and the KV cache, with configurable element widths.
+//!
+//! Paper result: with fp16 values, int8 indices, int32 indptr the ratio
+//! dense/CSR ≈ 2d / (3k + 4), so memory is saved whenever k < ⅔·d.
+
+/// Element widths in bytes for the three CSR arrays (paper Eq. 10-12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Widths {
+    pub s_val: usize,
+    pub s_idx: usize,
+    pub s_ptr: usize,
+}
+
+impl Widths {
+    /// The paper's production setting (App. B/J): fp16 / int8 / int32.
+    pub const PAPER: Widths = Widths { s_val: 2, s_idx: 1, s_ptr: 4 };
+    /// This repo's artifact setting: f32 / u16 / u32.
+    pub const OURS: Widths = Widths { s_val: 4, s_idx: 2, s_ptr: 4 };
+}
+
+/// Bytes for an (n, d) dense matrix (paper Mem_dense).
+pub fn dense_bytes(n: usize, d: usize, w: Widths) -> usize {
+    n * d * w.s_val
+}
+
+/// Bytes for an (n, d) CSR matrix with exactly k nnz per row (Eq. 14).
+pub fn csr_bytes(n: usize, k: usize, w: Widths) -> usize {
+    n * k * (w.s_val + w.s_idx) + (n + 1) * w.s_ptr
+}
+
+/// Exact dense/CSR memory ratio (Eq. 15).
+pub fn memory_ratio(n: usize, d: usize, k: usize, w: Widths) -> f64 {
+    dense_bytes(n, d, w) as f64 / csr_bytes(n, k, w) as f64
+}
+
+/// The paper's closed-form approximation 2d/(3k+4) (Eq. 16; fp16/int8).
+pub fn paper_ratio_approx(d: usize, k: usize) -> f64 {
+    2.0 * d as f64 / (3.0 * k as f64 + 4.0)
+}
+
+/// Sparsity threshold below which CSR wins: k < (d·s_val − s_ptr/n̄) /
+/// (s_val + s_idx) ≈ ⅔·d for the paper widths.
+pub fn break_even_k(d: usize, w: Widths) -> f64 {
+    d as f64 * w.s_val as f64 / (w.s_val + w.s_idx) as f64
+}
+
+/// KV-cache bytes per layer-head at context length `seq`: sparse K
+/// (CSR) + dense V (paper keeps V dense).
+pub fn kv_cache_bytes_sfa(seq: usize, d_head: usize, k: usize, w: Widths) -> usize {
+    csr_bytes(seq, k, w) + dense_bytes(seq, d_head, w)
+}
+
+/// Dense KV-cache bytes per layer-head.
+pub fn kv_cache_bytes_dense(seq: usize, d_head: usize, w: Widths) -> usize {
+    2 * dense_bytes(seq, d_head, w)
+}
+
+/// Fractional KV-cache saving of SFA vs dense (paper Fig. 1b: ~41% at
+/// the default config; Fig. 5: ~40% at k=4, d=64).
+pub fn kv_saving_fraction(seq: usize, d_head: usize, k: usize, w: Widths) -> f64 {
+    1.0 - kv_cache_bytes_sfa(seq, d_head, k, w) as f64
+        / kv_cache_bytes_dense(seq, d_head, w) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn eq16_matches_exact_ratio_at_scale() {
+        // For large n the (n+1)/n indptr term vanishes; Eq. 16 says
+        // ratio ≈ 2d/(3k+4) with paper widths.
+        for (d, k) in [(64, 8), (128, 16), (256, 32), (128, 8)] {
+            let exact = memory_ratio(100_000, d, k, Widths::PAPER);
+            let approx = paper_ratio_approx(d, k);
+            assert!(
+                (exact - approx).abs() / approx < 0.01,
+                "d={d} k={k}: {exact} vs {approx}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_headline_numbers() {
+        // §3.1: d=128, k=16 → 64× arithmetic; memory ratio 2·128/52 ≈ 4.9×.
+        assert!((paper_ratio_approx(128, 16) - 4.923).abs() < 0.01);
+        // Break-even ≈ ⅔·d for fp16/int8.
+        assert!((break_even_k(128, Widths::PAPER) - 85.33).abs() < 0.1);
+    }
+
+    #[test]
+    fn memory_gain_iff_k_below_two_thirds_d() {
+        check("break-even", 64, |g| {
+            let d = *g.choose(&[32usize, 64, 128, 256]);
+            let k = g.usize_in(1..d + 1);
+            let n = 4096;
+            let w = Widths::PAPER;
+            let saves = csr_bytes(n, k, w) < dense_bytes(n, d, w);
+            // Appendix J: "memory gain when k < 2/3 d" (up to the small
+            // indptr term).
+            let threshold = break_even_k(d, w) - (w.s_ptr as f64) / (w.s_val + w.s_idx) as f64;
+            if (k as f64) < threshold - 1.0 {
+                assert!(saves, "k={k} d={d} should save");
+            }
+            if (k as f64) > threshold + 1.0 {
+                assert!(!saves, "k={k} d={d} should not save");
+            }
+        });
+    }
+
+    #[test]
+    fn kv_saving_matches_paper_fig5() {
+        // Fig. 5 / §4.3: "~40% memory saving at k=4" (d_head=64, fp16).
+        let s = kv_saving_fraction(65536, 64, 4, Widths::PAPER);
+        assert!((0.38..0.50).contains(&s), "saving {s}");
+        // Fig. 1b: 41% KV reduction at the default d=128, k=16 setting
+        // (K-half shrinks 4.9×; with dense V the total drops ~40%).
+        let s = kv_saving_fraction(131072, 128, 16, Widths::PAPER);
+        assert!((0.35..0.45).contains(&s), "saving {s}");
+    }
+
+    #[test]
+    fn monotonicity() {
+        check("csr bytes monotone in k and n", 32, |g| {
+            let n = g.usize_in(1..10_000);
+            let k = g.usize_in(1..128);
+            let w = Widths::OURS;
+            assert!(csr_bytes(n, k, w) < csr_bytes(n + 1, k, w));
+            assert!(csr_bytes(n, k, w) < csr_bytes(n, k + 1, w));
+        });
+    }
+
+    #[test]
+    fn ratio_positive_and_finite() {
+        check("ratio sane", 32, |g| {
+            let d = g.usize_in(1..512);
+            let k = g.usize_in(1..d + 1);
+            let r = memory_ratio(1024, d, k, Widths::OURS);
+            assert!(r.is_finite() && r > 0.0);
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Sparse formats and kernels for feature-sparse attention (paper §2, §3.1).
+//!
+//! * [`topk`] — row-wise top-k selection (the RTopK analog, App. C.5)
+//! * [`csr`] — CSR matrices + the fixed-k padded code format
+//! * [`csc_feat`] — feature-wise CSC posting lists (App. C.3)
+//! * [`spgemm`] — Gustavson row-wise sparse score computation (Eq. 5)
+//! * [`memory`] — Appendix-J byte accounting for sparse vs dense storage
+
+pub mod csc_feat;
+pub mod csr;
+pub mod memory;
+pub mod spgemm;
+pub mod topk;
+
+pub use csc_feat::CscFeat;
+pub use csr::{CsrMatrix, TopkCodes};
+pub use topk::{topk_codes, topk_codes_full_sort, TopkAlgo};

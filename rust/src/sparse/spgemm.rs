@@ -1,0 +1,211 @@
+//! Gustavson row-wise SpGEMM for attention scores (paper §2, Eq. 5).
+//!
+//! Computes the sparse score matrix S = Q̃ K̃ᵀ / √d as CSR, walking each
+//! query row's features and accumulating the matching posting lists —
+//! the "structural intersections" the paper's cost model counts. This
+//! is the *materializing* SFA path (used by the naive engine and the
+//! FLOP-count validation); FlashSFA (attention::flash_sfa) fuses the
+//! same traversal with the online softmax so S never hits memory.
+
+use crate::sparse::csc_feat::CscFeat;
+use crate::sparse::csr::TopkCodes;
+
+/// Sparse score rows: for each query, the (key, score) pairs with
+/// non-empty support intersection, ascending by key id.
+#[derive(Debug, Clone)]
+pub struct SparseScores {
+    pub n_queries: usize,
+    pub n_keys: usize,
+    pub indptr: Vec<u32>,
+    pub key_ids: Vec<u32>,
+    pub scores: Vec<f32>,
+}
+
+/// Operation counters (paper Table 6: FLOPs vs INOPs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCounts {
+    /// Floating-point multiply-adds performed (2 FLOPs each).
+    pub fmas: u64,
+    /// Integer ops: posting-list index reads + accumulator bookkeeping.
+    pub inops: u64,
+}
+
+/// Gustavson row-wise accumulation: for query i and each active feature
+/// f with value qv, scores[j] += qv * K̃[j, f] for all j in posting(f).
+/// `causal` restricts to keys j ≤ i.
+pub fn spgemm_scores(
+    q: &TopkCodes,
+    kf: &CscFeat,
+    scale: f32,
+    causal: bool,
+) -> (SparseScores, OpCounts) {
+    assert_eq!(q.dim, kf.dim);
+    let n = q.rows;
+    let m = kf.n_tokens;
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut key_ids: Vec<u32> = Vec::new();
+    let mut scores: Vec<f32> = Vec::new();
+    indptr.push(0u32);
+
+    // Dense accumulator + visited list (classic Gustavson scratch).
+    let mut acc = vec![0f32; m];
+    let mut visited: Vec<u32> = Vec::with_capacity(m.min(1024));
+    let mut ops = OpCounts::default();
+
+    for i in 0..n {
+        visited.clear();
+        let hi = if causal { (i + 1) as u32 } else { m as u32 };
+        for (&f, &qv) in q.row_idx(i).iter().zip(q.row_vals(i)) {
+            if qv == 0.0 {
+                continue;
+            }
+            let r = kf.posting_range(f as usize, 0, hi);
+            ops.inops += 2 * (kf.posting(f as usize).0.len().max(1) as f64).log2().ceil() as u64; // binary search
+            for t in r {
+                let j = kf.token_ids[t] as usize;
+                ops.inops += 1; // index read
+                if acc[j] == 0.0 && !visited.contains(&(j as u32)) {
+                    visited.push(j as u32);
+                }
+                acc[j] += qv * kf.vals[t];
+                ops.fmas += 1;
+            }
+        }
+        visited.sort_unstable();
+        for &j in &visited {
+            key_ids.push(j);
+            scores.push(acc[j as usize] * scale);
+            acc[j as usize] = 0.0;
+        }
+        ops.fmas += visited.len() as u64; // the scale multiply
+        indptr.push(key_ids.len() as u32);
+    }
+    (
+        SparseScores { n_queries: n, n_keys: m, indptr, key_ids, scores },
+        ops,
+    )
+}
+
+impl SparseScores {
+    pub fn nnz(&self) -> usize {
+        self.key_ids.len()
+    }
+
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let r = self.indptr[i] as usize..self.indptr[i + 1] as usize;
+        (&self.key_ids[r.clone()], &self.scores[r])
+    }
+
+    /// Densify with a fill value for structurally-missing entries
+    /// (scores of empty intersections are 0 pre-softmax in the sparse
+    /// semantics, but tests compare against -inf-masked dense paths).
+    pub fn to_dense(&self, fill: f32) -> crate::util::matrix::Matrix {
+        let mut m = crate::util::matrix::Matrix::zeros(self.n_queries, self.n_keys);
+        m.data.fill(fill);
+        for i in 0..self.n_queries {
+            let (keys, vals) = self.row(i);
+            for (&j, &s) in keys.iter().zip(vals) {
+                m.set(i, j as usize, s);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::topk::topk_codes;
+    use crate::util::matrix::Matrix;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn scores_dense_reference(
+        q: &TopkCodes, k: &TopkCodes, scale: f32, causal: bool,
+    ) -> Matrix {
+        let dq = q.densify();
+        let dk = k.densify();
+        let mut s = dq.matmul(&dk.transpose());
+        for v in s.data.iter_mut() {
+            *v *= scale;
+        }
+        if causal {
+            for i in 0..s.rows {
+                for j in i + 1..s.cols {
+                    s.set(i, j, 0.0);
+                }
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn matches_dense_reference() {
+        check("spgemm == dense masked matmul", 32, |g| {
+            let n = g.usize_in(2..48);
+            let d = *g.choose(&[16usize, 32, 64]);
+            let k = g.usize_in(1..(d / 2).max(2));
+            let causal = g.bool();
+            let mut rng = Rng::new(g.seed ^ 1);
+            let qm = Matrix::randn(n, d, &mut rng, 1.0);
+            let km = Matrix::randn(n, d, &mut rng, 1.0);
+            let qc = topk_codes(&qm, k);
+            let kc = topk_codes(&km, k);
+            let kf = CscFeat::from_codes(&kc);
+            let scale = 1.0 / (d as f32).sqrt();
+            let (sp, _) = spgemm_scores(&qc, &kf, scale, causal);
+            let dense = scores_dense_reference(&qc, &kc, scale, causal);
+            let got = sp.to_dense(0.0);
+            crate::util::matrix::assert_close(&got, &dense, 1e-5, 1e-6);
+        });
+    }
+
+    #[test]
+    fn causal_never_emits_future_keys() {
+        let mut rng = Rng::new(7);
+        let qm = Matrix::randn(20, 32, &mut rng, 1.0);
+        let qc = topk_codes(&qm, 4);
+        let kf = CscFeat::from_codes(&qc);
+        let (sp, _) = spgemm_scores(&qc, &kf, 1.0, true);
+        for i in 0..20 {
+            let (keys, _) = sp.row(i);
+            assert!(keys.iter().all(|&j| j as usize <= i));
+        }
+    }
+
+    #[test]
+    fn nnz_bounded_by_eq7_style_bound() {
+        // nnz(S) <= min(n², Σ_u deg_q(u)·deg_k(u)) — each overlap pair
+        // contributes at most one structural nonzero.
+        let mut rng = Rng::new(8);
+        let qm = Matrix::randn(64, 64, &mut rng, 1.0);
+        let km = Matrix::randn(64, 64, &mut rng, 1.0);
+        let qc = topk_codes(&qm, 8);
+        let kc = topk_codes(&km, 8);
+        let qf = CscFeat::from_codes(&qc);
+        let kf = CscFeat::from_codes(&kc);
+        let bound = CscFeat::predicted_overlaps(&qf.degrees(), &kf.degrees());
+        let (sp, ops) = spgemm_scores(&qc, &kf, 1.0, false);
+        assert!(sp.nnz() as u64 <= bound);
+        assert_eq!(ops.fmas, bound + sp.nnz() as u64, "one fma per overlap + scale");
+    }
+
+    #[test]
+    fn disjoint_supports_give_empty_scores() {
+        // Queries activate features 0..4, keys activate 8..12.
+        let mut qm = Matrix::zeros(4, 16);
+        let mut km = Matrix::zeros(4, 16);
+        for i in 0..4 {
+            for j in 0..4 {
+                qm.set(i, j, 1.0 + j as f32);
+                km.set(i, j + 8, 1.0 + j as f32);
+            }
+        }
+        let qc = topk_codes(&qm, 4);
+        let kc = topk_codes(&km, 4);
+        let kf = CscFeat::from_codes(&kc);
+        let (sp, ops) = spgemm_scores(&qc, &kf, 1.0, false);
+        assert_eq!(sp.nnz(), 0);
+        assert_eq!(ops.fmas, 0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Row-wise top-k selection — the RTopK analog (paper App. C.5, Table 8).
+//!
+//! Two implementations with identical outputs:
+//!
+//! * [`topk_codes`] — partial selection via `select_nth_unstable`
+//!   (average O(d) per row, the fast path; the CPU counterpart of the
+//!   RTopK kernel's warp-parallel binary search).
+//! * [`topk_codes_full_sort`] — full row sort (O(d log d)), the
+//!   `torch.topk`-style baseline Table 8 compares against.
+//!
+//! Tie-breaking matches the Python side (`ref.topk_codes`): larger |x|
+//! first, ties toward the lower feature index. Output entries are
+//! ordered by descending |value|.
+
+use crate::sparse::csr::TopkCodes;
+use crate::util::matrix::Matrix;
+
+/// Which selection algorithm to use (bench harness sweeps both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopkAlgo {
+    PartialSelect,
+    FullSort,
+}
+
+#[inline]
+fn key(v: f32, j: usize) -> (f32, usize) {
+    // Order: |v| descending, then index ascending.
+    (v.abs(), j)
+}
+
+#[inline]
+fn better(a: (f32, usize), b: (f32, usize)) -> bool {
+    // true if a should come before b.
+    a.0 > b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+/// Partial-selection top-k (the default / fast path).
+pub fn topk_codes(x: &Matrix, k: usize) -> TopkCodes {
+    topk_with(x, k, TopkAlgo::PartialSelect)
+}
+
+/// Full-sort top-k (the torch.topk-analog baseline).
+pub fn topk_codes_full_sort(x: &Matrix, k: usize) -> TopkCodes {
+    topk_with(x, k, TopkAlgo::FullSort)
+}
+
+/// Top-k with an explicit algorithm choice.
+pub fn topk_with(x: &Matrix, k: usize, algo: TopkAlgo) -> TopkCodes {
+    assert!(k >= 1 && k <= x.cols, "k={} out of range for d={}", k, x.cols);
+    assert!(x.cols <= u16::MAX as usize + 1);
+    let mut vals = vec![0f32; x.rows * k];
+    let mut idx = vec![0u16; x.rows * k];
+    let mut scratch: Vec<usize> = Vec::with_capacity(x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        scratch.clear();
+        scratch.extend(0..x.cols);
+        match algo {
+            TopkAlgo::PartialSelect => {
+                if k < x.cols {
+                    scratch.select_nth_unstable_by(k - 1, |&a, &b| {
+                        if better(key(row[a], a), key(row[b], b)) {
+                            std::cmp::Ordering::Less
+                        } else {
+                            std::cmp::Ordering::Greater
+                        }
+                    });
+                }
+                scratch.truncate(k);
+                scratch.sort_unstable_by(|&a, &b| {
+                    if better(key(row[a], a), key(row[b], b)) {
+                        std::cmp::Ordering::Less
+                    } else {
+                        std::cmp::Ordering::Greater
+                    }
+                });
+            }
+            TopkAlgo::FullSort => {
+                scratch.sort_by(|&a, &b| {
+                    if better(key(row[a], a), key(row[b], b)) {
+                        std::cmp::Ordering::Less
+                    } else {
+                        std::cmp::Ordering::Greater
+                    }
+                });
+                scratch.truncate(k);
+            }
+        }
+        for (slot, &j) in scratch.iter().enumerate() {
+            vals[i * k + slot] = row[j];
+            idx[i * k + slot] = j as u16;
+        }
+    }
+    TopkCodes { rows: x.rows, dim: x.cols, k, vals, idx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn selects_largest_magnitudes() {
+        let m = Matrix::from_vec(1, 6, vec![0.5, -3.0, 1.0, 2.0, -0.1, 0.0]);
+        let c = topk_codes(&m, 3);
+        assert_eq!(c.row_idx(0), &[1, 3, 2]);
+        assert_eq!(c.row_vals(0), &[-3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn tie_breaks_toward_lower_index() {
+        let m = Matrix::from_vec(1, 4, vec![1.0, -1.0, 1.0, 1.0]);
+        let c = topk_codes(&m, 2);
+        assert_eq!(c.row_idx(0), &[0, 1]);
+        let c = topk_codes_full_sort(&m, 2);
+        assert_eq!(c.row_idx(0), &[0, 1]);
+    }
+
+    #[test]
+    fn k_equals_d_keeps_everything() {
+        let mut rng = Rng::new(0);
+        let m = Matrix::randn(4, 8, &mut rng, 1.0);
+        let c = topk_codes(&m, 8);
+        crate::util::matrix::assert_close(&c.densify(), &m, 0.0, 0.0);
+    }
+
+    #[test]
+    fn algorithms_agree() {
+        check("partial-select == full-sort", 64, |g| {
+            let rows = g.usize_in(1..8);
+            let d = *g.choose(&[4usize, 16, 64, 128]);
+            let k = g.usize_in(1..d + 1);
+            let data = g.vec_normal(rows * d, 1.0);
+            let m = Matrix::from_vec(rows, d, data);
+            let a = topk_with(&m, k, TopkAlgo::PartialSelect);
+            let b = topk_with(&m, k, TopkAlgo::FullSort);
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn output_sorted_by_magnitude_desc() {
+        check("magnitude ordering", 32, |g| {
+            let d = 32;
+            let m = Matrix::from_vec(2, d, g.vec_normal(2 * d, 2.0));
+            let c = topk_codes(&m, 8);
+            for i in 0..2 {
+                let v = c.row_vals(i);
+                for w in v.windows(2) {
+                    assert!(w[0].abs() >= w[1].abs());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn indices_unique_per_row() {
+        check("unique indices", 32, |g| {
+            let d = 64;
+            let m = Matrix::from_vec(3, d, g.vec_normal(3 * d, 1.0));
+            let c = topk_codes(&m, 16);
+            for i in 0..3 {
+                let mut seen = [false; 64];
+                for &f in c.row_idx(i) {
+                    assert!(!seen[f as usize], "duplicate feature {f}");
+                    seen[f as usize] = true;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dropped_entries_are_smaller() {
+        check("dropped <= kept", 32, |g| {
+            let d = 32;
+            let k = 8;
+            let m = Matrix::from_vec(1, d, g.vec_normal(d, 1.0));
+            let c = topk_codes(&m, k);
+            let kept: Vec<u16> = c.row_idx(0).to_vec();
+            let min_kept = c.row_vals(0).iter().map(|v| v.abs()).fold(f32::MAX, f32::min);
+            for j in 0..d {
+                if !kept.contains(&(j as u16)) {
+                    assert!(m.get(0, j).abs() <= min_kept + 1e-7);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,244 @@
+//! Synthetic workloads.
+//!
+//! **ZipfCorpus** — a Markov bigram process with Zipf-distributed
+//! transition targets: each token has a seeded preference list over
+//! successors, so an LM can reduce loss well below the unigram entropy
+//! but never to zero. This stands in for OpenWebText/Pile (DESIGN.md
+//! §Substitutions): what matters for Table 1 is the *ordering*
+//! Dense(full) ≥ SFA(k) > Short(d/2) on held-out PPL, which is
+//! architecture-level, not corpus-level.
+//!
+//! **NIAH** — paper §4.2 / RULER: the haystack is a repeated filler
+//! token; a needle `[KEY, value]` is inserted at a random depth; the
+//! sequence ends with `[QUERY, KEY]` and the model must emit `value`
+//! as the next token. Retrieval accuracy = argmax match at the answer
+//! position.
+
+use crate::util::rng::{zipf_cdf, Rng};
+
+/// Reserved token ids for the NIAH grammar.
+pub const TOK_FILLER: i32 = 0;
+pub const TOK_BOS: i32 = 1;
+pub const TOK_QUERY: i32 = 2;
+pub const TOK_KEY: i32 = 3;
+/// Values live in [TOK_VAL0, vocab).
+pub const TOK_VAL0: i32 = 4;
+
+/// Which pretraining workload to generate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorpusKind {
+    Zipf,
+    Niah,
+}
+
+impl CorpusKind {
+    pub fn parse(s: &str) -> Option<CorpusKind> {
+        match s {
+            "zipf" => Some(CorpusKind::Zipf),
+            "niah" => Some(CorpusKind::Niah),
+            _ => None,
+        }
+    }
+}
+
+/// Markov bigram corpus with Zipf transitions.
+pub struct ZipfCorpus {
+    vocab: usize,
+    /// successor preference table: succ[t] = ranked successor ids
+    succ: Vec<Vec<u32>>,
+    cdf: Vec<f64>,
+    rng: Rng,
+}
+
+impl ZipfCorpus {
+    /// Structure (the transition table = "the language") and sampling
+    /// stream both derived from `seed`.
+    pub fn new(vocab: usize, seed: u64) -> ZipfCorpus {
+        Self::with_stream(vocab, seed, seed ^ 0xC0_FF_EE)
+    }
+
+    /// Same language as `structure_seed`, independent sampling stream —
+    /// THE held-out eval construction: a model must be evaluated on
+    /// fresh samples of the process it was trained on, not on a
+    /// different process.
+    pub fn with_stream(vocab: usize, structure_seed: u64, stream: u64) -> ZipfCorpus {
+        assert!(vocab >= 8);
+        let mut master = Rng::new(structure_seed);
+        let branch = 32.min(vocab);
+        let succ = (0..vocab)
+            .map(|t| {
+                let mut r = master.fork(t as u64);
+                let mut ids: Vec<u32> = (0..vocab as u32).collect();
+                r.shuffle(&mut ids);
+                ids.truncate(branch);
+                ids
+            })
+            .collect();
+        ZipfCorpus {
+            vocab,
+            succ,
+            cdf: zipf_cdf(branch, 1.3),
+            rng: Rng::new(stream.wrapping_mul(0x9E3779B97F4A7C15) ^ structure_seed),
+        }
+    }
+
+    /// Sample a (batch, seq) token grid, flattened row-major.
+    pub fn batch(&mut self, batch: usize, seq: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let mut t = self.rng.range(0, self.vocab);
+            out.push(t as i32);
+            for _ in 1..seq {
+                let rank = self.rng.zipf(&self.cdf);
+                t = self.succ[t][rank] as usize;
+                out.push(t as i32);
+            }
+        }
+        out
+    }
+
+    /// Theoretical per-token entropy of the transition process (nats) —
+    /// the floor any model's PPL can approach.
+    pub fn transition_entropy(&self) -> f64 {
+        let mut prev = 0.0;
+        let mut h = 0.0;
+        for &c in &self.cdf {
+            let p = c - prev;
+            prev = c;
+            if p > 0.0 {
+                h -= p * p.ln();
+            }
+        }
+        h
+    }
+}
+
+/// One NIAH example with its ground truth.
+#[derive(Debug, Clone)]
+pub struct NiahSample {
+    pub tokens: Vec<i32>,
+    /// Position whose *prediction* must equal `value` (i.e. logits at
+    /// this index are scored against `value`).
+    pub answer_pos: usize,
+    pub value: i32,
+}
+
+/// Generate one NIAH sample of total length `seq` with the needle at a
+/// uniform random depth. Layout:
+/// `[BOS, #, #, ..., KEY, value, #, ..., QUERY, KEY, value]`
+pub fn niah_sample(vocab: usize, seq: usize, rng: &mut Rng) -> NiahSample {
+    assert!(seq >= 8, "sequence too short for the NIAH grammar");
+    assert!(vocab as i32 > TOK_VAL0 + 1);
+    let n_vals = vocab as i32 - TOK_VAL0;
+    let value = TOK_VAL0 + rng.below(n_vals as u64) as i32;
+    let mut tokens = vec![TOK_FILLER; seq];
+    tokens[0] = TOK_BOS;
+    // Needle position: anywhere that keeps [KEY, value] clear of the
+    // trailing [QUERY, KEY, value] suffix.
+    let needle = rng.range(1, seq - 4);
+    tokens[needle] = TOK_KEY;
+    tokens[needle + 1] = value;
+    tokens[seq - 3] = TOK_QUERY;
+    tokens[seq - 2] = TOK_KEY;
+    tokens[seq - 1] = value;
+    NiahSample { tokens, answer_pos: seq - 2, value }
+}
+
+/// Batch of NIAH samples flattened to (batch, seq) + metadata.
+pub fn niah_batch(
+    vocab: usize,
+    seq: usize,
+    batch: usize,
+    rng: &mut Rng,
+) -> (Vec<i32>, Vec<NiahSample>) {
+    let samples: Vec<NiahSample> = (0..batch).map(|_| niah_sample(vocab, seq, rng)).collect();
+    let mut flat = Vec::with_capacity(batch * seq);
+    for s in &samples {
+        flat.extend_from_slice(&s.tokens);
+    }
+    (flat, samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_corpus_tokens_in_range() {
+        let mut c = ZipfCorpus::new(64, 0);
+        let b = c.batch(4, 128);
+        assert_eq!(b.len(), 4 * 128);
+        assert!(b.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn zipf_corpus_is_learnable_not_trivial() {
+        // Bigram process: successor distribution entropy must be well
+        // below uniform entropy but above zero.
+        let c = ZipfCorpus::new(256, 1);
+        let h = c.transition_entropy();
+        assert!(h > 0.5 && h < (32f64).ln(), "h={h}");
+    }
+
+    #[test]
+    fn zipf_deterministic_per_seed() {
+        let mut a = ZipfCorpus::new(64, 7);
+        let mut b = ZipfCorpus::new(64, 7);
+        assert_eq!(a.batch(2, 64), b.batch(2, 64));
+    }
+
+
+    #[test]
+    fn with_stream_same_language_different_samples() {
+        let mut train = ZipfCorpus::with_stream(64, 42, 1);
+        let mut heldout = ZipfCorpus::with_stream(64, 42, 2);
+        assert_eq!(train.succ, heldout.succ, "same structure seed => same language");
+        assert_ne!(train.batch(1, 256), heldout.batch(1, 256), "streams differ");
+        let other = ZipfCorpus::with_stream(64, 43, 1);
+        assert_ne!(train.succ, other.succ, "different structure => different language");
+    }
+
+    #[test]
+    fn niah_sample_structure() {
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let s = niah_sample(64, 128, &mut rng);
+            assert_eq!(s.tokens.len(), 128);
+            assert_eq!(s.tokens[0], TOK_BOS);
+            assert_eq!(s.tokens[125], TOK_QUERY);
+            assert_eq!(s.tokens[126], TOK_KEY);
+            assert_eq!(s.tokens[127], s.value);
+            assert_eq!(s.answer_pos, 126);
+            assert!(s.value >= TOK_VAL0 && s.value < 64);
+            // Exactly two KEY tokens: needle + query restatement.
+            assert_eq!(s.tokens.iter().filter(|&&t| t == TOK_KEY).count(), 2);
+            // The needle's value follows the first KEY.
+            let needle = s.tokens.iter().position(|&t| t == TOK_KEY).unwrap();
+            assert_eq!(s.tokens[needle + 1], s.value);
+        }
+    }
+
+    #[test]
+    fn niah_needle_depth_varies() {
+        let mut rng = Rng::new(1);
+        let depths: Vec<usize> = (0..100)
+            .map(|_| {
+                let s = niah_sample(32, 64, &mut rng);
+                s.tokens.iter().position(|&t| t == TOK_KEY).unwrap()
+            })
+            .collect();
+        let min = *depths.iter().min().unwrap();
+        let max = *depths.iter().max().unwrap();
+        assert!(min < 10 && max > 50, "needle depths should span: {min}..{max}");
+    }
+
+    #[test]
+    fn niah_batch_flattening() {
+        let mut rng = Rng::new(2);
+        let (flat, samples) = niah_batch(32, 64, 4, &mut rng);
+        assert_eq!(flat.len(), 4 * 64);
+        for (i, s) in samples.iter().enumerate() {
+            assert_eq!(&flat[i * 64..(i + 1) * 64], s.tokens.as_slice());
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Training driver: workload generators + the loop that drives the
+//! AOT-compiled `train_step` / `eval_step` / `logits` artifacts.
+//!
+//! * [`corpus`] — synthetic pretraining corpus (Zipf-weighted Markov
+//!   bigram process; stands in for OpenWebText/Pile, DESIGN.md
+//!   §Substitutions) and the NIAH generator (paper §4.2: '#'-haystack
+//!   with an inserted key/value needle, RULER-style)
+//! * [`trainer`] — owns the parameter/optimizer literals and steps the
+//!   compiled train_step; evaluation (PPL, NIAH retrieval accuracy)
+
+pub mod corpus;
+pub mod experiments;
+pub mod trainer;
+
+pub use corpus::{CorpusKind, NiahSample, ZipfCorpus};
+pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,273 @@
+//! The L3 training loop: drives the AOT-compiled `train_step`
+//! (fwd + bwd + AdamW fused into one HLO executable) from Rust.
+//! Parameters and optimizer state live as PJRT literals and round-trip
+//! through each step's tuple output — Python never runs.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{HostTensor, Runtime};
+use crate::train::corpus::NiahSample;
+
+/// Per-run summary (recorded in EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub variant: String,
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub final_loss: f32,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+}
+
+impl TrainReport {
+    /// Validation perplexity from a mean-NLL loss (nats).
+    pub fn ppl(loss: f32) -> f32 {
+        loss.exp()
+    }
+}
+
+/// Owns the training state for one variant.
+pub struct Trainer<'rt> {
+    pub runtime: &'rt Runtime,
+    pub variant: String,
+    params: Vec<xla::Literal>,
+    adam_m: Vec<xla::Literal>,
+    adam_v: Vec<xla::Literal>,
+    step: xla::Literal,
+    pub steps_done: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialize from the seeded weights in the artifact directory.
+    pub fn new(runtime: &'rt Runtime, variant: &str) -> Result<Trainer<'rt>> {
+        let v = runtime.manifest.variant(variant)?;
+        let e = v.entry("train_step")?;
+        let params = runtime.load_weights(variant)?;
+        let n = v.params.len();
+        let adam_m = runtime.zeros(&v.params)?;
+        let adam_v = runtime.zeros(&v.params)?;
+        // Input layout: params, m, v, step, lr, tokens.
+        if e.inputs.len() != 3 * n + 3 {
+            bail!("unexpected train_step arity: {} vs 3*{n}+3", e.inputs.len());
+        }
+        Ok(Trainer {
+            runtime,
+            variant: variant.to_string(),
+            params,
+            adam_m,
+            adam_v,
+            step: HostTensor::scalar_f32(0.0).to_literal()?,
+            steps_done: 0,
+            batch: e.batch,
+            seq: e.seq,
+        })
+    }
+
+    fn tokens_literal(&self, tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+        if tokens.len() != batch * seq {
+            bail!("tokens len {} != {batch}x{seq}", tokens.len());
+        }
+        HostTensor::I32(tokens.to_vec(), vec![batch, seq]).to_literal()
+    }
+
+    /// One optimizer step; returns the LM loss (mean nats).
+    pub fn train_step(&mut self, tokens: &[i32], lr: f32) -> Result<f32> {
+        let n = self.params.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * n + 3);
+        args.extend(self.params.drain(..));
+        args.extend(self.adam_m.drain(..));
+        args.extend(self.adam_v.drain(..));
+        args.push(std::mem::replace(
+            &mut self.step,
+            HostTensor::scalar_f32(0.0).to_literal()?,
+        ));
+        args.push(HostTensor::scalar_f32(lr).to_literal()?);
+        args.push(self.tokens_literal(tokens, self.batch, self.seq)?);
+
+        let mut outs = self
+            .runtime
+            .run(&self.variant, "train_step", &args)
+            .context("train_step")?;
+        // Output layout: params, m, v, step, loss.
+        let loss = HostTensor::from_literal(&outs.pop().unwrap())?.as_f32()?[0];
+        self.step = outs.pop().unwrap();
+        self.adam_v = outs.split_off(2 * n);
+        self.adam_m = outs.split_off(n);
+        self.params = outs;
+        self.steps_done += 1;
+        if !loss.is_finite() {
+            bail!("loss diverged at step {}: {loss}", self.steps_done);
+        }
+        Ok(loss)
+    }
+
+    /// One Eq.-8 regularized adaptation step (requires the variant to
+    /// have been compiled with the `adapt` entry; SFA variants only).
+    pub fn adapt_step(&mut self, tokens: &[i32], lr: f32, lam: f32) -> Result<f32> {
+        let n = self.params.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * n + 4);
+        args.extend(self.params.drain(..));
+        args.extend(self.adam_m.drain(..));
+        args.extend(self.adam_v.drain(..));
+        args.push(std::mem::replace(
+            &mut self.step,
+            HostTensor::scalar_f32(0.0).to_literal()?,
+        ));
+        args.push(HostTensor::scalar_f32(lr).to_literal()?);
+        args.push(HostTensor::scalar_f32(lam).to_literal()?);
+        args.push(self.tokens_literal(tokens, self.batch, self.seq)?);
+        let mut outs = self
+            .runtime
+            .run(&self.variant, "adapt_step", &args)
+            .context("adapt_step")?;
+        let loss = HostTensor::from_literal(&outs.pop().unwrap())?.as_f32()?[0];
+        self.step = outs.pop().unwrap();
+        self.adam_v = outs.split_off(2 * n);
+        self.adam_m = outs.split_off(n);
+        self.params = outs;
+        self.steps_done += 1;
+        if !loss.is_finite() {
+            bail!("adapt loss diverged at step {}: {loss}", self.steps_done);
+        }
+        Ok(loss)
+    }
+
+    /// Replace the parameters (checkpoint transplant), resetting the
+    /// optimizer state and step counter.
+    pub fn set_params(&mut self, params: Vec<xla::Literal>) -> Result<()> {
+        if params.len() != self.params.len() {
+            bail!("param count mismatch");
+        }
+        let v = self.runtime.manifest.variant(&self.variant)?;
+        self.adam_m = self.runtime.zeros(&v.params)?;
+        self.adam_v = self.runtime.zeros(&v.params)?;
+        self.step = HostTensor::scalar_f32(0.0).to_literal()?;
+        self.params = params;
+        Ok(())
+    }
+
+    /// Mean eval loss on one (batch, seq) token grid.
+    pub fn eval_loss(&self, tokens: &[i32]) -> Result<f32> {
+        let e = self.runtime.manifest.variant(&self.variant)?.entry("eval_step")?;
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+        for p in &self.params {
+            args.push(clone_literal(p)?);
+        }
+        args.push(self.tokens_literal(tokens, e.batch, e.seq)?);
+        let outs = self.runtime.run(&self.variant, "eval_step", &args)?;
+        Ok(HostTensor::from_literal(&outs[0])?.as_f32()?[0])
+    }
+
+    /// Full logits grid (batch, seq, vocab) for retrieval scoring.
+    pub fn logits(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<usize>)> {
+        let e = self.runtime.manifest.variant(&self.variant)?.entry("logits")?;
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+        for p in &self.params {
+            args.push(clone_literal(p)?);
+        }
+        args.push(self.tokens_literal(tokens, e.batch, e.seq)?);
+        let outs = self.runtime.run(&self.variant, "logits", &args)?;
+        match HostTensor::from_literal(&outs[0])? {
+            HostTensor::F32(d, s) => Ok((d, s)),
+            _ => bail!("logits not f32"),
+        }
+    }
+
+    /// NIAH retrieval accuracy: fraction of samples whose argmax
+    /// prediction at `answer_pos - 1`'s next-token slot equals the
+    /// needle value. Samples are laid out one per batch row.
+    pub fn niah_accuracy(&self, batch_tokens: &[i32], samples: &[NiahSample]) -> Result<f64> {
+        let (logits, shape) = self.logits(batch_tokens)?;
+        let (b, s, v) = (shape[0], shape[1], shape[2]);
+        if samples.len() != b {
+            bail!("expected {b} samples, got {}", samples.len());
+        }
+        let mut correct = 0;
+        for (i, sample) in samples.iter().enumerate() {
+            // logits at position answer_pos predict token answer_pos+1;
+            // our NiahSample scores the prediction *of* token at
+            // answer_pos+1, i.e. logits index answer_pos.
+            let pos = sample.answer_pos;
+            assert!(pos + 1 < s);
+            let row = &logits[(i * s + pos) * v..(i * s + pos + 1) * v];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as i32;
+            if argmax == sample.value {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / b as f64)
+    }
+
+    /// Snapshot current parameters to an .npz (checkpointing).
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        let v = self.runtime.manifest.variant(&self.variant)?;
+        let named: Vec<(String, &xla::Literal)> = v
+            .params
+            .iter()
+            .zip(&self.params)
+            .enumerate()
+            .map(|(i, (spec, lit))| (format!("{i:04}|{}", spec.name), lit))
+            .collect();
+        // write_npz wants T: AsRef<Literal>, which the xla crate never
+        // implements for Literal itself — bridge with a ref newtype.
+        struct LitRef<'a>(&'a xla::Literal);
+        impl AsRef<xla::Literal> for LitRef<'_> {
+            fn as_ref(&self) -> &xla::Literal {
+                self.0
+            }
+        }
+        let pairs: Vec<(&str, LitRef)> =
+            named.iter().map(|(n, l)| (n.as_str(), LitRef(l))).collect();
+        xla::Literal::write_npz(&pairs, path)?;
+        Ok(())
+    }
+
+    /// Borrow the current parameter literals (read-only analysis paths).
+    pub fn params(&self) -> &[xla::Literal] {
+        &self.params
+    }
+
+    /// Current parameter tensor by manifest name (host copy).
+    pub fn param_by_name(&self, name: &str) -> Result<HostTensor> {
+        let v = self.runtime.manifest.variant(&self.variant)?;
+        for (spec, lit) in v.params.iter().zip(&self.params) {
+            if spec.name == name {
+                return HostTensor::from_literal(lit);
+            }
+        }
+        bail!("no parameter named {name:?}")
+    }
+}
+
+/// Literal cloning via host round-trip (the xla crate has no buffer
+/// clone; literals are host-side so this is a memcpy).
+pub fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let n_bytes = l.size_bytes();
+    let bytes: Vec<u8> = match shape.ty() {
+        xla::ElementType::F32 => {
+            let mut host = vec![0f32; l.element_count()];
+            l.copy_raw_to(&mut host)?;
+            unsafe { std::slice::from_raw_parts(host.as_ptr() as *const u8, n_bytes) }.to_vec()
+        }
+        xla::ElementType::S32 => {
+            let mut host = vec![0i32; l.element_count()];
+            l.copy_raw_to(&mut host)?;
+            unsafe { std::slice::from_raw_parts(host.as_ptr() as *const u8, n_bytes) }.to_vec()
+        }
+        other => bail!("clone_literal: unsupported {other:?}"),
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        shape.ty(),
+        &dims,
+        &bytes,
+    )?)
+}

@@ -1,0 +1,173 @@
+//! Tiny command-line parser (no `clap` offline).
+//!
+//! Supports `command subcommand --flag value --switch pos1 pos2` with
+//! typed accessors and a generated usage string. Each binary declares
+//! its options up front so `--help` stays truthful.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: subcommand path, `--key value` options, bare
+/// `--switch` flags, and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without program name). `n_commands` leading bare
+    /// words are treated as the (sub)command path.
+    pub fn parse(argv: &[String], n_commands: usize) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.command.len() < n_commands && out.positional.is_empty() {
+                out.command.push(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} expects an integer, got {v:?}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} expects a number, got {v:?}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} expects an integer, got {v:?}: {e}")),
+        }
+    }
+
+    /// Comma-separated list option: `--ks 2,4,8`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|e| anyhow!("--{key} element {s:?}: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().to_string())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_command_options_switches() {
+        let a = Args::parse(&argv("bench fig3 --ctx 16384 --verbose --ks 2,4,8 out.txt"), 2)
+            .unwrap();
+        assert_eq!(a.command, vec!["bench", "fig3"]);
+        assert_eq!(a.get("ctx"), Some("16384"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.usize_list_or("ks", &[]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.positional, vec!["out.txt"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&argv("run --k=8 --name=sfa"), 1).unwrap();
+        assert_eq!(a.usize_or("k", 0).unwrap(), 8);
+        assert_eq!(a.get("name"), Some("sfa"));
+    }
+
+    #[test]
+    fn defaults_and_type_errors() {
+        let a = Args::parse(&argv("x --k eight"), 1).unwrap();
+        assert!(a.usize_or("k", 1).is_err());
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!((a.f64_or("lr", 0.5).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(&argv("serve --quiet"), 1).unwrap();
+        assert!(a.has("quiet"));
+        assert!(!a.has("loud"));
+    }
+
+    #[test]
+    fn option_value_starting_with_dash_number() {
+        // Values beginning with "--" are treated as the next flag.
+        let a = Args::parse(&argv("x --a --b v"), 1).unwrap();
+        assert!(a.has("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn str_list_defaults() {
+        let a = Args::parse(&argv("x"), 1).unwrap();
+        assert_eq!(a.str_list_or("variants", &["dense", "sfa_k8"]),
+                   vec!["dense".to_string(), "sfa_k8".to_string()]);
+    }
+}

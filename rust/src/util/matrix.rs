@@ -1,0 +1,154 @@
+//! Dense row-major f32 matrices — the lingua franca of the attention
+//! engines and analysis modules. Deliberately minimal: this is a
+//! compute substrate, not a linear-algebra library.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    /// iid N(0, scale²) entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng, scale: f32) -> Self {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols, scale) }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Dense matmul (naive ikj loop order, auto-vectorizes on the j axis).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let o_row = out.row_mut(i);
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(kk);
+                for (j, &b) in b_row.iter().enumerate() {
+                    o_row[j] += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Max |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Take the first `n` rows as a view-copy.
+    pub fn head_rows(&self, n: usize) -> Matrix {
+        assert!(n <= self.rows);
+        Matrix::from_vec(n, self.cols, self.data[..n * self.cols].to_vec())
+    }
+}
+
+/// assert_allclose analog for tests: relative + absolute tolerance.
+pub fn assert_close(a: &Matrix, b: &Matrix, rtol: f32, atol: f32) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "shape mismatch");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "mismatch at flat index {i} (row {} col {}): {x} vs {y} (tol {tol})",
+            i / a.cols,
+            i % a.cols,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(4, 4, &mut rng, 1.0);
+        let mut eye = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            eye.set(i, i, 1.0);
+        }
+        assert_close(&a.matmul(&eye), &a, 1e-6, 1e-7);
+        assert_close(&eye.matmul(&a), &a, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(3, 5, &mut rng, 1.0);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn assert_close_catches_difference() {
+        let a = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Matrix::from_vec(1, 2, vec![1.0, 2.1]);
+        assert_close(&a, &b, 1e-6, 1e-6);
+    }
+}

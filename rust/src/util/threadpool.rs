@@ -1,0 +1,163 @@
+//! Scoped data parallelism (no `rayon` offline).
+//!
+//! [`parallel_for_chunks`] splits an index range into contiguous chunks
+//! and runs one OS thread per chunk via `std::thread::scope`. The
+//! attention engines use it for query-tile parallelism — the same
+//! decomposition the paper's CUDA kernel expresses with its grid.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (physical parallelism, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// Run `f(chunk_start, chunk_end)` over `[0, n)` split into `threads`
+/// contiguous chunks. `f` must be Sync; chunks are disjoint so callers
+/// can hand out `&mut` slices via raw splitting if needed.
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Dynamic work-stealing-lite: threads grab the next index atomically.
+/// Better than static chunks when per-item cost is skewed (e.g. causal
+/// attention rows near the end of the sequence cost more).
+pub fn parallel_for_dynamic<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let grain = grain.max(1);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + grain).min(n) {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map over `[0, n)` in parallel, collecting results in order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_dynamic(n, threads, 1, move |i| {
+        // SAFETY: each index is visited exactly once; writes are disjoint.
+        unsafe { *out_ptr.get().add(i) = f(i) };
+    });
+    out
+}
+
+/// Wrapper to move a raw pointer across the scoped-thread boundary.
+/// Safe because writes through it are index-disjoint (see callers).
+///
+/// NOTE: always access through [`SendPtr::get`] inside closures —
+/// edition-2021 disjoint capture would otherwise capture the raw
+/// pointer *field* (which is !Sync) rather than the wrapper.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    #[inline]
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let hits = AtomicU64::new(0);
+        let sum = AtomicU64::new(0);
+        parallel_for_chunks(1000, 8, |lo, hi| {
+            for i in lo..hi {
+                hits.fetch_add(1, Ordering::Relaxed);
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn dynamic_covers_range_exactly_once() {
+        let hits = AtomicU64::new(0);
+        parallel_for_dynamic(777, 8, 13, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 777);
+    }
+
+    #[test]
+    fn map_collects_in_order() {
+        let v = parallel_map(100, 4, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_degenerate_sizes() {
+        let hits = AtomicU64::new(0);
+        parallel_for_chunks(0, 8, |lo, hi| {
+            hits.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 0);
+        let v = parallel_map(1, 8, |i| i + 1);
+        assert_eq!(v, vec![1]);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let hits = AtomicU64::new(0);
+        parallel_for_dynamic(10, 1, 1, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+}
