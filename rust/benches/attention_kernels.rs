@@ -6,7 +6,12 @@
 //!   * Table 8 — top-k selection latency (partial-select RTopK analog
 //!     vs full-sort torch.topk analog) and its share of attention time;
 //!   * Table 10/11 latency block — token-sparse / low-rank / kernel /
-//!     quant baselines and their "+SFA" compositions.
+//!     quant baselines and their "+SFA" compositions (registry specs);
+//!   * Table 7 — effective bandwidth.
+//!
+//! Extras via env: SFA_BENCH_ENGINES="spec;spec;..." appends an
+//! arbitrary registry-spec grid. Every engine measurement is also
+//! written to BENCH_attention.json for cross-PR tracking.
 
 use sfa::bench::figures;
 
@@ -26,4 +31,17 @@ fn main() {
     figures::table8(&[1024, 4096, 8192], 128, 16, budget).print();
     figures::table10_latency(ctx, 128, 8, budget).print();
     figures::table7(ctx, 128, 8, budget).print();
+
+    if let Ok(engines) = std::env::var("SFA_BENCH_ENGINES") {
+        let specs = sfa::attention::registry::split_spec_list(&engines);
+        if !specs.is_empty() {
+            figures::engine_grid(&specs, &[ctx], 128, budget).print();
+        }
+    }
+
+    match sfa::bench::write_records("BENCH_attention.json") {
+        Ok(0) => {}
+        Ok(n) => eprintln!("[bench] wrote {n} engine records to BENCH_attention.json"),
+        Err(e) => eprintln!("[bench] failed to write BENCH_attention.json: {e}"),
+    }
 }

@@ -16,7 +16,7 @@ use sfa::sparse::memory::{memory_ratio, paper_ratio_approx, Widths};
 fn main() {
     figures::table6(&[8192, 16384, 32768, 65536]).print();
     figures::fig5(&[1024, 4096, 16384, 65536, 262144], 64, 4).print();
-    figures::fig1(131072).print();
+    figures::fig1(131072, 16).print();
 
     let mut t = Table::new(
         "Appendix J — dense/CSR memory ratio (fp16/int8/int32)",

@@ -36,38 +36,41 @@ fn main() {
     b.print();
 
     // 128k extrapolation from the measured sweep (Table 1/10 columns).
+    // Engines come from the registry so the pair is overridable:
+    // SFA_BENCH_EXTRAP_ENGINES="flash_dense;sfa:k=8" (';'-separated).
     println!("\n## Latency@128k extrapolation (power-law fit over measured ctxs)");
-    for (label, engine_k) in [("dense", None), ("sfa_k8", Some(8))] {
+    let extrap = std::env::var("SFA_BENCH_EXTRAP_ENGINES")
+        .unwrap_or_else(|_| "flash_dense;sfa:k=8".to_string());
+    for spec in sfa::attention::registry::split_spec_list(&extrap) {
+        use sfa::attention::registry::build_engine;
+        use sfa::attention::Engine;
+        use sfa::util::matrix::Matrix;
+        use sfa::util::rng::Rng;
+        let engine = build_engine(&spec).expect("extrapolation engine spec");
         let times: Vec<f64> = ctxs
             .iter()
             .map(|&n| {
-                use sfa::attention::Engine;
-                use sfa::util::matrix::Matrix;
-                use sfa::util::rng::Rng;
                 let mut rng = Rng::new(1);
                 let q = Matrix::randn(n, 128, &mut rng, 1.0);
                 let k = Matrix::randn(n, 128, &mut rng, 1.0);
                 let v = Matrix::randn(n, 128, &mut rng, 1.0);
                 let t0 = std::time::Instant::now();
-                match engine_k {
-                    None => {
-                        sfa::attention::flash_dense::FlashDense::default()
-                            .forward(&q, &k, &v, true);
-                    }
-                    Some(kk) => {
-                        sfa::attention::flash_sfa::FlashSfa::new(kk)
-                            .forward(&q, &k, &v, true);
-                    }
-                }
+                std::hint::black_box(engine.forward(&q, &k, &v, true));
                 t0.elapsed().as_secs_f64()
             })
             .collect();
         let pl = PowerLaw::fit(&ctxs, &times);
         println!(
-            "  {label}: alpha={:.2} R2={:.4} predicted t(131072)={:.1}s",
+            "  {spec}: alpha={:.2} R2={:.4} predicted t(131072)={:.1}s",
             pl.alpha,
             pl.r2(&ctxs, &times),
             pl.predict(131072)
         );
+    }
+
+    match sfa::bench::write_records("BENCH_attention.json") {
+        Ok(0) => {}
+        Ok(n) => eprintln!("[bench] wrote {n} engine records to BENCH_attention.json"),
+        Err(e) => eprintln!("[bench] failed to write BENCH_attention.json: {e}"),
     }
 }

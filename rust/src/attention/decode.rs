@@ -14,8 +14,9 @@ use crate::sparse::csr::TopkCodes;
 use crate::sparse::topk_codes;
 use crate::util::matrix::Matrix;
 
-/// Softmax + weighted V-sum over an explicit (key id, score) set.
-fn softmax_weighted_sum(
+/// Softmax + weighted V-sum over an explicit (key id, score) set
+/// (shared with the session decode path).
+pub(crate) fn softmax_weighted_sum(
     scores: &[(u32, f32)],
     v_row: impl Fn(usize) -> *const f32,
     d_v: usize,
@@ -42,7 +43,9 @@ fn softmax_weighted_sum(
     }
 }
 
-fn topk_row(q: &[f32], k: usize) -> (Vec<f32>, Vec<u16>) {
+/// Row-wise top-k of a single vector (shared with the session decode
+/// path; the padded (vals, idx) twin of [`topk_codes`]).
+pub(crate) fn topk_row(q: &[f32], k: usize) -> (Vec<f32>, Vec<u16>) {
     let m = Matrix::from_vec(1, q.len(), q.to_vec());
     let c = topk_codes(&m, k);
     (c.vals, c.idx)

@@ -57,6 +57,10 @@ impl Engine for DenseAttention {
         "dense".into()
     }
 
+    fn spec(&self) -> String {
+        "dense".into()
+    }
+
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
         let scale = 1.0 / (q.cols as f32).sqrt();
         let mut s = scores(q, k, scale, causal);
@@ -75,6 +79,10 @@ pub struct SfaReference {
 impl Engine for SfaReference {
     fn name(&self) -> String {
         format!("sfa_ref_k{}", self.k)
+    }
+
+    fn spec(&self) -> String {
+        format!("sfa_ref:k={}", self.k)
     }
 
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {

@@ -83,6 +83,10 @@ impl Engine for FlashDense {
         format!("flash_dense(bq={},bk={})", self.block_q, self.block_k)
     }
 
+    fn spec(&self) -> String {
+        format!("flash_dense:bq={},bk={}", self.block_q, self.block_k)
+    }
+
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
         assert_eq!(q.cols, k.cols);
         assert_eq!(k.rows, v.rows);

@@ -149,6 +149,10 @@ impl Engine for FlashSfa {
         format!("flash_sfa(k={})", self.k)
     }
 
+    fn spec(&self) -> String {
+        format!("sfa:k={},bq={},bk={}", self.k, self.block_q, self.block_k)
+    }
+
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
         assert_eq!(q.cols, k.cols);
         let q_codes = topk_codes(q, self.k);

@@ -85,6 +85,16 @@ impl Engine for LowRankAttention {
         format!("lowrank_r{}+{}", self.rank, self.scorer.label())
     }
 
+    fn spec(&self) -> String {
+        format!(
+            "lowrank:r={},iters={},seed={},scorer={}",
+            self.rank,
+            self.power_iters,
+            self.seed,
+            self.scorer.label()
+        )
+    }
+
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
         let basis = pca_basis(k, self.rank, self.power_iters, self.seed);
         let qp = q.matmul(&basis); // (n, r)

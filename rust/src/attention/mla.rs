@@ -28,6 +28,10 @@ impl Engine for MlaAttention {
         format!("mla_r{}+{}", self.latent, self.scorer.label())
     }
 
+    fn spec(&self) -> String {
+        format!("mla:r={},seed={},scorer={}", self.latent, self.seed, self.scorer.label())
+    }
+
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
         let d = q.cols;
         let r = self.latent;

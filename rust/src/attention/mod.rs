@@ -18,6 +18,9 @@
 //! * [`mla`] — multi-head latent attention (shared KV compression),
 //!   composable with SFA on the latent vector
 //! * [`quant`] — simulated int8 quantization of Q/K scoring (QAT row)
+//! * [`registry`] — spec strings (`"sfa:k=8,bq=64,bk=64"`) → engines
+//! * [`session`] — multi-head batched prefill + paged-cache decode
+//!   lifecycle over any engine
 
 pub mod decode;
 pub mod dense;
@@ -28,9 +31,13 @@ pub mod mla;
 pub mod online_softmax;
 pub mod performer;
 pub mod quant;
+pub mod registry;
+pub mod session;
 pub mod window;
 
 use crate::util::matrix::Matrix;
+use crate::util::rng::Rng;
+use crate::util::threadpool::{parallel_for_dynamic, SendPtr};
 
 /// How retained query-key pairs are scored (feature-level axis).
 /// Token-level methods (window, KV pruning) take a `Scorer` so the
@@ -52,12 +59,142 @@ impl Scorer {
     }
 }
 
-/// A forward (prefill-style) attention engine over one head.
+/// Batched multi-head activations with shape `[batch, heads, n, d]`,
+/// row-major — the tensor view the serving path hands the engines
+/// (one contiguous `(n, d)` block per `(batch, head)` pair).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeadTensor {
+    pub batch: usize,
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+    /// len `batch * heads * n * d`.
+    pub data: Vec<f32>,
+}
+
+impl HeadTensor {
+    pub fn zeros(batch: usize, heads: usize, n: usize, d: usize) -> HeadTensor {
+        HeadTensor { batch, heads, n, d, data: vec![0.0; batch * heads * n * d] }
+    }
+
+    /// iid N(0, scale²) entries.
+    pub fn randn(
+        batch: usize,
+        heads: usize,
+        n: usize,
+        d: usize,
+        rng: &mut Rng,
+        scale: f32,
+    ) -> HeadTensor {
+        HeadTensor { batch, heads, n, d, data: rng.normal_vec(batch * heads * n * d, scale) }
+    }
+
+    /// Total number of `(batch, head)` pairs.
+    pub fn head_count(&self) -> usize {
+        self.batch * self.heads
+    }
+
+    /// Floats per head block.
+    pub fn head_len(&self) -> usize {
+        self.n * self.d
+    }
+
+    #[inline]
+    fn head_offset(&self, b: usize, h: usize) -> usize {
+        debug_assert!(b < self.batch && h < self.heads);
+        (b * self.heads + h) * self.n * self.d
+    }
+
+    /// The `(n, d)` block of one head as a slice.
+    #[inline]
+    pub fn head_slice(&self, b: usize, h: usize) -> &[f32] {
+        let o = self.head_offset(b, h);
+        &self.data[o..o + self.n * self.d]
+    }
+
+    /// Copy one head out as a standalone matrix (the single-head
+    /// engines' native input format).
+    pub fn head(&self, b: usize, h: usize) -> Matrix {
+        Matrix::from_vec(self.n, self.d, self.head_slice(b, h).to_vec())
+    }
+
+    /// Row `t` of head `(b, h)`.
+    #[inline]
+    pub fn head_row(&self, b: usize, h: usize, t: usize) -> &[f32] {
+        debug_assert!(t < self.n);
+        let o = self.head_offset(b, h) + t * self.d;
+        &self.data[o..o + self.d]
+    }
+
+    #[inline]
+    pub fn head_row_mut(&mut self, b: usize, h: usize, t: usize) -> &mut [f32] {
+        debug_assert!(t < self.n);
+        let o = self.head_offset(b, h) + t * self.d;
+        &mut self.data[o..o + self.d]
+    }
+
+    /// Copy rows `[lo, hi)` of every head into a new tensor (prefill /
+    /// decode slicing along the sequence axis).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> HeadTensor {
+        assert!(lo <= hi && hi <= self.n, "row slice {lo}..{hi} out of 0..{}", self.n);
+        let mut out = HeadTensor::zeros(self.batch, self.heads, hi - lo, self.d);
+        for b in 0..self.batch {
+            for h in 0..self.heads {
+                for (dst, src) in (lo..hi).enumerate() {
+                    out.head_row_mut(b, h, dst).copy_from_slice(self.head_row(b, h, src));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A forward (prefill-style) attention engine.
+///
+/// Implementors provide the single-head [`Engine::forward`]; the
+/// multi-head batched [`Engine::forward_batched`] parallelizes over the
+/// `batch × heads` grid with each head's output written into its own
+/// disjoint slice of the output tensor.
 pub trait Engine: Sync {
     fn name(&self) -> String;
 
+    /// Canonical [`registry`] spec string that reconstructs this engine
+    /// (`registry::parse_spec(engine.spec())` round-trips).
+    fn spec(&self) -> String;
+
     /// q (n, d), k (n, d), v (n, d_v) -> (n, d_v).
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix;
+
+    /// Multi-head batched forward over `[batch, heads, n, d]` views.
+    /// Heads run under `parallel_for_dynamic`; per-head outputs land in
+    /// disjoint slices of the `[batch, heads, n, d_v]` output.
+    fn forward_batched(
+        &self,
+        q: &HeadTensor,
+        k: &HeadTensor,
+        v: &HeadTensor,
+        causal: bool,
+    ) -> HeadTensor {
+        assert_eq!((q.batch, q.heads), (k.batch, k.heads), "q/k head grid mismatch");
+        assert_eq!((q.batch, q.heads), (v.batch, v.heads), "q/v head grid mismatch");
+        assert_eq!(q.d, k.d, "q/k feature dim mismatch");
+        assert_eq!(k.n, v.n, "k/v length mismatch");
+        let bh = q.batch * q.heads;
+        let mut out = HeadTensor::zeros(q.batch, q.heads, q.n, v.d);
+        let hv = q.n * v.d;
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let threads = crate::util::threadpool::default_threads().min(bh.max(1));
+        parallel_for_dynamic(bh, threads, 1, move |i| {
+            let (b, h) = (i / q.heads, i % q.heads);
+            let o = self.forward(&q.head(b, h), &k.head(b, h), &v.head(b, h), causal);
+            debug_assert_eq!(o.data.len(), hv);
+            // SAFETY: each head owns a disjoint output range.
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(i * hv), hv) };
+            dst.copy_from_slice(&o.data);
+        });
+        out
+    }
 }
 
 pub(crate) const NEG_INF: f32 = -1.0e30;
@@ -65,7 +202,6 @@ pub(crate) const NEG_INF: f32 = -1.0e30;
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
-    use crate::util::rng::Rng;
 
     pub fn qkv(n: usize, d: usize, dv: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
         let mut rng = Rng::new(seed);
@@ -74,5 +210,42 @@ pub(crate) mod testutil {
             Matrix::randn(n, d, &mut rng, 1.0),
             Matrix::randn(n, dv, &mut rng, 1.0),
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_tensor_offsets_are_disjoint_and_ordered() {
+        let mut t = HeadTensor::zeros(2, 3, 4, 5);
+        for b in 0..2 {
+            for h in 0..3 {
+                for r in 0..4 {
+                    t.head_row_mut(b, h, r).fill((b * 100 + h * 10 + r) as f32);
+                }
+            }
+        }
+        assert_eq!(t.head_row(1, 2, 3)[0], 123.0);
+        assert_eq!(t.head(0, 1).get(2, 0), 12.0);
+        assert_eq!(t.head_slice(1, 0).len(), 20);
+        // Blocks are laid out [b, h, n, d]: head (0,1) starts at 20.
+        assert_eq!(t.data[20], 10.0);
+    }
+
+    #[test]
+    fn slice_rows_copies_the_requested_window() {
+        let mut rng = Rng::new(0);
+        let t = HeadTensor::randn(2, 2, 8, 3, &mut rng, 1.0);
+        let s = t.slice_rows(2, 5);
+        assert_eq!((s.n, s.d, s.batch, s.heads), (3, 3, 2, 2));
+        for b in 0..2 {
+            for h in 0..2 {
+                for r in 0..3 {
+                    assert_eq!(s.head_row(b, h, r), t.head_row(b, h, r + 2));
+                }
+            }
+        }
     }
 }

@@ -49,6 +49,10 @@ impl Engine for PerformerAttention {
         format!("performer_m{}", self.features)
     }
 
+    fn spec(&self) -> String {
+        format!("performer:m={},seed={}", self.features, self.seed)
+    }
+
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
         let d = q.cols;
         let mut rng = Rng::new(self.seed);

@@ -45,6 +45,10 @@ impl Engine for QuantAttention {
         format!("quant8+{}", self.scorer.label())
     }
 
+    fn spec(&self) -> String {
+        format!("quant:scorer={}", self.scorer.label())
+    }
+
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
         let fake = |m: &Matrix| {
             let (c, s) = quantize_rows(m);

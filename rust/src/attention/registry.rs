@@ -1,0 +1,425 @@
+//! Engine registry — construct any attention engine from a compact,
+//! human-typable spec string (the CLI `--engine` surface and the
+//! spec-driven bench grids).
+//!
+//! Grammar: `family[:key=value[,key=value]*]`, e.g.
+//!
+//! ```text
+//! dense
+//! flash_dense:bq=64,bk=64
+//! sfa:k=8,bq=64,bk=64            (alias: flash_sfa)
+//! sfa_ref:k=8
+//! window:w=256,scorer=sfa_k8
+//! lowrank:r=16,iters=6,seed=0,scorer=dense
+//! mla:r=16,seed=0,scorer=sfa_k4
+//! performer:m=128,seed=0
+//! quant:scorer=sfa_k8
+//! ```
+//!
+//! Omitted keys take the family defaults shown above. Every engine's
+//! [`Engine::spec`] returns its canonical spec string, and
+//! `parse_spec(engine.spec())` round-trips to the same configuration.
+//! Thread counts are deliberately *not* part of a spec — pin them with
+//! the `SFA_THREADS` env var (see [`crate::util::threadpool`]) so a
+//! spec means the same engine on every machine.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::attention::dense::{DenseAttention, SfaReference};
+use crate::attention::flash_dense::FlashDense;
+use crate::attention::flash_sfa::FlashSfa;
+use crate::attention::lowrank::LowRankAttention;
+use crate::attention::mla::MlaAttention;
+use crate::attention::performer::PerformerAttention;
+use crate::attention::quant::QuantAttention;
+use crate::attention::window::WindowAttention;
+use crate::attention::{Engine, Scorer};
+use crate::util::threadpool::default_threads;
+
+/// Every spec family the registry understands (alias `flash_sfa` maps
+/// onto `sfa`).
+pub const FAMILIES: &[&str] = &[
+    "dense",
+    "flash_dense",
+    "sfa",
+    "sfa_ref",
+    "window",
+    "lowrank",
+    "mla",
+    "performer",
+    "quant",
+];
+
+/// Spec parse/build error with a human-oriented message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecError(pub String);
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "engine spec error: {}", self.0)
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+fn err(msg: impl Into<String>) -> SpecError {
+    SpecError(msg.into())
+}
+
+/// Parsed, typed engine specification — one variant per engine family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineSpec {
+    Dense,
+    SfaRef { k: usize },
+    FlashDense { bq: usize, bk: usize },
+    FlashSfa { k: usize, bq: usize, bk: usize },
+    Window { w: usize, scorer: Scorer },
+    LowRank { r: usize, iters: usize, seed: u64, scorer: Scorer },
+    Mla { r: usize, seed: u64, scorer: Scorer },
+    Performer { m: usize, seed: u64 },
+    Quant { scorer: Scorer },
+}
+
+/// Key-value bag for one spec's parameters; every key must be consumed.
+struct Params<'a> {
+    family: &'a str,
+    map: BTreeMap<&'a str, &'a str>,
+}
+
+impl<'a> Params<'a> {
+    fn take_usize(&mut self, key: &str, default: usize) -> Result<usize, SpecError> {
+        match self.map.remove(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                err(format!(
+                    "{}: key {key:?} expects a non-negative integer, got {v:?}",
+                    self.family
+                ))
+            }),
+        }
+    }
+
+    fn take_u64(&mut self, key: &str, default: u64) -> Result<u64, SpecError> {
+        match self.map.remove(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                err(format!(
+                    "{}: key {key:?} expects a non-negative integer, got {v:?}",
+                    self.family
+                ))
+            }),
+        }
+    }
+
+    fn take_scorer(&mut self, key: &str) -> Result<Scorer, SpecError> {
+        match self.map.remove(key) {
+            None | Some("dense") => Ok(Scorer::Dense),
+            Some(v) => match v.strip_prefix("sfa_k").and_then(|s| s.parse::<usize>().ok()) {
+                Some(k) if k >= 1 => Ok(Scorer::Sfa { k }),
+                _ => Err(err(format!(
+                    "{}: scorer must be `dense` or `sfa_k<K>`, got {v:?}",
+                    self.family
+                ))),
+            },
+        }
+    }
+
+    fn finish(self) -> Result<(), SpecError> {
+        if let Some((k, _)) = self.map.into_iter().next() {
+            return Err(err(format!("{}: unknown key {k:?}", self.family)));
+        }
+        Ok(())
+    }
+}
+
+/// Parse a spec string into a typed [`EngineSpec`]. Bad specs return a
+/// descriptive error naming the family, key, or value at fault.
+pub fn parse_spec(spec: &str) -> Result<EngineSpec, SpecError> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Err(err("empty spec — expected `family[:key=value,...]`"));
+    }
+    let (family, rest) = match spec.split_once(':') {
+        Some((f, r)) => (f.trim(), Some(r)),
+        None => (spec, None),
+    };
+    let mut map: BTreeMap<&str, &str> = BTreeMap::new();
+    if let Some(rest) = rest {
+        for part in rest.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                err(format!("{family}: malformed parameter {part:?} (expected key=value)"))
+            })?;
+            if map.insert(k.trim(), v.trim()).is_some() {
+                return Err(err(format!("{family}: duplicate key {:?}", k.trim())));
+            }
+        }
+    }
+    let mut p = Params { family, map };
+    let parsed = match family {
+        "dense" => EngineSpec::Dense,
+        "sfa_ref" => EngineSpec::SfaRef { k: p.take_usize("k", 8)? },
+        "flash_dense" => EngineSpec::FlashDense {
+            bq: p.take_usize("bq", 64)?,
+            bk: p.take_usize("bk", 64)?,
+        },
+        "sfa" | "flash_sfa" => EngineSpec::FlashSfa {
+            k: p.take_usize("k", 8)?,
+            bq: p.take_usize("bq", 64)?,
+            bk: p.take_usize("bk", 64)?,
+        },
+        "window" => EngineSpec::Window {
+            w: p.take_usize("w", 256)?,
+            scorer: p.take_scorer("scorer")?,
+        },
+        "lowrank" => EngineSpec::LowRank {
+            r: p.take_usize("r", 16)?,
+            iters: p.take_usize("iters", 6)?,
+            seed: p.take_u64("seed", 0)?,
+            scorer: p.take_scorer("scorer")?,
+        },
+        "mla" => EngineSpec::Mla {
+            r: p.take_usize("r", 16)?,
+            seed: p.take_u64("seed", 0)?,
+            scorer: p.take_scorer("scorer")?,
+        },
+        "performer" => EngineSpec::Performer {
+            m: p.take_usize("m", 128)?,
+            seed: p.take_u64("seed", 0)?,
+        },
+        "quant" => EngineSpec::Quant { scorer: p.take_scorer("scorer")? },
+        other => {
+            return Err(err(format!(
+                "unknown engine family {other:?} — known families: {}",
+                FAMILIES.join(", ")
+            )))
+        }
+    };
+    p.finish()?;
+    parsed.validate()?;
+    Ok(parsed)
+}
+
+impl EngineSpec {
+    /// The registry family name this spec belongs to.
+    pub fn family(&self) -> &'static str {
+        match self {
+            EngineSpec::Dense => "dense",
+            EngineSpec::SfaRef { .. } => "sfa_ref",
+            EngineSpec::FlashDense { .. } => "flash_dense",
+            EngineSpec::FlashSfa { .. } => "sfa",
+            EngineSpec::Window { .. } => "window",
+            EngineSpec::LowRank { .. } => "lowrank",
+            EngineSpec::Mla { .. } => "mla",
+            EngineSpec::Performer { .. } => "performer",
+            EngineSpec::Quant { .. } => "quant",
+        }
+    }
+
+    fn validate(&self) -> Result<(), SpecError> {
+        let zero = match *self {
+            EngineSpec::Dense => false,
+            EngineSpec::SfaRef { k } => k == 0,
+            EngineSpec::FlashDense { bq, bk } => bq == 0 || bk == 0,
+            EngineSpec::FlashSfa { k, bq, bk } => k == 0 || bq == 0 || bk == 0,
+            EngineSpec::Window { w, .. } => w == 0,
+            EngineSpec::LowRank { r, iters, .. } => r == 0 || iters == 0,
+            EngineSpec::Mla { r, .. } => r == 0,
+            EngineSpec::Performer { m, .. } => m == 0,
+            EngineSpec::Quant { .. } => false,
+        };
+        if zero {
+            return Err(err(format!(
+                "{}: size parameters must be >= 1",
+                self.family()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Canonical spec string: `parse_spec(spec.canonical()) == spec`.
+    pub fn canonical(&self) -> String {
+        match *self {
+            EngineSpec::Dense => "dense".into(),
+            EngineSpec::SfaRef { k } => format!("sfa_ref:k={k}"),
+            EngineSpec::FlashDense { bq, bk } => format!("flash_dense:bq={bq},bk={bk}"),
+            EngineSpec::FlashSfa { k, bq, bk } => format!("sfa:k={k},bq={bq},bk={bk}"),
+            EngineSpec::Window { w, scorer } => {
+                format!("window:w={w},scorer={}", scorer.label())
+            }
+            EngineSpec::LowRank { r, iters, seed, scorer } => {
+                format!("lowrank:r={r},iters={iters},seed={seed},scorer={}", scorer.label())
+            }
+            EngineSpec::Mla { r, seed, scorer } => {
+                format!("mla:r={r},seed={seed},scorer={}", scorer.label())
+            }
+            EngineSpec::Performer { m, seed } => format!("performer:m={m},seed={seed}"),
+            EngineSpec::Quant { scorer } => format!("quant:scorer={}", scorer.label()),
+        }
+    }
+
+    /// The SFA feature-sparsity budget this spec implies, if any — it
+    /// drives the session cache layout and the bench JSON `k` column.
+    pub fn feature_k(&self) -> Option<usize> {
+        match *self {
+            EngineSpec::SfaRef { k } | EngineSpec::FlashSfa { k, .. } => Some(k),
+            EngineSpec::Window { scorer, .. }
+            | EngineSpec::LowRank { scorer, .. }
+            | EngineSpec::Mla { scorer, .. }
+            | EngineSpec::Quant { scorer } => match scorer {
+                Scorer::Sfa { k } => Some(k),
+                Scorer::Dense => None,
+            },
+            EngineSpec::Dense | EngineSpec::FlashDense { .. } | EngineSpec::Performer { .. } => {
+                None
+            }
+        }
+    }
+
+    /// Decode-side cache scorer for [`crate::attention::session`]:
+    /// feature-sparse families score the cache through top-k codes,
+    /// everything else through dense dot products.
+    pub fn cache_scorer(&self) -> Scorer {
+        match self.feature_k() {
+            Some(k) => Scorer::Sfa { k },
+            None => Scorer::Dense,
+        }
+    }
+
+    /// Construct the engine (thread counts come from
+    /// [`default_threads`], i.e. the `SFA_THREADS` override).
+    pub fn build(&self) -> Box<dyn Engine> {
+        let threads = default_threads();
+        match *self {
+            EngineSpec::Dense => Box::new(DenseAttention),
+            EngineSpec::SfaRef { k } => Box::new(SfaReference { k }),
+            EngineSpec::FlashDense { bq, bk } => {
+                Box::new(FlashDense { block_q: bq, block_k: bk, threads })
+            }
+            EngineSpec::FlashSfa { k, bq, bk } => {
+                Box::new(FlashSfa { k, block_q: bq, block_k: bk, threads })
+            }
+            EngineSpec::Window { w, scorer } => {
+                Box::new(WindowAttention { window: w, scorer, threads })
+            }
+            EngineSpec::LowRank { r, iters, seed, scorer } => {
+                Box::new(LowRankAttention { rank: r, power_iters: iters, seed, scorer })
+            }
+            EngineSpec::Mla { r, seed, scorer } => {
+                Box::new(MlaAttention { latent: r, seed, scorer })
+            }
+            EngineSpec::Performer { m, seed } => {
+                Box::new(PerformerAttention { features: m, seed })
+            }
+            EngineSpec::Quant { scorer } => Box::new(QuantAttention { scorer }),
+        }
+    }
+}
+
+/// Parse + build in one step.
+pub fn build_engine(spec: &str) -> Result<Box<dyn Engine>, SpecError> {
+    Ok(parse_spec(spec)?.build())
+}
+
+/// Split a `"spec;spec;..."` list (specs contain commas, so lists use
+/// `;` as the separator — the CLI `--engines` / env grammar).
+pub fn split_spec_list(s: &str) -> Vec<String> {
+    s.split(';').map(str::trim).filter(|x| !x.is_empty()).map(String::from).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::HeadTensor;
+    use crate::util::matrix::assert_close;
+    use crate::util::rng::Rng;
+
+    fn sample_specs() -> Vec<&'static str> {
+        vec![
+            "dense",
+            "sfa_ref:k=4",
+            "flash_dense:bq=32,bk=16",
+            "sfa:k=8,bq=32,bk=32",
+            "window:w=64,scorer=sfa_k4",
+            "lowrank:r=8,iters=4,seed=1,scorer=dense",
+            "mla:r=8,seed=2,scorer=sfa_k4",
+            "performer:m=64,seed=3",
+            "quant:scorer=sfa_k8",
+        ]
+    }
+
+    #[test]
+    fn all_nine_families_parse_and_roundtrip() {
+        let specs = sample_specs();
+        assert_eq!(specs.len(), FAMILIES.len());
+        for s in specs {
+            let spec = parse_spec(s).unwrap();
+            let canon = spec.canonical();
+            assert_eq!(parse_spec(&canon).unwrap(), spec, "canonical round-trip of {s}");
+            let engine = spec.build();
+            assert_eq!(parse_spec(&engine.spec()).unwrap(), spec, "engine.spec() of {s}");
+        }
+    }
+
+    #[test]
+    fn defaults_aliases_and_whitespace() {
+        assert_eq!(parse_spec("sfa").unwrap(), parse_spec("flash_sfa:k=8,bq=64,bk=64").unwrap());
+        assert_eq!(parse_spec(" window : w=128 ").unwrap(), parse_spec("window:w=128").unwrap());
+        assert_eq!(
+            parse_spec("window").unwrap(),
+            EngineSpec::Window { w: 256, scorer: Scorer::Dense }
+        );
+        assert_eq!(parse_spec("quant").unwrap(), EngineSpec::Quant { scorer: Scorer::Dense });
+    }
+
+    #[test]
+    fn bad_specs_are_descriptive() {
+        for (s, needle) in [
+            ("warp", "unknown engine family"),
+            ("sfa:k=zero", "non-negative integer"),
+            ("sfa:q=1", "unknown key"),
+            ("window:w=0", "must be >= 1"),
+            ("window:w", "key=value"),
+            ("quant:scorer=sfa8", "scorer"),
+            ("", "empty spec"),
+            ("sfa:k=2,k=3", "duplicate"),
+        ] {
+            let e = parse_spec(s).unwrap_err();
+            assert!(e.0.contains(needle), "{s:?} -> {e}");
+        }
+    }
+
+    #[test]
+    fn feature_k_and_cache_scorer() {
+        assert_eq!(parse_spec("sfa:k=4").unwrap().feature_k(), Some(4));
+        assert_eq!(parse_spec("window:scorer=sfa_k2").unwrap().feature_k(), Some(2));
+        assert_eq!(parse_spec("flash_dense").unwrap().feature_k(), None);
+        assert_eq!(parse_spec("dense").unwrap().cache_scorer(), Scorer::Dense);
+        assert_eq!(parse_spec("sfa_ref:k=3").unwrap().cache_scorer(), Scorer::Sfa { k: 3 });
+    }
+
+    #[test]
+    fn batched_forward_matches_per_head_loop_on_all_engines() {
+        for s in sample_specs() {
+            let engine = build_engine(s).unwrap();
+            let mut rng = Rng::new(9);
+            let (batch, heads, n, d) = (2, 2, 24, 16);
+            let q = HeadTensor::randn(batch, heads, n, d, &mut rng, 1.0);
+            let k = HeadTensor::randn(batch, heads, n, d, &mut rng, 1.0);
+            let v = HeadTensor::randn(batch, heads, n, d, &mut rng, 1.0);
+            let out = engine.forward_batched(&q, &k, &v, true);
+            assert_eq!((out.batch, out.heads, out.n, out.d), (batch, heads, n, d));
+            for b in 0..batch {
+                for h in 0..heads {
+                    let expect =
+                        engine.forward(&q.head(b, h), &k.head(b, h), &v.head(b, h), true);
+                    assert_close(&out.head(b, h), &expect, 0.0, 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,437 @@
+//! `AttentionSession` — the unified multi-head attention lifecycle the
+//! serving stack drives: **prefill** through any tiled [`Engine`]
+//! directly into a paged KV cache, then incremental **decode** steps
+//! scored from that cache with the engine family's matching scorer
+//! (dense dot products, or SFA top-k feature overlap — the same
+//! semantics as the [`crate::attention::decode`] caches).
+//!
+//! Lifecycle: spec string → [`registry`](crate::attention::registry) →
+//! [`AttentionSession::prefill`] (K/V appended token-by-token into a
+//! [`PagedKvCache`], one sequence per `(batch, head)` pair) →
+//! [`AttentionSession::decode_step`] (append the new token, score the
+//! 1-row query against the whole cached sequence). Prefill-then-decode
+//! through the paged cache is numerically equivalent to a one-shot
+//! causal prefill over the concatenated sequence — the session tests
+//! pin this for both the dense and the SFA cache layouts.
+//!
+//! Cache layout follows the engine family: feature-sparse specs store
+//! per-token top-k key codes (`SlotLayout::Sparse`, the paper's App-J
+//! memory shape), everything else stores dense keys
+//! (`SlotLayout::Dense`); values are dense in both.
+
+use crate::attention::decode::{softmax_weighted_sum, topk_row};
+use crate::attention::registry::{parse_spec, EngineSpec, SpecError};
+use crate::attention::{Engine, HeadTensor, Scorer};
+use crate::kv_cache::paged::{PageError, PagedKvCache, SeqId, SlotLayout};
+use crate::util::threadpool::{default_threads, parallel_for_dynamic, SendPtr};
+
+/// Pack two u16 feature ids into one f32 payload slot bit-for-bit.
+/// `SlotLayout::Sparse` budgets indices at two-per-float; the payload
+/// floats are only ever memcpy'd, never arithmetically touched, so any
+/// bit pattern (including NaN encodings) survives the round-trip.
+#[inline]
+fn pack_idx(a: u16, b: u16) -> f32 {
+    f32::from_bits(a as u32 | ((b as u32) << 16))
+}
+
+#[inline]
+fn unpack_idx(x: f32) -> (u16, u16) {
+    let bits = x.to_bits();
+    ((bits & 0xFFFF) as u16, (bits >> 16) as u16)
+}
+
+/// Session geometry + paged-cache sizing.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionConfig {
+    pub batch: usize,
+    pub heads: usize,
+    /// Q/K feature dim per head.
+    pub d: usize,
+    /// V dim per head.
+    pub d_v: usize,
+    /// Tokens per KV page.
+    pub page_size: usize,
+    /// Page budget across all `(batch, head)` sequences.
+    pub max_pages: usize,
+}
+
+impl SessionConfig {
+    pub fn new(batch: usize, heads: usize, d: usize, d_v: usize) -> SessionConfig {
+        SessionConfig { batch, heads, d, d_v, page_size: 16, max_pages: 1 << 20 }
+    }
+
+    pub fn with_paging(mut self, page_size: usize, max_pages: usize) -> SessionConfig {
+        self.page_size = page_size;
+        self.max_pages = max_pages;
+        self
+    }
+}
+
+/// One live multi-head attention session over a paged KV cache.
+pub struct AttentionSession {
+    cfg: SessionConfig,
+    spec: EngineSpec,
+    engine: Box<dyn Engine>,
+    scorer: Scorer,
+    cache: PagedKvCache,
+    /// One cache sequence per `(batch, head)` pair, `b * heads + h`.
+    seqs: Vec<SeqId>,
+    /// Tokens appended so far (uniform across the batch).
+    len: usize,
+}
+
+impl AttentionSession {
+    /// Build a session from a registry spec string.
+    pub fn from_spec(spec: &str, cfg: SessionConfig) -> Result<AttentionSession, SpecError> {
+        let parsed = parse_spec(spec)?;
+        if let Scorer::Sfa { k } = parsed.cache_scorer() {
+            if k > cfg.d {
+                return Err(SpecError(format!(
+                    "{}: feature budget k={k} exceeds head dim d={}",
+                    parsed.family(),
+                    cfg.d
+                )));
+            }
+        }
+        Ok(AttentionSession::new(parsed, cfg))
+    }
+
+    /// Panics if the spec's feature budget exceeds `cfg.d` (the
+    /// engines' top-k kernels reject k > d); [`Self::from_spec`]
+    /// surfaces the same condition as a [`SpecError`].
+    pub fn new(spec: EngineSpec, cfg: SessionConfig) -> AttentionSession {
+        let scorer = spec.cache_scorer();
+        if let Scorer::Sfa { k } = scorer {
+            assert!(
+                k <= cfg.d,
+                "engine feature budget k={k} exceeds head dim d={}",
+                cfg.d
+            );
+        }
+        let layout = match scorer {
+            Scorer::Dense => SlotLayout::Dense { d: cfg.d, d_v: cfg.d_v },
+            Scorer::Sfa { k } => SlotLayout::Sparse { k, d_v: cfg.d_v },
+        };
+        let mut cache = PagedKvCache::new(cfg.max_pages, cfg.page_size, layout);
+        let seqs: Vec<SeqId> = (0..cfg.batch * cfg.heads).map(|_| cache.create_seq()).collect();
+        AttentionSession { engine: spec.build(), cfg, spec, scorer, cache, seqs, len: 0 }
+    }
+
+    pub fn spec(&self) -> &EngineSpec {
+        &self.spec
+    }
+
+    pub fn engine_name(&self) -> String {
+        self.engine.name()
+    }
+
+    pub fn scorer(&self) -> Scorer {
+        self.scorer
+    }
+
+    /// Tokens cached per sequence so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.cache.pages_in_use()
+    }
+
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.bytes_in_use()
+    }
+
+    fn check_shapes(&self, q: &HeadTensor, k: &HeadTensor, v: &HeadTensor) {
+        assert_eq!((q.batch, q.heads), (self.cfg.batch, self.cfg.heads), "q head grid");
+        assert_eq!((k.batch, k.heads), (self.cfg.batch, self.cfg.heads), "k head grid");
+        assert_eq!((v.batch, v.heads), (self.cfg.batch, self.cfg.heads), "v head grid");
+        assert_eq!(q.d, self.cfg.d, "q feature dim");
+        assert_eq!(k.d, self.cfg.d, "k feature dim");
+        assert_eq!(v.d, self.cfg.d_v, "v feature dim");
+        assert_eq!(k.n, v.n, "k/v length");
+    }
+
+    /// Append one token's K/V payload for head-sequence `i`.
+    fn push_token(&mut self, i: usize, key: &[f32], val: &[f32]) -> Result<(), PageError> {
+        debug_assert_eq!(key.len(), self.cfg.d);
+        debug_assert_eq!(val.len(), self.cfg.d_v);
+        let payload = match self.cache.layout {
+            SlotLayout::Dense { .. } => {
+                let mut p = Vec::with_capacity(self.cfg.d + self.cfg.d_v);
+                p.extend_from_slice(key);
+                p.extend_from_slice(val);
+                p
+            }
+            SlotLayout::Sparse { k, .. } => {
+                let (vals, idx) = topk_row(key, k);
+                let mut p = Vec::with_capacity(k + k.div_ceil(2) + self.cfg.d_v);
+                p.extend_from_slice(&vals);
+                for pair in idx.chunks(2) {
+                    p.push(pack_idx(pair[0], if pair.len() > 1 { pair[1] } else { 0 }));
+                }
+                p.extend_from_slice(val);
+                p
+            }
+        };
+        self.cache.append(self.seqs[i], &payload)
+    }
+
+    /// Prefill `k.n` tokens: appends every K/V token into the paged
+    /// cache, then runs the engine's multi-head batched forward. Must
+    /// be the first call on a fresh session — the forward only attends
+    /// within this prefill, so a second prefill's outputs would
+    /// silently ignore the already-cached prefix.
+    pub fn prefill(
+        &mut self,
+        q: &HeadTensor,
+        k: &HeadTensor,
+        v: &HeadTensor,
+        causal: bool,
+    ) -> Result<HeadTensor, PageError> {
+        assert!(
+            self.is_empty(),
+            "prefill must be the first call on a fresh session \
+             (chunked prefill is not supported yet — use decode_step)"
+        );
+        self.check_shapes(q, k, v);
+        for i in 0..self.seqs.len() {
+            let (b, h) = (i / self.cfg.heads, i % self.cfg.heads);
+            for t in 0..k.n {
+                self.push_token(i, k.head_row(b, h, t), v.head_row(b, h, t))?;
+            }
+        }
+        self.len += k.n;
+        Ok(self.engine.forward_batched(q, k, v, causal))
+    }
+
+    /// One decode step: append the new token's K/V for every head, then
+    /// score each head's 1-row query against its full cached sequence
+    /// (the new token attends to everything up to and including
+    /// itself — the causal TTNT semantics).
+    pub fn decode_step(
+        &mut self,
+        q: &HeadTensor,
+        k: &HeadTensor,
+        v: &HeadTensor,
+    ) -> Result<HeadTensor, PageError> {
+        self.check_shapes(q, k, v);
+        assert_eq!(q.n, 1, "decode_step takes exactly one new token");
+        for i in 0..self.seqs.len() {
+            let (b, h) = (i / self.cfg.heads, i % self.cfg.heads);
+            self.push_token(i, k.head_row(b, h, 0), v.head_row(b, h, 0))?;
+        }
+        self.len += 1;
+
+        let mut out = HeadTensor::zeros(self.cfg.batch, self.cfg.heads, 1, self.cfg.d_v);
+        let hv = self.cfg.d_v;
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let this: &AttentionSession = self;
+        let bh = this.seqs.len();
+        let threads = default_threads().min(bh.max(1));
+        parallel_for_dynamic(bh, threads, 1, move |i| {
+            let (b, h) = (i / this.cfg.heads, i % this.cfg.heads);
+            // SAFETY: each head owns a disjoint output range.
+            let dst =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(i * hv), hv) };
+            this.decode_head(i, q.head_row(b, h, 0), dst);
+        });
+        Ok(out)
+    }
+
+    /// Score one head's query row against its cached sequence and write
+    /// the softmax-weighted V sum into `out`.
+    fn decode_head(&self, i: usize, q: &[f32], out: &mut [f32]) {
+        let d = self.cfg.d;
+        let d_v = self.cfg.d_v;
+        let scale = 1.0 / (d as f32).sqrt();
+        let slots = self.cache.token_slices(self.seqs[i]).expect("session sequence exists");
+        let mut scores: Vec<(u32, f32)> = Vec::with_capacity(slots.len());
+        match self.scorer {
+            Scorer::Dense => {
+                for (j, slot) in slots.iter().enumerate() {
+                    let mut acc = 0.0;
+                    for t in 0..d {
+                        acc += q[t] * slot[t];
+                    }
+                    scores.push((j as u32, acc * scale));
+                }
+                softmax_weighted_sum(&scores, |j| slots[j][d..].as_ptr(), d_v, out);
+            }
+            Scorer::Sfa { k } => {
+                let (qv, qi) = topk_row(q, k);
+                let v_off = k + k.div_ceil(2);
+                for (j, slot) in slots.iter().enumerate() {
+                    let mut acc = 0.0;
+                    for (&qval, &qf) in qv.iter().zip(&qi) {
+                        if qval == 0.0 {
+                            continue;
+                        }
+                        for (pos, &kval) in slot[..k].iter().enumerate() {
+                            if kval == 0.0 {
+                                continue;
+                            }
+                            let pair = unpack_idx(slot[k + pos / 2]);
+                            let kf = if pos % 2 == 0 { pair.0 } else { pair.1 };
+                            if kf == qf {
+                                acc += qval * kval;
+                            }
+                        }
+                    }
+                    scores.push((j as u32, acc * scale));
+                }
+                softmax_weighted_sum(&scores, |j| slots[j][v_off..].as_ptr(), d_v, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::registry::build_engine;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn full_qkv(
+        batch: usize,
+        heads: usize,
+        n: usize,
+        d: usize,
+        seed: u64,
+    ) -> (HeadTensor, HeadTensor, HeadTensor) {
+        let mut rng = Rng::new(seed);
+        (
+            HeadTensor::randn(batch, heads, n, d, &mut rng, 1.0),
+            HeadTensor::randn(batch, heads, n, d, &mut rng, 1.0),
+            HeadTensor::randn(batch, heads, n, d, &mut rng, 1.0),
+        )
+    }
+
+    /// Prefill `n0` tokens then decode `steps` more; every output row
+    /// must match the one-shot causal forward over all `n0 + steps`
+    /// tokens within `tol`.
+    fn assert_session_matches_one_shot(spec: &str, tol: f32) {
+        let (batch, heads, d) = (2, 2, 16);
+        let (n0, steps) = (12, 6);
+        let n = n0 + steps;
+        let (q, k, v) = full_qkv(batch, heads, n, d, 42);
+        let full = build_engine(spec).unwrap().forward_batched(&q, &k, &v, true);
+
+        let cfg = SessionConfig::new(batch, heads, d, d).with_paging(4, 4096);
+        let mut sess = AttentionSession::from_spec(spec, cfg).unwrap();
+        let pre = sess
+            .prefill(&q.slice_rows(0, n0), &k.slice_rows(0, n0), &v.slice_rows(0, n0), true)
+            .unwrap();
+        assert_eq!(sess.len(), n0);
+        for b in 0..batch {
+            for h in 0..heads {
+                for t in 0..n0 {
+                    for (a, e) in pre.head_row(b, h, t).iter().zip(full.head_row(b, h, t)) {
+                        assert!(
+                            (a - e).abs() < tol,
+                            "{spec}: prefill row {t} head ({b},{h}): {a} vs {e}"
+                        );
+                    }
+                }
+            }
+        }
+        for s in 0..steps {
+            let t = n0 + s;
+            let o = sess
+                .decode_step(
+                    &q.slice_rows(t, t + 1),
+                    &k.slice_rows(t, t + 1),
+                    &v.slice_rows(t, t + 1),
+                )
+                .unwrap();
+            for b in 0..batch {
+                for h in 0..heads {
+                    for (a, e) in o.head_row(b, h, 0).iter().zip(full.head_row(b, h, t)) {
+                        assert!(
+                            (a - e).abs() < tol,
+                            "{spec}: decode step {s} head ({b},{h}): {a} vs {e}"
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(sess.len(), n);
+    }
+
+    #[test]
+    fn session_equivalence_dense_layout_flash() {
+        assert_session_matches_one_shot("flash_dense:bq=8,bk=8", 3e-5);
+    }
+
+    #[test]
+    fn session_equivalence_dense_layout_naive() {
+        assert_session_matches_one_shot("dense", 3e-5);
+    }
+
+    #[test]
+    fn session_equivalence_sfa_layout_flash() {
+        assert_session_matches_one_shot("sfa:k=8,bq=8,bk=8", 3e-5);
+    }
+
+    #[test]
+    fn session_equivalence_sfa_layout_reference() {
+        assert_session_matches_one_shot("sfa_ref:k=4", 3e-5);
+    }
+
+    #[test]
+    fn sparse_layout_uses_fewer_cache_bytes() {
+        let (batch, heads, d, n) = (1, 2, 64, 40);
+        let (q, k, v) = full_qkv(batch, heads, n, d, 7);
+        let cfg = SessionConfig::new(batch, heads, d, d).with_paging(8, 4096);
+        let mut dense = AttentionSession::from_spec("flash_dense", cfg).unwrap();
+        let mut sparse = AttentionSession::from_spec("sfa:k=8", cfg).unwrap();
+        dense.prefill(&q, &k, &v, true).unwrap();
+        sparse.prefill(&q, &k, &v, true).unwrap();
+        assert!(sparse.cache_bytes() < dense.cache_bytes());
+        assert_eq!(dense.len(), n);
+        assert_eq!(sparse.len(), n);
+    }
+
+    #[test]
+    fn out_of_pages_surfaces_the_cache_error() {
+        let (batch, heads, d, n) = (1, 1, 8, 12);
+        let (q, k, v) = full_qkv(batch, heads, n, d, 3);
+        let cfg = SessionConfig::new(batch, heads, d, d).with_paging(2, 1);
+        let mut sess = AttentionSession::from_spec("dense", cfg).unwrap();
+        assert_eq!(sess.prefill(&q, &k, &v, true).unwrap_err(), PageError::OutOfPages);
+    }
+
+    #[test]
+    fn oversized_feature_budget_is_rejected() {
+        let cfg = SessionConfig::new(1, 1, 16, 16);
+        let e = AttentionSession::from_spec("sfa:k=128", cfg).unwrap_err();
+        assert!(e.0.contains("exceeds head dim"), "{e}");
+    }
+
+    #[test]
+    #[should_panic(expected = "prefill must be the first call")]
+    fn second_prefill_is_rejected() {
+        let (batch, heads, d, n) = (1, 1, 8, 4);
+        let (q, k, v) = full_qkv(batch, heads, n, d, 5);
+        let mut sess =
+            AttentionSession::from_spec("dense", SessionConfig::new(batch, heads, d, d)).unwrap();
+        sess.prefill(&q, &k, &v, true).unwrap();
+        let _ = sess.prefill(&q, &k, &v, true);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrips_any_index_pair() {
+        check("idx pair packing", 64, |g| {
+            let a = g.usize_in(0..65536) as u16;
+            let b = g.usize_in(0..65536) as u16;
+            assert_eq!(unpack_idx(pack_idx(a, b)), (a, b));
+        });
+        assert_eq!(unpack_idx(pack_idx(u16::MAX, u16::MAX)), (u16::MAX, u16::MAX));
+        assert_eq!(unpack_idx(pack_idx(0, 0)), (0, 0));
+    }
+}

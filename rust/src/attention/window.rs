@@ -76,6 +76,10 @@ impl Engine for WindowAttention {
         format!("longformer_w{}+{}", self.window, self.scorer.label())
     }
 
+    fn spec(&self) -> String {
+        format!("window:w={},scorer={}", self.window, self.scorer.label())
+    }
+
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
         assert!(causal, "window attention is defined causally here");
         assert_eq!(q.rows, k.rows);

@@ -5,6 +5,13 @@
 //! Absolute milliseconds are CPU-testbed numbers; the reproduction
 //! target is the *shape* — who wins, crossover points, scaling
 //! exponents (DESIGN.md §Substitutions).
+//!
+//! Engines are constructed through the
+//! [`registry`](crate::attention::registry) from spec strings, so every
+//! grid here is data, not a hand-built match arm, and any driver can be
+//! re-pointed at a different engine with `--engine`/`--engines`.
+//! Every spec measurement is also logged via [`crate::bench::record`]
+//! for the `BENCH_attention.json` satellite output.
 
 use crate::analysis::bandwidth::{
     dense_flash_bytes, effective_bandwidth, flash_sfa_bytes, measure_stream_bandwidth,
@@ -12,10 +19,8 @@ use crate::analysis::bandwidth::{
 use crate::analysis::costmodel::PowerLaw;
 use crate::analysis::flops::{dense_forward, sfa_forward, AttnShape};
 use crate::attention::decode::{DenseKvCache, SparseKvCache};
-use crate::attention::dense::DenseAttention;
-use crate::attention::flash_dense::FlashDense;
-use crate::attention::flash_sfa::FlashSfa;
-use crate::attention::Engine;
+use crate::attention::registry::{parse_spec, EngineSpec};
+use crate::attention::{Engine, Scorer};
 use crate::bench::harness::{bench, BenchResult};
 use crate::bench::table::{fmt_speedup, fmt_time, Table};
 use crate::sparse::memory::{kv_cache_bytes_dense, kv_cache_bytes_sfa, Widths};
@@ -32,11 +37,72 @@ fn qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
     )
 }
 
-fn run_forward(engine: &dyn Engine, n: usize, d: usize, budget_s: f64) -> BenchResult {
+/// Benchmark one registry spec's causal forward and log the result for
+/// `BENCH_attention.json`.
+fn run_forward_spec(spec: &str, n: usize, d: usize, budget_s: f64) -> BenchResult {
+    let parsed = parse_spec(spec).expect("engine spec");
+    let engine = parsed.build();
     let (q, k, v) = qkv(n, d, 42);
-    bench(&engine.name(), budget_s, || {
+    let r = bench(&engine.name(), budget_s, || {
         std::hint::black_box(engine.forward(&q, &k, &v, true));
-    })
+    });
+    crate::bench::record(&parsed.canonical(), n, d, parsed.feature_k().unwrap_or(0), &r);
+    r
+}
+
+/// Paper-taxonomy category of an engine family (Table 10/11 rows).
+fn spec_category(spec: &EngineSpec) -> &'static str {
+    match spec {
+        EngineSpec::Dense | EngineSpec::FlashDense { .. } => "dense",
+        EngineSpec::FlashSfa { .. } | EngineSpec::SfaRef { .. } => "feature",
+        EngineSpec::Window { scorer, .. } => match scorer {
+            Scorer::Dense => "token",
+            Scorer::Sfa { .. } => "token+SFA",
+        },
+        EngineSpec::LowRank { scorer, .. }
+        | EngineSpec::Mla { scorer, .. }
+        | EngineSpec::Quant { scorer } => match scorer {
+            Scorer::Dense => "feature",
+            Scorer::Sfa { .. } => "feature+SFA",
+        },
+        EngineSpec::Performer { .. } => "kernel",
+    }
+}
+
+/// Spec-driven engine latency grid: arbitrary registry specs × context
+/// lengths at one head dim (the CLI `bench engines` surface). The
+/// `flash_dense` baseline is always measured for the speedup column.
+pub fn engine_grid(specs: &[String], ctxs: &[usize], d: usize, budget_s: f64) -> Table {
+    let mut t = Table::new(
+        &format!("Engine grid — forward latency via registry specs (d={d})"),
+        &["engine spec", "ctx", "median", "p95", "speedup vs flash_dense"],
+    );
+    for &ctx in ctxs {
+        let dense = run_forward_spec("flash_dense", ctx, d, budget_s);
+        t.row(vec![
+            "flash_dense".into(),
+            ctx.to_string(),
+            fmt_time(dense.median_s),
+            fmt_time(dense.p95_s),
+            "1.00x".into(),
+        ]);
+        for spec in specs {
+            // Only the exact default baseline is deduplicated; other
+            // flash_dense block configs are benchmarked like any spec.
+            if parse_spec(spec).ok() == parse_spec("flash_dense").ok() {
+                continue;
+            }
+            let r = run_forward_spec(spec, ctx, d, budget_s);
+            t.row(vec![
+                spec.clone(),
+                ctx.to_string(),
+                fmt_time(r.median_s),
+                fmt_time(r.p95_s),
+                fmt_speedup(dense.median_s / r.median_s),
+            ]);
+        }
+    }
+    t
 }
 
 /// Fig. 3: latency vs sparsity at different modular levels (score-only,
@@ -67,10 +133,15 @@ pub fn fig3(ctx: usize, d: usize, ks: &[usize], budget_s: f64) -> Table {
         ]);
     }
     // Level 2: full attention (score+softmax+PV), flash engines.
-    let dense_full = run_forward(&FlashDense::default(), ctx, d, budget_s);
-    t.row(vec!["attention".into(), "dense(flash)".into(), fmt_time(dense_full.median_s), "1.00x".into()]);
+    let dense_full = run_forward_spec("flash_dense", ctx, d, budget_s);
+    t.row(vec![
+        "attention".into(),
+        "dense(flash)".into(),
+        fmt_time(dense_full.median_s),
+        "1.00x".into(),
+    ]);
     for &kk in ks {
-        let r = run_forward(&FlashSfa::new(kk), ctx, d, budget_s);
+        let r = run_forward_spec(&format!("sfa:k={kk}"), ctx, d, budget_s);
         t.row(vec![
             "attention".into(),
             format!("flash_sfa_k{kk}"),
@@ -80,7 +151,7 @@ pub fn fig3(ctx: usize, d: usize, ks: &[usize], budget_s: f64) -> Table {
     }
     // Level 3: naive materializing attention for reference ("module
     // levels compound": gains grow with more of the stack included).
-    let dense_naive = run_forward(&DenseAttention, ctx, d, budget_s);
+    let dense_naive = run_forward_spec("dense", ctx, d, budget_s);
     t.row(vec![
         "attention".into(),
         "dense(naive)".into(),
@@ -98,12 +169,7 @@ pub fn table9(ctxs: &[usize], dims: &[usize], ks: &[usize], budget_s: f64) -> Ta
     );
     for &d in dims {
         for &ctx in ctxs {
-            let dense = run_forward(
-                &FlashDense::default(),
-                ctx,
-                d,
-                budget_s,
-            );
+            let dense = run_forward_spec("flash_dense", ctx, d, budget_s);
             t.row(vec![
                 format!("Dense_{d}"),
                 ctx.to_string(),
@@ -114,7 +180,7 @@ pub fn table9(ctxs: &[usize], dims: &[usize], ks: &[usize], budget_s: f64) -> Ta
                 if kk >= d {
                     continue;
                 }
-                let r = run_forward(&FlashSfa::new(kk), ctx, d, budget_s);
+                let r = run_forward_spec(&format!("sfa:k={kk}"), ctx, d, budget_s);
                 t.row(vec![
                     format!("Sparse_{kk}/{d}"),
                     ctx.to_string(),
@@ -154,17 +220,30 @@ pub fn fig5(ctxs: &[usize], d: usize, k: usize) -> Table {
     t
 }
 
-/// Fig. 6: log-log TTFT & TTNT scaling + fitted exponents.
+/// Fig. 6: log-log TTFT & TTNT scaling + fitted exponents. The sparse
+/// side is any registry spec (default `sfa:k=<k>` from the CLI).
 pub fn fig6(ctxs: &[usize], d: usize, k: usize, budget_s: f64) -> (Table, Table) {
+    fig6_spec(ctxs, d, k, &format!("sfa:k={k}"), budget_s)
+}
+
+/// Fig. 6 with an explicit engine spec on the sparse side.
+pub fn fig6_spec(
+    ctxs: &[usize],
+    d: usize,
+    k: usize,
+    spec: &str,
+    budget_s: f64,
+) -> (Table, Table) {
+    let label = parse_spec(spec).map(|p| p.canonical()).unwrap_or_else(|_| spec.to_string());
     let mut prefill = Table::new(
-        &format!("Fig 6a — TTFT (prefill) scaling, d={d}"),
-        &["ctx", "dense", "sfa", "speedup"],
+        &format!("Fig 6a — TTFT (prefill) scaling, d={d}, engine={label}"),
+        &["ctx", "dense", "engine", "speedup"],
     );
     let mut dense_pts = Vec::new();
     let mut sfa_pts = Vec::new();
     for &ctx in ctxs {
-        let dense = run_forward(&FlashDense::default(), ctx, d, budget_s);
-        let sfa = run_forward(&FlashSfa::new(k), ctx, d, budget_s);
+        let dense = run_forward_spec("flash_dense", ctx, d, budget_s);
+        let sfa = run_forward_spec(spec, ctx, d, budget_s);
         dense_pts.push(dense.median_s);
         sfa_pts.push(sfa.median_s);
         prefill.row(vec![
@@ -255,8 +334,8 @@ pub fn table7(ctx: usize, d: usize, k: usize, budget_s: f64) -> Table {
     );
     let stream = measure_stream_bandwidth(64 << 20, 5);
     let w = Widths::OURS;
-    let dense = run_forward(&FlashDense::default(), ctx, d, budget_s);
-    let sfa = run_forward(&FlashSfa::new(k), ctx, d, budget_s);
+    let dense = run_forward_spec("flash_dense", ctx, d, budget_s);
+    let sfa = run_forward_spec(&format!("sfa:k={k}"), ctx, d, budget_s);
     let dense_bw = effective_bandwidth(dense_flash_bytes(ctx, d, d, 64, w), dense.median_s);
     let sfa_bw = effective_bandwidth(flash_sfa_bytes(ctx, d, d, k, 64, w), sfa.median_s);
     t.row(vec!["dense (full kernel)".into(), format!("{dense_bw:.2}")]);
@@ -282,7 +361,7 @@ pub fn table8(ctxs: &[usize], d: usize, k: usize, budget_s: f64) -> Table {
         let part = bench("partial", budget_s, || {
             std::hint::black_box(topk_with(&x, k, TopkAlgo::PartialSelect));
         });
-        let attn = run_forward(&FlashSfa::new(k), ctx, d, budget_s * 0.5);
+        let attn = run_forward_spec(&format!("sfa:k={k}"), ctx, d, budget_s * 0.5);
         t.row(vec![
             ctx.to_string(),
             fmt_time(full.median_s),
@@ -294,60 +373,72 @@ pub fn table8(ctxs: &[usize], d: usize, k: usize, budget_s: f64) -> Table {
     t
 }
 
-/// Table 10/11 latency block: token-sparse / feature-level baselines and
-/// their SFA compositions at one context length.
-pub fn table10_latency(ctx: usize, d: usize, k: usize, budget_s: f64) -> Table {
-    use crate::attention::lowrank::LowRankAttention;
-    use crate::attention::mla::MlaAttention;
-    use crate::attention::performer::PerformerAttention;
-    use crate::attention::quant::QuantAttention;
-    use crate::attention::window::WindowAttention;
-    use crate::attention::Scorer;
+/// The Table 10/11 default engine line-up at one (ctx, d, k) point —
+/// token-sparse / feature-level baselines and their SFA compositions,
+/// expressed as registry specs.
+pub fn table10_specs(ctx: usize, d: usize, k: usize) -> Vec<String> {
+    let w = ctx / 8;
+    let r = d / 4;
+    vec![
+        format!("sfa:k={k}"),
+        format!("window:w={w}"),
+        format!("window:w={w},scorer=sfa_k{k}"),
+        format!("lowrank:r={r}"),
+        format!("lowrank:r={r},scorer=sfa_k{k}"),
+        format!("mla:r={r}"),
+        format!("mla:r={r},scorer=sfa_k{k}"),
+        "quant".to_string(),
+        format!("quant:scorer=sfa_k{k}"),
+        format!("performer:m={}", 2 * d),
+    ]
+}
 
+/// Table 10/11 latency block over a spec grid (defaults from
+/// [`table10_specs`]; `--engines` re-points it).
+pub fn table10_latency(ctx: usize, d: usize, k: usize, budget_s: f64) -> Table {
+    table10_latency_specs(&table10_specs(ctx, d, k), ctx, d, budget_s)
+}
+
+pub fn table10_latency_specs(specs: &[String], ctx: usize, d: usize, budget_s: f64) -> Table {
     let mut t = Table::new(
-        &format!("Table 10/11 — forward latency of methods & SFA compositions (ctx={ctx}, d={d})"),
-        &["category", "variant", "median", "speedup vs dense"],
+        &format!(
+            "Table 10/11 — forward latency of methods & SFA compositions (ctx={ctx}, d={d})"
+        ),
+        &["category", "engine", "median", "speedup vs dense"],
     );
-    let dense = run_forward(&FlashDense::default(), ctx, d, budget_s);
-    let mut add = |cat: &str, engine: &dyn Engine| {
-        let r = run_forward(engine, ctx, d, budget_s);
+    let dense = run_forward_spec("flash_dense", ctx, d, budget_s);
+    t.row(vec![
+        "dense".into(),
+        "flash_dense".into(),
+        fmt_time(dense.median_s),
+        "1.00x".into(),
+    ]);
+    for spec in specs {
+        let parsed = parse_spec(spec).expect("table10 spec");
+        let r = run_forward_spec(spec, ctx, d, budget_s);
         t.row(vec![
-            cat.into(),
-            engine.name(),
+            spec_category(&parsed).into(),
+            parsed.canonical(),
             fmt_time(r.median_s),
             fmt_speedup(dense.median_s / r.median_s),
         ]);
-    };
-    add("dense", &FlashDense::default());
-    add("feature", &FlashSfa::new(k));
-    add("token", &WindowAttention::new(ctx / 8, Scorer::Dense));
-    add("token+SFA", &WindowAttention::new(ctx / 8, Scorer::Sfa { k }));
-    add("feature", &LowRankAttention::new(d / 4));
-    add("feature+SFA", &LowRankAttention {
-        rank: d / 4, power_iters: 6, seed: 0, scorer: Scorer::Sfa { k },
-    });
-    add("feature", &MlaAttention::new(d / 4));
-    add("feature+SFA", &MlaAttention {
-        latent: d / 4, seed: 0, scorer: Scorer::Sfa { k },
-    });
-    add("feature", &QuantAttention { scorer: Scorer::Dense });
-    add("feature+SFA", &QuantAttention { scorer: Scorer::Sfa { k } });
-    add("kernel", &PerformerAttention::new(2 * d));
+    }
     t
 }
 
-/// Fig 1b headline: FLOPs + KV reductions at the default config.
-pub fn fig1(ctx: usize) -> Table {
+/// Fig 1b headline: FLOPs + KV reductions at the default config
+/// (k comes from the CLI `--engine` spec's feature budget).
+pub fn fig1(ctx: usize, k: usize) -> Table {
     let mut t = Table::new(
-        "Fig 1b — headline efficiency (d=128, k=16, fp16/int8)",
+        &format!("Fig 1b — headline efficiency (d=128, k={k}, fp16/int8)"),
         &["metric", "dense", "sfa", "reduction"],
     );
     let shape = AttnShape::table6(ctx, 128);
     let df = dense_forward(shape).tflops();
-    let sf = sfa_forward(shape, 16, 64).tflops();
+    let sf = sfa_forward(shape, k, 64).tflops();
     let w = Widths::PAPER;
     let dkv = kv_cache_bytes_dense(ctx, 128, w) as f64 / 1e6;
-    let skv = kv_cache_bytes_sfa(ctx, 128, 16, w) as f64 / 1e6;
+    let skv = kv_cache_bytes_sfa(ctx, 128, k, w) as f64 / 1e6;
     t.row(vec![
         "attention TFLOPs".into(),
         format!("{df:.2}"),
@@ -392,7 +483,7 @@ mod tests {
 
     #[test]
     fn fig1_headline_near_paper_numbers() {
-        let t = fig1(131072);
+        let t = fig1(131072, 16);
         let r = t.render();
         // FLOPs reduction ≈ 49%, KV ≈ 41% (paper Fig. 1b).
         assert!(r.contains("%"), "{r}");
@@ -402,5 +493,27 @@ mod tests {
     fn small_latency_sweep_runs() {
         let t = table9(&[256], &[64], &[8], 0.02);
         assert!(t.rows.len() >= 2);
+    }
+
+    #[test]
+    fn engine_grid_runs_and_records() {
+        let t = engine_grid(&["sfa:k=4".to_string()], &[128], 32, 0.01);
+        assert_eq!(t.rows.len(), 2);
+        let recs = crate::bench::snapshot_records();
+        let hit = recs
+            .iter()
+            .find(|r| r.spec == "sfa:k=4,bq=64,bk=64" && r.n == 128 && r.d == 32)
+            .expect("engine grid logged its measurement");
+        assert_eq!(hit.k, 4);
+        assert!(hit.median_s > 0.0 && hit.p95_s >= hit.median_s);
+    }
+
+    #[test]
+    fn table10_specs_cover_compositions() {
+        let specs = table10_specs(4096, 128, 8);
+        assert!(specs.iter().any(|s| s.contains("scorer=sfa_k8")));
+        for s in &specs {
+            parse_spec(s).unwrap();
+        }
     }
 }

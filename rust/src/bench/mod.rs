@@ -4,10 +4,126 @@
 //! the **median** over N timed iterations. [`table`] renders the
 //! aligned text tables the `cargo bench` targets print — one per paper
 //! table/figure.
+//!
+//! Every spec-driven engine measurement also lands in a process-wide
+//! record log ([`record`] / [`drain_records`]); the CLI and bench
+//! binaries serialize it to `BENCH_attention.json` so the perf
+//! trajectory is machine-readable across PRs.
 
 pub mod figures;
 pub mod harness;
 pub mod table;
 
+use std::sync::Mutex;
+
 pub use harness::{bench, bench_n, BenchResult};
 pub use table::Table;
+
+/// One machine-readable benchmark record (a `BENCH_attention.json` row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Canonical engine registry spec.
+    pub spec: String,
+    /// Context length benchmarked.
+    pub n: usize,
+    /// Head dim.
+    pub d: usize,
+    /// SFA sparsity budget (0 when the engine has none).
+    pub k: usize,
+    pub median_s: f64,
+    pub p95_s: f64,
+}
+
+static RECORDS: Mutex<Vec<BenchRecord>> = Mutex::new(Vec::new());
+
+/// Append one engine measurement to the process-wide record log.
+pub fn record(spec: &str, n: usize, d: usize, k: usize, r: &BenchResult) {
+    RECORDS.lock().unwrap().push(BenchRecord {
+        spec: spec.to_string(),
+        n,
+        d,
+        k,
+        median_s: r.median_s,
+        p95_s: r.p95_s,
+    });
+}
+
+/// Copy the current record log without clearing it.
+pub fn snapshot_records() -> Vec<BenchRecord> {
+    RECORDS.lock().unwrap().clone()
+}
+
+/// Take (and clear) the record log — call once per bench invocation,
+/// right before serializing.
+pub fn drain_records() -> Vec<BenchRecord> {
+    std::mem::take(&mut *RECORDS.lock().unwrap())
+}
+
+/// Drain the record log and write it to `path` as the
+/// `BENCH_attention.json` document. Returns how many records were
+/// written; 0 means the log was empty and nothing was touched.
+pub fn write_records(path: &str) -> std::io::Result<usize> {
+    let records = drain_records();
+    if records.is_empty() {
+        return Ok(0);
+    }
+    std::fs::write(path, records_to_json(&records))?;
+    Ok(records.len())
+}
+
+/// Serialize records as the `BENCH_attention.json` document.
+pub fn records_to_json(records: &[BenchRecord]) -> String {
+    use crate::util::json::{obj, Json};
+    Json::Arr(
+        records
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("engine", Json::from(r.spec.as_str())),
+                    ("n", Json::from(r.n)),
+                    ("d", Json::from(r.d)),
+                    ("k", Json::from(r.k)),
+                    ("median_s", Json::from(r.median_s)),
+                    ("p95_s", Json::from(r.p95_s)),
+                ])
+            })
+            .collect(),
+    )
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn records_serialize_to_parseable_json() {
+        let recs = vec![
+            BenchRecord {
+                spec: "sfa:k=8,bq=64,bk=64".into(),
+                n: 1024,
+                d: 128,
+                k: 8,
+                median_s: 0.0123,
+                p95_s: 0.0150,
+            },
+            BenchRecord {
+                spec: "flash_dense:bq=64,bk=64".into(),
+                n: 1024,
+                d: 128,
+                k: 0,
+                median_s: 0.05,
+                p95_s: 0.06,
+            },
+        ];
+        let text = records_to_json(&recs);
+        let j = Json::parse(&text).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("engine").unwrap().as_str().unwrap(), "sfa:k=8,bq=64,bk=64");
+        assert_eq!(arr[0].get("n").unwrap().as_usize().unwrap(), 1024);
+        assert_eq!(arr[0].get("k").unwrap().as_usize().unwrap(), 8);
+        assert!((arr[1].get("median_s").unwrap().as_f64().unwrap() - 0.05).abs() < 1e-12);
+    }
+}

@@ -131,6 +131,7 @@ impl<'rt> Engine<'rt> {
         for p in &self.params {
             args.push(crate::train::trainer::clone_literal(p)?);
         }
+        let n_params = args.len();
         args.push(HostTensor::I32(tokens, vec![b, self.prefill_seq]).to_literal()?);
         args.push(HostTensor::I32(lengths.clone(), vec![b]).to_literal()?);
         let entry = format!("prefill_b{b}");
@@ -160,11 +161,7 @@ impl<'rt> Engine<'rt> {
             if !live {
                 break;
             }
-            let mut args: Vec<xla::Literal> =
-                Vec::with_capacity(self.params.len() + caches.len() + 2);
-            for p in &self.params {
-                args.push(crate::train::trainer::clone_literal(p)?);
-            }
+            args.truncate(n_params);
             args.extend(caches.drain(..));
             args.push(HostTensor::I32(current.clone(), vec![b]).to_literal()?);
             let clamped: Vec<i32> = pos

@@ -10,11 +10,22 @@ use std::collections::HashMap;
 /// Sequence handle.
 pub type SeqId = u64;
 
-#[derive(Debug, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PageError {
     OutOfPages,
     UnknownSeq,
 }
+
+impl std::fmt::Display for PageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PageError::OutOfPages => write!(f, "paged KV cache is out of pages"),
+            PageError::UnknownSeq => write!(f, "unknown KV-cache sequence id"),
+        }
+    }
+}
+
+impl std::error::Error for PageError {}
 
 /// Payload layout of one token slot inside a page.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -136,6 +147,21 @@ impl PagedKvCache {
         Ok(&self.pages[page as usize][slot * fpt..(slot + 1) * fpt])
     }
 
+    /// Borrow every token slot of a sequence in order, one slice per
+    /// token — the decode path's scan view (attention sessions walk the
+    /// whole cached sequence per step).
+    pub fn token_slices(&self, seq: SeqId) -> Result<Vec<&[f32]>, PageError> {
+        let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
+        let fpt = self.layout.floats_per_token();
+        let mut out = Vec::with_capacity(*len);
+        for pos in 0..*len {
+            let page = table[pos / self.page_size] as usize;
+            let slot = pos % self.page_size;
+            out.push(&self.pages[page][slot * fpt..(slot + 1) * fpt]);
+        }
+        Ok(out)
+    }
+
     /// Fork a sequence sharing all current pages (prefix caching).
     pub fn fork(&mut self, seq: SeqId) -> Result<SeqId, PageError> {
         let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?.clone();
@@ -251,6 +277,23 @@ mod tests {
         assert!(sparse.floats_per_token() < dense.floats_per_token());
         // App-J shape: K-payload shrinks from d to ~1.5k.
         assert_eq!(sparse.floats_per_token(), 8 + 4 + 64);
+    }
+
+    #[test]
+    fn token_slices_walk_in_order() {
+        let layout = SlotLayout::Dense { d: 2, d_v: 1 };
+        let mut c = PagedKvCache::new(16, 3, layout);
+        let s = c.create_seq();
+        for i in 0..7 {
+            c.append(s, &payload(layout, i as f32)).unwrap();
+        }
+        let slots = c.token_slices(s).unwrap();
+        assert_eq!(slots.len(), 7);
+        for (i, sl) in slots.iter().enumerate() {
+            assert_eq!(sl.len(), layout.floats_per_token());
+            assert_eq!(sl[0], i as f32);
+        }
+        assert_eq!(c.token_slices(99).unwrap_err(), PageError::UnknownSeq);
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! |---|---|
 //! | [`util`] | offline-environment substrates: RNG, JSON, CLI, stats, thread pool, matrices, mini property testing |
 //! | [`sparse`] | CSR / feature-wise CSC formats, row-wise top-k, Gustavson SpGEMM, App-J memory model |
-//! | [`attention`] | the CPU FlashSFA engine (paper App. C Algorithm 1) plus dense/flash/token-sparse/low-rank/kernel baselines |
+//! | [`attention`] | the CPU FlashSFA engine (paper App. C Algorithm 1) plus dense/flash/token-sparse/low-rank/kernel baselines, the spec-string engine registry, and the multi-head `AttentionSession` (prefill → paged KV cache → decode; see ARCHITECTURE.md) |
 //! | [`kv_cache`] | paged dense + sparse KV caches with eviction policies (H2O/SnapKV-style) |
 //! | [`runtime`] | PJRT client, artifact registry, executable cache |
 //! | [`coordinator`] | request router, continuous batcher, prefill/decode scheduler, generation engine |

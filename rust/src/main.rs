@@ -5,8 +5,13 @@
 //!   train   --variant V          train one variant, log losses
 //!   serve   --requests N         synthetic serving load through the router
 //!   exp     table1|table2|table3|fig8|table12     training experiments
-//!   bench   fig1|fig3|fig5|fig6|table6|table7|table8|table9|table10
-//!   analyze entropy|svd|memory   Fig 7 / Fig 11 / App J analyses
+//!   bench   fig1|fig3|fig5|fig6|table6|table7|table8|table9|table10|engines
+//!   analyze entropy|svd|memory|session   Fig 7 / Fig 11 / App J / session demo
+//!
+//! Attention engines are addressed by registry spec strings
+//! (`--engine "sfa:k=8,bq=64,bk=64"`, `--engines "a;b;c"`); every
+//! `bench` invocation also writes the measurements it took to
+//! BENCH_attention.json (override with --bench-json PATH).
 
 use anyhow::{bail, Result};
 
@@ -27,8 +32,13 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
   sfa train   [--artifacts DIR] --variant sfa_k8 --steps 100 --lr 1e-3 --corpus zipf|niah
   sfa serve   [--artifacts DIR] --variant sfa_k8 --requests 16 --workers 2 --batch 4 --max-new 16
   sfa exp     table1|table2|table3|fig8|table12 [--steps N] [--artifacts DIR]
-  sfa bench   fig1|fig3|fig5|fig6|table6|table7|table8|table9|table10 [--budget SECS]
-  sfa analyze entropy|svd|memory [--variant V] [--steps N]
+  sfa bench   fig1|fig3|fig5|fig6|table6|table7|table8|table9|table10|engines
+              [--budget SECS] [--engine SPEC] [--engines \"SPEC;SPEC;...\"]
+              [--bench-json PATH]   (writes BENCH_attention.json)
+  sfa analyze entropy|svd|memory|session [--variant V] [--steps N] [--engine SPEC]
+engine SPECs: dense | flash_dense:bq=64,bk=64 | sfa:k=8,bq=64,bk=64 | sfa_ref:k=8
+              | window:w=256,scorer=sfa_k8 | lowrank:r=16 | mla:r=16
+              | performer:m=128 | quant:scorer=sfa_k8
 ";
 
 fn main() -> Result<()> {
@@ -202,10 +212,34 @@ fn cmd_exp(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Split and validate a `--engines "spec;spec;..."` list so bad specs
+/// surface the registry's descriptive error instead of a panic deep in
+/// the bench layer.
+fn parse_spec_list(s: &str) -> Result<Vec<String>> {
+    let specs = sfa::attention::registry::split_spec_list(s);
+    for spec in &specs {
+        sfa::attention::registry::parse_spec(spec)?;
+    }
+    Ok(specs)
+}
+
+/// Sparsity budget for the cost-model tables: `--engine SPEC` wins
+/// (its feature budget), else `--k`, else the default.
+fn engine_k(args: &Args, default_k: usize) -> Result<usize> {
+    if let Some(spec) = args.get("engine") {
+        if let Some(k) = sfa::attention::registry::parse_spec(spec)?.feature_k() {
+            return Ok(k);
+        }
+    }
+    args.usize_or("k", default_k)
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let budget = args.f64_or("budget", 0.5)?;
     match args.command.get(1).map(|s| s.as_str()) {
-        Some("fig1") => figures::fig1(args.usize_or("ctx", 131072)?).print(),
+        Some("fig1") => {
+            figures::fig1(args.usize_or("ctx", 131072)?, engine_k(args, 16)?).print()
+        }
         Some("fig3") => figures::fig3(
             args.usize_or("ctx", 4096)?,
             args.usize_or("d", 128)?,
@@ -216,18 +250,32 @@ fn cmd_bench(args: &Args) -> Result<()> {
         Some("fig5") => figures::fig5(
             &args.usize_list_or("ctxs", &[1024, 4096, 16384, 65536, 262144])?,
             args.usize_or("d", 64)?,
-            args.usize_or("k", 4)?,
+            engine_k(args, 4)?,
         )
         .print(),
         Some("fig6") => {
-            let (a, b) = figures::fig6(
+            let k = args.usize_or("k", 8)?;
+            let spec = args.str_or("engine", &format!("sfa:k={k}"));
+            sfa::attention::registry::parse_spec(&spec)?;
+            let (a, b) = figures::fig6_spec(
                 &args.usize_list_or("ctxs", &[512, 1024, 2048, 4096, 8192])?,
                 args.usize_or("d", 128)?,
-                args.usize_or("k", 8)?,
+                k,
+                &spec,
                 budget,
             );
             a.print();
             b.print();
+        }
+        Some("engines") => {
+            let specs = parse_spec_list(&args.str_or("engines", "flash_dense;sfa:k=8"))?;
+            figures::engine_grid(
+                &specs,
+                &args.usize_list_or("ctxs", &[1024, 4096])?,
+                args.usize_or("d", 128)?,
+                budget,
+            )
+            .print()
         }
         Some("table6") => {
             figures::table6(&args.usize_list_or("ctxs", &[8192, 16384, 32768, 65536])?).print()
@@ -253,14 +301,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
             budget,
         )
         .print(),
-        Some("table10") => figures::table10_latency(
-            args.usize_or("ctx", 4096)?,
-            args.usize_or("d", 128)?,
-            args.usize_or("k", 8)?,
-            budget,
-        )
-        .print(),
+        Some("table10") => {
+            let ctx = args.usize_or("ctx", 4096)?;
+            let d = args.usize_or("d", 128)?;
+            let k = args.usize_or("k", 8)?;
+            let specs = match args.get("engines") {
+                Some(s) => parse_spec_list(s)?,
+                None => figures::table10_specs(ctx, d, k),
+            };
+            figures::table10_latency_specs(&specs, ctx, d, budget).print()
+        }
         other => bail!("unknown bench target {other:?}"),
+    }
+    let path = args.str_or("bench-json", "BENCH_attention.json");
+    let written = sfa::bench::write_records(&path)?;
+    if written > 0 {
+        println!("\n[bench] wrote {written} engine records to {path}");
     }
     Ok(())
 }
@@ -286,6 +342,89 @@ fn cmd_analyze(args: &Args) -> Result<()> {
                     ]);
                 }
             }
+            t.print();
+        }
+        Some("session") => {
+            use sfa::attention::registry::parse_spec;
+            use sfa::attention::session::{AttentionSession, SessionConfig};
+            use sfa::attention::{Engine, HeadTensor};
+            use sfa::bench::table::fmt_time;
+
+            let spec = args.str_or("engine", "sfa:k=8");
+            let parsed = parse_spec(&spec)?;
+            let batch = args.usize_or("batch", 1)?;
+            let heads = args.usize_or("heads", 4)?;
+            let d = args.usize_or("d", 64)?;
+            let prefill_n = args.usize_or("ctx", 256)?;
+            let steps = args.usize_or("steps", 32)?;
+            let n = prefill_n + steps;
+            let cfg = SessionConfig::new(batch, heads, d, d)
+                .with_paging(args.usize_or("page-size", 16)?, 1 << 20);
+            let mut sess = AttentionSession::from_spec(&spec, cfg)?;
+            let mut rng = Rng::new(args.u64_or("seed", 0)?);
+            let q = HeadTensor::randn(batch, heads, n, d, &mut rng, 1.0);
+            let k = HeadTensor::randn(batch, heads, n, d, &mut rng, 1.0);
+            let v = HeadTensor::randn(batch, heads, n, d, &mut rng, 1.0);
+            // Oracle: one-shot causal prefill over the whole sequence.
+            let full = parsed.build().forward_batched(&q, &k, &v, true);
+            let t0 = std::time::Instant::now();
+            let pre = sess.prefill(
+                &q.slice_rows(0, prefill_n),
+                &k.slice_rows(0, prefill_n),
+                &v.slice_rows(0, prefill_n),
+                true,
+            )?;
+            let prefill_s = t0.elapsed().as_secs_f64();
+            let mut max_err = 0f32;
+            for b in 0..batch {
+                for h in 0..heads {
+                    for t in 0..prefill_n {
+                        for (a, e) in
+                            pre.head_row(b, h, t).iter().zip(full.head_row(b, h, t))
+                        {
+                            max_err = max_err.max((a - e).abs());
+                        }
+                    }
+                }
+            }
+            let t1 = std::time::Instant::now();
+            for s in 0..steps {
+                let t = prefill_n + s;
+                let o = sess.decode_step(
+                    &q.slice_rows(t, t + 1),
+                    &k.slice_rows(t, t + 1),
+                    &v.slice_rows(t, t + 1),
+                )?;
+                for b in 0..batch {
+                    for h in 0..heads {
+                        for (a, e) in
+                            o.head_row(b, h, 0).iter().zip(full.head_row(b, h, t))
+                        {
+                            max_err = max_err.max((a - e).abs());
+                        }
+                    }
+                }
+            }
+            let decode_s = t1.elapsed().as_secs_f64();
+            let mut t = sfa::bench::Table::new(
+                &format!("AttentionSession lifecycle vs one-shot prefill ({})", sess.engine_name()),
+                &["metric", "value"],
+            );
+            t.row(vec!["engine spec".into(), sess.spec().canonical()]);
+            t.row(vec!["cache scorer".into(), sess.scorer().label()]);
+            t.row(vec!["batch × heads".into(), format!("{batch} × {heads}")]);
+            t.row(vec!["tokens (prefill + decode)".into(), format!("{prefill_n} + {steps}")]);
+            t.row(vec!["KV pages in use".into(), sess.pages_in_use().to_string()]);
+            t.row(vec![
+                "KV cache MB".into(),
+                format!("{:.2}", sess.cache_bytes() as f64 / 1e6),
+            ]);
+            t.row(vec!["prefill wall".into(), fmt_time(prefill_s)]);
+            t.row(vec![
+                "decode wall / step".into(),
+                fmt_time(decode_s / steps.max(1) as f64),
+            ]);
+            t.row(vec!["max |err| vs one-shot".into(), format!("{max_err:.2e}")]);
             t.print();
         }
         Some(which @ ("entropy" | "svd")) => {

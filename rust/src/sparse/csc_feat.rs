@@ -199,6 +199,55 @@ mod tests {
     }
 
     #[test]
+    fn from_codes_with_explicit_zero_padding() {
+        // Padded codes carry explicit zero values (rows with fewer than
+        // k live features); the CSC build must drop them while keeping
+        // every structural invariant — for arbitrary sparse inputs, not
+        // just Gaussian fixtures.
+        check("csc_feat from padded codes", 48, |g| {
+            let rows = g.usize_in(1..24);
+            let d = g.usize_in(2..48);
+            let k = g.usize_in(1..d.min(9));
+            let mut vals = vec![0f32; rows * k];
+            let mut idx = vec![0u16; rows * k];
+            let mut nonzero = 0usize;
+            let mut feats: Vec<u16> = (0..d as u16).collect();
+            for t in 0..rows {
+                // Distinct features per row via partial Fisher-Yates.
+                for slot in 0..k {
+                    let j = g.usize_in(slot..d);
+                    feats.swap(slot, j);
+                    idx[t * k + slot] = feats[slot];
+                    // ~30% of the slots stay explicit zeros (padding).
+                    if g.usize_in(0..10) >= 3 {
+                        let sign = if g.bool() { 1.0 } else { -1.0 };
+                        vals[t * k + slot] = sign * g.f32_in(0.5..2.0);
+                        nonzero += 1;
+                    }
+                }
+            }
+            let codes = TopkCodes { rows, dim: d, k, vals, idx };
+            let feat = CscFeat::from_codes(&codes);
+            feat.validate().unwrap();
+            assert_eq!(feat.nnz(), nonzero, "nnz must count only nonzero entries");
+            let degree_sum: u32 = feat.degrees().iter().sum();
+            assert_eq!(degree_sum as usize, nonzero);
+            // Every nonzero (token, feature, value) triple survives.
+            for t in 0..rows {
+                for (&f, &v) in codes.row_idx(t).iter().zip(codes.row_vals(t)) {
+                    if v != 0.0 {
+                        let (toks, vs) = feat.posting(f as usize);
+                        let pos = toks
+                            .binary_search(&(t as u32))
+                            .expect("nonzero entry present in posting");
+                        assert_eq!(vs[pos], v);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
     fn empty_features_have_empty_postings() {
         // Force all tokens onto feature 0..k by making those huge.
         let mut m = Matrix::zeros(8, 16);

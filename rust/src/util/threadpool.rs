@@ -4,15 +4,31 @@
 //! and runs one OS thread per chunk via `std::thread::scope`. The
 //! attention engines use it for query-tile parallelism — the same
 //! decomposition the paper's CUDA kernel expresses with its grid.
+//!
+//! Thread-count override: set `SFA_THREADS=<n>` (n ≥ 1) to pin
+//! [`default_threads`] regardless of the machine's core count. Benches
+//! on shared CI machines want reproducible parallelism, and every
+//! engine constructor and session consults `default_threads`, so one
+//! env var pins the whole stack.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads to use (physical parallelism, capped).
+/// Number of worker threads to use: the `SFA_THREADS` env override when
+/// set to a positive integer, else physical parallelism capped at 16.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(16)
+    match env_thread_override(std::env::var("SFA_THREADS").ok().as_deref()) {
+        Some(n) => n,
+        None => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(16),
+    }
+}
+
+/// Parse an `SFA_THREADS` value; unset, non-numeric, or zero means no
+/// override.
+fn env_thread_override(raw: Option<&str>) -> Option<usize> {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n >= 1)
 }
 
 /// Run `f(chunk_start, chunk_end)` over `[0, n)` split into `threads`
@@ -150,6 +166,19 @@ mod tests {
         assert_eq!(hits.load(Ordering::Relaxed), 0);
         let v = parallel_map(1, 8, |i| i + 1);
         assert_eq!(v, vec![1]);
+    }
+
+    #[test]
+    fn sfa_threads_override_parsing() {
+        // The override is tested through the pure parser (no
+        // env::set_var — concurrent setenv/getenv across test threads
+        // is UB on glibc).
+        assert_eq!(env_thread_override(Some("3")), Some(3));
+        assert_eq!(env_thread_override(Some(" 8 ")), Some(8));
+        assert_eq!(env_thread_override(Some("0")), None);
+        assert_eq!(env_thread_override(Some("not-a-number")), None);
+        assert_eq!(env_thread_override(None), None);
+        assert!(default_threads() >= 1);
     }
 
     #[test]
