@@ -43,6 +43,9 @@ fn main() -> anyhow::Result<()> {
     println!("\n== generating through the SFA serving path ==");
     let mut engine = GenEngine::new(&rt, "sfa_k8", 1, Sampling::Temperature(1.0), 7)?;
     let prompt: Vec<i32> = (1..20).map(|i| (i * 3) % vocab as i32).collect();
+    // Single-request wave through the artifact engine (the deprecated
+    // wave path; see `examples/serve.rs` for the serve API).
+    #[allow(deprecated)]
     let responses = engine.run_wave(&[GenRequest::new(0, prompt, 12)], 0)?;
     println!(
         "generated {:?} (TTFT {:.0}ms, total {:.0}ms)",

@@ -1,61 +1,85 @@
-//! Serving example: the full coordinator stack under a synthetic open
-//! loop — router → batcher → engine workers → AOT prefill/decode with
-//! the (sparse) KV cache. Reports TTFT/TPOT/throughput, comparing the
-//! dense and SFA variants (the Latency columns of paper Tables 1/10).
+//! Serving example: the request-lifecycle `serve` API — build
+//! requests, stream per-token events over a channel, and watch the
+//! continuous batcher admit sequences into a live decode wave and
+//! evict finished sequences' KV pages mid-wave.
 //!
-//! Run: `cargo run --release --example serve -- [artifacts] [requests]`
+//! Runs entirely on the deterministic ToyLm substrate — no AOT
+//! artifacts needed. (The deprecated artifact-driven wave router is
+//! still reachable via `sfa serve --legacy`.)
+//!
+//! Run: `cargo run --release --example serve -- [requests]`
 
-use std::time::{Duration, Instant};
-
-use sfa::coordinator::router::{Router, RouterConfig};
-use sfa::coordinator::ServeMetrics;
-use sfa::runtime::Runtime;
+use sfa::serve::{
+    ContinuousBatcher, RequestState, Scheduler, ServeConfig, ServeEvent, ServeRequest,
+};
 use sfa::util::rng::Rng;
 
-fn drive(dir: &str, variant: &str, n_requests: usize, vocab: i32, prefill_seq: usize)
-    -> anyhow::Result<ServeMetrics>
-{
-    let router = Router::start(RouterConfig {
-        artifact_dir: dir.to_string(),
-        variant: variant.to_string(),
-        workers: 1, // single-core testbed; bump on bigger hosts
-        batch_size: 4,
-        max_wait: Duration::from_millis(20),
-        sampling_temperature: Some(0.8),
-    });
-    let mut rng = Rng::new(42);
-    let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n_requests)
-        .map(|_| {
-            let plen = rng.range(8, prefill_seq.min(96));
-            let prompt: Vec<i32> =
-                (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
-            router.submit(prompt, 16)
-        })
-        .collect();
-    let mut metrics = ServeMetrics::default();
-    for rx in rxs {
-        metrics.record(&rx.recv()?);
+fn main() {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("requests must be an integer"))
+        .unwrap_or(8);
+
+    let cfg = ServeConfig::default();
+    let mut sched = ContinuousBatcher::new(cfg);
+    let (tx, rx) = std::sync::mpsc::channel::<ServeEvent>();
+
+    // Mixed workload: different prompt lengths, generation budgets,
+    // and engine families, all in one serving process.
+    let mut rng = Rng::new(7);
+    let specs = ["sfa:k=8", "dense", "window:w=64,scorer=sfa_k8"];
+    for i in 0..n_requests {
+        let plen = rng.range(16, 257);
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+        let req = ServeRequest::new(prompt)
+            .max_new(rng.range(4, 33))
+            .engine(specs[i % specs.len()])
+            .events(tx.clone());
+        // Backpressure is a typed error, not a panic: a real client
+        // would retry after draining; the demo just stops submitting.
+        match sched.submit(req) {
+            Ok(id) => println!("submitted request {id} ({plen} prompt tokens)"),
+            Err(e) => {
+                println!("backpressure after {i} requests: {e}");
+                break;
+            }
+        }
     }
-    metrics.wall_s = t0.elapsed().as_secs_f64();
-    router.shutdown()?;
-    Ok(metrics)
-}
+    drop(tx);
 
-fn main() -> anyhow::Result<()> {
-    let mut args = std::env::args().skip(1);
-    let dir = args.next().unwrap_or_else(|| "artifacts".into());
-    let n_requests: usize = args.next().map(|s| s.parse().unwrap()).unwrap_or(8);
-
-    let rt = Runtime::new(&dir)?;
-    let prefill_seq = rt.manifest.prefill_seq;
-    let vocab = rt.manifest.variant("dense")?.cfg_usize("vocab")? as i32;
-    drop(rt);
-
-    for variant in ["dense", "sfa_k8"] {
-        println!("== serving {n_requests} requests with {variant} ==");
-        let m = drive(&dir, variant, n_requests, vocab, prefill_seq)?;
-        println!("{}\n", m.summary());
+    // Drive the scheduler; each step admits what fits the page budget,
+    // decodes one token for every live sequence, and frees finished
+    // lanes immediately.
+    let t0 = std::time::Instant::now();
+    let mut steps = 0;
+    while sched.has_work() {
+        let r = sched.step();
+        steps += 1;
+        if r.admitted > 0 || r.finished > 0 {
+            println!(
+                "step {steps:>3}: +{} admitted, {} live, {} finished, \
+                 {} pages in use ({} freed)",
+                r.admitted, r.live, r.finished, r.pages_in_use, r.pages_freed
+            );
+        }
     }
-    Ok(())
+
+    // The streaming surface: every state transition and token arrived
+    // on the channel as it happened.
+    let mut tokens = 0usize;
+    let mut finished = 0usize;
+    for ev in rx.try_iter() {
+        match ev {
+            ServeEvent::Token { .. } => tokens += 1,
+            ServeEvent::State { id, state: RequestState::Finished { reason } } => {
+                println!("request {id} finished: {reason:?}");
+                finished += 1;
+            }
+            ServeEvent::State { .. } => {}
+        }
+    }
+    sched.metrics_mut().wall_s = t0.elapsed().as_secs_f64();
+    println!("\nstreamed {tokens} tokens across {finished} requests in {steps} steps");
+    println!("{}", sched.metrics().summary());
 }

@@ -104,7 +104,7 @@ fn main() {
     let r = bench("batcher", 0.2, || {
         let mut b = Batcher::new(8, Duration::from_millis(5));
         for i in 0..64 {
-            b.push(GenRequest::new(i, vec![1, 2, 3], 4));
+            b.push(GenRequest::new(i, vec![1, 2, 3], 4)).expect("unbounded queue");
         }
         let now = std::time::Instant::now();
         while b.next_batch(now).is_some() {}

@@ -18,6 +18,21 @@
 //! per-token top-k key codes (`SlotLayout::Sparse`, the paper's App-J
 //! memory shape), everything else stores dense keys
 //! (`SlotLayout::Dense`); values are dense in both.
+//!
+//! ## Lanes — the continuous-batching surface
+//!
+//! A session is a set of **lanes**: one lane = one sequence occupying
+//! one batch slot across every head (`heads` paged-cache sequences).
+//! The uniform-batch API above ([`AttentionSession::prefill`] /
+//! [`AttentionSession::decode_step`]) operates on the `cfg.batch` lanes
+//! created at construction. The lane API underneath lets a scheduler
+//! run sequences of *different* lengths through one session:
+//! [`AttentionSession::admit_lane`] (join mid-flight),
+//! [`AttentionSession::prefill_lane`] (one lane's prompt, any length),
+//! [`AttentionSession::decode_step_lanes`] (decode one token for an
+//! arbitrary subset of live lanes), and
+//! [`AttentionSession::release_lane`] (free a finished lane's pages
+//! immediately, mid-wave). `rust/src/serve/` drives this surface.
 
 use crate::attention::decode::{softmax_weighted_sum, topk_row};
 use crate::attention::registry::{parse_spec, EngineSpec, SpecError};
@@ -67,6 +82,21 @@ impl SessionConfig {
     }
 }
 
+/// Stable handle for one lane (batch slot) of a session. Handles are
+/// slot indices: released slots are recycled by later admissions, so a
+/// handle is only valid until its lane is released.
+pub type LaneId = usize;
+
+/// One batch slot: `heads` paged-cache sequences plus its own length.
+#[derive(Debug)]
+struct Lane {
+    /// One cache sequence per head (empty once released).
+    seqs: Vec<SeqId>,
+    /// Tokens appended to this lane so far.
+    len: usize,
+    live: bool,
+}
+
 /// One live multi-head attention session over a paged KV cache.
 pub struct AttentionSession {
     cfg: SessionConfig,
@@ -74,10 +104,9 @@ pub struct AttentionSession {
     engine: Box<dyn Engine>,
     scorer: Scorer,
     cache: PagedKvCache,
-    /// One cache sequence per `(batch, head)` pair, `b * heads + h`.
-    seqs: Vec<SeqId>,
-    /// Tokens appended so far (uniform across the batch).
-    len: usize,
+    /// Batch slots; `cfg.batch` live lanes at construction, grown and
+    /// recycled by [`Self::admit_lane`] / [`Self::release_lane`].
+    lanes: Vec<Lane>,
 }
 
 impl AttentionSession {
@@ -113,8 +142,14 @@ impl AttentionSession {
             Scorer::Sfa { k } => SlotLayout::Sparse { k, d_v: cfg.d_v },
         };
         let mut cache = PagedKvCache::new(cfg.max_pages, cfg.page_size, layout);
-        let seqs: Vec<SeqId> = (0..cfg.batch * cfg.heads).map(|_| cache.create_seq()).collect();
-        AttentionSession { engine: spec.build(), cfg, spec, scorer, cache, seqs, len: 0 }
+        let lanes: Vec<Lane> = (0..cfg.batch)
+            .map(|_| Lane {
+                seqs: (0..cfg.heads).map(|_| cache.create_seq()).collect(),
+                len: 0,
+                live: true,
+            })
+            .collect();
+        AttentionSession { engine: spec.build(), cfg, spec, scorer, cache, lanes }
     }
 
     pub fn spec(&self) -> &EngineSpec {
@@ -129,21 +164,99 @@ impl AttentionSession {
         self.scorer
     }
 
-    /// Tokens cached per sequence so far.
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    /// Tokens cached in the longest lane — under the uniform-batch API
+    /// every lane has this length; under the lane API use
+    /// [`Self::lane_len`] for per-lane lengths. Consistent with
+    /// [`Self::is_empty`] even when some lanes have been released.
     pub fn len(&self) -> usize {
-        self.len
+        self.lanes.iter().map(|l| l.len).max().unwrap_or(0)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len == 0
+        self.len() == 0
     }
 
     pub fn pages_in_use(&self) -> usize {
         self.cache.pages_in_use()
     }
 
+    /// Pages still allocatable before the cache's budget is exhausted.
+    /// Observability only — the serve admission policy budgets through
+    /// worst-case *reservations* (so a live wave can never run out),
+    /// not through current headroom.
+    pub fn pages_free(&self) -> usize {
+        self.cache.pages_free()
+    }
+
     pub fn cache_bytes(&self) -> usize {
         self.cache.bytes_in_use()
+    }
+
+    // --- Lane lifecycle (continuous batching) --------------------------
+
+    /// Number of live lanes.
+    pub fn live_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.live).count()
+    }
+
+    /// Tokens cached in one lane. Panics on a released or unknown lane.
+    pub fn lane_len(&self, lane: LaneId) -> usize {
+        let l = &self.lanes[lane];
+        assert!(l.live, "lane {lane} was released");
+        l.len
+    }
+
+    /// Pages currently mapped by one lane across all its heads
+    /// (per-sequence occupancy observability).
+    pub fn lane_pages(&self, lane: LaneId) -> usize {
+        let l = &self.lanes[lane];
+        assert!(l.live, "lane {lane} was released");
+        l.seqs.iter().map(|&s| self.cache.seq_pages(s).unwrap_or(0)).sum()
+    }
+
+    /// Admit a new empty lane (recycling a released slot when one
+    /// exists), creating one paged-cache sequence per head. Page
+    /// allocation is deferred to the first appended token, so admission
+    /// itself never fails — budget checks belong to the caller's
+    /// admission policy (see `serve::ContinuousBatcher`).
+    pub fn admit_lane(&mut self) -> LaneId {
+        let lane = Lane {
+            seqs: (0..self.cfg.heads).map(|_| self.cache.create_seq()).collect(),
+            len: 0,
+            live: true,
+        };
+        match self.lanes.iter().position(|l| !l.live) {
+            Some(slot) => {
+                self.lanes[slot] = lane;
+                slot
+            }
+            None => {
+                self.lanes.push(lane);
+                self.lanes.len() - 1
+            }
+        }
+    }
+
+    /// Release a lane mid-wave, freeing its pages immediately; returns
+    /// how many pages went back to the budget. The handle becomes
+    /// invalid (its slot is recycled by the next [`Self::admit_lane`]).
+    pub fn release_lane(&mut self, lane: LaneId) -> Result<usize, PageError> {
+        let l = self.lanes.get_mut(lane).ok_or(PageError::UnknownSeq)?;
+        if !l.live {
+            return Err(PageError::UnknownSeq);
+        }
+        l.live = false;
+        l.len = 0;
+        let seqs = std::mem::take(&mut l.seqs);
+        let mut freed = 0;
+        for s in seqs {
+            freed += self.cache.free(s)?;
+        }
+        Ok(freed)
     }
 
     fn check_shapes(&self, q: &HeadTensor, k: &HeadTensor, v: &HeadTensor) {
@@ -156,8 +269,8 @@ impl AttentionSession {
         assert_eq!(k.n, v.n, "k/v length");
     }
 
-    /// Append one token's K/V payload for head-sequence `i`.
-    fn push_token(&mut self, i: usize, key: &[f32], val: &[f32]) -> Result<(), PageError> {
+    /// Append one token's K/V payload to one head-sequence.
+    fn push_token(&mut self, seq: SeqId, key: &[f32], val: &[f32]) -> Result<(), PageError> {
         debug_assert_eq!(key.len(), self.cfg.d);
         debug_assert_eq!(val.len(), self.cfg.d_v);
         let payload = match self.cache.layout {
@@ -178,7 +291,7 @@ impl AttentionSession {
                 p
             }
         };
-        self.cache.append(self.seqs[i], &payload)
+        self.cache.append(seq, &payload)
     }
 
     /// Prefill `k.n` tokens: appends every K/V token into the paged
@@ -198,14 +311,61 @@ impl AttentionSession {
             "prefill must be the first call on a fresh session \
              (chunked prefill is not supported yet — use decode_step)"
         );
+        assert!(
+            self.lanes.len() == self.cfg.batch && self.lanes.iter().all(|l| l.live),
+            "uniform-batch prefill requires the construction-time lanes, all live \
+             (use prefill_lane under a lane scheduler)"
+        );
         self.check_shapes(q, k, v);
-        for i in 0..self.seqs.len() {
+        for i in 0..self.cfg.batch * self.cfg.heads {
             let (b, h) = (i / self.cfg.heads, i % self.cfg.heads);
+            let seq = self.lanes[b].seqs[h];
             for t in 0..k.n {
-                self.push_token(i, k.head_row(b, h, t), v.head_row(b, h, t))?;
+                self.push_token(seq, k.head_row(b, h, t), v.head_row(b, h, t))?;
             }
         }
-        self.len += k.n;
+        for lane in &mut self.lanes {
+            lane.len += k.n;
+        }
+        Ok(self.engine.forward_batched(q, k, v, causal))
+    }
+
+    /// Prefill one lane's prompt (`q`/`k`/`v` with `batch == 1`):
+    /// appends every token's K/V into the lane's paged sequences, then
+    /// runs the engine's batched forward over just this lane. Lanes
+    /// prefill independently, so mixed prompt lengths coexist in one
+    /// session and the outputs are bit-identical to a solo run of the
+    /// same prompt regardless of what the other lanes are doing.
+    ///
+    /// On a page-budget error the lane is **auto-released** (its
+    /// partially appended prefix would otherwise silently corrupt a
+    /// retry) and the handle becomes invalid; the error carries the
+    /// cause.
+    pub fn prefill_lane(
+        &mut self,
+        lane: LaneId,
+        q: &HeadTensor,
+        k: &HeadTensor,
+        v: &HeadTensor,
+        causal: bool,
+    ) -> Result<HeadTensor, PageError> {
+        assert_eq!(q.batch, 1, "prefill_lane takes batch-1 tensors");
+        assert_eq!((k.batch, v.batch), (1, 1), "prefill_lane takes batch-1 tensors");
+        assert_eq!((q.heads, k.heads, v.heads), (self.cfg.heads, self.cfg.heads, self.cfg.heads));
+        assert_eq!((q.d, k.d, v.d), (self.cfg.d, self.cfg.d, self.cfg.d_v));
+        assert_eq!(k.n, v.n, "k/v length");
+        assert!(self.lanes[lane].live, "lane {lane} was released");
+        assert_eq!(self.lanes[lane].len, 0, "lane {lane} is already prefilled");
+        for h in 0..self.cfg.heads {
+            let seq = self.lanes[lane].seqs[h];
+            for t in 0..k.n {
+                if let Err(e) = self.push_token(seq, k.head_row(0, h, t), v.head_row(0, h, t)) {
+                    let _ = self.release_lane(lane);
+                    return Err(e);
+                }
+            }
+        }
+        self.lanes[lane].len = k.n;
         Ok(self.engine.forward_batched(q, k, v, causal))
     }
 
@@ -220,36 +380,74 @@ impl AttentionSession {
         v: &HeadTensor,
     ) -> Result<HeadTensor, PageError> {
         self.check_shapes(q, k, v);
-        assert_eq!(q.n, 1, "decode_step takes exactly one new token");
-        for i in 0..self.seqs.len() {
-            let (b, h) = (i / self.cfg.heads, i % self.cfg.heads);
-            self.push_token(i, k.head_row(b, h, 0), v.head_row(b, h, 0))?;
-        }
-        self.len += 1;
+        assert!(
+            self.lanes.len() == self.cfg.batch && self.lanes.iter().all(|l| l.live),
+            "uniform-batch decode_step requires the construction-time lanes, all live \
+             (use decode_step_lanes under a lane scheduler)"
+        );
+        let all: Vec<LaneId> = (0..self.cfg.batch).collect();
+        self.decode_step_lanes(&all, q, k, v)
+    }
 
-        let mut out = HeadTensor::zeros(self.cfg.batch, self.cfg.heads, 1, self.cfg.d_v);
+    /// One decode step over an arbitrary subset of live lanes: batch
+    /// row `i` of `q`/`k`/`v` belongs to `lanes[i]`. Appends each
+    /// lane's new token and scores its 1-row query against that lane's
+    /// full cached sequence (lanes may be at different lengths). Every
+    /// `(lane, head)` pair is scored independently in parallel, so a
+    /// lane's output does not depend on which other lanes share the
+    /// step — the bit-for-bit guarantee the serve equivalence tests
+    /// pin.
+    pub fn decode_step_lanes(
+        &mut self,
+        lanes: &[LaneId],
+        q: &HeadTensor,
+        k: &HeadTensor,
+        v: &HeadTensor,
+    ) -> Result<HeadTensor, PageError> {
+        assert!(!lanes.is_empty(), "decode_step_lanes needs at least one lane");
+        assert_eq!(q.batch, lanes.len(), "one q row per lane");
+        assert_eq!((k.batch, v.batch), (lanes.len(), lanes.len()), "one k/v row per lane");
+        assert_eq!((q.heads, k.heads, v.heads), (self.cfg.heads, self.cfg.heads, self.cfg.heads));
+        assert_eq!((q.d, k.d, v.d), (self.cfg.d, self.cfg.d, self.cfg.d_v));
+        assert_eq!((q.n, k.n, v.n), (1, 1, 1), "decode takes exactly one new token per lane");
+        let heads = self.cfg.heads;
+        // (lane-batch-index, head) -> cache sequence, gathered before
+        // the appends so the parallel scoring below only reads.
+        let mut seqs: Vec<SeqId> = Vec::with_capacity(lanes.len() * heads);
+        for (bi, &lane) in lanes.iter().enumerate() {
+            assert!(self.lanes[lane].live, "lane {lane} was released");
+            for h in 0..heads {
+                let seq = self.lanes[lane].seqs[h];
+                self.push_token(seq, k.head_row(bi, h, 0), v.head_row(bi, h, 0))?;
+                seqs.push(seq);
+            }
+            self.lanes[lane].len += 1;
+        }
+
+        let mut out = HeadTensor::zeros(lanes.len(), heads, 1, self.cfg.d_v);
         let hv = self.cfg.d_v;
         let out_ptr = SendPtr(out.data.as_mut_ptr());
         let this: &AttentionSession = self;
-        let bh = this.seqs.len();
+        let seqs = &seqs;
+        let bh = lanes.len() * heads;
         let threads = default_threads().min(bh.max(1));
         parallel_for_dynamic(bh, threads, 1, move |i| {
-            let (b, h) = (i / this.cfg.heads, i % this.cfg.heads);
-            // SAFETY: each head owns a disjoint output range.
+            let (bi, h) = (i / heads, i % heads);
+            // SAFETY: each (lane, head) owns a disjoint output range.
             let dst =
                 unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(i * hv), hv) };
-            this.decode_head(i, q.head_row(b, h, 0), dst);
+            this.decode_head(seqs[i], q.head_row(bi, h, 0), dst);
         });
         Ok(out)
     }
 
     /// Score one head's query row against its cached sequence and write
     /// the softmax-weighted V sum into `out`.
-    fn decode_head(&self, i: usize, q: &[f32], out: &mut [f32]) {
+    fn decode_head(&self, seq: SeqId, q: &[f32], out: &mut [f32]) {
         let d = self.cfg.d;
         let d_v = self.cfg.d_v;
         let scale = 1.0 / (d as f32).sqrt();
-        let slots = self.cache.token_slices(self.seqs[i]).expect("session sequence exists");
+        let slots = self.cache.token_slices(seq).expect("session sequence exists");
         let mut scores: Vec<(u32, f32)> = Vec::with_capacity(slots.len());
         match self.scorer {
             Scorer::Dense => {
@@ -422,6 +620,151 @@ mod tests {
             AttentionSession::from_spec("dense", SessionConfig::new(batch, heads, d, d)).unwrap();
         sess.prefill(&q, &k, &v, true).unwrap();
         let _ = sess.prefill(&q, &k, &v, true);
+    }
+
+    /// Concatenate two same-shape-per-lane tensors along the batch axis
+    /// (the serve scheduler's batch-forming step, in miniature).
+    fn stack_batch(a: &HeadTensor, b: &HeadTensor) -> HeadTensor {
+        assert_eq!((a.heads, a.n, a.d), (b.heads, b.n, b.d));
+        let mut out = HeadTensor::zeros(a.batch + b.batch, a.heads, a.n, a.d);
+        let per = a.heads * a.n * a.d;
+        out.data[..a.batch * per].copy_from_slice(&a.data);
+        out.data[a.batch * per..].copy_from_slice(&b.data);
+        out
+    }
+
+    /// Lanes at different lengths decode together bit-for-bit identical
+    /// to solo uniform-batch sessions over the same streams, and a
+    /// released lane returns its pages and its slot.
+    #[test]
+    fn lane_api_matches_solo_runs_bitwise() {
+        let (heads, d) = (2, 16);
+        let spec = "sfa:k=8,bq=8,bk=8";
+        let lane_cfg = SessionConfig::new(0, heads, d, d).with_paging(4, 4096);
+        let solo_cfg = SessionConfig::new(1, heads, d, d).with_paging(4, 4096);
+        let (qa, ka, va) = full_qkv(1, heads, 12, d, 1);
+        let (qb, kb, vb) = full_qkv(1, heads, 10, d, 2);
+        let (pre_a, pre_b, steps) = (8, 6, 4);
+
+        let mut sess = AttentionSession::from_spec(spec, lane_cfg).unwrap();
+        assert_eq!(sess.live_lanes(), 0);
+        let mut solo_a = AttentionSession::from_spec(spec, solo_cfg).unwrap();
+        let mut solo_b = AttentionSession::from_spec(spec, solo_cfg).unwrap();
+
+        let a = sess.admit_lane();
+        let b = sess.admit_lane();
+        assert_ne!(a, b);
+        let la = sess
+            .prefill_lane(
+                a,
+                &qa.slice_rows(0, pre_a),
+                &ka.slice_rows(0, pre_a),
+                &va.slice_rows(0, pre_a),
+                true,
+            )
+            .unwrap();
+        let lb = sess
+            .prefill_lane(
+                b,
+                &qb.slice_rows(0, pre_b),
+                &kb.slice_rows(0, pre_b),
+                &vb.slice_rows(0, pre_b),
+                true,
+            )
+            .unwrap();
+        let sa = solo_a
+            .prefill(
+                &qa.slice_rows(0, pre_a),
+                &ka.slice_rows(0, pre_a),
+                &va.slice_rows(0, pre_a),
+                true,
+            )
+            .unwrap();
+        let sb = solo_b
+            .prefill(
+                &qb.slice_rows(0, pre_b),
+                &kb.slice_rows(0, pre_b),
+                &vb.slice_rows(0, pre_b),
+                true,
+            )
+            .unwrap();
+        assert_eq!(la.data, sa.data, "lane prefill == solo prefill, bit-for-bit");
+        assert_eq!(lb.data, sb.data);
+        assert_eq!((sess.lane_len(a), sess.lane_len(b)), (pre_a, pre_b));
+        assert_eq!(sess.live_lanes(), 2);
+
+        for s in 0..steps {
+            let (ta, tb) = (pre_a + s, pre_b + s);
+            let q = stack_batch(&qa.slice_rows(ta, ta + 1), &qb.slice_rows(tb, tb + 1));
+            let k = stack_batch(&ka.slice_rows(ta, ta + 1), &kb.slice_rows(tb, tb + 1));
+            let v = stack_batch(&va.slice_rows(ta, ta + 1), &vb.slice_rows(tb, tb + 1));
+            let out = sess.decode_step_lanes(&[a, b], &q, &k, &v).unwrap();
+            let oa = solo_a
+                .decode_step(
+                    &qa.slice_rows(ta, ta + 1),
+                    &ka.slice_rows(ta, ta + 1),
+                    &va.slice_rows(ta, ta + 1),
+                )
+                .unwrap();
+            let ob = solo_b
+                .decode_step(
+                    &qb.slice_rows(tb, tb + 1),
+                    &kb.slice_rows(tb, tb + 1),
+                    &vb.slice_rows(tb, tb + 1),
+                )
+                .unwrap();
+            for h in 0..heads {
+                assert_eq!(out.head_row(0, h, 0), oa.head_row(0, h, 0), "step {s} lane a");
+                assert_eq!(out.head_row(1, h, 0), ob.head_row(0, h, 0), "step {s} lane b");
+            }
+        }
+
+        // Mid-wave eviction: releasing lane a frees its pages while b
+        // keeps decoding, and the slot is recycled by the next admit.
+        let before = sess.pages_in_use();
+        let a_pages = sess.lane_pages(a);
+        assert!(a_pages > 0, "a prefilled lane occupies pages");
+        let free_before = sess.pages_free();
+        let freed = sess.release_lane(a).unwrap();
+        assert_eq!(freed, a_pages, "release returns exactly the lane's pages");
+        assert_eq!(sess.pages_in_use(), before - freed);
+        assert_eq!(sess.pages_free(), free_before + freed);
+        assert_eq!(sess.live_lanes(), 1);
+        assert!(sess.release_lane(a).is_err(), "double release is an error");
+        let tb = pre_b + steps;
+        sess.decode_step_lanes(
+            &[b],
+            &qb.slice_rows(tb, tb + 1),
+            &kb.slice_rows(tb, tb + 1),
+            &vb.slice_rows(tb, tb + 1),
+        )
+        .unwrap();
+        assert_eq!(sess.lane_len(b), tb + 1);
+        let c = sess.admit_lane();
+        assert_eq!(c, a, "released slot is recycled");
+        assert_eq!(sess.lane_len(c), 0);
+    }
+
+    /// A prefill that dies mid-append must not leave a corrupt partial
+    /// prefix behind: the lane is auto-released (pages returned, slot
+    /// recyclable) and a retry on the handle fails loudly.
+    #[test]
+    fn failed_lane_prefill_auto_releases() {
+        let (heads, d, n) = (2, 8, 12);
+        let (q, k, v) = full_qkv(1, heads, n, d, 11);
+        // Budget of 2 pages × 2 tokens = 4 token slots across 2 heads —
+        // far too small for a 12-token prompt.
+        let cfg = SessionConfig::new(0, heads, d, d).with_paging(2, 2);
+        let mut sess = AttentionSession::from_spec("dense", cfg).unwrap();
+        let lane = sess.admit_lane();
+        assert_eq!(
+            sess.prefill_lane(lane, &q, &k, &v, true).unwrap_err(),
+            PageError::OutOfPages
+        );
+        assert_eq!(sess.live_lanes(), 0, "failed prefill releases the lane");
+        assert_eq!(sess.pages_in_use(), 0, "partial prefix pages are returned");
+        assert!(sess.release_lane(lane).is_err(), "handle is already invalid");
+        assert_eq!(sess.admit_lane(), lane, "slot is recyclable");
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 pub mod figures;
 pub mod harness;
+pub mod serve_bench;
 pub mod table;
 
 use std::sync::Mutex;

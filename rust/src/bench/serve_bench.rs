@@ -1,0 +1,318 @@
+//! `sfa bench serve` — continuous batching vs wave scheduling on a
+//! mixed-prompt-length workload, over identical request streams and
+//! the identical lane/session substrate (only the scheduling policy
+//! differs). Reports tokens/s, time-to-first-token, p50/p95/p99
+//! per-token latency, and page-occupancy curves; serializes the whole
+//! comparison to BENCH_serve.json.
+
+use std::time::Instant;
+
+use crate::bench::table::{fmt_speedup, fmt_time, Table};
+use crate::coordinator::metrics::Percentiles;
+use crate::serve::{
+    ContinuousBatcher, RequestState, Scheduler, ServeConfig, ServeRequest, WaveScheduler,
+};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+/// Workload shape for one `bench serve` run.
+#[derive(Debug, Clone)]
+pub struct ServeBenchConfig {
+    pub requests: usize,
+    /// Prompt lengths drawn uniformly from `[prompt_min, prompt_max]`.
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    /// `max_new` drawn uniformly from `[max_new_min, max_new_max]` —
+    /// the length skew that makes wave tails expensive.
+    pub max_new_min: usize,
+    pub max_new_max: usize,
+    /// Engine specs assigned round-robin across requests.
+    pub engines: Vec<String>,
+    pub serve: ServeConfig,
+    pub seed: u64,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> ServeBenchConfig {
+        ServeBenchConfig {
+            requests: 32,
+            prompt_min: 32,
+            prompt_max: 1024,
+            max_new_min: 8,
+            max_new_max: 96,
+            engines: vec!["sfa:k=8".into()],
+            serve: ServeConfig::default(),
+            seed: 42,
+        }
+    }
+}
+
+/// One scheduler's measurements over the workload.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub scheduler: String,
+    pub requests: usize,
+    pub failed: usize,
+    pub tokens_out: u64,
+    pub wall_s: f64,
+    pub tok_s: f64,
+    pub ttft: Percentiles,
+    pub token_lat: Percentiles,
+    pub e2e: Percentiles,
+    pub steps: usize,
+    pub peak_pages: usize,
+    pub mean_pages: f64,
+    pub mean_live: f64,
+}
+
+/// Build the deterministic mixed-length request stream.
+pub fn workload(cfg: &ServeBenchConfig) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let vocab = cfg.serve.vocab as u64;
+    (0..cfg.requests)
+        .map(|i| {
+            let plen = rng.range(cfg.prompt_min, cfg.prompt_max + 1);
+            let max_new = rng.range(cfg.max_new_min, cfg.max_new_max + 1);
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            ServeRequest::new(prompt)
+                .max_new(max_new)
+                .engine(&cfg.engines[i % cfg.engines.len()])
+                .seed(i as u64)
+        })
+        .collect()
+}
+
+/// Submit the whole stream, then step the scheduler to completion,
+/// integrating page-occupancy along the way.
+pub fn drive(sched: &mut dyn Scheduler, label: &str, reqs: &[ServeRequest]) -> RunStats {
+    let t0 = Instant::now();
+    for r in reqs {
+        sched.submit(r.clone()).expect("bench workload fits queue and budget");
+    }
+    let mut steps = 0usize;
+    let mut peak_pages = 0usize;
+    let mut sum_pages = 0f64;
+    let mut sum_live = 0f64;
+    while sched.has_work() {
+        let r = sched.step();
+        steps += 1;
+        peak_pages = peak_pages.max(r.pages_in_use);
+        sum_pages += r.pages_in_use as f64;
+        sum_live += r.live as f64;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    sched.metrics_mut().wall_s = wall_s;
+    let finished = sched.take_finished();
+    let failed =
+        finished.iter().filter(|f| matches!(f.state, RequestState::Failed { .. })).count();
+    let m = sched.metrics();
+    RunStats {
+        scheduler: label.to_string(),
+        requests: finished.len(),
+        failed,
+        tokens_out: m.tokens_out,
+        wall_s,
+        tok_s: m.throughput_tok_s(),
+        ttft: m.ttft(),
+        token_lat: m.token_latency(),
+        e2e: m.e2e(),
+        steps,
+        peak_pages,
+        mean_pages: if steps == 0 { 0.0 } else { sum_pages / steps as f64 },
+        mean_live: if steps == 0 { 0.0 } else { sum_live / steps as f64 },
+    }
+}
+
+/// Run the workload through both schedulers and render the comparison.
+pub fn bench_serve(cfg: &ServeBenchConfig) -> (Table, Vec<RunStats>) {
+    let reqs = workload(cfg);
+    let mut wave = WaveScheduler::new(cfg.serve);
+    let wave_stats = drive(&mut wave, "wave", &reqs);
+    let mut cont = ContinuousBatcher::new(cfg.serve);
+    let cont_stats = drive(&mut cont, "continuous", &reqs);
+
+    let mut t = Table::new(
+        &format!(
+            "bench serve — wave vs continuous over {} requests \
+             (prompts {}–{}, max_new {}–{}, engines {})",
+            cfg.requests,
+            cfg.prompt_min,
+            cfg.prompt_max,
+            cfg.max_new_min,
+            cfg.max_new_max,
+            cfg.engines.join(";")
+        ),
+        &[
+            "scheduler",
+            "tok/s",
+            "TTFT p50",
+            "TTFT p95",
+            "tok p50",
+            "tok p95",
+            "tok p99",
+            "steps",
+            "peak pages",
+            "mean live",
+        ],
+    );
+    for s in [&wave_stats, &cont_stats] {
+        t.row(vec![
+            s.scheduler.clone(),
+            format!("{:.1}", s.tok_s),
+            fmt_time(s.ttft.p50),
+            fmt_time(s.ttft.p95),
+            fmt_time(s.token_lat.p50),
+            fmt_time(s.token_lat.p95),
+            fmt_time(s.token_lat.p99),
+            s.steps.to_string(),
+            s.peak_pages.to_string(),
+            format!("{:.2}", s.mean_live),
+        ]);
+    }
+    t.row(vec![
+        "speedup".into(),
+        fmt_speedup(cont_stats.tok_s / wave_stats.tok_s.max(1e-12)),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+    ]);
+    (t, vec![wave_stats, cont_stats])
+}
+
+fn pcts_json(p: &Percentiles) -> Json {
+    obj(vec![
+        ("p50_s", Json::from(p.p50)),
+        ("p95_s", Json::from(p.p95)),
+        ("p99_s", Json::from(p.p99)),
+    ])
+}
+
+fn stats_json(s: &RunStats) -> Json {
+    obj(vec![
+        ("scheduler", Json::from(s.scheduler.as_str())),
+        ("requests", Json::from(s.requests)),
+        ("failed", Json::from(s.failed)),
+        ("tokens_out", Json::from(s.tokens_out as usize)),
+        ("wall_s", Json::from(s.wall_s)),
+        ("tokens_per_s", Json::from(s.tok_s)),
+        ("ttft", pcts_json(&s.ttft)),
+        ("token_latency", pcts_json(&s.token_lat)),
+        ("e2e", pcts_json(&s.e2e)),
+        ("steps", Json::from(s.steps)),
+        ("peak_pages", Json::from(s.peak_pages)),
+        ("mean_pages", Json::from(s.mean_pages)),
+        ("mean_live", Json::from(s.mean_live)),
+    ])
+}
+
+/// The BENCH_serve.json document: workload shape, both runs, speedup.
+pub fn to_json(cfg: &ServeBenchConfig, runs: &[RunStats]) -> String {
+    let speedup = match (runs.iter().find(|r| r.scheduler == "wave"),
+        runs.iter().find(|r| r.scheduler == "continuous"))
+    {
+        (Some(w), Some(c)) if w.tok_s > 0.0 => c.tok_s / w.tok_s,
+        _ => 0.0,
+    };
+    obj(vec![
+        (
+            "workload",
+            obj(vec![
+                ("requests", Json::from(cfg.requests)),
+                ("prompt_min", Json::from(cfg.prompt_min)),
+                ("prompt_max", Json::from(cfg.prompt_max)),
+                ("max_new_min", Json::from(cfg.max_new_min)),
+                ("max_new_max", Json::from(cfg.max_new_max)),
+                (
+                    "engines",
+                    Json::Arr(cfg.engines.iter().map(|e| Json::from(e.as_str())).collect()),
+                ),
+                ("max_lanes", Json::from(cfg.serve.max_lanes)),
+                ("max_pages", Json::from(cfg.serve.max_pages)),
+                ("page_size", Json::from(cfg.serve.page_size)),
+                ("heads", Json::from(cfg.serve.heads)),
+                ("d", Json::from(cfg.serve.d)),
+                ("seed", Json::from(cfg.seed as usize)),
+            ]),
+        ),
+        ("runs", Json::Arr(runs.iter().map(stats_json).collect())),
+        ("speedup_tokens_per_s", Json::from(speedup)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ServeBenchConfig {
+        ServeBenchConfig {
+            requests: 6,
+            prompt_min: 4,
+            prompt_max: 16,
+            max_new_min: 2,
+            max_new_max: 6,
+            engines: vec!["dense".into(), "sfa:k=4".into()],
+            serve: ServeConfig {
+                heads: 2,
+                d: 8,
+                vocab: 32,
+                page_size: 4,
+                max_pages: 512,
+                max_lanes: 3,
+                queue_capacity: 64,
+                max_seq: 128,
+                model_seed: 7,
+            },
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn bench_serve_completes_and_serializes() {
+        let cfg = tiny();
+        let (table, runs) = bench_serve(&cfg);
+        assert_eq!(runs.len(), 2);
+        for r in &runs {
+            assert_eq!(r.requests, cfg.requests, "{}: every request terminates", r.scheduler);
+            assert_eq!(r.failed, 0, "{}", r.scheduler);
+            assert!(r.tokens_out > 0 && r.steps > 0 && r.peak_pages > 0);
+        }
+        // Identical request streams ⇒ identical token counts; only the
+        // schedule differs.
+        assert_eq!(runs[0].tokens_out, runs[1].tokens_out);
+        assert!(runs.iter().all(|r| r.mean_pages > 0.0 && r.mean_live > 0.0));
+        let rendered = table.render();
+        assert!(rendered.contains("continuous") && rendered.contains("wave"), "{rendered}");
+        let doc = to_json(&cfg, &runs);
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.get("runs").unwrap().as_arr().unwrap().len(), 2);
+        assert!(j.get("speedup_tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.get("workload").unwrap().get("requests").unwrap().as_usize().unwrap(),
+            6
+        );
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_in_range() {
+        let cfg = tiny();
+        let a = workload(&cfg);
+        let b = workload(&cfg);
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+            assert!((cfg.prompt_min..=cfg.prompt_max).contains(&x.prompt.len()));
+            assert!((cfg.max_new_min..=cfg.max_new_max).contains(&x.max_new));
+        }
+        // Round-robin engine assignment.
+        assert_eq!(a[0].engine, "dense");
+        assert_eq!(a[1].engine, "sfa:k=4");
+        assert_eq!(a[2].engine, "dense");
+    }
+}

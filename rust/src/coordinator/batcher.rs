@@ -2,30 +2,51 @@
 //!
 //! Requests accumulate until either `max_batch` are waiting (fire a
 //! full batch) or the oldest request has waited `max_wait` (fire a
-//! partial batch padded with idle slots). This is the classic
-//! continuous-batching admission rule; wave execution is handled by
+//! partial batch padded with idle slots). Wave execution is handled by
 //! the engine.
+//!
+//! **Deprecated path**: this queue feeds the wave-synchronous
+//! coordinator. The primary serving API is `crate::serve` (a
+//! request-lifecycle scheduler with true continuous batching); the
+//! batcher remains as the wave shim's admission queue and now shares
+//! the serve API's typed backpressure
+//! ([`ServeError::QueueFull`](crate::serve::ServeError)).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::GenRequest;
+use crate::serve::ServeError;
 
 #[derive(Debug)]
 pub struct Batcher {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Queue bound: `push` fails with a typed error beyond it.
+    pub capacity: usize,
     queue: VecDeque<GenRequest>,
 }
 
 impl Batcher {
+    /// Unbounded admission queue (in-process tooling and benches).
     pub fn new(max_batch: usize, max_wait: Duration) -> Batcher {
-        assert!(max_batch >= 1);
-        Batcher { max_batch, max_wait, queue: VecDeque::new() }
+        Batcher::bounded(max_batch, max_wait, usize::MAX)
     }
 
-    pub fn push(&mut self, req: GenRequest) {
+    /// Bounded admission queue — the router's default, so backpressure
+    /// surfaces to submitters instead of growing memory.
+    pub fn bounded(max_batch: usize, max_wait: Duration, capacity: usize) -> Batcher {
+        assert!(max_batch >= 1);
+        assert!(capacity >= 1);
+        Batcher { max_batch, max_wait, capacity, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: GenRequest) -> Result<(), ServeError> {
+        if self.queue.len() >= self.capacity {
+            return Err(ServeError::QueueFull { capacity: self.capacity });
+        }
         self.queue.push_back(req);
+        Ok(())
     }
 
     pub fn pending(&self) -> usize {
@@ -72,10 +93,10 @@ mod tests {
     #[test]
     fn fires_on_full_batch() {
         let mut b = Batcher::new(2, Duration::from_secs(3600));
-        b.push(req(0));
+        b.push(req(0)).unwrap();
         let now = Instant::now();
         assert!(b.next_batch(now).is_none());
-        b.push(req(1));
+        b.push(req(1)).unwrap();
         let batch = b.next_batch(now).unwrap();
         assert_eq!(batch.len(), 2);
         assert_eq!(b.pending(), 0);
@@ -84,7 +105,7 @@ mod tests {
     #[test]
     fn fires_on_deadline_with_partial_batch() {
         let mut b = Batcher::new(8, Duration::from_millis(0));
-        b.push(req(0));
+        b.push(req(0)).unwrap();
         let batch = b.next_batch(Instant::now()).unwrap();
         assert_eq!(batch.len(), 1);
     }
@@ -93,7 +114,7 @@ mod tests {
     fn respects_max_batch_when_overfull() {
         let mut b = Batcher::new(2, Duration::from_secs(3600));
         for i in 0..5 {
-            b.push(req(i));
+            b.push(req(i)).unwrap();
         }
         let batch = b.next_batch(Instant::now()).unwrap();
         assert_eq!(batch.len(), 2);
@@ -108,14 +129,55 @@ mod tests {
         let b = Batcher::new(1, Duration::from_millis(0));
         assert!(!b.ready(Instant::now()));
         assert!(b.time_to_deadline(Instant::now()).is_none());
+        // An empty queue also reports no pending work after a drain.
+        let mut b = Batcher::new(1, Duration::from_millis(0));
+        b.push(req(0)).unwrap();
+        assert!(b.next_batch(Instant::now()).is_some());
+        assert!(!b.ready(Instant::now()));
+        assert!(b.next_batch(Instant::now()).is_none());
     }
 
     #[test]
     fn deadline_countdown() {
         let mut b = Batcher::new(8, Duration::from_secs(10));
-        b.push(req(0));
+        b.push(req(0)).unwrap();
         let ttl = b.time_to_deadline(Instant::now()).unwrap();
         assert!(ttl <= Duration::from_secs(10));
         assert!(ttl >= Duration::from_secs(9));
+    }
+
+    #[test]
+    fn exactly_at_deadline_fires_and_counts_down_to_zero() {
+        let mut b = Batcher::new(8, Duration::from_secs(10));
+        b.push(req(0)).unwrap();
+        assert!(b.next_batch(Instant::now()).is_none(), "long deadline: not ready yet");
+        // Reconstruct the exact deadline instant from the queued
+        // request's own submission time.
+        let mut b = Batcher::new(8, Duration::from_millis(250));
+        let r = req(0);
+        let at_deadline = r.submitted + Duration::from_millis(250);
+        b.push(r).unwrap();
+        assert_eq!(b.time_to_deadline(at_deadline), Some(Duration::ZERO));
+        assert!(b.ready(at_deadline), ">= semantics: the deadline instant itself fires");
+        assert_eq!(b.next_batch(at_deadline).unwrap().len(), 1);
+        // Past the deadline the countdown saturates at zero.
+        let mut b = Batcher::new(8, Duration::from_millis(1));
+        let r = req(1);
+        let late = r.submitted + Duration::from_secs(5);
+        b.push(r).unwrap();
+        assert_eq!(b.time_to_deadline(late), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn bounded_queue_reports_queue_full() {
+        use crate::serve::ServeError;
+        let mut b = Batcher::bounded(4, Duration::from_secs(1), 2);
+        b.push(req(0)).unwrap();
+        b.push(req(1)).unwrap();
+        assert_eq!(b.push(req(2)), Err(ServeError::QueueFull { capacity: 2 }));
+        assert_eq!(b.pending(), 2, "rejected request is not enqueued");
+        // Draining makes room again.
+        let _ = b.next_batch(Instant::now() + Duration::from_secs(2));
+        b.push(req(3)).unwrap();
     }
 }

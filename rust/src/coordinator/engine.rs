@@ -98,6 +98,16 @@ impl<'rt> Engine<'rt> {
     /// Execute one wave over up to `batch_size` requests. Padding slots
     /// (when the batcher fires a partial batch) replay slot 0's prompt
     /// and are discarded.
+    ///
+    /// **Deprecated**: wave execution is structurally synchronous — a
+    /// finished slot keeps decoding (and holds its cache tensors) until
+    /// the slowest request completes, and responses block until wave
+    /// end. `serve::ContinuousBatcher` schedules mixed prefill/decode
+    /// steps with per-token streaming and mid-wave page eviction.
+    #[deprecated(
+        note = "wave-synchronous path; use serve::ContinuousBatcher \
+                (request-lifecycle API) for new code"
+    )]
     pub fn run_wave(&mut self, requests: &[GenRequest], worker: usize) -> Result<Vec<GenResponse>> {
         if requests.is_empty() || requests.len() > self.batch_size {
             bail!("wave must have 1..={} requests", self.batch_size);

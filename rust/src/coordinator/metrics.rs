@@ -1,29 +1,77 @@
-//! Serving metrics: TTFT / TPOT / end-to-end latency / throughput —
-//! the quantities behind the paper's "Decode" and "Forward" latency
-//! columns (Tables 1/10) and the Speed@N multipliers (Table 2).
+//! Serving metrics: TTFT / TPOT / per-token latency / end-to-end
+//! latency / throughput — the quantities behind the paper's "Decode"
+//! and "Forward" latency columns (Tables 1/10) and the Speed@N
+//! multipliers (Table 2). Shared by the legacy wave coordinator, the
+//! `serve` schedulers, and `bench serve`.
 
 use crate::coordinator::request::GenResponse;
-use crate::util::stats::{mean, median, quantile};
+use crate::util::stats::{mean, quantile};
+
+/// p50/p95/p99 summary of one latency distribution (seconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Percentiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Percentiles {
+    /// Compute from raw samples; all-zero for an empty slice.
+    pub fn of(xs: &[f64]) -> Percentiles {
+        if xs.is_empty() {
+            return Percentiles::default();
+        }
+        Percentiles {
+            p50: quantile(xs, 0.50),
+            p95: quantile(xs, 0.95),
+            p99: quantile(xs, 0.99),
+        }
+    }
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct ServeMetrics {
+    /// Time to first token per request (queue wait + prefill), s.
     pub ttft_s: Vec<f64>,
+    /// Per-request mean time-per-output-token over the decode phase, s.
     pub tpot_s: Vec<f64>,
+    /// Streaming inter-token latencies (one sample per decode-step
+    /// token, across all requests), s.
+    pub token_lat_s: Vec<f64>,
+    /// End-to-end latency per request, s.
     pub total_s: Vec<f64>,
     pub tokens_out: u64,
     pub requests: u64,
+    pub failed: u64,
     pub wall_s: f64,
 }
 
 impl ServeMetrics {
+    /// Record a finished wave-API response.
     pub fn record(&mut self, r: &GenResponse) {
-        self.ttft_s.push(r.ttft_s);
-        if r.tokens.len() > 1 {
-            self.tpot_s.push(r.tpot_s());
+        self.record_finished(r.ttft_s, r.total_s, r.tokens.len());
+    }
+
+    /// Record a finished request by its raw quantities (the serve-API
+    /// path — no `GenResponse` envelope). TPOT is derived with the same
+    /// definition as [`GenResponse::tpot_s`].
+    pub fn record_finished(&mut self, ttft_s: f64, total_s: f64, tokens: usize) {
+        self.ttft_s.push(ttft_s);
+        self.total_s.push(total_s);
+        if tokens > 1 {
+            self.tpot_s.push((total_s - ttft_s) / (tokens - 1) as f64);
         }
-        self.total_s.push(r.total_s);
-        self.tokens_out += r.tokens.len() as u64;
+        self.tokens_out += tokens as u64;
         self.requests += 1;
+    }
+
+    /// Record one streaming inter-token latency sample.
+    pub fn record_token_latency(&mut self, s: f64) {
+        self.token_lat_s.push(s);
+    }
+
+    pub fn record_failed(&mut self) {
+        self.failed += 1;
     }
 
     pub fn throughput_tok_s(&self) -> f64 {
@@ -33,22 +81,52 @@ impl ServeMetrics {
         self.tokens_out as f64 / self.wall_s
     }
 
+    /// Time-to-first-token percentiles.
+    pub fn ttft(&self) -> Percentiles {
+        Percentiles::of(&self.ttft_s)
+    }
+
+    /// Streaming inter-token latency percentiles (falls back to the
+    /// per-request TPOT samples when no streaming samples were taken —
+    /// the wave path records only TPOT).
+    pub fn token_latency(&self) -> Percentiles {
+        if self.token_lat_s.is_empty() {
+            Percentiles::of(&self.tpot_s)
+        } else {
+            Percentiles::of(&self.token_lat_s)
+        }
+    }
+
+    /// End-to-end request latency percentiles.
+    pub fn e2e(&self) -> Percentiles {
+        Percentiles::of(&self.total_s)
+    }
+
     pub fn summary(&self) -> String {
-        if self.requests == 0 {
+        if self.requests == 0 && self.failed == 0 {
             return "no requests served".into();
         }
+        let ttft = self.ttft();
+        let tok = self.token_latency();
+        let e2e = self.e2e();
         format!(
-            "requests={} tokens={} wall={:.2}s thpt={:.1} tok/s | \
-             TTFT p50={:.1}ms p95={:.1}ms | TPOT p50={:.1}ms | e2e p50={:.1}ms mean={:.1}ms",
+            "requests={} failed={} tokens={} wall={:.2}s thpt={:.1} tok/s | \
+             TTFT p50={:.1}ms p95={:.1}ms p99={:.1}ms | \
+             tok p50={:.1}ms p95={:.1}ms p99={:.1}ms | \
+             e2e p50={:.1}ms mean={:.1}ms",
             self.requests,
+            self.failed,
             self.tokens_out,
             self.wall_s,
             self.throughput_tok_s(),
-            median(&self.ttft_s) * 1e3,
-            quantile(&self.ttft_s, 0.95) * 1e3,
-            if self.tpot_s.is_empty() { 0.0 } else { median(&self.tpot_s) * 1e3 },
-            median(&self.total_s) * 1e3,
-            mean(&self.total_s) * 1e3,
+            ttft.p50 * 1e3,
+            ttft.p95 * 1e3,
+            ttft.p99 * 1e3,
+            tok.p50 * 1e3,
+            tok.p95 * 1e3,
+            tok.p99 * 1e3,
+            e2e.p50 * 1e3,
+            if self.total_s.is_empty() { 0.0 } else { mean(&self.total_s) * 1e3 },
         )
     }
 }
@@ -79,6 +157,7 @@ mod tests {
         assert!((m.throughput_tok_s() - 15.0).abs() < 1e-9);
         let s = m.summary();
         assert!(s.contains("requests=2"), "{s}");
+        assert!(s.contains("p99"), "{s}");
     }
 
     #[test]
@@ -86,6 +165,8 @@ mod tests {
         let m = ServeMetrics::default();
         assert_eq!(m.summary(), "no requests served");
         assert_eq!(m.throughput_tok_s(), 0.0);
+        assert_eq!(m.ttft(), Percentiles::default());
+        assert_eq!(m.token_latency(), Percentiles::default());
     }
 
     #[test]
@@ -93,5 +174,33 @@ mod tests {
         let mut m = ServeMetrics::default();
         m.record(&resp(1, 0.1, 0.1));
         assert!(m.tpot_s.is_empty());
+    }
+
+    #[test]
+    fn percentiles_of_known_distribution() {
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        let p = Percentiles::of(&xs);
+        assert_eq!(p.p50, 50.0);
+        assert!((p.p95 - 95.0).abs() < 1e-9);
+        assert!((p.p99 - 99.0).abs() < 1e-9);
+        assert_eq!(Percentiles::of(&[]), Percentiles::default());
+    }
+
+    #[test]
+    fn serve_path_recording() {
+        let mut m = ServeMetrics::default();
+        m.record_finished(0.2, 1.2, 11);
+        m.record_token_latency(0.05);
+        m.record_token_latency(0.07);
+        m.record_failed();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.tokens_out, 11);
+        // TPOT derived: (1.2 - 0.2) / 10.
+        assert!((m.tpot_s[0] - 0.1).abs() < 1e-12);
+        // Streaming samples win over derived TPOT for token latency.
+        assert!((m.token_latency().p50 - 0.06).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("failed=1"), "{s}");
     }
 }

@@ -1,15 +1,19 @@
-//! The serving coordinator — L3's systems contribution, shaped like a
-//! miniature vLLM router/worker stack:
+//! The wave coordinator — **deprecated as a public serving API** in
+//! favor of [`crate::serve`] (the request-lifecycle scheduler with
+//! continuous batching over `AttentionSession`; see ARCHITECTURE.md
+//! §Serving lifecycle). The wave path remains as a thin shim for
+//! driving the AOT artifact executables:
 //!
 //! * [`request`] — request/response types
-//! * [`batcher`] — admission queue + batch former (size/deadline policy)
+//! * [`batcher`] — admission queue + batch former (size/deadline
+//!   policy), now bounded with typed `QueueFull` backpressure
 //! * [`engine`] — generation engine: drives the AOT prefill/decode
 //!   executables for one batch wave (sparse or dense KV caches live
-//!   inside the executable's cache tensors)
+//!   inside the executable's cache tensors); `run_wave` is deprecated
 //! * [`router`] — multi-worker dispatch: each worker owns a PJRT
 //!   runtime on its own thread; requests flow through the shared queue
-//! * [`metrics`] — TTFT / TTNT / throughput accounting (the serving
-//!   quantities Tables 1/10 report)
+//! * [`metrics`] — TTFT / per-token / p50-p95-p99 latency accounting,
+//!   shared with the serve schedulers and `bench serve`
 
 pub mod batcher;
 pub mod engine;

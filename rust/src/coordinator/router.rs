@@ -3,6 +3,16 @@
 //! PJRT handles are !Send, so workers own their runtimes end-to-end —
 //! the same process-per-device shape as a vLLM deployment, collapsed
 //! onto threads for the CPU testbed).
+//!
+//! **Deprecated**: this is the wave-synchronous serving path — a
+//! finished sequence holds its batch slot (and the executable's cache
+//! tensors) until the slowest request in its wave completes, and the
+//! response is one blocking `GenResponse`. The primary serving API is
+//! [`crate::serve`]: a request-lifecycle scheduler with per-token
+//! streaming, typed errors, and true continuous batching over
+//! `AttentionSession`. The router remains for driving the AOT artifact
+//! engines; its submit queue is now bounded, surfacing
+//! [`ServeError::QueueFull`] backpressure like the serve API.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -14,6 +24,7 @@ use crate::coordinator::batcher::Batcher;
 use crate::coordinator::engine::{Engine, Sampling};
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::runtime::Runtime;
+use crate::serve::ServeError;
 
 struct Shared {
     queue: Mutex<(Batcher, bool)>, // (batcher, shutdown)
@@ -36,12 +47,23 @@ pub struct RouterConfig {
     pub batch_size: usize,
     pub max_wait: Duration,
     pub sampling_temperature: Option<f32>,
+    /// Submit-queue bound: [`Router::submit`] returns
+    /// [`ServeError::QueueFull`] beyond it instead of growing
+    /// unboundedly.
+    pub queue_capacity: usize,
 }
 
 impl Router {
+    #[deprecated(
+        note = "wave-synchronous serving path; use serve::ContinuousBatcher \
+                (the request-lifecycle API) for new code"
+    )]
     pub fn start(cfg: RouterConfig) -> Router {
         let shared = Arc::new(Shared {
-            queue: Mutex::new((Batcher::new(cfg.batch_size, cfg.max_wait), false)),
+            queue: Mutex::new((
+                Batcher::bounded(cfg.batch_size, cfg.max_wait, cfg.queue_capacity),
+                false,
+            )),
             cv: Condvar::new(),
         });
         let workers = (0..cfg.workers)
@@ -61,8 +83,13 @@ impl Router {
         }
     }
 
-    /// Submit a prompt; returns the channel the response arrives on.
-    pub fn submit(&self, prompt: Vec<i32>, max_new: usize) -> Receiver<GenResponse> {
+    /// Submit a prompt; returns the channel the response arrives on,
+    /// or typed backpressure when the queue is at capacity.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+    ) -> std::result::Result<Receiver<GenResponse>, ServeError> {
         let (tx, rx): (Sender<GenResponse>, Receiver<GenResponse>) = channel();
         let id = self
             .next_id
@@ -71,10 +98,10 @@ impl Router {
         req.reply = Some(tx);
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.0.push(req);
+            q.0.push(req)?;
         }
         self.shared.cv.notify_one();
-        rx
+        Ok(rx)
     }
 
     /// Graceful shutdown: drain the queue, join workers.
@@ -91,6 +118,7 @@ impl Router {
     }
 }
 
+#[allow(deprecated)] // the worker drives the deprecated wave engine
 fn worker_loop(worker: usize, shared: Arc<Shared>, cfg: RouterConfig) -> Result<()> {
     // Each worker owns its runtime (PJRT handles are thread-local).
     let runtime = Runtime::new(&cfg.artifact_dir)?;

@@ -193,6 +193,23 @@ impl PagedKvCache {
         self.tables.get(&seq).map(|(_, l)| *l)
     }
 
+    /// Pages currently mapped by one sequence's page table.
+    pub fn seq_pages(&self, seq: SeqId) -> Option<usize> {
+        self.tables.get(&seq).map(|(t, _)| t.len())
+    }
+
+    /// Hard page cap this cache was constructed with.
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+
+    /// Pages still allocatable before [`PageError::OutOfPages`]: the
+    /// recycled free list plus the never-allocated headroom below the
+    /// cap.
+    pub fn pages_free(&self) -> usize {
+        self.free_list.len() + (self.max_pages - self.pages.len())
+    }
+
     pub fn pages_in_use(&self) -> usize {
         self.pages.len() - self.free_list.len()
     }
@@ -294,6 +311,25 @@ mod tests {
             assert_eq!(sl[0], i as f32);
         }
         assert_eq!(c.token_slices(99).unwrap_err(), PageError::UnknownSeq);
+    }
+
+    #[test]
+    fn page_budget_accounting() {
+        let layout = SlotLayout::Dense { d: 2, d_v: 2 };
+        let mut c = PagedKvCache::new(4, 2, layout);
+        assert_eq!(c.max_pages(), 4);
+        assert_eq!(c.pages_free(), 4);
+        let s = c.create_seq();
+        for _ in 0..3 {
+            c.append(s, &payload(layout, 1.0)).unwrap();
+        }
+        assert_eq!(c.seq_pages(s), Some(2));
+        assert_eq!(c.pages_free(), 2);
+        assert_eq!(c.pages_in_use() + c.pages_free(), c.max_pages());
+        c.free(s).unwrap();
+        // Recycled pages return to the allocatable budget.
+        assert_eq!(c.pages_free(), 4);
+        assert_eq!(c.seq_pages(s), None);
     }
 
     #[test]

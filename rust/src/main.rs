@@ -3,22 +3,28 @@
 //! Subcommands:
 //!   info                         artifact/manifest summary
 //!   train   --variant V          train one variant, log losses
-//!   serve   --requests N         synthetic serving load through the router
+//!   serve   --requests N         request-lifecycle serving (continuous batching
+//!                                over AttentionSession; --legacy for the old
+//!                                artifact-driven wave router)
 //!   exp     table1|table2|table3|fig8|table12     training experiments
-//!   bench   fig1|fig3|fig5|fig6|table6|table7|table8|table9|table10|engines
+//!   bench   fig1|fig3|fig5|fig6|table6|table7|table8|table9|table10|engines|serve
 //!   analyze entropy|svd|memory|session   Fig 7 / Fig 11 / App J / session demo
 //!
 //! Attention engines are addressed by registry spec strings
 //! (`--engine "sfa:k=8,bq=64,bk=64"`, `--engines "a;b;c"`); every
 //! `bench` invocation also writes the measurements it took to
-//! BENCH_attention.json (override with --bench-json PATH).
+//! BENCH_attention.json (override with --bench-json PATH), and
+//! `bench serve` writes the continuous-vs-wave scheduling comparison
+//! to BENCH_serve.json (override with --serve-json PATH).
 
 use anyhow::{bail, Result};
 
 use sfa::bench::figures;
+use sfa::bench::serve_bench::{self, ServeBenchConfig};
 use sfa::coordinator::router::{Router, RouterConfig};
 use sfa::coordinator::ServeMetrics;
 use sfa::runtime::{HostTensor, Runtime};
+use sfa::serve::{ContinuousBatcher, ServeConfig, WaveScheduler};
 use sfa::train::corpus::CorpusKind;
 use sfa::train::experiments;
 use sfa::train::trainer::Trainer;
@@ -30,11 +36,19 @@ sfa — Sparse Feature Attention coordinator
 USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
   sfa info    [--artifacts DIR]
   sfa train   [--artifacts DIR] --variant sfa_k8 --steps 100 --lr 1e-3 --corpus zipf|niah
-  sfa serve   [--artifacts DIR] --variant sfa_k8 --requests 16 --workers 2 --batch 4 --max-new 16
+  sfa serve   --requests 16 --scheduler continuous|wave --engines \"SPEC;SPEC\"
+              --prompt-min 16 --prompt-max 256 --max-new-min 8 --max-new-max 32
+              --lanes 8 --page-size 16 --max-pages 4096   (synthetic load,
+              request-lifecycle API over AttentionSession — no artifacts needed)
+  sfa serve   --legacy [--artifacts DIR] --variant sfa_k8 --requests 16 --workers 2
+              --batch 4 --max-new 16 --queue-capacity 1024   (deprecated wave router)
   sfa exp     table1|table2|table3|fig8|table12 [--steps N] [--artifacts DIR]
   sfa bench   fig1|fig3|fig5|fig6|table6|table7|table8|table9|table10|engines
               [--budget SECS] [--engine SPEC] [--engines \"SPEC;SPEC;...\"]
               [--bench-json PATH]   (writes BENCH_attention.json)
+  sfa bench   serve [--requests 32] [--prompt-min 32] [--prompt-max 1024]
+              [--max-new-min 8] [--max-new-max 96] [--engines \"SPEC;...\"]
+              [--serve-json PATH]   (continuous vs wave, writes BENCH_serve.json)
   sfa analyze entropy|svd|memory|session [--variant V] [--steps N] [--engine SPEC]
 engine SPECs: dense | flash_dense:bq=64,bk=64 | sfa:k=8,bq=64,bk=64 | sfa_ref:k=8
               | window:w=256,scorer=sfa_k8 | lowrank:r=16 | mla:r=16
@@ -109,7 +123,137 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Assemble the serve-stack geometry/policy config from CLI options.
+fn serve_config(args: &Args) -> Result<ServeConfig> {
+    let cfg = ServeConfig {
+        heads: args.usize_or("heads", 4)?,
+        d: args.usize_or("d", 32)?,
+        vocab: args.usize_or("vocab", 64)?,
+        page_size: args.usize_or("page-size", 16)?,
+        max_pages: args.usize_or("max-pages", 4096)?,
+        max_lanes: args.usize_or("lanes", 8)?,
+        queue_capacity: args.usize_or("queue-capacity", 4096)?,
+        max_seq: args.usize_or("max-seq", 4096)?,
+        model_seed: args.u64_or("model-seed", 0x5FA)?,
+    };
+    if cfg.heads < 1 || cfg.d < 1 || cfg.vocab < 2 {
+        bail!("--heads/--d must be >= 1 and --vocab >= 2");
+    }
+    if cfg.page_size < 1 || cfg.max_pages < 1 || cfg.max_lanes < 1 || cfg.queue_capacity < 1 {
+        bail!("--page-size, --max-pages, --lanes, and --queue-capacity must be >= 1");
+    }
+    if cfg.max_seq < 2 {
+        bail!("--max-seq must be >= 2 (one prompt token plus one generated token)");
+    }
+    Ok(cfg)
+}
+
+/// Assemble a serve workload from CLI options (shared by `sfa serve`
+/// and `sfa bench serve`; defaults differ per caller).
+fn serve_workload_cfg(
+    args: &Args,
+    requests: usize,
+    prompt_range: (usize, usize),
+    max_new_range: (usize, usize),
+) -> Result<ServeBenchConfig> {
+    let cfg = ServeBenchConfig {
+        requests: args.usize_or("requests", requests)?,
+        prompt_min: args.usize_or("prompt-min", prompt_range.0)?,
+        prompt_max: args.usize_or("prompt-max", prompt_range.1)?,
+        max_new_min: args.usize_or("max-new-min", max_new_range.0)?,
+        max_new_max: args.usize_or("max-new-max", args.usize_or("max-new", max_new_range.1)?)?,
+        engines: parse_spec_list(&args.str_or("engines", &args.str_or("engine", "sfa:k=8")))?,
+        serve: serve_config(args)?,
+        seed: args.u64_or("seed", 42)?,
+    };
+    if cfg.requests == 0 || cfg.engines.is_empty() {
+        bail!("need at least one request and one engine spec");
+    }
+    if cfg.prompt_min < 1 || cfg.prompt_min > cfg.prompt_max {
+        bail!("--prompt-min must be in 1..=--prompt-max");
+    }
+    if cfg.max_new_min < 1 || cfg.max_new_min > cfg.max_new_max {
+        bail!("--max-new-min must be in 1..=--max-new-max");
+    }
+    if cfg.prompt_max + cfg.max_new_max > cfg.serve.max_seq {
+        bail!(
+            "--prompt-max {} + --max-new-max {} exceeds --max-seq {}",
+            cfg.prompt_max,
+            cfg.max_new_max,
+            cfg.serve.max_seq
+        );
+    }
+    if cfg.requests > cfg.serve.queue_capacity {
+        bail!(
+            "--requests {} exceeds --queue-capacity {} (the driver submits the whole \
+             workload up front)",
+            cfg.requests,
+            cfg.serve.queue_capacity
+        );
+    }
+    // Worst case over the workload distribution: the largest request
+    // must fit an empty cache, or submission would reject it. Uses the
+    // same formula the scheduler's admission policy reserves by.
+    let worst = sfa::serve::pages_needed(
+        cfg.prompt_max,
+        cfg.max_new_max.min(cfg.serve.max_seq - cfg.prompt_max),
+        cfg.serve.heads,
+        cfg.serve.page_size,
+    );
+    if worst > cfg.serve.max_pages {
+        bail!(
+            "a (prompt {}, max_new {}) request needs up to {} KV pages but --max-pages is {}",
+            cfg.prompt_max,
+            cfg.max_new_max,
+            worst,
+            cfg.serve.max_pages
+        );
+    }
+    Ok(cfg)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.has("legacy") {
+        return cmd_serve_legacy(args);
+    }
+    let cfg = serve_workload_cfg(args, 16, (16, 256), (8, 32))?;
+    let reqs = serve_bench::workload(&cfg);
+    let which = args.str_or("scheduler", "continuous");
+    let stats = match which.as_str() {
+        "continuous" => {
+            let mut s = ContinuousBatcher::new(cfg.serve);
+            serve_bench::drive(&mut s, "continuous", &reqs)
+        }
+        "wave" => {
+            let mut s = WaveScheduler::new(cfg.serve);
+            serve_bench::drive(&mut s, "wave", &reqs)
+        }
+        other => bail!("--scheduler must be continuous or wave, got {other:?}"),
+    };
+    println!(
+        "scheduler={} requests={} failed={} steps={} peak_pages={} mean_live={:.2}",
+        stats.scheduler, stats.requests, stats.failed, stats.steps, stats.peak_pages,
+        stats.mean_live,
+    );
+    println!(
+        "tokens={} wall={:.2}s thpt={:.1} tok/s | TTFT p50={:.1}ms p95={:.1}ms p99={:.1}ms | \
+         tok p50={:.1}ms p95={:.1}ms p99={:.1}ms",
+        stats.tokens_out,
+        stats.wall_s,
+        stats.tok_s,
+        stats.ttft.p50 * 1e3,
+        stats.ttft.p95 * 1e3,
+        stats.ttft.p99 * 1e3,
+        stats.token_lat.p50 * 1e3,
+        stats.token_lat.p95 * 1e3,
+        stats.token_lat.p99 * 1e3,
+    );
+    Ok(())
+}
+
+/// The deprecated artifact-driven wave router, kept behind `--legacy`.
+#[allow(deprecated)]
+fn cmd_serve_legacy(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let variant = args.str_or("variant", "sfa_k8");
     let n_requests = args.usize_or("requests", 16)?;
@@ -128,6 +272,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_size: batch,
         max_wait: std::time::Duration::from_millis(50),
         sampling_temperature: None,
+        queue_capacity: args.usize_or("queue-capacity", 1024)?,
     });
     let mut rng = Rng::new(args.u64_or("seed", 1)?);
     let t0 = std::time::Instant::now();
@@ -137,7 +282,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
             router.submit(prompt, max_new)
         })
-        .collect();
+        .collect::<std::result::Result<_, _>>()?;
     let mut metrics = ServeMetrics::default();
     for rx in rxs {
         let resp = rx.recv()?;
@@ -237,6 +382,17 @@ fn engine_k(args: &Args, default_k: usize) -> Result<usize> {
 fn cmd_bench(args: &Args) -> Result<()> {
     let budget = args.f64_or("budget", 0.5)?;
     match args.command.get(1).map(|s| s.as_str()) {
+        Some("serve") => {
+            // Mixed-length continuous-vs-wave scheduling comparison
+            // (prompts 32–1024 by default, per the serving story).
+            let cfg = serve_workload_cfg(args, 32, (32, 1024), (8, 96))?;
+            let (table, runs) = serve_bench::bench_serve(&cfg);
+            table.print();
+            let path = args.str_or("serve-json", "BENCH_serve.json");
+            std::fs::write(&path, serve_bench::to_json(&cfg, &runs))?;
+            println!("\n[bench] wrote scheduling comparison to {path}");
+            return Ok(());
+        }
         Some("fig1") => {
             figures::fig1(args.usize_or("ctx", 131072)?, engine_k(args, 16)?).print()
         }

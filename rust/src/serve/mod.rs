@@ -1,0 +1,397 @@
+//! The serve subsystem — the repo's primary public serving API: a
+//! **request-lifecycle** surface driving **continuous batching** over
+//! [`AttentionSession`](crate::attention::session::AttentionSession).
+//!
+//! This replaces the coordinator's wave API (`Batcher::next_batch` →
+//! `Engine::run_wave` → one blocking `GenResponse`), which is
+//! structurally wave-synchronous: a finished sequence held its batch
+//! slot and KV pages until the slowest request in its wave completed.
+//! Here the unit of scheduling is the *request*, not the wave:
+//!
+//! * [`ServeRequest`] — builder: prompt, `max_new`, engine spec string
+//!   (any [`registry`](crate::attention::registry) family), sampling,
+//!   stop conditions, streaming event sink;
+//! * [`RequestState`] — typed lifecycle, `Queued → Prefilling →
+//!   Decoding → Finished{reason} / Failed{error}`;
+//! * [`ServeEvent`] — per-token streaming over a channel instead of one
+//!   blocking response;
+//! * [`Scheduler`] — the policy trait; [`ContinuousBatcher`] admits
+//!   sequences into a live decode wave at their own prefill boundary
+//!   under a page-budget admission policy and evicts finished
+//!   sequences' pages mid-wave; [`WaveScheduler`] reproduces the old
+//!   wave semantics over the same substrate as the bench baseline;
+//! * [`ToyLm`] — the deterministic, artifact-free model the schedulers
+//!   drive (bit-for-bit independent of batch composition, which is
+//!   what makes the greedy solo-vs-batched equivalence testable).
+//!
+//! See ARCHITECTURE.md §"Serving lifecycle" for the state machine and
+//! the admission rules, and `sfa bench serve` for the continuous-vs-
+//! wave comparison (BENCH_serve.json).
+
+pub mod model;
+pub mod request;
+pub mod scheduler;
+pub mod wave;
+
+pub use model::ToyLm;
+pub use request::{
+    FinishReason, FinishedRequest, RequestId, RequestState, ServeError, ServeEvent,
+    ServeRequest, ServeSampling,
+};
+pub use scheduler::{pages_needed, ContinuousBatcher, Scheduler, ServeConfig, StepReport};
+pub use wave::WaveScheduler;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ServeConfig {
+        ServeConfig {
+            heads: 2,
+            d: 8,
+            vocab: 32,
+            page_size: 4,
+            max_pages: 512,
+            max_lanes: 4,
+            queue_capacity: 64,
+            max_seq: 256,
+            model_seed: 7,
+        }
+    }
+
+    fn prompt(seed: u64, len: usize, vocab: usize) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.below(vocab as u64) as i32).collect()
+    }
+
+    fn solo_tokens(p: &[i32], max_new: usize, spec: &str) -> Vec<i32> {
+        let mut s = ContinuousBatcher::new(tiny_cfg());
+        let id = s
+            .submit(ServeRequest::new(p.to_vec()).max_new(max_new).engine(spec))
+            .unwrap();
+        let fin = s.run_to_completion();
+        let f = fin.iter().find(|f| f.id == id).unwrap();
+        assert!(matches!(f.state, RequestState::Finished { .. }), "{:?}", f.state);
+        f.tokens.clone()
+    }
+
+    /// The headline invariant: a sequence admitted into a *busy*
+    /// continuous batch (joining a live decode wave at its own prefill
+    /// boundary) produces, under greedy sampling, exactly the token
+    /// stream of a solo run — bit-for-bit, first token included.
+    #[test]
+    fn admitted_sequence_matches_solo_run_bit_for_bit() {
+        let spec = "sfa:k=4,bq=8,bk=8";
+        let target = prompt(3, 13, 32);
+        let solo = solo_tokens(&target, 8, spec);
+        assert_eq!(solo.len(), 8);
+
+        let mut s = ContinuousBatcher::new(tiny_cfg());
+        s.submit(ServeRequest::new(prompt(1, 29, 32)).max_new(20).engine(spec)).unwrap();
+        s.submit(ServeRequest::new(prompt(2, 7, 32)).max_new(20).engine(spec)).unwrap();
+        s.step();
+        s.step(); // both neighbours are now mid-decode
+        assert_eq!(s.live(), 2);
+        let id = s
+            .submit(ServeRequest::new(target.clone()).max_new(8).engine(spec))
+            .unwrap();
+        let fin = s.run_to_completion();
+        let f = fin.iter().find(|f| f.id == id).unwrap();
+        assert_eq!(f.tokens, solo, "greedy decode must not depend on batch composition");
+        assert!(matches!(
+            f.state,
+            RequestState::Finished { reason: FinishReason::MaxTokens }
+        ));
+        assert!(f.ttft_s >= 0.0 && f.total_s >= f.ttft_s);
+    }
+
+    /// Same workload through both schedulers: wave scheduling changes
+    /// latency and page residency, never tokens.
+    #[test]
+    fn wave_and_continuous_agree_on_greedy_streams() {
+        for spec in ["dense", "sfa:k=4"] {
+            let reqs: Vec<(Vec<i32>, usize)> =
+                (0..3).map(|i| (prompt(10 + i, 6 + 5 * i as usize, 32), 3 + i as usize)).collect();
+            let mut cont = ContinuousBatcher::new(tiny_cfg());
+            let mut wave = WaveScheduler::new(tiny_cfg());
+            for (p, m) in &reqs {
+                cont.submit(ServeRequest::new(p.clone()).max_new(*m).engine(spec)).unwrap();
+                wave.submit(ServeRequest::new(p.clone()).max_new(*m).engine(spec)).unwrap();
+            }
+            let mut fc = cont.run_to_completion();
+            let mut fw = wave.run_to_completion();
+            fc.sort_by_key(|f| f.id);
+            fw.sort_by_key(|f| f.id);
+            assert_eq!(fc.len(), 3);
+            for (c, w) in fc.iter().zip(&fw) {
+                assert_eq!(c.id, w.id);
+                assert_eq!(c.tokens, w.tokens, "{spec}: scheduler changed the tokens");
+            }
+        }
+    }
+
+    /// Scheduler invariant: a finished sequence's pages are freed on
+    /// the same step it finishes (mid-wave, while others keep going).
+    #[test]
+    fn finished_lane_pages_are_freed_on_the_finishing_step() {
+        let mut s = ContinuousBatcher::new(tiny_cfg());
+        s.submit(ServeRequest::new(prompt(1, 6, 32)).max_new(3).engine("dense")).unwrap();
+        s.submit(ServeRequest::new(prompt(2, 6, 32)).max_new(12).engine("dense")).unwrap();
+        let mut saw_midwave_free = false;
+        while s.has_work() {
+            let r = s.step();
+            if r.finished > 0 && s.has_work() {
+                assert!(r.pages_freed > 0, "pages must return on the finishing step");
+                assert_eq!(r.live, 1, "the long request keeps decoding");
+                saw_midwave_free = true;
+            }
+        }
+        assert!(saw_midwave_free, "short request should finish mid-wave");
+        assert_eq!(s.pages_in_use(), 0, "idle scheduler holds no pages");
+    }
+
+    /// The wave baseline holds every page until the whole wave ends.
+    #[test]
+    fn wave_holds_pages_until_the_wave_ends() {
+        let mut s = WaveScheduler::new(tiny_cfg());
+        s.submit(ServeRequest::new(prompt(1, 6, 32)).max_new(2).engine("dense")).unwrap();
+        s.submit(ServeRequest::new(prompt(2, 6, 32)).max_new(8).engine("dense")).unwrap();
+        let mut final_free = 0;
+        while s.has_work() {
+            let r = s.step();
+            if s.has_work() {
+                assert_eq!(r.pages_freed, 0, "wave frees nothing mid-flight");
+            } else {
+                assert_eq!(r.finished, 2, "responses delivered at wave end");
+                final_free = r.pages_freed;
+            }
+        }
+        assert!(final_free > 0);
+        assert_eq!(s.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn queue_backpressure_is_a_typed_error() {
+        let cfg = ServeConfig { queue_capacity: 2, ..tiny_cfg() };
+        let mut s = ContinuousBatcher::new(cfg);
+        s.submit(ServeRequest::new(prompt(1, 4, 32)).engine("dense")).unwrap();
+        s.submit(ServeRequest::new(prompt(2, 4, 32)).engine("dense")).unwrap();
+        let e = s.submit(ServeRequest::new(prompt(3, 4, 32)).engine("dense")).unwrap_err();
+        assert_eq!(e, ServeError::QueueFull { capacity: 2 });
+    }
+
+    /// Page-budget admission: a request that fits-but-not-yet waits in
+    /// the queue; one that could never fit fails at submission.
+    #[test]
+    fn page_budget_gates_admission() {
+        // One sequence of (8 prompt + 8 new) needs 2 heads × ⌈16/4⌉ = 8
+        // pages — exactly the whole budget.
+        let cfg = ServeConfig { max_pages: 8, ..tiny_cfg() };
+        let mut s = ContinuousBatcher::new(cfg);
+        let a = s
+            .submit(ServeRequest::new(prompt(1, 8, 32)).max_new(8).engine("dense"))
+            .unwrap();
+        let b = s
+            .submit(ServeRequest::new(prompt(2, 8, 32)).max_new(8).engine("dense"))
+            .unwrap();
+        let r = s.step();
+        assert_eq!(r.admitted, 1, "second request must wait for pages");
+        assert_eq!(s.queued(), 1);
+        let fin = s.run_to_completion();
+        for id in [a, b] {
+            let f = fin.iter().find(|f| f.id == id).unwrap();
+            assert!(matches!(f.state, RequestState::Finished { .. }), "{:?}", f.state);
+        }
+        // 2 heads × ⌈60/4⌉ = 30 pages can never fit an 8-page budget.
+        let e = s
+            .submit(ServeRequest::new(prompt(3, 30, 32)).max_new(30).engine("dense"))
+            .unwrap_err();
+        assert_eq!(e, ServeError::PageBudgetExceeded { needed_pages: 30, budget_pages: 8 });
+    }
+
+    #[test]
+    fn invalid_requests_fail_with_typed_errors() {
+        let mut s = ContinuousBatcher::new(tiny_cfg());
+        assert_eq!(
+            s.submit(ServeRequest::new(vec![]).engine("dense")).unwrap_err(),
+            ServeError::EmptyPrompt
+        );
+        assert_eq!(
+            s.submit(ServeRequest::new(vec![1]).max_new(0).engine("dense")).unwrap_err(),
+            ServeError::NothingToGenerate
+        );
+        assert!(matches!(
+            s.submit(ServeRequest::new(vec![1]).engine("warp")).unwrap_err(),
+            ServeError::BadSpec(_)
+        ));
+        let long = prompt(1, 256, 32);
+        assert!(matches!(
+            s.submit(ServeRequest::new(long).engine("dense")).unwrap_err(),
+            ServeError::PromptTooLong { .. }
+        ));
+        // Parses at submit but the session rejects k > d at admission:
+        // the request fails through the lifecycle, not a panic.
+        let id = s
+            .submit(ServeRequest::new(vec![1, 2, 3]).engine("sfa:k=64"))
+            .unwrap();
+        while s.has_work() {
+            s.step();
+        }
+        assert!(
+            matches!(s.state(id), Some(RequestState::Failed { .. })),
+            "terminal state visible until drained"
+        );
+        let fin = s.take_finished();
+        let f = fin.iter().find(|f| f.id == id).unwrap();
+        assert!(
+            matches!(f.state, RequestState::Failed { error: ServeError::BadSpec(_) }),
+            "{:?}",
+            f.state
+        );
+        assert!(
+            s.state(id).is_none(),
+            "take_finished prunes terminal lifecycle entries (bounded memory)"
+        );
+    }
+
+    #[test]
+    fn stop_tokens_end_generation_early() {
+        let p = prompt(5, 9, 32);
+        let solo = solo_tokens(&p, 6, "dense");
+        let mut s = ContinuousBatcher::new(tiny_cfg());
+        let id = s
+            .submit(
+                ServeRequest::new(p)
+                    .max_new(6)
+                    .engine("dense")
+                    .stop_tokens(vec![solo[0]]),
+            )
+            .unwrap();
+        let fin = s.run_to_completion();
+        let f = fin.iter().find(|f| f.id == id).unwrap();
+        assert_eq!(f.tokens, vec![solo[0]], "stop token is included, then generation ends");
+        assert!(matches!(
+            f.state,
+            RequestState::Finished { reason: FinishReason::StopToken }
+        ));
+    }
+
+    #[test]
+    fn context_cap_finishes_with_context_full() {
+        let cfg = ServeConfig { max_seq: 16, ..tiny_cfg() };
+        let mut s = ContinuousBatcher::new(cfg);
+        let id = s
+            .submit(ServeRequest::new(prompt(1, 10, 32)).max_new(20).engine("dense"))
+            .unwrap();
+        let fin = s.run_to_completion();
+        let f = fin.iter().find(|f| f.id == id).unwrap();
+        assert_eq!(f.tokens.len(), 6, "10 prompt + 6 generated hits max_seq 16");
+        assert!(matches!(
+            f.state,
+            RequestState::Finished { reason: FinishReason::ContextFull }
+        ));
+    }
+
+    /// The streaming surface: state transitions and per-token events
+    /// arrive on the channel, in lifecycle order.
+    #[test]
+    fn events_stream_over_the_channel() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut s = ContinuousBatcher::new(tiny_cfg());
+        let id = s
+            .submit(ServeRequest::new(prompt(1, 5, 32)).max_new(4).engine("dense").events(tx))
+            .unwrap();
+        let fin = s.run_to_completion();
+        let tokens = &fin.iter().find(|f| f.id == id).unwrap().tokens;
+        let events: Vec<ServeEvent> = rx.try_iter().collect();
+        let states: Vec<RequestState> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::State { state, .. } => Some(state.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(states[0], RequestState::Queued);
+        assert_eq!(states[1], RequestState::Prefilling);
+        assert_eq!(states[2], RequestState::Decoding);
+        assert!(states[3].is_terminal());
+        let streamed: Vec<i32> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(&streamed, tokens, "every token is streamed, in order");
+        let indices: Vec<usize> = events
+            .iter()
+            .filter_map(|e| match e {
+                ServeEvent::Token { index, .. } => Some(*index),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(indices, (0..tokens.len()).collect::<Vec<_>>());
+    }
+
+    /// Heterogeneous engine families coexist in one serving process —
+    /// each group keeps its own session, cache layout, and budget.
+    #[test]
+    fn heterogeneous_engine_groups_coexist() {
+        let mut s = ContinuousBatcher::new(tiny_cfg());
+        let specs = ["dense", "sfa:k=4", "window:w=8,scorer=sfa_k4"];
+        let ids: Vec<_> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                s.submit(
+                    ServeRequest::new(prompt(i as u64, 5 + i, 32)).max_new(4).engine(spec),
+                )
+                .unwrap()
+            })
+            .collect();
+        let r = s.step();
+        assert_eq!(r.admitted, 3, "one admission pass spans all groups");
+        let fin = s.run_to_completion();
+        for (id, spec) in ids.iter().zip(&specs) {
+            let f = fin.iter().find(|f| f.id == *id).unwrap();
+            assert!(matches!(f.state, RequestState::Finished { .. }), "{spec}");
+            assert_eq!(f.tokens.len(), 4);
+            assert_eq!(
+                f.engine,
+                crate::attention::registry::parse_spec(spec).unwrap().canonical()
+            );
+        }
+        assert_eq!(s.pages_in_use(), 0);
+        let m = s.metrics();
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.tokens_out, 12);
+        assert!(m.ttft().p95 >= m.ttft().p50);
+    }
+
+    /// Temperature sampling draws from a per-request stream, so it is
+    /// also batch-composition independent.
+    #[test]
+    fn temperature_sampling_is_batch_independent() {
+        let p = prompt(9, 8, 32);
+        let run = |busy: bool| -> Vec<i32> {
+            let mut s = ContinuousBatcher::new(tiny_cfg());
+            if busy {
+                s.submit(ServeRequest::new(prompt(1, 20, 32)).max_new(16).engine("dense"))
+                    .unwrap();
+                s.step();
+            }
+            let id = s
+                .submit(
+                    ServeRequest::new(p.clone())
+                        .max_new(5)
+                        .engine("dense")
+                        .sampling(ServeSampling::Temperature(0.8)),
+                )
+                .unwrap();
+            let fin = s.run_to_completion();
+            fin.iter().find(|f| f.id == id).unwrap().tokens.clone()
+        };
+        assert_eq!(run(false), run(true));
+    }
+}

@@ -1,0 +1,249 @@
+//! Request-lifecycle types for the serve API: the [`ServeRequest`]
+//! builder, the typed [`RequestState`] state machine, streaming
+//! [`ServeEvent`]s, and the [`ServeError`] taxonomy every layer of the
+//! serving stack (scheduler admission, router backpressure, page
+//! budget) reports through.
+//!
+//! ```text
+//! Queued ──► Prefilling ──► Decoding ──► Finished { reason }
+//!    │            │             │
+//!    └────────────┴─────────────┴─────► Failed { error }
+//! ```
+
+use std::sync::mpsc::Sender;
+
+use crate::attention::registry::SpecError;
+use crate::kv_cache::paged::PageError;
+
+/// Scheduler-assigned request handle.
+pub type RequestId = u64;
+
+/// Every way a serve request can fail, from submission to completion.
+/// Backpressure (`QueueFull`) is part of the API from day one: callers
+/// see a typed error, not an unboundedly growing queue.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The admission queue is at capacity — retry later.
+    QueueFull { capacity: usize },
+    /// The request could never fit the cache's page budget, even with
+    /// the whole cache to itself.
+    PageBudgetExceeded { needed_pages: usize, budget_pages: usize },
+    /// Prompt plus one generated token would exceed the context cap.
+    PromptTooLong { len: usize, max_seq: usize },
+    EmptyPrompt,
+    /// `max_new == 0` — nothing to generate.
+    NothingToGenerate,
+    /// The engine spec string did not parse or build.
+    BadSpec(String),
+    /// The paged KV cache failed mid-flight.
+    Cache(PageError),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull { capacity } => {
+                write!(f, "admission queue full (capacity {capacity})")
+            }
+            ServeError::PageBudgetExceeded { needed_pages, budget_pages } => write!(
+                f,
+                "request needs {needed_pages} KV pages but the budget is {budget_pages}"
+            ),
+            ServeError::PromptTooLong { len, max_seq } => {
+                write!(f, "prompt of {len} tokens exceeds max_seq {max_seq}")
+            }
+            ServeError::EmptyPrompt => write!(f, "empty prompt"),
+            ServeError::NothingToGenerate => write!(f, "max_new is 0"),
+            ServeError::BadSpec(msg) => write!(f, "bad engine spec: {msg}"),
+            ServeError::Cache(e) => write!(f, "KV cache error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<SpecError> for ServeError {
+    fn from(e: SpecError) -> ServeError {
+        ServeError::BadSpec(e.0)
+    }
+}
+
+impl From<PageError> for ServeError {
+    fn from(e: PageError) -> ServeError {
+        ServeError::Cache(e)
+    }
+}
+
+/// Next-token selection policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServeSampling {
+    /// Deterministic argmax (first max wins) — the policy the
+    /// solo-vs-batched bit-for-bit equivalence tests pin.
+    Greedy,
+    /// Softmax sampling with temperature, seeded per request so the
+    /// draw sequence is independent of batch composition.
+    Temperature(f32),
+}
+
+/// Why a request finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Produced its `max_new` tokens.
+    MaxTokens,
+    /// Emitted one of the request's stop tokens (included in the
+    /// output).
+    StopToken,
+    /// Hit the scheduler's context cap before `max_new`.
+    ContextFull,
+}
+
+/// The request lifecycle. States only move forward; `Finished` and
+/// `Failed` are terminal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestState {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished { reason: FinishReason },
+    Failed { error: ServeError },
+}
+
+impl RequestState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, RequestState::Finished { .. } | RequestState::Failed { .. })
+    }
+}
+
+/// Streaming per-token events, delivered on the channel the request
+/// was built with (instead of one blocking end-of-wave response).
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// The request moved to a new lifecycle state.
+    State { id: RequestId, state: RequestState },
+    /// One generated token (`index` counts from 0; index 0 is the
+    /// time-to-first-token sample produced by prefill).
+    Token { id: RequestId, index: usize, token: i32 },
+}
+
+/// A generation request: build with [`ServeRequest::new`], refine with
+/// the chained setters, hand to a `serve::Scheduler`.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    /// Engine registry spec string (`"sfa:k=8,bq=64,bk=64"`, `"dense"`,
+    /// …) — heterogeneous engine families coexist in one serving
+    /// process, one session per distinct canonical spec.
+    pub engine: String,
+    pub sampling: ServeSampling,
+    /// Sampler stream seed — a property of the *request*, not of the
+    /// scheduler, so a temperature-sampled request draws the same
+    /// tokens whether it runs solo or inside a busy batch.
+    pub seed: u64,
+    /// Generation stops when any of these tokens is emitted.
+    pub stop_tokens: Vec<i32>,
+    /// Streaming event sink; `None` means fire-and-collect (results via
+    /// `Scheduler::take_finished`).
+    pub events: Option<Sender<ServeEvent>>,
+}
+
+impl ServeRequest {
+    pub fn new(prompt: Vec<i32>) -> ServeRequest {
+        ServeRequest {
+            prompt,
+            max_new: 16,
+            engine: "sfa:k=8".into(),
+            sampling: ServeSampling::Greedy,
+            seed: 0,
+            stop_tokens: Vec::new(),
+            events: None,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> ServeRequest {
+        self.seed = seed;
+        self
+    }
+
+    pub fn max_new(mut self, n: usize) -> ServeRequest {
+        self.max_new = n;
+        self
+    }
+
+    pub fn engine(mut self, spec: &str) -> ServeRequest {
+        self.engine = spec.to_string();
+        self
+    }
+
+    pub fn sampling(mut self, s: ServeSampling) -> ServeRequest {
+        self.sampling = s;
+        self
+    }
+
+    pub fn stop_tokens(mut self, toks: Vec<i32>) -> ServeRequest {
+        self.stop_tokens = toks;
+        self
+    }
+
+    pub fn events(mut self, tx: Sender<ServeEvent>) -> ServeRequest {
+        self.events = Some(tx);
+        self
+    }
+}
+
+/// Terminal summary of one request (the non-streaming result surface).
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: RequestId,
+    /// Canonical engine spec the request ran under.
+    pub engine: String,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// `Finished { .. }` or `Failed { .. }`.
+    pub state: RequestState,
+    /// Time to first token (queue wait + prefill + first sample), s.
+    pub ttft_s: f64,
+    /// Submission-to-terminal latency, s.
+    pub total_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_setters() {
+        let r = ServeRequest::new(vec![1, 2, 3]);
+        assert_eq!(r.max_new, 16);
+        assert_eq!(r.sampling, ServeSampling::Greedy);
+        assert!(r.stop_tokens.is_empty() && r.events.is_none());
+        let r = r.max_new(4).engine("dense").stop_tokens(vec![0]).sampling(
+            ServeSampling::Temperature(0.7),
+        );
+        assert_eq!(r.max_new, 4);
+        assert_eq!(r.engine, "dense");
+        assert_eq!(r.stop_tokens, vec![0]);
+        assert_eq!(r.sampling, ServeSampling::Temperature(0.7));
+    }
+
+    #[test]
+    fn terminal_states() {
+        assert!(!RequestState::Queued.is_terminal());
+        assert!(!RequestState::Prefilling.is_terminal());
+        assert!(!RequestState::Decoding.is_terminal());
+        assert!(RequestState::Finished { reason: FinishReason::MaxTokens }.is_terminal());
+        assert!(RequestState::Failed { error: ServeError::EmptyPrompt }.is_terminal());
+    }
+
+    #[test]
+    fn errors_display_and_convert() {
+        let e: ServeError = PageError::OutOfPages.into();
+        assert_eq!(e, ServeError::Cache(PageError::OutOfPages));
+        assert!(e.to_string().contains("out of pages"));
+        let e: ServeError =
+            crate::attention::registry::parse_spec("warp").unwrap_err().into();
+        assert!(matches!(e, ServeError::BadSpec(_)), "{e}");
+        let q = ServeError::QueueFull { capacity: 8 };
+        assert!(q.to_string().contains("capacity 8"));
+    }
+}

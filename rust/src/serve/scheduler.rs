@@ -1,0 +1,613 @@
+//! The [`Scheduler`] trait and its [`ContinuousBatcher`]
+//! implementation — request-lifecycle serving over the lane API of
+//! [`AttentionSession`].
+//!
+//! A step is the scheduling quantum. Each [`Scheduler::step`]:
+//!
+//! 1. **Admits** queued requests into free lanes under the page-budget
+//!    policy: a request reserves its worst-case page footprint
+//!    (`heads · ⌈(prompt + max_new) / page_size⌉`) at admission, so a
+//!    live wave can never run out of pages mid-decode. Admission is
+//!    FIFO with head-of-line blocking — a request that doesn't fit
+//!    *yet* waits (pages drain as sequences finish); a request that
+//!    could *never* fit fails at submission.
+//! 2. **Prefills** each admitted request at its own boundary (batch-1,
+//!    its own prompt length — no padding to a wave-wide length) and
+//!    samples its first token: time-to-first-token does not wait for
+//!    any other sequence.
+//! 3. **Decodes** one token for every live sequence of every engine
+//!    group in one mixed batch per group, then **releases finished
+//!    lanes' pages on the same step** — the mid-wave eviction that
+//!    makes room for the next admission.
+//!
+//! Heterogeneous engine families coexist in one scheduler: requests
+//! are grouped by canonical engine spec, one `AttentionSession` (and
+//! page budget) per group. The queue/group/lifecycle state every
+//! scheduler needs lives in [`SchedulerCore`], shared with the
+//! [`WaveScheduler`](crate::serve::wave::WaveScheduler) baseline so
+//! the two differ only in policy.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::Instant;
+
+use crate::attention::registry::parse_spec;
+use crate::attention::session::{AttentionSession, LaneId, SessionConfig};
+use crate::attention::HeadTensor;
+use crate::coordinator::metrics::ServeMetrics;
+use crate::serve::model::{sample, ToyLm};
+use crate::serve::request::{
+    FinishReason, FinishedRequest, RequestId, RequestState, ServeError, ServeEvent,
+    ServeRequest,
+};
+use crate::util::rng::Rng;
+
+/// Geometry and policy knobs shared by every serve scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    pub heads: usize,
+    /// Q/K/V dim per head.
+    pub d: usize,
+    pub vocab: usize,
+    /// Tokens per KV page.
+    pub page_size: usize,
+    /// KV page budget *per engine group* (each distinct canonical spec
+    /// owns its own paged cache).
+    pub max_pages: usize,
+    /// Maximum concurrently-live sequences across all groups.
+    pub max_lanes: usize,
+    /// Admission queue bound — `submit` returns
+    /// [`ServeError::QueueFull`] beyond it.
+    pub queue_capacity: usize,
+    /// Context cap: prompt plus generated tokens per sequence.
+    pub max_seq: usize,
+    /// Seed for the deterministic [`ToyLm`] and per-request samplers.
+    pub model_seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            heads: 4,
+            d: 32,
+            vocab: 64,
+            page_size: 16,
+            max_pages: 4096,
+            max_lanes: 8,
+            queue_capacity: 1024,
+            max_seq: 4096,
+            model_seed: 0x5FA,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Construction-time sanity: a zero in any of these knobs makes a
+    /// scheduler that can never admit work (e.g. `max_lanes == 0`
+    /// turns `step()` into a busy-wait that never drains the queue).
+    pub(crate) fn assert_valid(&self) {
+        assert!(self.heads >= 1 && self.d >= 1 && self.vocab >= 2, "degenerate model geometry");
+        assert!(self.page_size >= 1 && self.max_pages >= 1, "degenerate page budget");
+        assert!(self.max_lanes >= 1, "max_lanes must be >= 1 (a 0-lane scheduler never admits)");
+        assert!(self.queue_capacity >= 1, "queue_capacity must be >= 1");
+        assert!(self.max_seq >= 2, "max_seq must fit a prompt token plus a generated token");
+    }
+}
+
+/// Worst-case page footprint of one sequence: `steps` generated tokens
+/// on top of a `prompt_len` prompt, across `heads` per-head sequences.
+/// Public so CLI layers pre-check workloads with the *same* formula
+/// the admission policy reserves by.
+pub fn pages_needed(prompt_len: usize, steps: usize, heads: usize, page_size: usize) -> usize {
+    heads * (prompt_len + steps).div_ceil(page_size)
+}
+
+/// What one [`Scheduler::step`] did (the serving loop's observability
+/// surface; `bench serve` integrates these into page-occupancy curves).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StepReport {
+    /// Requests admitted (prefilled) this step.
+    pub admitted: usize,
+    /// Tokens sampled this step (prefill first-tokens + decode).
+    pub decoded_tokens: usize,
+    pub finished: usize,
+    pub failed: usize,
+    /// KV pages returned to the budget this step.
+    pub pages_freed: usize,
+    /// KV pages in use across all groups after the step.
+    pub pages_in_use: usize,
+    /// Live sequences after the step.
+    pub live: usize,
+}
+
+/// A request-lifecycle scheduler: submit → step until idle → collect.
+pub trait Scheduler {
+    /// Enqueue a request; typed errors for backpressure and
+    /// never-fits requests. `Ok` hands back the request's id.
+    fn submit(&mut self, req: ServeRequest) -> Result<RequestId, ServeError>;
+
+    /// Run one scheduling quantum (admissions + one decode step).
+    fn step(&mut self) -> StepReport;
+
+    /// Anything queued or mid-flight?
+    fn has_work(&self) -> bool;
+
+    /// Current lifecycle state of a request (pruned once its terminal
+    /// summary is drained by [`Scheduler::take_finished`]).
+    fn state(&self, id: RequestId) -> Option<&RequestState>;
+
+    /// Drain terminal request summaries accumulated so far.
+    fn take_finished(&mut self) -> Vec<FinishedRequest>;
+
+    fn metrics(&self) -> &ServeMetrics;
+    fn metrics_mut(&mut self) -> &mut ServeMetrics;
+
+    /// KV pages in use across all engine groups.
+    fn pages_in_use(&self) -> usize;
+
+    /// Step until idle, then drain the terminal summaries.
+    fn run_to_completion(&mut self) -> Vec<FinishedRequest> {
+        while self.has_work() {
+            self.step();
+        }
+        self.take_finished()
+    }
+}
+
+/// Validation shared by every scheduler's `submit`.
+pub(crate) fn validate(req: &ServeRequest, cfg: &ServeConfig) -> Result<(), ServeError> {
+    if req.prompt.is_empty() {
+        return Err(ServeError::EmptyPrompt);
+    }
+    if req.max_new == 0 {
+        return Err(ServeError::NothingToGenerate);
+    }
+    parse_spec(&req.engine)?;
+    if req.prompt.len() + 1 > cfg.max_seq {
+        return Err(ServeError::PromptTooLong { len: req.prompt.len(), max_seq: cfg.max_seq });
+    }
+    let budget_tokens = req.max_new.min(cfg.max_seq - req.prompt.len());
+    let needed = pages_needed(req.prompt.len(), budget_tokens, cfg.heads, cfg.page_size);
+    if needed > cfg.max_pages {
+        return Err(ServeError::PageBudgetExceeded {
+            needed_pages: needed,
+            budget_pages: cfg.max_pages,
+        });
+    }
+    Ok(())
+}
+
+pub(crate) fn emit(req: &ServeRequest, ev: ServeEvent) {
+    if let Some(tx) = &req.events {
+        let _ = tx.send(ev); // streaming consumer may have gone away
+    }
+}
+
+pub(crate) fn set_state(
+    states: &mut BTreeMap<RequestId, RequestState>,
+    req: &ServeRequest,
+    id: RequestId,
+    state: RequestState,
+) {
+    emit(req, ServeEvent::State { id, state: state.clone() });
+    states.insert(id, state);
+}
+
+/// One request waiting for admission.
+pub(crate) struct QueuedReq {
+    pub id: RequestId,
+    pub req: ServeRequest,
+    pub submitted: Instant,
+}
+
+/// One live sequence occupying a lane.
+pub(crate) struct ActiveSeq {
+    pub id: RequestId,
+    pub req: ServeRequest,
+    pub lane: LaneId,
+    pub last_token: i32,
+    pub generated: Vec<i32>,
+    /// Generation cap: `min(max_new, max_seq - prompt_len)`.
+    pub budget: usize,
+    /// Pages reserved for this sequence at admission.
+    pub reserved_pages: usize,
+    /// Per-request sampler stream (independent of batch composition).
+    pub rng: Rng,
+    pub submitted: Instant,
+    pub last_token_at: Instant,
+    pub ttft_s: f64,
+    /// Wave scheduling only: finished but still holding its lane.
+    pub done: Option<FinishReason>,
+}
+
+/// All sequences sharing one engine spec (and one session / cache).
+pub(crate) struct EngineGroup {
+    /// Canonical spec string.
+    pub spec: String,
+    pub session: AttentionSession,
+    pub active: Vec<ActiveSeq>,
+    /// Worst-case pages promised to live sequences.
+    pub reserved_pages: usize,
+}
+
+/// Find or create the group for `spec_raw` in `groups`; returns its
+/// index (a stable key while no groups are removed — they never are).
+pub(crate) fn group_index(
+    groups: &mut Vec<EngineGroup>,
+    spec_raw: &str,
+    cfg: &ServeConfig,
+) -> Result<usize, ServeError> {
+    let canon = parse_spec(spec_raw)?.canonical();
+    if let Some(i) = groups.iter().position(|g| g.spec == canon) {
+        return Ok(i);
+    }
+    let scfg =
+        SessionConfig::new(0, cfg.heads, cfg.d, cfg.d).with_paging(cfg.page_size, cfg.max_pages);
+    let session = AttentionSession::from_spec(&canon, scfg)?;
+    groups.push(EngineGroup { spec: canon, session, active: Vec::new(), reserved_pages: 0 });
+    Ok(groups.len() - 1)
+}
+
+/// Prefill one admitted request into `group` at its own boundary and
+/// sample its first token. On failure the lane is gone (prefill_lane
+/// auto-releases) and the request is handed back with the error.
+pub(crate) fn start_seq(
+    model: &ToyLm,
+    group: &mut EngineGroup,
+    id: RequestId,
+    req: ServeRequest,
+    submitted: Instant,
+    cfg: &ServeConfig,
+    reserved_pages: usize,
+) -> Result<ActiveSeq, (ServeRequest, ServeError)> {
+    let plen = req.prompt.len();
+    let budget = req.max_new.min(cfg.max_seq - plen);
+    let (q, k, v) = model.qkv_prompt(&req.prompt, 0);
+    let lane = group.session.admit_lane();
+    let out = match group.session.prefill_lane(lane, &q, &k, &v, true) {
+        Ok(o) => o,
+        Err(e) => return Err((req, e.into())),
+    };
+    let logits = model.logits_at(&out, 0, plen - 1);
+    let mut rng = Rng::new(cfg.model_seed ^ req.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let tok = sample(&logits, req.sampling, &mut rng);
+    let now = Instant::now();
+    group.reserved_pages += reserved_pages;
+    Ok(ActiveSeq {
+        id,
+        req,
+        lane,
+        last_token: tok,
+        generated: vec![tok],
+        budget,
+        reserved_pages,
+        rng,
+        submitted,
+        last_token_at: now,
+        ttft_s: now.duration_since(submitted).as_secs_f64(),
+        done: None,
+    })
+}
+
+/// Has this sequence just finished, and why?
+pub(crate) fn finish_reason(seq: &ActiveSeq) -> Option<FinishReason> {
+    let last = *seq.generated.last().expect("active sequence has at least one token");
+    if seq.req.stop_tokens.contains(&last) {
+        return Some(FinishReason::StopToken);
+    }
+    if seq.generated.len() >= seq.budget {
+        return Some(if seq.budget < seq.req.max_new {
+            FinishReason::ContextFull
+        } else {
+            FinishReason::MaxTokens
+        });
+    }
+    None
+}
+
+/// Terminal summary for a sequence (total latency measured now — for
+/// wave scheduling that is wave-end, the moment the old API delivered).
+pub(crate) fn finished_record(
+    seq: &ActiveSeq,
+    spec: &str,
+    state: RequestState,
+) -> FinishedRequest {
+    FinishedRequest {
+        id: seq.id,
+        engine: spec.to_string(),
+        prompt_len: seq.req.prompt.len(),
+        tokens: seq.generated.clone(),
+        state,
+        ttft_s: seq.ttft_s,
+        total_s: seq.submitted.elapsed().as_secs_f64(),
+    }
+}
+
+/// State every serve scheduler carries: the bounded admission queue,
+/// engine groups, the lifecycle map, terminal records, and metrics.
+/// `ContinuousBatcher` and `WaveScheduler` embed this and differ only
+/// in their `step()` policy.
+pub(crate) struct SchedulerCore {
+    pub cfg: ServeConfig,
+    pub model: ToyLm,
+    pub queue: VecDeque<QueuedReq>,
+    pub groups: Vec<EngineGroup>,
+    pub states: BTreeMap<RequestId, RequestState>,
+    pub finished: Vec<FinishedRequest>,
+    pub metrics: ServeMetrics,
+    pub next_id: RequestId,
+}
+
+impl SchedulerCore {
+    /// Panics on a degenerate config (see `ServeConfig::assert_valid`);
+    /// CLI layers should range-check user input first.
+    pub fn new(cfg: ServeConfig) -> SchedulerCore {
+        cfg.assert_valid();
+        SchedulerCore {
+            model: ToyLm::new(cfg.heads, cfg.d, cfg.vocab, cfg.model_seed),
+            cfg,
+            queue: VecDeque::new(),
+            groups: Vec::new(),
+            states: BTreeMap::new(),
+            finished: Vec::new(),
+            metrics: ServeMetrics::default(),
+            next_id: 0,
+        }
+    }
+
+    /// Shared `Scheduler::submit` body: validate, enforce the queue
+    /// bound, assign an id, record `Queued`, enqueue.
+    pub fn submit(&mut self, req: ServeRequest) -> Result<RequestId, ServeError> {
+        validate(&req, &self.cfg)?;
+        if self.queue.len() >= self.cfg.queue_capacity {
+            return Err(ServeError::QueueFull { capacity: self.cfg.queue_capacity });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        set_state(&mut self.states, &req, id, RequestState::Queued);
+        self.queue.push_back(QueuedReq { id, req, submitted: Instant::now() });
+        Ok(id)
+    }
+
+    pub fn state(&self, id: RequestId) -> Option<&RequestState> {
+        self.states.get(&id)
+    }
+
+    /// Drain terminal summaries and prune their lifecycle entries, so a
+    /// long-running scheduler's state map stays bounded by queued +
+    /// live requests instead of growing with every request ever served.
+    pub fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        let out = std::mem::take(&mut self.finished);
+        for f in &out {
+            self.states.remove(&f.id);
+        }
+        out
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.groups.iter().map(|g| g.session.pages_in_use()).sum()
+    }
+
+    /// Terminal failure: `Failed` state, empty-token summary, metric.
+    pub fn fail_request(&mut self, id: RequestId, req: &ServeRequest, e: ServeError) {
+        set_state(&mut self.states, req, id, RequestState::Failed { error: e.clone() });
+        self.finished.push(FinishedRequest {
+            id,
+            engine: req.engine.clone(),
+            prompt_len: req.prompt.len(),
+            tokens: Vec::new(),
+            state: RequestState::Failed { error: e },
+            ttft_s: 0.0,
+            total_s: 0.0,
+        });
+        self.metrics.record_failed();
+    }
+}
+
+/// Continuous batching: sequences join a live decode wave at their own
+/// prefill boundary and leave (freeing pages) the step they finish.
+pub struct ContinuousBatcher {
+    core: SchedulerCore,
+}
+
+impl ContinuousBatcher {
+    /// Panics on a degenerate config (see `ServeConfig::assert_valid`);
+    /// CLI layers should range-check user input first.
+    pub fn new(cfg: ServeConfig) -> ContinuousBatcher {
+        ContinuousBatcher { core: SchedulerCore::new(cfg) }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.core.cfg
+    }
+
+    /// Live sequences across all groups.
+    pub fn live(&self) -> usize {
+        self.core.groups.iter().map(|g| g.active.len()).sum()
+    }
+
+    /// Requests waiting for admission.
+    pub fn queued(&self) -> usize {
+        self.core.queue.len()
+    }
+
+    /// Admission pass: fill free lanes from the queue under the page
+    /// budget. FIFO with head-of-line blocking on a not-yet-fitting
+    /// request.
+    fn admit(&mut self, report: &mut StepReport) {
+        while let Some(front) = self.core.queue.front() {
+            if self.live() >= self.core.cfg.max_lanes {
+                break;
+            }
+            let gi = match group_index(&mut self.core.groups, &front.req.engine, &self.core.cfg)
+            {
+                Ok(gi) => gi,
+                Err(e) => {
+                    // Spec parsed at submit but the session rejected it
+                    // (e.g. feature budget k > head dim d).
+                    let qr = self.core.queue.pop_front().expect("front exists");
+                    self.core.fail_request(qr.id, &qr.req, e);
+                    report.failed += 1;
+                    continue;
+                }
+            };
+            let plen = front.req.prompt.len();
+            let budget_tokens = front.req.max_new.min(self.core.cfg.max_seq - plen);
+            let needed =
+                pages_needed(plen, budget_tokens, self.core.cfg.heads, self.core.cfg.page_size);
+            if self.core.groups[gi].reserved_pages + needed > self.core.cfg.max_pages {
+                break; // wait for pages to drain
+            }
+            let QueuedReq { id, req, submitted } =
+                self.core.queue.pop_front().expect("front exists");
+            set_state(&mut self.core.states, &req, id, RequestState::Prefilling);
+            let seq = match start_seq(
+                &self.core.model,
+                &mut self.core.groups[gi],
+                id,
+                req,
+                submitted,
+                &self.core.cfg,
+                needed,
+            ) {
+                Ok(seq) => seq,
+                Err((req, e)) => {
+                    self.core.fail_request(id, &req, e);
+                    report.failed += 1;
+                    continue;
+                }
+            };
+            report.admitted += 1;
+            report.decoded_tokens += 1; // the TTFT token
+            set_state(&mut self.core.states, &seq.req, id, RequestState::Decoding);
+            emit(&seq.req, ServeEvent::Token { id, index: 0, token: seq.last_token });
+            if let Some(reason) = finish_reason(&seq) {
+                self.retire(gi, seq, reason, report);
+            } else {
+                self.core.groups[gi].active.push(seq);
+            }
+        }
+    }
+
+    /// Release a finished sequence's lane and record its summary — on
+    /// the same step it finished (the scheduler-invariant the tests
+    /// pin).
+    fn retire(&mut self, gi: usize, seq: ActiveSeq, reason: FinishReason, report: &mut StepReport) {
+        let group = &mut self.core.groups[gi];
+        let freed = group.session.release_lane(seq.lane).unwrap_or(0);
+        group.reserved_pages -= seq.reserved_pages;
+        report.pages_freed += freed;
+        report.finished += 1;
+        let state = RequestState::Finished { reason };
+        set_state(&mut self.core.states, &seq.req, seq.id, state.clone());
+        self.core.metrics.record_finished(
+            seq.ttft_s,
+            seq.submitted.elapsed().as_secs_f64(),
+            seq.generated.len(),
+        );
+        self.core.finished.push(finished_record(&seq, &self.core.groups[gi].spec, state));
+    }
+
+    /// One mixed decode step per engine group over all its live lanes.
+    /// Index iteration is load-bearing: the body calls `&mut self`
+    /// methods (retire / fail_request) that an iterator borrow would
+    /// forbid.
+    fn decode(&mut self, report: &mut StepReport) {
+        for gi in 0..self.core.groups.len() {
+            let n = self.core.groups[gi].active.len();
+            if n == 0 {
+                continue;
+            }
+            let heads = self.core.cfg.heads;
+            let d = self.core.cfg.d;
+            let mut q = HeadTensor::zeros(n, heads, 1, d);
+            let mut k = HeadTensor::zeros(n, heads, 1, d);
+            let mut v = HeadTensor::zeros(n, heads, 1, d);
+            let mut lanes: Vec<LaneId> = Vec::with_capacity(n);
+            for (bi, seq) in self.core.groups[gi].active.iter().enumerate() {
+                let pos = self.core.groups[gi].session.lane_len(seq.lane);
+                self.core.model.fill_decode_row(&mut q, &mut k, &mut v, bi, seq.last_token, pos);
+                lanes.push(seq.lane);
+            }
+            let out = match self.core.groups[gi].session.decode_step_lanes(&lanes, &q, &k, &v) {
+                Ok(o) => o,
+                Err(e) => {
+                    // Unreachable under reservation accounting; fail
+                    // the whole group defensively rather than panic.
+                    let seqs = std::mem::take(&mut self.core.groups[gi].active);
+                    for seq in seqs {
+                        let _ = self.core.groups[gi].session.release_lane(seq.lane);
+                        self.core.groups[gi].reserved_pages -= seq.reserved_pages;
+                        self.core.fail_request(seq.id, &seq.req, ServeError::from(e));
+                        report.failed += 1;
+                    }
+                    continue;
+                }
+            };
+            let now = Instant::now();
+            let mut done: Vec<(usize, FinishReason)> = Vec::new();
+            for (bi, seq) in self.core.groups[gi].active.iter_mut().enumerate() {
+                let logits = self.core.model.logits_at(&out, bi, 0);
+                let tok = sample(&logits, seq.req.sampling, &mut seq.rng);
+                seq.last_token = tok;
+                seq.generated.push(tok);
+                emit(
+                    &seq.req,
+                    ServeEvent::Token { id: seq.id, index: seq.generated.len() - 1, token: tok },
+                );
+                self.core
+                    .metrics
+                    .record_token_latency(now.duration_since(seq.last_token_at).as_secs_f64());
+                seq.last_token_at = now;
+                report.decoded_tokens += 1;
+                if let Some(reason) = finish_reason(seq) {
+                    done.push((bi, reason));
+                }
+            }
+            // Evict finished lanes immediately (descending index keeps
+            // the remaining swap_remove targets stable).
+            for &(bi, reason) in done.iter().rev() {
+                let seq = self.core.groups[gi].active.swap_remove(bi);
+                self.retire(gi, seq, reason, report);
+            }
+        }
+    }
+}
+
+impl Scheduler for ContinuousBatcher {
+    fn submit(&mut self, req: ServeRequest) -> Result<RequestId, ServeError> {
+        self.core.submit(req)
+    }
+
+    fn step(&mut self) -> StepReport {
+        let mut report = StepReport::default();
+        self.admit(&mut report);
+        self.decode(&mut report);
+        report.pages_in_use = self.core.pages_in_use();
+        report.live = self.live();
+        report
+    }
+
+    fn has_work(&self) -> bool {
+        !self.core.queue.is_empty() || self.live() > 0
+    }
+
+    fn state(&self, id: RequestId) -> Option<&RequestState> {
+        self.core.state(id)
+    }
+
+    fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        self.core.take_finished()
+    }
+
+    fn metrics(&self) -> &ServeMetrics {
+        &self.core.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut ServeMetrics {
+        &mut self.core.metrics
+    }
+
+    fn pages_in_use(&self) -> usize {
+        self.core.pages_in_use()
+    }
+}

@@ -1,0 +1,300 @@
+//! [`WaveScheduler`] — the deprecated coordinator's wave semantics
+//! re-expressed over the same lane substrate (and the same
+//! [`SchedulerCore`] state) as
+//! [`ContinuousBatcher`](crate::serve::scheduler::ContinuousBatcher),
+//! so `bench serve` compares scheduling policies and nothing else.
+//!
+//! Wave semantics, faithfully mirrored from `Engine::run_wave`:
+//!
+//! * a wave admits up to `max_lanes` same-engine requests at once and
+//!   **no one joins mid-wave** — later arrivals wait in the queue;
+//! * every wave lane decodes every step until the *slowest* member
+//!   finishes — finished members keep burning decode compute (the old
+//!   padding slots) and **hold their pages until wave end**;
+//! * responses (and page reclamation) are delivered at wave end.
+//!
+//! Everything a continuous batcher fixes is on display: page occupancy
+//! stays at the wave's high-water mark, time-to-first-token includes
+//! the whole previous wave, and the decode tail runs at low occupancy.
+
+use std::time::Instant;
+
+use crate::attention::registry::parse_spec;
+use crate::attention::session::LaneId;
+use crate::attention::HeadTensor;
+use crate::coordinator::metrics::ServeMetrics;
+use crate::serve::model::sample;
+use crate::serve::request::{
+    FinishedRequest, RequestId, RequestState, ServeError, ServeRequest,
+};
+use crate::serve::scheduler::{
+    emit, finish_reason, finished_record, group_index, pages_needed, set_state, start_seq,
+    QueuedReq, Scheduler, SchedulerCore, ServeConfig, StepReport,
+};
+use crate::serve::ServeEvent;
+
+/// Wave-synchronous scheduling over the lane substrate (the baseline
+/// `bench serve` measures the continuous batcher against).
+pub struct WaveScheduler {
+    core: SchedulerCore,
+}
+
+impl WaveScheduler {
+    /// Panics on a degenerate config (see `ServeConfig::assert_valid`);
+    /// CLI layers should range-check user input first.
+    pub fn new(cfg: ServeConfig) -> WaveScheduler {
+        WaveScheduler { core: SchedulerCore::new(cfg) }
+    }
+
+    fn wave_active(&self) -> bool {
+        self.core.groups.iter().any(|g| !g.active.is_empty())
+    }
+
+    /// Form the next wave from the queue front's engine spec: take
+    /// same-spec requests in FIFO order until the lane cap or the
+    /// wave's collective page reservation stops fitting, then prefill
+    /// them all behind the barrier.
+    fn form_wave(&mut self, report: &mut StepReport) {
+        let front_spec = match self.core.queue.front() {
+            Some(qr) => qr.req.engine.clone(),
+            None => return,
+        };
+        let gi = match group_index(&mut self.core.groups, &front_spec, &self.core.cfg) {
+            Ok(gi) => gi,
+            Err(e) => {
+                let qr = self.core.queue.pop_front().expect("front exists");
+                self.core.fail_request(qr.id, &qr.req, e);
+                report.failed += 1;
+                return;
+            }
+        };
+        let canon = self.core.groups[gi].spec.clone();
+        let mut members: Vec<QueuedReq> = Vec::new();
+        let mut rest: std::collections::VecDeque<QueuedReq> = std::collections::VecDeque::new();
+        let mut wave_steps = 0usize;
+        let mut spec_scan_open = true;
+        while let Some(qr) = self.core.queue.pop_front() {
+            let matches = parse_spec(&qr.req.engine)
+                .map(|s| s.canonical() == canon)
+                .unwrap_or(false);
+            if spec_scan_open && matches && members.len() < self.core.cfg.max_lanes {
+                let plen = qr.req.prompt.len();
+                let budget = qr.req.max_new.min(self.core.cfg.max_seq - plen);
+                let steps = wave_steps.max(budget);
+                // Every lane decodes for the whole wave, so each
+                // member's reservation is sized by the wave's slowest.
+                let total: usize = members
+                    .iter()
+                    .chain(std::iter::once(&qr))
+                    .map(|m| {
+                        pages_needed(
+                            m.req.prompt.len(),
+                            steps,
+                            self.core.cfg.heads,
+                            self.core.cfg.page_size,
+                        )
+                    })
+                    .sum();
+                if total <= self.core.cfg.max_pages {
+                    wave_steps = steps;
+                    members.push(qr);
+                    continue;
+                }
+                spec_scan_open = false; // FIFO within the spec
+            }
+            rest.push_back(qr);
+        }
+        self.core.queue = rest;
+
+        for qr in members {
+            let QueuedReq { id, req, submitted } = qr;
+            set_state(&mut self.core.states, &req, id, RequestState::Prefilling);
+            let reserved = pages_needed(
+                req.prompt.len(),
+                wave_steps,
+                self.core.cfg.heads,
+                self.core.cfg.page_size,
+            );
+            let mut seq = match start_seq(
+                &self.core.model,
+                &mut self.core.groups[gi],
+                id,
+                req,
+                submitted,
+                &self.core.cfg,
+                reserved,
+            ) {
+                Ok(seq) => seq,
+                Err((req, e)) => {
+                    self.core.fail_request(id, &req, e);
+                    report.failed += 1;
+                    continue;
+                }
+            };
+            report.admitted += 1;
+            report.decoded_tokens += 1;
+            set_state(&mut self.core.states, &seq.req, id, RequestState::Decoding);
+            emit(&seq.req, ServeEvent::Token { id, index: 0, token: seq.last_token });
+            if let Some(reason) = finish_reason(&seq) {
+                seq.done = Some(reason);
+                set_state(
+                    &mut self.core.states,
+                    &seq.req,
+                    id,
+                    RequestState::Finished { reason },
+                );
+            }
+            self.core.groups[gi].active.push(seq);
+        }
+    }
+
+    /// One barrier decode step: every wave lane decodes, finished or
+    /// not (the old padding slots), and nothing is freed.
+    fn decode_wave(&mut self, report: &mut StepReport) {
+        for gi in 0..self.core.groups.len() {
+            if self.core.groups[gi].active.is_empty() {
+                continue;
+            }
+            // Batch rows: every lane still below the context cap
+            // (finished lanes included — that's the wave's burnt
+            // compute).
+            let rows: Vec<usize> = (0..self.core.groups[gi].active.len())
+                .filter(|&i| {
+                    let seq = &self.core.groups[gi].active[i];
+                    self.core.groups[gi].session.lane_len(seq.lane) < self.core.cfg.max_seq
+                })
+                .collect();
+            if !rows.is_empty() {
+                let heads = self.core.cfg.heads;
+                let d = self.core.cfg.d;
+                let n = rows.len();
+                let mut q = HeadTensor::zeros(n, heads, 1, d);
+                let mut k = HeadTensor::zeros(n, heads, 1, d);
+                let mut v = HeadTensor::zeros(n, heads, 1, d);
+                let mut lanes: Vec<LaneId> = Vec::with_capacity(n);
+                for (bi, &i) in rows.iter().enumerate() {
+                    let seq = &self.core.groups[gi].active[i];
+                    let pos = self.core.groups[gi].session.lane_len(seq.lane);
+                    self.core
+                        .model
+                        .fill_decode_row(&mut q, &mut k, &mut v, bi, seq.last_token, pos);
+                    lanes.push(seq.lane);
+                }
+                let out = self.core.groups[gi]
+                    .session
+                    .decode_step_lanes(&lanes, &q, &k, &v)
+                    .expect("wave reservation covers every decode step");
+                let now = Instant::now();
+                for (bi, &i) in rows.iter().enumerate() {
+                    let logits = self.core.model.logits_at(&out, bi, 0);
+                    let seq = &mut self.core.groups[gi].active[i];
+                    let tok = sample(&logits, seq.req.sampling, &mut seq.rng);
+                    seq.last_token = tok;
+                    if seq.done.is_some() {
+                        continue; // burnt compute, discarded sample
+                    }
+                    seq.generated.push(tok);
+                    emit(
+                        &seq.req,
+                        ServeEvent::Token {
+                            id: seq.id,
+                            index: seq.generated.len() - 1,
+                            token: tok,
+                        },
+                    );
+                    self.core.metrics.record_token_latency(
+                        now.duration_since(seq.last_token_at).as_secs_f64(),
+                    );
+                    seq.last_token_at = now;
+                    report.decoded_tokens += 1;
+                    if let Some(reason) = finish_reason(seq) {
+                        seq.done = Some(reason);
+                        let (id, req) = (seq.id, seq.req.clone());
+                        set_state(
+                            &mut self.core.states,
+                            &req,
+                            id,
+                            RequestState::Finished { reason },
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Wave barrier: once *every* member is done, deliver responses
+    /// and free every lane's pages — not a step earlier.
+    fn finalize_finished_waves(&mut self, report: &mut StepReport) {
+        for group in &mut self.core.groups {
+            if group.active.is_empty() || group.active.iter().any(|s| s.done.is_none()) {
+                continue;
+            }
+            let wave = std::mem::take(&mut group.active);
+            for seq in wave {
+                let freed = group.session.release_lane(seq.lane).unwrap_or(0);
+                group.reserved_pages -= seq.reserved_pages;
+                report.pages_freed += freed;
+                report.finished += 1;
+                let reason = seq.done.expect("wave member is done");
+                self.core.metrics.record_finished(
+                    seq.ttft_s,
+                    seq.submitted.elapsed().as_secs_f64(),
+                    seq.generated.len(),
+                );
+                self.core.finished.push(finished_record(
+                    &seq,
+                    &group.spec,
+                    RequestState::Finished { reason },
+                ));
+            }
+        }
+    }
+}
+
+impl Scheduler for WaveScheduler {
+    fn submit(&mut self, req: ServeRequest) -> Result<RequestId, ServeError> {
+        self.core.submit(req)
+    }
+
+    fn step(&mut self) -> StepReport {
+        let mut report = StepReport::default();
+        if self.wave_active() {
+            self.decode_wave(&mut report);
+        } else {
+            self.form_wave(&mut report);
+        }
+        self.finalize_finished_waves(&mut report);
+        report.pages_in_use = self.core.pages_in_use();
+        report.live = self
+            .core
+            .groups
+            .iter()
+            .map(|g| g.active.iter().filter(|s| s.done.is_none()).count())
+            .sum();
+        report
+    }
+
+    fn has_work(&self) -> bool {
+        !self.core.queue.is_empty() || self.wave_active()
+    }
+
+    fn state(&self, id: RequestId) -> Option<&RequestState> {
+        self.core.state(id)
+    }
+
+    fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        self.core.take_finished()
+    }
+
+    fn metrics(&self) -> &ServeMetrics {
+        &self.core.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut ServeMetrics {
+        &mut self.core.metrics
+    }
+
+    fn pages_in_use(&self) -> usize {
+        self.core.pages_in_use()
+    }
+}

@@ -3,6 +3,10 @@
 //! (tests self-skip with a notice when the directory is missing so
 //! plain `cargo test` stays green in a fresh checkout).
 
+// These tests pin the deprecated wave path (`Engine::run_wave`) — it
+// must keep working as a shim while `serve` is the primary API.
+#![allow(deprecated)]
+
 use sfa::coordinator::engine::{Engine, Sampling};
 use sfa::coordinator::request::GenRequest;
 use sfa::runtime::{HostTensor, Runtime};
