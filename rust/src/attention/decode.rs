@@ -14,8 +14,47 @@ use crate::sparse::csr::TopkCodes;
 use crate::sparse::topk_codes;
 use crate::util::matrix::Matrix;
 
+/// Stable softmax over an explicit (key id, score) set; returns the
+/// matching (key id, probability) pairs (empty iff no finite score).
+pub(crate) fn softmax_probs(scores: &[(u32, f32)]) -> Vec<(u32, f32)> {
+    let m = scores.iter().fold(NEG_INF, |a, &(_, s)| a.max(s));
+    if m <= NEG_INF {
+        return Vec::new();
+    }
+    let mut l = 0.0;
+    for &(_, s) in scores {
+        l += (s - m).exp();
+    }
+    let inv = 1.0 / l;
+    scores.iter().map(|&(j, s)| (j, (s - m).exp() * inv)).collect()
+}
+
+/// Probability-weighted V-sum over (key id, weight) pairs (zeroes `out`
+/// first, so an empty set yields the zero vector).
+pub(crate) fn weighted_sum(
+    probs: &[(u32, f32)],
+    v_row: impl Fn(usize) -> *const f32,
+    d_v: usize,
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    for &(j, w) in probs {
+        let vp = v_row(j as usize);
+        unsafe {
+            for t in 0..d_v {
+                out[t] += w * *vp.add(t);
+            }
+        }
+    }
+}
+
 /// Softmax + weighted V-sum over an explicit (key id, score) set
-/// (shared with the session decode path).
+/// (shared with the session decode path). Streams with zero
+/// allocation, but computes each weight with exactly the
+/// [`softmax_probs`] formula (`(s-m).exp() * (1/l)`, same order), so
+/// callers that also need the probabilities (KV-policy observation)
+/// can run [`softmax_probs`] ∘ [`weighted_sum`] instead and get
+/// bit-identical outputs.
 pub(crate) fn softmax_weighted_sum(
     scores: &[(u32, f32)],
     v_row: impl Fn(usize) -> *const f32,
@@ -181,14 +220,71 @@ impl SparseKvCache {
 // ---------------------------------------------------------------------------
 
 /// Which keys a pruning policy retains for the current step.
-pub trait KvPolicy: Send {
+///
+/// Two consumers drive this trait. The Table-11 baselines
+/// ([`PrunedKvCache`]) call `select` to *score a subset* each step and
+/// keep every key resident. The serve stack's policy-budgeted lanes
+/// (`AttentionSession::admit_lane_with_policy`) instead use `select`'s
+/// result as the *survivor set* of a physical eviction
+/// ([`crate::kv_cache::paged::PagedKvCache::retain`]) and then call
+/// [`KvPolicy::compact`] so the policy remaps its statistics onto the
+/// compacted coordinates. `Sync` is required because policies live
+/// inside sessions that are shared across scoring threads (the
+/// policies themselves are only mutated between parallel sections).
+pub trait KvPolicy: Send + Sync {
     fn name(&self) -> String;
     /// Called once per decode step *before* scoring; returns the key ids
-    /// to score against (always includes the most recent keys).
+    /// to score against, ascending (always includes the most recent
+    /// keys).
     fn select(&mut self, cache_len: usize) -> Vec<u32>;
     /// Called after scoring with the (key, prob) pairs so stateful
     /// policies (H2O) can update their statistics.
     fn observe(&mut self, probs: &[(u32, f32)]);
+    /// Feed one freshly cached key (`key_id` is its cache position) to
+    /// policies that summarize keys (Quest page min/max). Default: no-op.
+    fn ingest_key(&mut self, _key_id: usize, _key: &[f32]) {}
+    /// Latest query, for query-aware selection (Quest). Default: no-op.
+    fn set_query(&mut self, _q: &[f32]) {}
+    /// The cache physically evicted everything outside `keep`
+    /// (ascending): key `keep[i]` is now key `i`. Remap internal state.
+    /// Default: no-op (stateless policies).
+    fn compact(&mut self, _keep: &[u32]) {}
+}
+
+/// Top-`budget` ids from `[0, recent_lo)` by cumulative attention mass
+/// (the heavy-hitter selection H2O and SnapKV-once share). Caller
+/// guarantees `cumulative.len() >= recent_lo`.
+fn top_by_mass(cumulative: &[f32], budget: usize, recent_lo: usize) -> Vec<u32> {
+    let mut heavy: Vec<u32> = (0..recent_lo as u32).collect();
+    if heavy.len() > budget {
+        heavy.select_nth_unstable_by(budget - 1, |&a, &b| {
+            cumulative[b as usize].partial_cmp(&cumulative[a as usize]).unwrap()
+        });
+        heavy.truncate(budget);
+    }
+    heavy
+}
+
+/// Accumulate observed probability mass per key id, growing the vector
+/// as new ids appear.
+fn accumulate_mass(cumulative: &mut Vec<f32>, probs: &[(u32, f32)]) {
+    for &(j, p) in probs {
+        if j as usize >= cumulative.len() {
+            cumulative.resize(j as usize + 1, 0.0);
+        }
+        cumulative[j as usize] += p;
+    }
+}
+
+/// Remap key ids into the post-compaction numbering (`keep` ascending;
+/// ids not in `keep` were evicted and drop out).
+fn remap_ids(ids: &[u32], keep: &[u32]) -> Vec<u32> {
+    ids.iter().filter_map(|&j| keep.binary_search(&j).ok().map(|i| i as u32)).collect()
+}
+
+/// Gather each kept id's cumulative mass into the compacted numbering.
+fn remap_mass(cumulative: &[f32], keep: &[u32]) -> Vec<f32> {
+    keep.iter().map(|&j| cumulative.get(j as usize).copied().unwrap_or(0.0)).collect()
 }
 
 /// H2O: keep `budget` heavy hitters by cumulative attention mass plus a
@@ -213,24 +309,18 @@ impl KvPolicy for H2oPolicy {
     fn select(&mut self, cache_len: usize) -> Vec<u32> {
         self.cumulative.resize(cache_len, 0.0);
         let recent_lo = cache_len.saturating_sub(self.recent);
-        let mut heavy: Vec<u32> = (0..recent_lo as u32).collect();
-        if heavy.len() > self.budget {
-            heavy.select_nth_unstable_by(self.budget - 1, |&a, &b| {
-                self.cumulative[b as usize]
-                    .partial_cmp(&self.cumulative[a as usize])
-                    .unwrap()
-            });
-            heavy.truncate(self.budget);
-        }
+        let mut heavy = top_by_mass(&self.cumulative, self.budget, recent_lo);
         heavy.extend(recent_lo as u32..cache_len as u32);
         heavy.sort_unstable();
         heavy
     }
 
     fn observe(&mut self, probs: &[(u32, f32)]) {
-        for &(j, p) in probs {
-            self.cumulative[j as usize] += p;
-        }
+        accumulate_mass(&mut self.cumulative, probs);
+    }
+
+    fn compact(&mut self, keep: &[u32]) {
+        self.cumulative = remap_mass(&self.cumulative, keep);
     }
 }
 
@@ -256,6 +346,87 @@ impl KvPolicy for SnapKvPolicy {
     }
 
     fn observe(&mut self, _probs: &[(u32, f32)]) {}
+
+    fn compact(&mut self, keep: &[u32]) {
+        self.keep = remap_ids(&self.keep, keep);
+    }
+}
+
+/// Serve-side SnapKV: like [`SnapKvPolicy`] the retained set is chosen
+/// *once*, but here the policy chooses it itself — at the first
+/// compaction (prefill end under policy-budget serving) — from the
+/// attention mass observed so far (the pooled recent-query window the
+/// session feeds it during prefill). Until then it accumulates like
+/// H2O; afterwards `observe` is ignored and the frozen set plus the
+/// recent tail is all that survives.
+pub struct SnapKvOncePolicy {
+    pub budget: usize,
+    pub recent: usize,
+    cumulative: Vec<f32>,
+    /// Chosen-once retained set in *current* cache coordinates; `None`
+    /// until the first compaction freezes it.
+    frozen: Option<Vec<u32>>,
+    /// `cache_len - recent` at the last `select`, to split scored picks
+    /// from the recent tail when the freeze happens.
+    last_recent_lo: u32,
+}
+
+impl SnapKvOncePolicy {
+    pub fn new(budget: usize, recent: usize) -> Self {
+        SnapKvOncePolicy {
+            budget,
+            recent,
+            cumulative: Vec::new(),
+            frozen: None,
+            last_recent_lo: 0,
+        }
+    }
+}
+
+impl KvPolicy for SnapKvOncePolicy {
+    fn name(&self) -> String {
+        format!("snapkv_once(b={},r={})", self.budget, self.recent)
+    }
+
+    fn select(&mut self, cache_len: usize) -> Vec<u32> {
+        let recent_lo = cache_len.saturating_sub(self.recent);
+        self.last_recent_lo = recent_lo as u32;
+        let mut set: Vec<u32> = match &self.frozen {
+            Some(frozen) => {
+                frozen.iter().copied().filter(|&j| j < recent_lo as u32).collect()
+            }
+            None => {
+                self.cumulative.resize(cache_len, 0.0);
+                top_by_mass(&self.cumulative, self.budget, recent_lo)
+            }
+        };
+        set.extend(recent_lo as u32..cache_len as u32);
+        set.sort_unstable();
+        set.dedup();
+        set
+    }
+
+    fn observe(&mut self, probs: &[(u32, f32)]) {
+        if self.frozen.is_some() {
+            return; // the set is snapped; later attention can't move it
+        }
+        accumulate_mass(&mut self.cumulative, probs);
+    }
+
+    fn compact(&mut self, keep: &[u32]) {
+        self.cumulative = remap_mass(&self.cumulative, keep);
+        self.frozen = Some(match &self.frozen {
+            // Remap the frozen ids onto the compacted coordinates.
+            Some(frozen) => remap_ids(frozen, keep),
+            // First compaction: freeze the scored (non-tail) survivors.
+            None => keep
+                .iter()
+                .enumerate()
+                .filter(|&(_, &j)| j < self.last_recent_lo)
+                .map(|(i, _)| i as u32)
+                .collect(),
+        });
+    }
 }
 
 /// Quest-style page selection: summarize pages of `page` keys by
@@ -283,25 +454,6 @@ impl QuestPolicy {
             n_pages: 0,
             q: vec![0.0; d],
         }
-    }
-
-    /// Update page summaries with a freshly appended key.
-    pub fn ingest_key(&mut self, key_id: usize, key: &[f32]) {
-        let pg = key_id / self.page;
-        if pg >= self.n_pages {
-            self.n_pages = pg + 1;
-            self.page_min.resize(self.n_pages * self.d, f32::INFINITY);
-            self.page_max.resize(self.n_pages * self.d, f32::NEG_INFINITY);
-        }
-        for t in 0..self.d {
-            let i = pg * self.d + t;
-            self.page_min[i] = self.page_min[i].min(key[t]);
-            self.page_max[i] = self.page_max[i].max(key[t]);
-        }
-    }
-
-    pub fn set_query(&mut self, q: &[f32]) {
-        self.q.copy_from_slice(q);
     }
 
     fn page_bound(&self, pg: usize) -> f32 {
@@ -345,6 +497,189 @@ impl KvPolicy for QuestPolicy {
     }
 
     fn observe(&mut self, _probs: &[(u32, f32)]) {}
+
+    /// Update page summaries with a freshly appended key.
+    fn ingest_key(&mut self, key_id: usize, key: &[f32]) {
+        let pg = key_id / self.page;
+        if pg >= self.n_pages {
+            self.n_pages = pg + 1;
+            self.page_min.resize(self.n_pages * self.d, f32::INFINITY);
+            self.page_max.resize(self.n_pages * self.d, f32::NEG_INFINITY);
+        }
+        for t in 0..self.d {
+            let i = pg * self.d + t;
+            self.page_min[i] = self.page_min[i].min(key[t]);
+            self.page_max[i] = self.page_max[i].max(key[t]);
+        }
+    }
+
+    fn set_query(&mut self, q: &[f32]) {
+        self.q.copy_from_slice(q);
+    }
+
+    /// Rebuild page summaries for the compacted key numbering. Each new
+    /// page's bounds are the elementwise min/max over the old pages its
+    /// surviving keys came from — exact when whole pages survive (the
+    /// shape Quest's own `select` produces), conservative (bounds only
+    /// widen, never tighten incorrectly) for arbitrary keeps.
+    fn compact(&mut self, keep: &[u32]) {
+        let n_new = keep.len().div_ceil(self.page);
+        let mut nmin = vec![f32::INFINITY; n_new * self.d];
+        let mut nmax = vec![f32::NEG_INFINITY; n_new * self.d];
+        for (new_id, &old_id) in keep.iter().enumerate() {
+            let np = new_id / self.page;
+            let op = old_id as usize / self.page;
+            if op >= self.n_pages {
+                continue;
+            }
+            for t in 0..self.d {
+                nmin[np * self.d + t] = nmin[np * self.d + t].min(self.page_min[op * self.d + t]);
+                nmax[np * self.d + t] = nmax[np * self.d + t].max(self.page_max[op * self.d + t]);
+            }
+        }
+        self.page_min = nmin;
+        self.page_max = nmax;
+        self.n_pages = n_new;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Paged-lane policy config (the serve stack's eviction surface)
+// ---------------------------------------------------------------------------
+
+/// Configuration for a policy-budgeted paged lane: which [`KvPolicy`]
+/// the lane runs and its token budget. The serve stack reserves KV
+/// pages by this budget instead of the worst-case `prompt + max_new`
+/// footprint (`serve::ContinuousBatcher`), and the session prunes the
+/// lane's pages back under it between decode steps
+/// (`AttentionSession::admit_lane_with_policy`).
+///
+/// Spec strings mirror the engine registry:
+/// `h2o[:budget=128,recent=16]` | `snapkv[:budget=128,recent=16]` |
+/// `quest[:budget=128]` | `none`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PagedKvPolicy {
+    /// H2O: `budget` heavy hitters by cumulative attention mass plus a
+    /// `recent` tail.
+    H2o { budget: usize, recent: usize },
+    /// SnapKV-style: the retained set is frozen at the first prune
+    /// (prefill end), plus a `recent` tail ([`SnapKvOncePolicy`]).
+    SnapKv { budget: usize, recent: usize },
+    /// Quest-style query-aware page eviction at the KV cache's own
+    /// page granularity; `budget` is in tokens (rounded up to pages).
+    Quest { budget: usize },
+}
+
+impl PagedKvPolicy {
+    pub fn label(&self) -> String {
+        match *self {
+            PagedKvPolicy::H2o { budget, recent } => format!("h2o(b={budget},r={recent})"),
+            PagedKvPolicy::SnapKv { budget, recent } => {
+                format!("snapkv(b={budget},r={recent})")
+            }
+            PagedKvPolicy::Quest { budget } => format!("quest(b={budget})"),
+        }
+    }
+
+    pub fn family(&self) -> &'static str {
+        match self {
+            PagedKvPolicy::H2o { .. } => "h2o",
+            PagedKvPolicy::SnapKv { .. } => "snapkv",
+            PagedKvPolicy::Quest { .. } => "quest",
+        }
+    }
+
+    /// Most cached tokens a pruned lane holds right after a prune — the
+    /// bound the serve admission policy sizes page reservations by
+    /// (plus one for the append that precedes each prune).
+    pub fn max_cached_tokens(&self, page_size: usize) -> usize {
+        match *self {
+            PagedKvPolicy::H2o { budget, recent }
+            | PagedKvPolicy::SnapKv { budget, recent } => budget + recent,
+            // Quest keeps `budget` worth of pages plus the newest page.
+            PagedKvPolicy::Quest { budget } => {
+                (budget.div_ceil(page_size).max(1) + 1) * page_size
+            }
+        }
+    }
+
+    /// Prompt positions whose prefill attention the session replays
+    /// into `observe` before the first prune (the SnapKV pooling
+    /// window; also seeds H2O's mass). Quest ignores observations
+    /// (query-driven page bounds), so its window is 0 and the session
+    /// skips the replay entirely.
+    pub fn observe_window(&self) -> usize {
+        match *self {
+            PagedKvPolicy::H2o { recent, .. } | PagedKvPolicy::SnapKv { recent, .. } => {
+                recent.max(1)
+            }
+            PagedKvPolicy::Quest { .. } => 0,
+        }
+    }
+
+    /// Build one per-head policy instance. `d` is the head dim (Quest
+    /// summaries), `page_size` the KV cache page size (Quest eviction
+    /// granularity).
+    pub fn build(&self, d: usize, page_size: usize) -> Box<dyn KvPolicy> {
+        match *self {
+            PagedKvPolicy::H2o { budget, recent } => Box::new(H2oPolicy::new(budget, recent)),
+            PagedKvPolicy::SnapKv { budget, recent } => {
+                Box::new(SnapKvOncePolicy::new(budget, recent))
+            }
+            PagedKvPolicy::Quest { budget } => Box::new(QuestPolicy::new(
+                page_size,
+                budget.div_ceil(page_size).max(1),
+                d,
+            )),
+        }
+    }
+
+    /// Parse a policy spec string; `"none"` means no policy
+    /// (worst-case page reservations). Defaults: `budget=128`,
+    /// `recent=16`.
+    pub fn parse(spec: &str) -> Result<Option<PagedKvPolicy>, String> {
+        let spec = spec.trim();
+        let (family, rest) = match spec.split_once(':') {
+            Some((f, r)) => (f.trim(), r),
+            None => (spec, ""),
+        };
+        let mut budget = 128usize;
+        let mut recent = 16usize;
+        for part in rest.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if family == "none" {
+                // `none:budget=64` is almost certainly a typo for a
+                // real policy — refuse rather than silently not evict.
+                return Err(format!("none takes no parameters, got {part:?}"));
+            }
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                format!("{family}: malformed parameter {part:?} (expected key=value)")
+            })?;
+            let n: usize = v.trim().parse().map_err(|_| {
+                format!("{family}: key {:?} expects an integer, got {v:?}", k.trim())
+            })?;
+            match k.trim() {
+                "budget" => budget = n,
+                "recent" if family != "quest" => recent = n,
+                other => return Err(format!("{family}: unknown key {other:?}")),
+            }
+        }
+        if family != "none" && budget == 0 {
+            return Err(format!("{family}: budget must be >= 1"));
+        }
+        match family {
+            "none" => Ok(None),
+            "h2o" => Ok(Some(PagedKvPolicy::H2o { budget, recent })),
+            "snapkv" => Ok(Some(PagedKvPolicy::SnapKv { budget, recent })),
+            "quest" => Ok(Some(PagedKvPolicy::Quest { budget })),
+            other => Err(format!(
+                "unknown KV policy {other:?} — known: none, h2o, snapkv, quest"
+            )),
+        }
+    }
 }
 
 /// Dense KV cache + pruning policy + pluggable scorer (Table 11 rows
@@ -412,29 +747,12 @@ impl<P: KvPolicy> PrunedKvCache<P> {
                 }
             }
         }
-        // softmax over the retained set
-        let m = scores.iter().fold(NEG_INF, |a, &(_, s)| a.max(s));
-        let mut probs: Vec<(u32, f32)> = Vec::with_capacity(scores.len());
-        let mut l = 0.0;
-        for &(j, s) in &scores {
-            let e = (s - m).exp();
-            l += e;
-            probs.push((j, e));
-        }
-        for p in probs.iter_mut() {
-            p.1 /= l;
-        }
-        out.fill(0.0);
-        for &(j, w) in &probs {
-            let vrow = self.cache.values
-                [j as usize * self.cache.d_v..(j as usize + 1) * self.cache.d_v]
-                .as_ptr();
-            unsafe {
-                for t in 0..self.cache.d_v {
-                    out[t] += w * *vrow.add(t);
-                }
-            }
-        }
+        // softmax over the retained set (shared helpers, so the probs
+        // fed to `observe` are exactly the weights applied to V)
+        let probs = softmax_probs(&scores);
+        let values = &self.cache.values;
+        let dv = self.cache.d_v;
+        weighted_sum(&probs, |j| values[j * dv..].as_ptr(), dv, out);
         self.policy.observe(&probs);
     }
 }
@@ -537,6 +855,106 @@ mod tests {
         assert!(sel.contains(&4) && sel.contains(&7), "{sel:?}");
         assert!(sel.contains(&11));
         assert!(!sel.contains(&0));
+    }
+
+    #[test]
+    fn softmax_probs_normalize_and_empty_is_empty() {
+        let scores = vec![(0u32, 0.5f32), (1, -1.0), (2, 2.0)];
+        let probs = softmax_probs(&scores);
+        let total: f32 = probs.iter().map(|&(_, p)| p).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        assert!(probs[2].1 > probs[0].1 && probs[0].1 > probs[1].1);
+        assert!(softmax_probs(&[]).is_empty());
+        let mut out = vec![1.0f32; 2];
+        weighted_sum(&[], |_| std::ptr::null(), 2, &mut out);
+        assert_eq!(out, vec![0.0, 0.0], "empty set zeroes the output");
+    }
+
+    #[test]
+    fn h2o_compact_remaps_cumulative_mass() {
+        let mut p = H2oPolicy::new(1, 2);
+        p.observe(&[(5, 0.9), (0, 0.1)]);
+        // Evict everything but {0, 5, 8, 9}: key 5 becomes key 1.
+        p.compact(&[0, 5, 8, 9]);
+        let sel = p.select(4);
+        assert!(sel.contains(&1), "heavy hitter follows the remap: {sel:?}");
+        assert!(sel.contains(&2) && sel.contains(&3), "recent tail");
+        assert!(!sel.contains(&0), "mass moved off the old coordinate");
+    }
+
+    #[test]
+    fn snapkv_once_freezes_at_first_compact() {
+        let mut p = SnapKvOncePolicy::new(2, 2);
+        // Mass on keys 1 and 4; 8 cached keys, tail = {6, 7}.
+        p.observe(&[(1, 0.5), (4, 0.4), (0, 0.1)]);
+        let keep = p.select(8);
+        assert_eq!(keep, vec![1, 4, 6, 7]);
+        p.compact(&keep);
+        // Frozen: {1, 4} are now keys {0, 1}. Later mass is ignored.
+        p.observe(&[(3, 5.0)]);
+        let keep2 = p.select(6);
+        assert_eq!(keep2, vec![0, 1, 4, 5], "frozen set + new tail");
+        p.compact(&keep2);
+        let keep3 = p.select(5);
+        assert_eq!(keep3, vec![0, 1, 3, 4], "frozen ids track every compaction");
+    }
+
+    #[test]
+    fn quest_compact_remaps_page_summaries() {
+        let d = 2;
+        let mut p = QuestPolicy::new(2, 1, d);
+        // 3 pages of 2 keys; page 1 is the hot one.
+        for i in 0..6 {
+            let scale = if (2..4).contains(&i) { 10.0 } else { 0.1 };
+            let key = vec![scale; d];
+            p.ingest_key(i, &key);
+        }
+        // Whole-page eviction of page 0 (Quest's own shape): pages 1, 2
+        // survive and renumber to 0, 1.
+        p.compact(&[2, 3, 4, 5]);
+        p.set_query(&[1.0, 1.0]);
+        let sel = p.select(4);
+        assert!(sel.contains(&0) && sel.contains(&1), "hot page renumbered: {sel:?}");
+        assert!(sel.contains(&3), "newest page always kept");
+    }
+
+    #[test]
+    fn paged_policy_spec_parsing_and_budgets() {
+        assert_eq!(PagedKvPolicy::parse("none").unwrap(), None);
+        assert_eq!(
+            PagedKvPolicy::parse("h2o").unwrap(),
+            Some(PagedKvPolicy::H2o { budget: 128, recent: 16 })
+        );
+        assert_eq!(
+            PagedKvPolicy::parse("snapkv:budget=32,recent=4").unwrap(),
+            Some(PagedKvPolicy::SnapKv { budget: 32, recent: 4 })
+        );
+        assert_eq!(
+            PagedKvPolicy::parse(" quest:budget=64 ").unwrap(),
+            Some(PagedKvPolicy::Quest { budget: 64 })
+        );
+        assert!(PagedKvPolicy::parse("lru").unwrap_err().contains("unknown KV policy"));
+        assert!(PagedKvPolicy::parse("h2o:budget=zero").unwrap_err().contains("integer"));
+        assert!(PagedKvPolicy::parse("h2o:window=4").unwrap_err().contains("unknown key"));
+        assert!(PagedKvPolicy::parse("quest:recent=4").unwrap_err().contains("unknown key"));
+        assert!(PagedKvPolicy::parse("h2o:budget=0").unwrap_err().contains(">= 1"));
+        assert!(
+            PagedKvPolicy::parse("none:budget=64").unwrap_err().contains("no parameters"),
+            "none with parameters is a likely typo and must not parse"
+        );
+
+        let h2o = PagedKvPolicy::H2o { budget: 32, recent: 8 };
+        assert_eq!(h2o.max_cached_tokens(16), 40);
+        assert_eq!(h2o.family(), "h2o");
+        assert!(h2o.label().contains("b=32"));
+        // Quest rounds its budget up to whole pages, plus the newest:
+        // 33 tokens -> 3 budget pages + 1 newest = 64 token slots.
+        let quest = PagedKvPolicy::Quest { budget: 33 };
+        assert_eq!(quest.max_cached_tokens(16), 4 * 16);
+        // Built policies respect their configured geometry.
+        let mut built = PagedKvPolicy::SnapKv { budget: 2, recent: 1 }.build(4, 16);
+        assert!(built.name().contains("snapkv_once"));
+        assert!(built.select(10).len() <= 3);
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //! * [`window`] — Longformer-style local attention (token sparsity),
 //!   composable with the SFA scorer (Table 10/11 "+SFA" rows)
 //! * [`decode`] — single-query decode attention + KV-pruning policies
-//!   (H2O / SnapKV / Quest) and their SFA compositions
+//!   (H2O / SnapKV / Quest) and their SFA compositions; also the
+//!   [`decode::PagedKvPolicy`] config the serve stack uses to run
+//!   those policies as physical page eviction on policy-budgeted
+//!   session lanes
 //! * [`lowrank`] — Loki-style PCA-projected keys (training-free)
 //! * [`performer`] — FAVOR+ positive random features (kernel baseline)
 //! * [`mla`] — multi-head latent attention (shared KV compression),

@@ -33,8 +33,23 @@
 //! arbitrary subset of live lanes), and
 //! [`AttentionSession::release_lane`] (free a finished lane's pages
 //! immediately, mid-wave). `rust/src/serve/` drives this surface.
+//!
+//! ## Policy-budgeted lanes — KV eviction inside a live batch
+//!
+//! [`AttentionSession::admit_lane_with_policy`] attaches one
+//! [`KvPolicy`] per head to a lane. The session replays a window of
+//! prefill attention into the policies, then prunes the lane's pages
+//! back under the policy's token budget after prefill and between
+//! [`AttentionSession::decode_step_lanes`] calls
+//! ([`PagedKvCache::retain`] physically frees whole pages). A policy
+//! whose budget exceeds the sequence length never prunes, and the
+//! scoring path is shared with plain lanes, so a no-op-budget policy
+//! lane is bit-for-bit identical to an unpruned run — the guarantee
+//! the serve equivalence tests pin.
 
-use crate::attention::decode::{softmax_weighted_sum, topk_row};
+use crate::attention::decode::{
+    softmax_probs, softmax_weighted_sum, topk_row, weighted_sum, KvPolicy, PagedKvPolicy,
+};
 use crate::attention::registry::{parse_spec, EngineSpec, SpecError};
 use crate::attention::{Engine, HeadTensor, Scorer};
 use crate::kv_cache::paged::{PageError, PagedKvCache, SeqId, SlotLayout};
@@ -88,13 +103,29 @@ impl SessionConfig {
 pub type LaneId = usize;
 
 /// One batch slot: `heads` paged-cache sequences plus its own length.
-#[derive(Debug)]
 struct Lane {
     /// One cache sequence per head (empty once released).
     seqs: Vec<SeqId>,
-    /// Tokens appended to this lane so far.
+    /// Tokens appended to this lane so far — the absolute position
+    /// counter. Policy eviction shrinks the *cached* token count (see
+    /// [`AttentionSession::lane_cached`]) but never this.
     len: usize,
     live: bool,
+    /// Eviction-policy state for a policy-budgeted lane.
+    policy: Option<LanePolicy>,
+}
+
+/// Eviction-policy state of one policy-budgeted lane.
+struct LanePolicy {
+    /// Cached-token cap per head; any head over it is pruned back
+    /// under it after the step.
+    limit: usize,
+    /// Prompt positions whose prefill attention is replayed into
+    /// `observe` before the first prune.
+    observe_window: usize,
+    /// One policy instance per head — heads prune independently, so
+    /// their cached lengths may diverge.
+    heads: Vec<Box<dyn KvPolicy>>,
 }
 
 /// One live multi-head attention session over a paged KV cache.
@@ -107,6 +138,9 @@ pub struct AttentionSession {
     /// Batch slots; `cfg.batch` live lanes at construction, grown and
     /// recycled by [`Self::admit_lane`] / [`Self::release_lane`].
     lanes: Vec<Lane>,
+    /// Pages returned to the pool by policy pruning since the last
+    /// [`Self::take_policy_freed`] drain.
+    policy_freed: usize,
 }
 
 impl AttentionSession {
@@ -147,9 +181,10 @@ impl AttentionSession {
                 seqs: (0..cfg.heads).map(|_| cache.create_seq()).collect(),
                 len: 0,
                 live: true,
+                policy: None,
             })
             .collect();
-        AttentionSession { engine: spec.build(), cfg, spec, scorer, cache, lanes }
+        AttentionSession { engine: spec.build(), cfg, spec, scorer, cache, lanes, policy_freed: 0 }
     }
 
     pub fn spec(&self) -> &EngineSpec {
@@ -218,6 +253,21 @@ impl AttentionSession {
         l.seqs.iter().map(|&s| self.cache.seq_pages(s).unwrap_or(0)).sum()
     }
 
+    /// Tokens physically cached for one lane (max across heads) — equal
+    /// to [`Self::lane_len`] until a policy evicts, lower afterwards.
+    pub fn lane_cached(&self, lane: LaneId) -> usize {
+        let l = &self.lanes[lane];
+        assert!(l.live, "lane {lane} was released");
+        l.seqs.iter().map(|&s| self.cache.seq_len(s).unwrap_or(0)).max().unwrap_or(0)
+    }
+
+    /// Drain the count of pages policy pruning has returned to the
+    /// pool since the last drain (the scheduler's per-step
+    /// `pages_pruned` observability).
+    pub fn take_policy_freed(&mut self) -> usize {
+        std::mem::take(&mut self.policy_freed)
+    }
+
     /// Admit a new empty lane (recycling a released slot when one
     /// exists), creating one paged-cache sequence per head. Page
     /// allocation is deferred to the first appended token, so admission
@@ -228,6 +278,7 @@ impl AttentionSession {
             seqs: (0..self.cfg.heads).map(|_| self.cache.create_seq()).collect(),
             len: 0,
             live: true,
+            policy: None,
         };
         match self.lanes.iter().position(|l| !l.live) {
             Some(slot) => {
@@ -241,6 +292,24 @@ impl AttentionSession {
         }
     }
 
+    /// Admit a policy-budgeted lane: like [`Self::admit_lane`], plus
+    /// one [`KvPolicy`] per head that physically prunes the lane's
+    /// pages back under `spec`'s token budget after prefill and
+    /// between decode steps (freed pages go straight back to the pool,
+    /// which is what lets a scheduler reserve the policy budget
+    /// instead of the worst-case `prompt + max_new` footprint).
+    pub fn admit_lane_with_policy(&mut self, spec: &PagedKvPolicy) -> LaneId {
+        let lane = self.admit_lane();
+        self.lanes[lane].policy = Some(LanePolicy {
+            limit: spec.max_cached_tokens(self.cfg.page_size),
+            observe_window: spec.observe_window(),
+            heads: (0..self.cfg.heads)
+                .map(|_| spec.build(self.cfg.d, self.cfg.page_size))
+                .collect(),
+        });
+        lane
+    }
+
     /// Release a lane mid-wave, freeing its pages immediately; returns
     /// how many pages went back to the budget. The handle becomes
     /// invalid (its slot is recycled by the next [`Self::admit_lane`]).
@@ -251,6 +320,7 @@ impl AttentionSession {
         }
         l.live = false;
         l.len = 0;
+        l.policy = None;
         let seqs = std::mem::take(&mut l.seqs);
         let mut freed = 0;
         for s in seqs {
@@ -366,7 +436,87 @@ impl AttentionSession {
             }
         }
         self.lanes[lane].len = k.n;
+        if self.lanes[lane].policy.is_some() {
+            self.seed_lane_policy(lane, q, k, causal);
+        }
         Ok(self.engine.forward_batched(q, k, v, causal))
+    }
+
+    /// Post-prefill policy hook: feed every cached key and the final
+    /// prompt query to the per-head policies, replay the attention of
+    /// the last `observe_window` prompt queries into `observe` (the
+    /// SnapKV pooling window; it also seeds H2O's cumulative mass —
+    /// skipped entirely for observation-free policies like Quest),
+    /// then prune the lane back under its budget before it joins the
+    /// decode wave — so a long prompt's pages are a prefill-time
+    /// transient, not a lifetime reservation.
+    fn seed_lane_policy(&mut self, lane: LaneId, q: &HeadTensor, k: &HeadTensor, causal: bool) {
+        let n = k.n;
+        if n == 0 {
+            return; // nothing cached, nothing to observe or prune
+        }
+        let window =
+            self.lanes[lane].policy.as_ref().expect("policy lane").observe_window.min(n);
+        for h in 0..self.cfg.heads {
+            let seq = self.lanes[lane].seqs[h];
+            let slots = self.cache.token_slices(seq).expect("lane sequence exists");
+            let mut observed: Vec<Vec<(u32, f32)>> = Vec::with_capacity(window);
+            for p in n - window..n {
+                // Match the prefill's masking: causal query p sees keys
+                // 0..=p, a non-causal one sees the whole prompt.
+                let upto = if causal { p + 1 } else { n };
+                let scores = self.head_scores(&slots[..upto], q.head_row(0, h, p));
+                observed.push(softmax_probs(&scores));
+            }
+            drop(slots);
+            let pol = self.lanes[lane].policy.as_mut().expect("policy lane");
+            for t in 0..n {
+                pol.heads[h].ingest_key(t, k.head_row(0, h, t));
+            }
+            pol.heads[h].set_query(q.head_row(0, h, n - 1));
+            for probs in &observed {
+                pol.heads[h].observe(probs);
+            }
+        }
+        self.prune_lane(lane);
+    }
+
+    /// Prune one policy lane back under its token budget: each
+    /// over-budget head's policy selects the survivors, the cache
+    /// physically evicts the rest ([`PagedKvCache::retain`] — whole
+    /// pages return to the pool), and the policy remaps its statistics
+    /// onto the compacted coordinates. Returns the pages freed (also
+    /// accumulated for [`Self::take_policy_freed`]). No-op for lanes
+    /// without a policy or under budget — the no-op-budget guarantee.
+    pub fn prune_lane(&mut self, lane: LaneId) -> usize {
+        assert!(self.lanes[lane].live, "lane {lane} was released");
+        if self.lanes[lane].policy.is_none() {
+            return 0;
+        }
+        let mut freed = 0;
+        for h in 0..self.cfg.heads {
+            let l = &mut self.lanes[lane];
+            let pol = l.policy.as_mut().expect("checked above");
+            let seq = l.seqs[h];
+            let cached = self.cache.seq_len(seq).expect("lane sequence exists");
+            if cached <= pol.limit {
+                continue;
+            }
+            let keep = pol.heads[h].select(cached);
+            let keep_pos: Vec<usize> = keep.iter().map(|&j| j as usize).collect();
+            match self.cache.retain(seq, &keep_pos) {
+                Ok(f) => {
+                    freed += f;
+                    pol.heads[h].compact(&keep);
+                }
+                // Fork-shared pages with an exhausted pool: leave this
+                // head unpruned (eviction is an optimization, not a
+                // correctness requirement).
+                Err(_) => continue,
+            }
+        }
+        self.policy_freed += freed;
+        freed
     }
 
     /// One decode step: append the new token's K/V for every head, then
@@ -424,30 +574,86 @@ impl AttentionSession {
             self.lanes[lane].len += 1;
         }
 
+        // Policy lanes: feed the step's key/query to each head's policy
+        // and size the per-(lane, head) probability ranges the scoring
+        // loop fills for observation. Plain lanes keep zero-length
+        // ranges and take the exact same scoring path with no buffer.
+        let bh = lanes.len() * heads;
+        let mut probs_len = vec![0usize; bh];
+        for (bi, &lane) in lanes.iter().enumerate() {
+            if self.lanes[lane].policy.is_none() {
+                continue;
+            }
+            for h in 0..heads {
+                probs_len[bi * heads + h] =
+                    self.cache.seq_len(seqs[bi * heads + h]).expect("just appended");
+            }
+            let pol = self.lanes[lane].policy.as_mut().expect("checked above");
+            for h in 0..heads {
+                pol.heads[h].ingest_key(probs_len[bi * heads + h] - 1, k.head_row(bi, h, 0));
+                pol.heads[h].set_query(q.head_row(bi, h, 0));
+            }
+        }
+        let mut offsets = vec![0usize; bh + 1];
+        for i in 0..bh {
+            offsets[i + 1] = offsets[i] + probs_len[i];
+        }
+        let mut probs_buf = vec![0f32; offsets[bh]];
+
         let mut out = HeadTensor::zeros(lanes.len(), heads, 1, self.cfg.d_v);
         let hv = self.cfg.d_v;
         let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let probs_ptr = SendPtr(probs_buf.as_mut_ptr());
         let this: &AttentionSession = self;
-        let seqs = &seqs;
-        let bh = lanes.len() * heads;
+        let seqs_ref = &seqs;
+        let probs_len_ref = &probs_len;
+        let offsets_ref = &offsets;
         let threads = default_threads().min(bh.max(1));
         parallel_for_dynamic(bh, threads, 1, move |i| {
             let (bi, h) = (i / heads, i % heads);
-            // SAFETY: each (lane, head) owns a disjoint output range.
+            // SAFETY: each (lane, head) owns a disjoint output range,
+            // and a disjoint probability range when one was sized.
             let dst =
                 unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(i * hv), hv) };
-            this.decode_head(seqs[i], q.head_row(bi, h, 0), dst);
+            let probs = (probs_len_ref[i] > 0).then(|| unsafe {
+                std::slice::from_raw_parts_mut(
+                    probs_ptr.get().add(offsets_ref[i]),
+                    probs_len_ref[i],
+                )
+            });
+            this.decode_head(seqs_ref[i], q.head_row(bi, h, 0), dst, probs);
         });
+
+        // Feed the observed attention mass back to the policies, then
+        // prune any lane that drifted over its budget (freed pages
+        // return to the pool mid-wave; take_policy_freed drains the
+        // count).
+        for (bi, &lane) in lanes.iter().enumerate() {
+            if self.lanes[lane].policy.is_none() {
+                continue;
+            }
+            for h in 0..heads {
+                let i = bi * heads + h;
+                let pairs: Vec<(u32, f32)> = probs_buf
+                    [offsets[i]..offsets[i] + probs_len[i]]
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &p)| (j as u32, p))
+                    .collect();
+                self.lanes[lane].policy.as_mut().expect("checked above").heads[h]
+                    .observe(&pairs);
+            }
+            self.prune_lane(lane);
+        }
         Ok(out)
     }
 
-    /// Score one head's query row against its cached sequence and write
-    /// the softmax-weighted V sum into `out`.
-    fn decode_head(&self, seq: SeqId, q: &[f32], out: &mut [f32]) {
+    /// Score one query row against a prefix of cached token slots with
+    /// the session's scorer — the shared kernel of the decode path and
+    /// the policy observation pass.
+    fn head_scores(&self, slots: &[&[f32]], q: &[f32]) -> Vec<(u32, f32)> {
         let d = self.cfg.d;
-        let d_v = self.cfg.d_v;
         let scale = 1.0 / (d as f32).sqrt();
-        let slots = self.cache.token_slices(seq).expect("session sequence exists");
         let mut scores: Vec<(u32, f32)> = Vec::with_capacity(slots.len());
         match self.scorer {
             Scorer::Dense => {
@@ -458,11 +664,9 @@ impl AttentionSession {
                     }
                     scores.push((j as u32, acc * scale));
                 }
-                softmax_weighted_sum(&scores, |j| slots[j][d..].as_ptr(), d_v, out);
             }
             Scorer::Sfa { k } => {
                 let (qv, qi) = topk_row(q, k);
-                let v_off = k + k.div_ceil(2);
                 for (j, slot) in slots.iter().enumerate() {
                     let mut acc = 0.0;
                     for (&qval, &qf) in qv.iter().zip(&qi) {
@@ -482,7 +686,33 @@ impl AttentionSession {
                     }
                     scores.push((j as u32, acc * scale));
                 }
-                softmax_weighted_sum(&scores, |j| slots[j][v_off..].as_ptr(), d_v, out);
+            }
+        }
+        scores
+    }
+
+    /// Score one head's query row against its cached sequence and write
+    /// the softmax-weighted V sum into `out`. When `probs_out` is given
+    /// (policy lanes) each cached key's softmax probability is also
+    /// recorded at its position; both paths run the same
+    /// softmax-then-weighted-sum helpers, so outputs are bit-identical
+    /// with and without observation.
+    fn decode_head(&self, seq: SeqId, q: &[f32], out: &mut [f32], probs_out: Option<&mut [f32]>) {
+        let d_v = self.cfg.d_v;
+        let slots = self.cache.token_slices(seq).expect("session sequence exists");
+        let scores = self.head_scores(&slots, q);
+        let v_off = match self.scorer {
+            Scorer::Dense => self.cfg.d,
+            Scorer::Sfa { k } => k + k.div_ceil(2),
+        };
+        match probs_out {
+            None => softmax_weighted_sum(&scores, |j| slots[j][v_off..].as_ptr(), d_v, out),
+            Some(buf) => {
+                let probs = softmax_probs(&scores);
+                for &(j, p) in &probs {
+                    buf[j as usize] = p;
+                }
+                weighted_sum(&probs, |j| slots[j][v_off..].as_ptr(), d_v, out);
             }
         }
     }
@@ -765,6 +995,121 @@ mod tests {
         assert_eq!(sess.pages_in_use(), 0, "partial prefix pages are returned");
         assert!(sess.release_lane(lane).is_err(), "handle is already invalid");
         assert_eq!(sess.admit_lane(), lane, "slot is recyclable");
+    }
+
+    /// First `n` rows / single row `i` of a test tensor (shorthand for
+    /// the policy-lane tests' many slices).
+    fn pfx(t: &HeadTensor, n: usize) -> HeadTensor {
+        t.slice_rows(0, n)
+    }
+
+    fn at(t: &HeadTensor, i: usize) -> HeadTensor {
+        t.slice_rows(i, i + 1)
+    }
+
+    fn tight_policies() -> Vec<PagedKvPolicy> {
+        vec![
+            PagedKvPolicy::H2o { budget: 8, recent: 4 },
+            PagedKvPolicy::SnapKv { budget: 8, recent: 4 },
+            PagedKvPolicy::Quest { budget: 8 },
+        ]
+    }
+
+    /// The no-op-budget guarantee: a policy lane whose budget exceeds
+    /// the whole stream never prunes and is **bit-for-bit** identical
+    /// to a plain lane — prefill and every decode step, dense and SFA
+    /// layouts, all three policies (the probability-observation path
+    /// shares the exact softmax/weighted-sum helpers).
+    #[test]
+    fn noop_budget_policy_lane_is_bitwise_identical() {
+        let loose = [
+            PagedKvPolicy::H2o { budget: 64, recent: 8 },
+            PagedKvPolicy::SnapKv { budget: 64, recent: 8 },
+            PagedKvPolicy::Quest { budget: 64 },
+        ];
+        for spec in ["dense", "sfa:k=8,bq=8,bk=8"] {
+            for pol in &loose {
+                let (heads, d) = (2, 16);
+                let (pre, steps) = (10, 6);
+                let cfg = SessionConfig::new(0, heads, d, d).with_paging(4, 4096);
+                let (q, k, v) = full_qkv(1, heads, pre + steps, d, 9);
+                let mut plain = AttentionSession::from_spec(spec, cfg).unwrap();
+                let mut budgeted = AttentionSession::from_spec(spec, cfg).unwrap();
+                let a = plain.admit_lane();
+                let b = budgeted.admit_lane_with_policy(pol);
+                let oa = plain
+                    .prefill_lane(a, &pfx(&q, pre), &pfx(&k, pre), &pfx(&v, pre), true)
+                    .unwrap();
+                let ob = budgeted
+                    .prefill_lane(b, &pfx(&q, pre), &pfx(&k, pre), &pfx(&v, pre), true)
+                    .unwrap();
+                assert_eq!(oa.data, ob.data, "{spec} {pol:?} prefill");
+                for s in 0..steps {
+                    let t = pre + s;
+                    let xa = plain
+                        .decode_step_lanes(&[a], &at(&q, t), &at(&k, t), &at(&v, t))
+                        .unwrap();
+                    let xb = budgeted
+                        .decode_step_lanes(&[b], &at(&q, t), &at(&k, t), &at(&v, t))
+                        .unwrap();
+                    assert_eq!(xa.data, xb.data, "{spec} {pol:?} step {s}");
+                }
+                assert_eq!(budgeted.lane_cached(b), budgeted.lane_len(b), "never pruned");
+                assert_eq!(budgeted.take_policy_freed(), 0);
+                assert_eq!(plain.pages_in_use(), budgeted.pages_in_use());
+            }
+        }
+    }
+
+    /// Tight budgets: a long prompt is pruned back under the policy
+    /// limit at prefill end, every decode step re-prunes, the pages go
+    /// back to the pool, and the lane's absolute position counter keeps
+    /// counting past the shrunken cache.
+    #[test]
+    fn policy_lane_prunes_pages_mid_stream() {
+        for pol in tight_policies() {
+            let (heads, d) = (2, 16);
+            let (pre, steps) = (24, 16);
+            let cfg = SessionConfig::new(0, heads, d, d).with_paging(4, 4096);
+            let (q, k, v) = full_qkv(1, heads, pre + steps, d, 13);
+            let mut sess = AttentionSession::from_spec("dense", cfg).unwrap();
+            let mut plain = AttentionSession::from_spec("dense", cfg).unwrap();
+            let lane = sess.admit_lane_with_policy(&pol);
+            let p = plain.admit_lane();
+            sess.prefill_lane(lane, &pfx(&q, pre), &pfx(&k, pre), &pfx(&v, pre), true)
+                .unwrap();
+            plain
+                .prefill_lane(p, &pfx(&q, pre), &pfx(&k, pre), &pfx(&v, pre), true)
+                .unwrap();
+            let limit = pol.max_cached_tokens(4);
+            assert!(
+                sess.lane_cached(lane) <= limit,
+                "{pol:?}: prompt pruned at prefill end ({} > {limit})",
+                sess.lane_cached(lane)
+            );
+            assert!(sess.take_policy_freed() > 0, "{pol:?}: prefill prune frees pages");
+            for s in 0..steps {
+                let t = pre + s;
+                sess.decode_step_lanes(&[lane], &at(&q, t), &at(&k, t), &at(&v, t))
+                    .unwrap();
+                plain
+                    .decode_step_lanes(&[p], &at(&q, t), &at(&k, t), &at(&v, t))
+                    .unwrap();
+                assert!(sess.lane_cached(lane) <= limit, "{pol:?} step {s}");
+            }
+            assert_eq!(sess.lane_len(lane), pre + steps, "absolute positions keep counting");
+            assert!(sess.lane_cached(lane) < sess.lane_len(lane));
+            assert!(
+                sess.pages_in_use() < plain.pages_in_use(),
+                "{pol:?}: pruned lane holds fewer pages ({} vs {})",
+                sess.pages_in_use(),
+                plain.pages_in_use()
+            );
+            // Release still returns exactly what the lane holds.
+            let held = sess.lane_pages(lane);
+            assert_eq!(sess.release_lane(lane).unwrap(), held);
+            assert_eq!(sess.pages_in_use(), 0);
+        }
     }
 
     #[test]

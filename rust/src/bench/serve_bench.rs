@@ -1,8 +1,13 @@
-//! `sfa bench serve` — continuous batching vs wave scheduling on a
+//! `sfa bench serve` — scheduling-policy comparison on a
 //! mixed-prompt-length workload, over identical request streams and
-//! the identical lane/session substrate (only the scheduling policy
-//! differs). Reports tokens/s, time-to-first-token, p50/p95/p99
-//! per-token latency, and page-occupancy curves; serializes the whole
+//! the identical lane/session substrate: the wave baseline, the
+//! continuous batcher with worst-case page reservations, and the
+//! continuous batcher under each configured KV eviction policy
+//! (`{none, h2o, snapkv, quest}` by default — policy-budget admission
+//! reserves the pruned steady state, so achieved concurrency at a
+//! fixed `max_pages` is the headline delta). Reports tokens/s,
+//! time-to-first-token, p50/p95/p99 per-token latency, page occupancy,
+//! pruned pages, and achieved concurrency; serializes the whole
 //! comparison to BENCH_serve.json.
 
 use std::time::Instant;
@@ -10,7 +15,8 @@ use std::time::Instant;
 use crate::bench::table::{fmt_speedup, fmt_time, Table};
 use crate::coordinator::metrics::Percentiles;
 use crate::serve::{
-    ContinuousBatcher, RequestState, Scheduler, ServeConfig, ServeRequest, WaveScheduler,
+    ContinuousBatcher, PagedKvPolicy, RequestState, Scheduler, ServeConfig, ServeRequest,
+    WaveScheduler,
 };
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -28,8 +34,19 @@ pub struct ServeBenchConfig {
     pub max_new_max: usize,
     /// Engine specs assigned round-robin across requests.
     pub engines: Vec<String>,
+    /// KV eviction policies to sweep the continuous batcher over
+    /// (`None` = worst-case reservations, the policy baseline).
+    pub policies: Vec<Option<PagedKvPolicy>>,
     pub serve: ServeConfig,
     pub seed: u64,
+}
+
+/// Display label for one swept policy slot.
+pub fn policy_label(p: &Option<PagedKvPolicy>) -> String {
+    match p {
+        None => "none".into(),
+        Some(p) => p.label(),
+    }
 }
 
 impl Default for ServeBenchConfig {
@@ -41,7 +58,15 @@ impl Default for ServeBenchConfig {
             max_new_min: 8,
             max_new_max: 96,
             engines: vec!["sfa:k=8".into()],
-            serve: ServeConfig::default(),
+            policies: vec![
+                None,
+                Some(PagedKvPolicy::H2o { budget: 128, recent: 16 }),
+                Some(PagedKvPolicy::SnapKv { budget: 128, recent: 16 }),
+                Some(PagedKvPolicy::Quest { budget: 128 }),
+            ],
+            // Enough lanes that the page budget, not the lane cap, is
+            // what policy-budget admission relaxes.
+            serve: ServeConfig { max_lanes: 32, ..ServeConfig::default() },
             seed: 42,
         }
     }
@@ -51,6 +76,8 @@ impl Default for ServeBenchConfig {
 #[derive(Debug, Clone)]
 pub struct RunStats {
     pub scheduler: String,
+    /// KV eviction policy label (`"none"` when unpruned).
+    pub policy: String,
     pub requests: usize,
     pub failed: usize,
     pub tokens_out: u64,
@@ -63,6 +90,11 @@ pub struct RunStats {
     pub peak_pages: usize,
     pub mean_pages: f64,
     pub mean_live: f64,
+    /// Most concurrently live sequences observed after any step — the
+    /// achieved-concurrency headline at a fixed page budget.
+    pub peak_live: usize,
+    /// Pages returned to the pool by policy eviction over the run.
+    pub pages_pruned: usize,
 }
 
 /// Build the deterministic mixed-length request stream.
@@ -83,8 +115,13 @@ pub fn workload(cfg: &ServeBenchConfig) -> Vec<ServeRequest> {
 }
 
 /// Submit the whole stream, then step the scheduler to completion,
-/// integrating page-occupancy along the way.
-pub fn drive(sched: &mut dyn Scheduler, label: &str, reqs: &[ServeRequest]) -> RunStats {
+/// integrating page-occupancy and achieved concurrency along the way.
+pub fn drive(
+    sched: &mut dyn Scheduler,
+    label: &str,
+    policy: &str,
+    reqs: &[ServeRequest],
+) -> RunStats {
     let t0 = Instant::now();
     for r in reqs {
         sched.submit(r.clone()).expect("bench workload fits queue and budget");
@@ -93,12 +130,16 @@ pub fn drive(sched: &mut dyn Scheduler, label: &str, reqs: &[ServeRequest]) -> R
     let mut peak_pages = 0usize;
     let mut sum_pages = 0f64;
     let mut sum_live = 0f64;
+    let mut peak_live = 0usize;
+    let mut pages_pruned = 0usize;
     while sched.has_work() {
         let r = sched.step();
         steps += 1;
         peak_pages = peak_pages.max(r.pages_in_use);
         sum_pages += r.pages_in_use as f64;
         sum_live += r.live as f64;
+        peak_live = peak_live.max(r.live);
+        pages_pruned += r.pages_pruned;
     }
     let wall_s = t0.elapsed().as_secs_f64();
     sched.metrics_mut().wall_s = wall_s;
@@ -108,6 +149,7 @@ pub fn drive(sched: &mut dyn Scheduler, label: &str, reqs: &[ServeRequest]) -> R
     let m = sched.metrics();
     RunStats {
         scheduler: label.to_string(),
+        policy: policy.to_string(),
         requests: finished.len(),
         failed,
         tokens_out: m.tokens_out,
@@ -120,68 +162,74 @@ pub fn drive(sched: &mut dyn Scheduler, label: &str, reqs: &[ServeRequest]) -> R
         peak_pages,
         mean_pages: if steps == 0 { 0.0 } else { sum_pages / steps as f64 },
         mean_live: if steps == 0 { 0.0 } else { sum_live / steps as f64 },
+        peak_live,
+        pages_pruned,
     }
 }
 
-/// Run the workload through both schedulers and render the comparison.
+/// Run the workload through the wave baseline and the continuous
+/// batcher under every configured KV policy, and render the comparison.
 pub fn bench_serve(cfg: &ServeBenchConfig) -> (Table, Vec<RunStats>) {
     let reqs = workload(cfg);
+    let mut runs = Vec::with_capacity(1 + cfg.policies.len());
     let mut wave = WaveScheduler::new(cfg.serve);
-    let wave_stats = drive(&mut wave, "wave", &reqs);
-    let mut cont = ContinuousBatcher::new(cfg.serve);
-    let cont_stats = drive(&mut cont, "continuous", &reqs);
+    runs.push(drive(&mut wave, "wave", "none", &reqs));
+    for pol in &cfg.policies {
+        let mut cont = ContinuousBatcher::new(ServeConfig { kv_policy: *pol, ..cfg.serve });
+        runs.push(drive(&mut cont, "continuous", &policy_label(pol), &reqs));
+    }
 
     let mut t = Table::new(
         &format!(
-            "bench serve — wave vs continuous over {} requests \
-             (prompts {}–{}, max_new {}–{}, engines {})",
+            "bench serve — wave vs continuous (policy sweep) over {} requests \
+             (prompts {}–{}, max_new {}–{}, engines {}, max_pages {})",
             cfg.requests,
             cfg.prompt_min,
             cfg.prompt_max,
             cfg.max_new_min,
             cfg.max_new_max,
-            cfg.engines.join(";")
+            cfg.engines.join(";"),
+            cfg.serve.max_pages,
         ),
         &[
             "scheduler",
+            "policy",
             "tok/s",
             "TTFT p50",
-            "TTFT p95",
             "tok p50",
             "tok p95",
-            "tok p99",
             "steps",
             "peak pages",
+            "pruned",
             "mean live",
+            "peak live",
         ],
     );
-    for s in [&wave_stats, &cont_stats] {
+    for s in &runs {
         t.row(vec![
             s.scheduler.clone(),
+            s.policy.clone(),
             format!("{:.1}", s.tok_s),
             fmt_time(s.ttft.p50),
-            fmt_time(s.ttft.p95),
             fmt_time(s.token_lat.p50),
             fmt_time(s.token_lat.p95),
-            fmt_time(s.token_lat.p99),
             s.steps.to_string(),
             s.peak_pages.to_string(),
+            s.pages_pruned.to_string(),
             format!("{:.2}", s.mean_live),
+            s.peak_live.to_string(),
         ]);
     }
-    t.row(vec![
-        "speedup".into(),
-        fmt_speedup(cont_stats.tok_s / wave_stats.tok_s.max(1e-12)),
-        String::new(),
-        String::new(),
-        String::new(),
-        String::new(),
-        String::new(),
-        String::new(),
-        String::new(),
-        String::new(),
-    ]);
-    (t, vec![wave_stats, cont_stats])
+    if let (Some(w), Some(c)) = (
+        runs.iter().find(|r| r.scheduler == "wave"),
+        runs.iter().find(|r| r.scheduler == "continuous" && r.policy == "none"),
+    ) {
+        let speedup = fmt_speedup(c.tok_s / w.tok_s.max(1e-12));
+        let mut row = vec!["speedup".into(), String::new(), speedup];
+        row.resize(11, String::new());
+        t.row(row);
+    }
+    (t, runs)
 }
 
 fn pcts_json(p: &Percentiles) -> Json {
@@ -195,6 +243,7 @@ fn pcts_json(p: &Percentiles) -> Json {
 fn stats_json(s: &RunStats) -> Json {
     obj(vec![
         ("scheduler", Json::from(s.scheduler.as_str())),
+        ("policy", Json::from(s.policy.as_str())),
         ("requests", Json::from(s.requests)),
         ("failed", Json::from(s.failed)),
         ("tokens_out", Json::from(s.tokens_out as usize)),
@@ -207,18 +256,18 @@ fn stats_json(s: &RunStats) -> Json {
         ("peak_pages", Json::from(s.peak_pages)),
         ("mean_pages", Json::from(s.mean_pages)),
         ("mean_live", Json::from(s.mean_live)),
+        ("peak_live", Json::from(s.peak_live)),
+        ("pages_pruned", Json::from(s.pages_pruned)),
     ])
 }
 
-/// The BENCH_serve.json document: workload shape, both runs, speedup.
+/// The BENCH_serve.json document: workload shape, every run (wave +
+/// per-policy continuous), the wave-vs-continuous speedup, and the
+/// policy-budget admission comparison (achieved concurrency at the
+/// fixed `max_pages` versus worst-case reservation).
 pub fn to_json(cfg: &ServeBenchConfig, runs: &[RunStats]) -> String {
-    let speedup = match (runs.iter().find(|r| r.scheduler == "wave"),
-        runs.iter().find(|r| r.scheduler == "continuous"))
-    {
-        (Some(w), Some(c)) if w.tok_s > 0.0 => c.tok_s / w.tok_s,
-        _ => 0.0,
-    };
-    obj(vec![
+    let baseline = runs.iter().find(|r| r.scheduler == "continuous" && r.policy == "none");
+    let mut doc = vec![
         (
             "workload",
             obj(vec![
@@ -231,6 +280,15 @@ pub fn to_json(cfg: &ServeBenchConfig, runs: &[RunStats]) -> String {
                     "engines",
                     Json::Arr(cfg.engines.iter().map(|e| Json::from(e.as_str())).collect()),
                 ),
+                (
+                    "policies",
+                    Json::Arr(
+                        cfg.policies
+                            .iter()
+                            .map(|p| Json::from(policy_label(p).as_str()))
+                            .collect(),
+                    ),
+                ),
                 ("max_lanes", Json::from(cfg.serve.max_lanes)),
                 ("max_pages", Json::from(cfg.serve.max_pages)),
                 ("page_size", Json::from(cfg.serve.page_size)),
@@ -240,9 +298,46 @@ pub fn to_json(cfg: &ServeBenchConfig, runs: &[RunStats]) -> String {
             ]),
         ),
         ("runs", Json::Arr(runs.iter().map(stats_json).collect())),
-        ("speedup_tokens_per_s", Json::from(speedup)),
-    ])
-    .to_string()
+    ];
+    // Wave-vs-continuous speedup only exists when the sweep ran the
+    // unpruned continuous baseline — omit the statistic rather than
+    // record a fake 0x for trajectory tooling to trip over.
+    if let (Some(w), Some(c)) = (runs.iter().find(|r| r.scheduler == "wave"), baseline) {
+        if w.tok_s > 0.0 {
+            doc.push(("speedup_tokens_per_s", Json::from(c.tok_s / w.tok_s)));
+        }
+    }
+    // Achieved-concurrency delta: best eviction policy vs the
+    // worst-case-reservation baseline at the same page budget.
+    let best = runs
+        .iter()
+        .filter(|r| r.scheduler == "continuous" && r.policy != "none")
+        .max_by(|a, b| a.mean_live.partial_cmp(&b.mean_live).unwrap());
+    if let (Some(base), Some(best)) = (baseline, best) {
+        doc.push((
+            "policy_admission",
+            obj(vec![
+                ("baseline_mean_live", Json::from(base.mean_live)),
+                ("baseline_peak_live", Json::from(base.peak_live)),
+                ("best_policy", Json::from(best.policy.as_str())),
+                ("best_mean_live", Json::from(best.mean_live)),
+                ("best_peak_live", Json::from(best.peak_live)),
+                (
+                    "concurrency_gain_mean_live",
+                    Json::from(if base.mean_live > 0.0 {
+                        best.mean_live / base.mean_live
+                    } else {
+                        0.0
+                    }),
+                ),
+                (
+                    "tokens_per_s_vs_baseline",
+                    Json::from(if base.tok_s > 0.0 { best.tok_s / base.tok_s } else { 0.0 }),
+                ),
+            ]),
+        ));
+    }
+    obj(doc).to_string()
 }
 
 #[cfg(test)]
@@ -257,6 +352,7 @@ mod tests {
             max_new_min: 2,
             max_new_max: 6,
             engines: vec!["dense".into(), "sfa:k=4".into()],
+            policies: vec![None],
             serve: ServeConfig {
                 heads: 2,
                 d: 8,
@@ -267,6 +363,7 @@ mod tests {
                 queue_capacity: 64,
                 max_seq: 128,
                 model_seed: 7,
+                kv_policy: None,
             },
             seed: 1,
         }
@@ -276,7 +373,7 @@ mod tests {
     fn bench_serve_completes_and_serializes() {
         let cfg = tiny();
         let (table, runs) = bench_serve(&cfg);
-        assert_eq!(runs.len(), 2);
+        assert_eq!(runs.len(), 2, "wave + one continuous policy slot");
         for r in &runs {
             assert_eq!(r.requests, cfg.requests, "{}: every request terminates", r.scheduler);
             assert_eq!(r.failed, 0, "{}", r.scheduler);
@@ -296,6 +393,59 @@ mod tests {
             j.get("workload").unwrap().get("requests").unwrap().as_usize().unwrap(),
             6
         );
+    }
+
+    /// Acceptance invariant: at a fixed `max_pages` the policy sweep
+    /// shows strictly higher achieved concurrency for at least one
+    /// eviction policy versus worst-case reservation, every request
+    /// still terminates, and BENCH_serve.json carries the comparison.
+    #[test]
+    fn policy_sweep_raises_achieved_concurrency() {
+        let mut cfg = tiny();
+        cfg.requests = 10;
+        cfg.prompt_min = 16;
+        cfg.prompt_max = 32;
+        cfg.max_new_min = 6;
+        cfg.max_new_max = 10;
+        cfg.engines = vec!["dense".into()]; // one group — one page budget
+        cfg.serve.max_pages = 60; // pages, not lanes, bind admission
+        cfg.serve.max_lanes = 8;
+        cfg.policies = vec![
+            None,
+            Some(PagedKvPolicy::H2o { budget: 8, recent: 4 }),
+            Some(PagedKvPolicy::SnapKv { budget: 8, recent: 4 }),
+            Some(PagedKvPolicy::Quest { budget: 8 }),
+        ];
+        let (_, runs) = bench_serve(&cfg);
+        assert_eq!(runs.len(), 5);
+        for r in &runs {
+            assert_eq!(r.failed, 0, "{} {}", r.scheduler, r.policy);
+            assert_eq!(r.requests, 10, "{} {}", r.scheduler, r.policy);
+            assert_eq!(r.tokens_out, runs[0].tokens_out, "same stream, same token count");
+        }
+        let base = runs
+            .iter()
+            .find(|r| r.scheduler == "continuous" && r.policy == "none")
+            .unwrap();
+        assert_eq!(base.pages_pruned, 0);
+        let best_mean = runs
+            .iter()
+            .filter(|r| r.scheduler == "continuous" && r.policy != "none")
+            .map(|r| r.mean_live)
+            .fold(0.0, f64::max);
+        assert!(
+            best_mean > base.mean_live,
+            "policy-budget admission must beat worst-case reservation \
+             ({best_mean:.2} vs {:.2})",
+            base.mean_live
+        );
+        assert!(runs
+            .iter()
+            .any(|r| r.policy != "none" && r.pages_pruned > 0 && r.peak_live > base.peak_live));
+        let j = Json::parse(&to_json(&cfg, &runs)).unwrap();
+        let pa = j.get("policy_admission").unwrap();
+        assert!(pa.get("concurrency_gain_mean_live").unwrap().as_f64().unwrap() > 1.0);
+        assert!(pa.get("best_policy").unwrap().as_str().is_ok());
     }
 
     #[test]

@@ -2,7 +2,11 @@
 //!
 //! Two layers:
 //! * [`paged`] — a vLLM-style paged allocator: fixed-size pages, a page
-//!   table per sequence, copy-free append, reference-counted sharing.
+//!   table per sequence, copy-free append, reference-counted sharing,
+//!   and token eviction ([`PagedKvCache::retain`] /
+//!   [`PagedKvCache::evict_tokens`] — compaction that returns whole
+//!   pages to the pool, copy-on-evict safe under `fork`, the substrate
+//!   the serve stack's KV eviction policies prune through).
 //!   SFA shrinks the K-page payload to top-k codes (App. J memory).
 //! * [`accounting`] — byte accounting across whole model instances
 //!   (drives Fig. 1b / Fig. 5 KV-memory curves).
@@ -10,4 +14,4 @@
 pub mod accounting;
 pub mod paged;
 
-pub use paged::{PageError, PagedKvCache, SeqId};
+pub use paged::{PageError, PagedKvCache, SeqId, SlotLayout};

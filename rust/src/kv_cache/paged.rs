@@ -189,6 +189,81 @@ impl PagedKvCache {
         Ok(freed)
     }
 
+    /// Retain only the token positions in `keep` (strictly ascending,
+    /// all `< seq_len`), compacting the surviving payloads to the front
+    /// of the sequence; token `keep[i]` becomes token `i`. Pages whose
+    /// last reference drops go back to the pool. Pages shared with a
+    /// fork are never mutated (copy-on-evict): the sequence is rebuilt
+    /// onto exclusively-owned pages, so forks keep reading the original
+    /// data. Returns how many pages the call returned to the
+    /// allocatable budget (0 when the rebuild consumed as many fresh
+    /// pages as it released, which can happen under heavy sharing).
+    ///
+    /// Fails with [`PageError::OutOfPages`] — leaving the sequence
+    /// untouched — only when every surviving page is fork-shared *and*
+    /// the pool has no headroom for the rebuilt copies.
+    pub fn retain(&mut self, seq: SeqId, keep: &[usize]) -> Result<usize, PageError> {
+        let fpt = self.layout.floats_per_token();
+        let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?.clone();
+        for w in keep.windows(2) {
+            assert!(w[0] < w[1], "keep positions must be strictly ascending");
+        }
+        if let Some(&last) = keep.last() {
+            assert!(last < len, "keep position {last} >= len {len}");
+        }
+        if keep.len() == len {
+            return Ok(0); // ascending + in-range + full length == identity
+        }
+        let free_before = self.pages_free();
+        // Feasibility before mutating anything: the rebuild needs
+        // `new_pages` allocations, fed by the pool plus whatever this
+        // sequence exclusively owns (shared pages only drop a ref).
+        let new_pages = keep.len().div_ceil(self.page_size);
+        let reclaimable =
+            table.iter().filter(|&&p| self.ref_counts[p as usize] == 1).count();
+        if new_pages > self.pages_free() + reclaimable {
+            return Err(PageError::OutOfPages);
+        }
+        // Gather the surviving payloads, release the old table, rebuild.
+        let mut kept: Vec<f32> = Vec::with_capacity(keep.len() * fpt);
+        for &pos in keep {
+            let page = table[pos / self.page_size] as usize;
+            let slot = pos % self.page_size;
+            kept.extend_from_slice(&self.pages[page][slot * fpt..(slot + 1) * fpt]);
+        }
+        for &p in &table {
+            let rc = &mut self.ref_counts[p as usize];
+            *rc -= 1;
+            if *rc == 0 {
+                self.free_list.push(p);
+            }
+        }
+        let mut new_table = Vec::with_capacity(new_pages);
+        for _ in 0..new_pages {
+            new_table.push(self.alloc_page().expect("feasibility checked above"));
+        }
+        for (i, chunk) in kept.chunks(self.page_size * fpt).enumerate() {
+            self.pages[new_table[i] as usize][..chunk.len()].copy_from_slice(chunk);
+        }
+        *self.tables.get_mut(&seq).unwrap() = (new_table, keep.len());
+        Ok(self.pages_free().saturating_sub(free_before))
+    }
+
+    /// Evict the token positions in `drop` (any order, duplicates
+    /// ignored), keeping everything else — the complement convenience
+    /// over [`PagedKvCache::retain`].
+    pub fn evict_tokens(&mut self, seq: SeqId, drop: &[usize]) -> Result<usize, PageError> {
+        let (_, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
+        let len = *len;
+        let mut dropped = vec![false; len];
+        for &pos in drop {
+            assert!(pos < len, "drop position {pos} >= len {len}");
+            dropped[pos] = true;
+        }
+        let keep: Vec<usize> = (0..len).filter(|&i| !dropped[i]).collect();
+        self.retain(seq, &keep)
+    }
+
     pub fn seq_len(&self, seq: SeqId) -> Option<usize> {
         self.tables.get(&seq).map(|(_, l)| *l)
     }
@@ -341,6 +416,132 @@ mod tests {
             c.append(42, &payload(layout, 0.0)),
             Err(PageError::UnknownSeq)
         );
+    }
+
+    #[test]
+    fn retain_compacts_and_frees_pages() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(16, 4, layout);
+        let s = c.create_seq();
+        for i in 0..12 {
+            c.append(s, &payload(layout, i as f32)).unwrap();
+        }
+        assert_eq!(c.pages_in_use(), 3);
+        // Keep every third token: 12 -> 4 tokens -> 1 page.
+        let freed = c.retain(s, &[0, 3, 6, 9]).unwrap();
+        assert_eq!(freed, 2);
+        assert_eq!(c.seq_len(s), Some(4));
+        assert_eq!(c.pages_in_use(), 1);
+        for (new, old) in [0usize, 3, 6, 9].iter().enumerate() {
+            assert_eq!(c.get(s, new).unwrap()[0], *old as f32);
+        }
+        // Appends continue from the compacted tail.
+        c.append(s, &payload(layout, 99.0)).unwrap();
+        assert_eq!(c.seq_len(s), Some(5));
+        assert_eq!(c.get(s, 4).unwrap()[0], 99.0);
+        assert_eq!(c.pages_in_use(), 2);
+        // Identity retain is a no-op; empty retain drops everything.
+        assert_eq!(c.retain(s, &[0, 1, 2, 3, 4]).unwrap(), 0);
+        assert_eq!(c.retain(s, &[]).unwrap(), 2);
+        assert_eq!(c.seq_len(s), Some(0));
+        assert_eq!(c.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn evict_tokens_is_the_retain_complement() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(16, 2, layout);
+        let s = c.create_seq();
+        for i in 0..6 {
+            c.append(s, &payload(layout, i as f32)).unwrap();
+        }
+        c.evict_tokens(s, &[4, 1, 1]).unwrap();
+        assert_eq!(c.seq_len(s), Some(4));
+        for (new, old) in [0usize, 2, 3, 5].iter().enumerate() {
+            assert_eq!(c.get(s, new).unwrap()[0], *old as f32);
+        }
+        assert_eq!(c.evict_tokens(99, &[]).unwrap_err(), PageError::UnknownSeq);
+    }
+
+    /// Regression (fork × eviction): a fork sharing the parent's pages
+    /// must survive both the parent's `retain` (copy-on-evict — shared
+    /// pages are never rewritten) and the parent's `free`, and the
+    /// refcounted pages must come back only when *both* sides are gone.
+    #[test]
+    fn forked_seq_survives_parent_eviction_and_free() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(16, 2, layout);
+        let a = c.create_seq();
+        for i in 0..6 {
+            c.append(a, &payload(layout, i as f32)).unwrap();
+        }
+        let b = c.fork(a).unwrap();
+        assert_eq!(c.pages_in_use(), 3, "fork shares all pages");
+        // Parent prunes hard: shared pages must not be mutated in place.
+        let freed = c.retain(a, &[0, 5]).unwrap();
+        assert_eq!(freed, 0, "shared pages only dropped a ref; 1 fresh page consumed");
+        assert_eq!(c.seq_len(a), Some(2));
+        assert_eq!(c.get(a, 0).unwrap()[0], 0.0);
+        assert_eq!(c.get(a, 1).unwrap()[0], 5.0);
+        // The fork still reads the full original stream.
+        assert_eq!(c.seq_len(b), Some(6));
+        for i in 0..6 {
+            assert_eq!(c.get(b, i).unwrap()[0], i as f32, "fork data intact");
+        }
+        // Parent release keeps the fork alive; fork release empties it.
+        c.free(a).unwrap();
+        for i in 0..6 {
+            assert_eq!(c.get(b, i).unwrap()[0], i as f32);
+        }
+        c.free(b).unwrap();
+        assert_eq!(c.pages_in_use(), 0, "all refcounts drained");
+        assert_eq!(c.pages_free(), 16);
+    }
+
+    /// With every page fork-shared and zero pool headroom, a rebuild
+    /// has nowhere to put the copies: retain must fail cleanly and
+    /// leave the sequence untouched.
+    #[test]
+    fn retain_on_fully_shared_pages_without_headroom_errors() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(2, 2, layout);
+        let a = c.create_seq();
+        for i in 0..4 {
+            c.append(a, &payload(layout, i as f32)).unwrap();
+        }
+        let b = c.fork(a).unwrap();
+        assert_eq!(c.retain(a, &[0, 2]).unwrap_err(), PageError::OutOfPages);
+        assert_eq!(c.seq_len(a), Some(4), "failed retain mutates nothing");
+        for i in 0..4 {
+            assert_eq!(c.get(a, i).unwrap()[0], i as f32);
+            assert_eq!(c.get(b, i).unwrap()[0], i as f32);
+        }
+        // Once the fork releases its references the same retain fits.
+        c.free(b).unwrap();
+        c.retain(a, &[0, 2]).unwrap();
+        assert_eq!(c.seq_len(a), Some(2));
+        assert_eq!(c.get(a, 1).unwrap()[0], 2.0);
+    }
+
+    #[test]
+    fn property_retain_preserves_kept_payloads() {
+        check("paged retain compaction", 24, |g| {
+            let page_size = g.usize_in(1..6);
+            let layout = SlotLayout::Dense { d: 2, d_v: 1 };
+            let mut c = PagedKvCache::new(256, page_size, layout);
+            let s = c.create_seq();
+            let len = g.usize_in(1..40);
+            for i in 0..len {
+                c.append(s, &payload(layout, i as f32)).unwrap();
+            }
+            let keep: Vec<usize> = (0..len).filter(|_| g.usize_in(0..2) == 1).collect();
+            c.retain(s, &keep).unwrap();
+            assert_eq!(c.seq_len(s), Some(keep.len()));
+            assert_eq!(c.pages_in_use(), keep.len().div_ceil(page_size));
+            for (new, &old) in keep.iter().enumerate() {
+                assert_eq!(c.get(s, new).unwrap()[0], old as f32);
+            }
+        });
     }
 
     #[test]

@@ -24,7 +24,7 @@ use sfa::bench::serve_bench::{self, ServeBenchConfig};
 use sfa::coordinator::router::{Router, RouterConfig};
 use sfa::coordinator::ServeMetrics;
 use sfa::runtime::{HostTensor, Runtime};
-use sfa::serve::{ContinuousBatcher, ServeConfig, WaveScheduler};
+use sfa::serve::{ContinuousBatcher, PagedKvPolicy, ServeConfig, WaveScheduler};
 use sfa::train::corpus::CorpusKind;
 use sfa::train::experiments;
 use sfa::train::trainer::Trainer;
@@ -38,8 +38,10 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
   sfa train   [--artifacts DIR] --variant sfa_k8 --steps 100 --lr 1e-3 --corpus zipf|niah
   sfa serve   --requests 16 --scheduler continuous|wave --engines \"SPEC;SPEC\"
               --prompt-min 16 --prompt-max 256 --max-new-min 8 --max-new-max 32
-              --lanes 8 --page-size 16 --max-pages 4096   (synthetic load,
-              request-lifecycle API over AttentionSession — no artifacts needed)
+              --lanes 8 --page-size 16 --max-pages 4096 [--policy KVPOLICY]
+              (synthetic load, request-lifecycle API over AttentionSession —
+              no artifacts needed; --policy enables KV eviction with
+              policy-budget admission)
   sfa serve   --legacy [--artifacts DIR] --variant sfa_k8 --requests 16 --workers 2
               --batch 4 --max-new 16 --queue-capacity 1024   (deprecated wave router)
   sfa exp     table1|table2|table3|fig8|table12 [--steps N] [--artifacts DIR]
@@ -48,11 +50,15 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
               [--bench-json PATH]   (writes BENCH_attention.json)
   sfa bench   serve [--requests 32] [--prompt-min 32] [--prompt-max 1024]
               [--max-new-min 8] [--max-new-max 96] [--engines \"SPEC;...\"]
-              [--serve-json PATH]   (continuous vs wave, writes BENCH_serve.json)
+              [--policies \"none;h2o;snapkv;quest\"] [--lanes 32]
+              [--serve-json PATH]   (wave vs continuous KV-policy sweep,
+              writes BENCH_serve.json)
   sfa analyze entropy|svd|memory|session [--variant V] [--steps N] [--engine SPEC]
 engine SPECs: dense | flash_dense:bq=64,bk=64 | sfa:k=8,bq=64,bk=64 | sfa_ref:k=8
               | window:w=256,scorer=sfa_k8 | lowrank:r=16 | mla:r=16
               | performer:m=128 | quant:scorer=sfa_k8
+KV policies:  none | h2o[:budget=128,recent=16] | snapkv[:budget=128,recent=16]
+              | quest[:budget=128]
 ";
 
 fn main() -> Result<()> {
@@ -125,6 +131,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 /// Assemble the serve-stack geometry/policy config from CLI options.
 fn serve_config(args: &Args) -> Result<ServeConfig> {
+    let kv_policy = match args.get("policy") {
+        Some(s) => PagedKvPolicy::parse(s).map_err(|e| anyhow::anyhow!("--policy: {e}"))?,
+        None => None,
+    };
     let cfg = ServeConfig {
         heads: args.usize_or("heads", 4)?,
         d: args.usize_or("d", 32)?,
@@ -135,6 +145,7 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         queue_capacity: args.usize_or("queue-capacity", 4096)?,
         max_seq: args.usize_or("max-seq", 4096)?,
         model_seed: args.u64_or("model-seed", 0x5FA)?,
+        kv_policy,
     };
     if cfg.heads < 1 || cfg.d < 1 || cfg.vocab < 2 {
         bail!("--heads/--d must be >= 1 and --vocab >= 2");
@@ -156,6 +167,7 @@ fn serve_workload_cfg(
     prompt_range: (usize, usize),
     max_new_range: (usize, usize),
 ) -> Result<ServeBenchConfig> {
+    let serve = serve_config(args)?;
     let cfg = ServeBenchConfig {
         requests: args.usize_or("requests", requests)?,
         prompt_min: args.usize_or("prompt-min", prompt_range.0)?,
@@ -163,7 +175,10 @@ fn serve_workload_cfg(
         max_new_min: args.usize_or("max-new-min", max_new_range.0)?,
         max_new_max: args.usize_or("max-new-max", args.usize_or("max-new", max_new_range.1)?)?,
         engines: parse_spec_list(&args.str_or("engines", &args.str_or("engine", "sfa:k=8")))?,
-        serve: serve_config(args)?,
+        // `bench serve` replaces this with the --policies sweep; plain
+        // `sfa serve` drives one scheduler straight from `serve`.
+        policies: vec![serve.kv_policy],
+        serve,
         seed: args.u64_or("seed", 42)?,
     };
     if cfg.requests == 0 || cfg.engines.is_empty() {
@@ -192,48 +207,77 @@ fn serve_workload_cfg(
         );
     }
     // Worst case over the workload distribution: the largest request
-    // must fit an empty cache, or submission would reject it. Uses the
-    // same formula the scheduler's admission policy reserves by.
-    let worst = sfa::serve::pages_needed(
+    // must fit an empty cache, or submission would reject it.
+    check_workload_fits(&cfg, cfg.serve.kv_policy)?;
+    Ok(cfg)
+}
+
+/// Bail unless the workload's largest request fits an empty cache
+/// under `policy` — the same formulas submit-time validation rejects
+/// by: the policy-budget steady state plus the prefill-time transient
+/// of the longest prompt. Callers re-check per scheduler/policy
+/// actually run (the wave baseline strips any policy; `bench serve`
+/// sweeps several).
+fn check_workload_fits(cfg: &ServeBenchConfig, policy: Option<PagedKvPolicy>) -> Result<()> {
+    let serve = ServeConfig { kv_policy: policy, ..cfg.serve };
+    let worst = sfa::serve::pages_reserved(
         cfg.prompt_max,
-        cfg.max_new_max.min(cfg.serve.max_seq - cfg.prompt_max),
-        cfg.serve.heads,
-        cfg.serve.page_size,
-    );
-    if worst > cfg.serve.max_pages {
+        cfg.max_new_max.min(serve.max_seq - cfg.prompt_max),
+        &serve,
+    )
+    .max(sfa::serve::pages_needed(cfg.prompt_max, 0, serve.heads, serve.page_size));
+    if worst > serve.max_pages {
         bail!(
-            "a (prompt {}, max_new {}) request needs up to {} KV pages but --max-pages is {}",
+            "a (prompt {}, max_new {}) request needs up to {} KV pages under policy {} \
+             but --max-pages is {}",
             cfg.prompt_max,
             cfg.max_new_max,
             worst,
-            cfg.serve.max_pages
+            serve_bench::policy_label(&policy),
+            serve.max_pages
         );
     }
-    Ok(cfg)
+    Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     if args.has("legacy") {
         return cmd_serve_legacy(args);
     }
-    let cfg = serve_workload_cfg(args, 16, (16, 256), (8, 32))?;
-    let reqs = serve_bench::workload(&cfg);
+    let mut cfg = serve_workload_cfg(args, 16, (16, 256), (8, 32))?;
     let which = args.str_or("scheduler", "continuous");
+    if which == "wave" && cfg.serve.kv_policy.is_some() {
+        // The wave baseline ignores eviction policies (worst-case
+        // semantics); strip it and re-validate so submission can't
+        // reject what the policy-aware pre-check admitted.
+        cfg.serve.kv_policy = None;
+        check_workload_fits(&cfg, None)?;
+    }
+    let reqs = serve_bench::workload(&cfg);
+    let policy = serve_bench::policy_label(&cfg.serve.kv_policy);
     let stats = match which.as_str() {
         "continuous" => {
             let mut s = ContinuousBatcher::new(cfg.serve);
-            serve_bench::drive(&mut s, "continuous", &reqs)
+            serve_bench::drive(&mut s, "continuous", &policy, &reqs)
         }
         "wave" => {
             let mut s = WaveScheduler::new(cfg.serve);
-            serve_bench::drive(&mut s, "wave", &reqs)
+            serve_bench::drive(&mut s, "wave", "none", &reqs)
         }
         other => bail!("--scheduler must be continuous or wave, got {other:?}"),
     };
     println!(
-        "scheduler={} requests={} failed={} steps={} peak_pages={} mean_live={:.2}",
-        stats.scheduler, stats.requests, stats.failed, stats.steps, stats.peak_pages,
+        "scheduler={} policy={} requests={} failed={} steps={} peak_pages={} \
+         pruned_pages={} mean_live={:.2} peak_live={}",
+        stats.scheduler,
+        stats.policy,
+        stats.requests,
+        stats.failed,
+        stats.steps,
+        stats.peak_pages,
+        stats.pages_pruned,
         stats.mean_live,
+        stats.peak_live,
     );
     println!(
         "tokens={} wall={:.2}s thpt={:.1} tok/s | TTFT p50={:.1}ms p95={:.1}ms p99={:.1}ms | \
@@ -383,9 +427,38 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let budget = args.f64_or("budget", 0.5)?;
     match args.command.get(1).map(|s| s.as_str()) {
         Some("serve") => {
-            // Mixed-length continuous-vs-wave scheduling comparison
-            // (prompts 32–1024 by default, per the serving story).
-            let cfg = serve_workload_cfg(args, 32, (32, 1024), (8, 96))?;
+            // Mixed-length wave-vs-continuous comparison with a KV
+            // eviction policy sweep (prompts 32–1024 by default, per
+            // the serving story).
+            let mut cfg = serve_workload_cfg(args, 32, (32, 1024), (8, 96))?;
+            if args.get("lanes").is_none() {
+                // Sweep default: enough lanes that the page budget,
+                // not the lane cap, is what policy admission relaxes.
+                cfg.serve.max_lanes = 32;
+            }
+            // `--policies` wins; a lone `--policy X` narrows the sweep
+            // to that policy (instead of being silently ignored);
+            // otherwise sweep the full default set.
+            let default_policies = match args.get("policy") {
+                Some(p) => p.to_string(),
+                None => "none;h2o;snapkv;quest".to_string(),
+            };
+            cfg.policies = args
+                .str_or("policies", &default_policies)
+                .split(';')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| PagedKvPolicy::parse(s).map_err(|e| anyhow::anyhow!("--policies: {e}")))
+                .collect::<Result<Vec<_>>>()?;
+            if cfg.policies.is_empty() {
+                bail!("--policies needs at least one entry");
+            }
+            // The wave baseline runs policy-free, and each swept policy
+            // gets its own admission math — the workload must fit all
+            // of them or drive() would hit a submit rejection.
+            check_workload_fits(&cfg, None)?;
+            for pol in &cfg.policies {
+                check_workload_fits(&cfg, *pol)?;
+            }
             let (table, runs) = serve_bench::bench_serve(&cfg);
             table.print();
             let path = args.str_or("serve-json", "BENCH_serve.json");

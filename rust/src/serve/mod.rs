@@ -20,6 +20,12 @@
 //!   under a page-budget admission policy and evicts finished
 //!   sequences' pages mid-wave; [`WaveScheduler`] reproduces the old
 //!   wave semantics over the same substrate as the bench baseline;
+//! * [`PagedKvPolicy`] — optional per-lane KV eviction (H2O / SnapKV /
+//!   Quest acting on live [`PagedKvCache`](crate::kv_cache::paged)
+//!   pages): lanes prune themselves under a token budget between
+//!   decode steps, and admission reserves that budget instead of the
+//!   worst-case `prompt + max_new` footprint, raising achievable
+//!   concurrency at a fixed page budget;
 //! * [`ToyLm`] — the deterministic, artifact-free model the schedulers
 //!   drive (bit-for-bit independent of batch composition, which is
 //!   what makes the greedy solo-vs-batched equivalence testable).
@@ -33,12 +39,15 @@ pub mod request;
 pub mod scheduler;
 pub mod wave;
 
+pub use crate::attention::decode::PagedKvPolicy;
 pub use model::ToyLm;
 pub use request::{
     FinishReason, FinishedRequest, RequestId, RequestState, ServeError, ServeEvent,
     ServeRequest, ServeSampling,
 };
-pub use scheduler::{pages_needed, ContinuousBatcher, Scheduler, ServeConfig, StepReport};
+pub use scheduler::{
+    pages_needed, pages_reserved, ContinuousBatcher, Scheduler, ServeConfig, StepReport,
+};
 pub use wave::WaveScheduler;
 
 #[cfg(test)]
@@ -57,6 +66,7 @@ mod tests {
             queue_capacity: 64,
             max_seq: 256,
             model_seed: 7,
+            kv_policy: None,
         }
     }
 
@@ -367,6 +377,103 @@ mod tests {
         assert_eq!(m.requests, 3);
         assert_eq!(m.tokens_out, 12);
         assert!(m.ttft().p95 >= m.ttft().p50);
+    }
+
+    /// Satellite guarantee: under *every* eviction policy, a budget
+    /// that exceeds the sequence length makes the policy a no-op, and
+    /// the greedy token stream matches an unpruned solo run exactly —
+    /// inside a busy batch, first token included.
+    #[test]
+    fn noop_budget_policies_preserve_greedy_tokens() {
+        let spec = "sfa:k=4,bq=8,bk=8";
+        let p = prompt(21, 13, 32);
+        let solo = solo_tokens(&p, 8, spec); // kv_policy: None baseline
+        // prompt 13 + max_new 8 = 21 tokens; budgets comfortably above.
+        let policies = [
+            PagedKvPolicy::H2o { budget: 48, recent: 8 },
+            PagedKvPolicy::SnapKv { budget: 48, recent: 8 },
+            PagedKvPolicy::Quest { budget: 48 },
+        ];
+        for pol in policies {
+            let cfg = ServeConfig { kv_policy: Some(pol), ..tiny_cfg() };
+            let mut s = ContinuousBatcher::new(cfg);
+            // Busy neighbours, also policy lanes.
+            s.submit(ServeRequest::new(prompt(1, 29, 32)).max_new(20).engine(spec)).unwrap();
+            s.submit(ServeRequest::new(prompt(2, 7, 32)).max_new(20).engine(spec)).unwrap();
+            s.step();
+            s.step();
+            let id = s.submit(ServeRequest::new(p.clone()).max_new(8).engine(spec)).unwrap();
+            let fin = s.run_to_completion();
+            let f = fin.iter().find(|f| f.id == id).unwrap();
+            assert_eq!(
+                f.tokens, solo,
+                "{pol:?}: a no-op-budget policy must not change greedy tokens"
+            );
+            assert!(matches!(f.state, RequestState::Finished { .. }));
+        }
+    }
+
+    /// The tentpole invariant: at a fixed page budget, policy-budget
+    /// admission (reserving the pruned steady state instead of the
+    /// worst-case `prompt + max_new` footprint) achieves strictly
+    /// higher concurrency, finishes the same workload, and prunes
+    /// pages mid-wave.
+    #[test]
+    fn policy_budget_admission_raises_achieved_concurrency() {
+        let base = ServeConfig {
+            heads: 2,
+            d: 8,
+            vocab: 32,
+            page_size: 4,
+            max_pages: 60,
+            max_lanes: 8,
+            queue_capacity: 64,
+            max_seq: 128,
+            model_seed: 7,
+            kv_policy: None,
+        };
+        let run = |pol: Option<PagedKvPolicy>| -> (f64, usize, usize, usize) {
+            let mut s = ContinuousBatcher::new(ServeConfig { kv_policy: pol, ..base });
+            for i in 0..10u64 {
+                s.submit(
+                    ServeRequest::new(prompt(i, 24 + (i as usize % 8), 32))
+                        .max_new(10)
+                        .engine("dense"),
+                )
+                .unwrap();
+            }
+            let (mut sum_live, mut steps, mut peak, mut pruned) = (0f64, 0usize, 0usize, 0usize);
+            while s.has_work() {
+                let r = s.step();
+                sum_live += r.live as f64;
+                steps += 1;
+                peak = peak.max(r.live);
+                pruned += r.pages_pruned;
+            }
+            let fin = s.take_finished();
+            assert_eq!(fin.len(), 10);
+            let failed = fin
+                .iter()
+                .filter(|f| matches!(f.state, RequestState::Failed { .. }))
+                .count();
+            assert_eq!(failed, 0);
+            (sum_live / steps as f64, peak, pruned, steps)
+        };
+        let (mean_none, peak_none, pruned_none, _) = run(None);
+        assert_eq!(pruned_none, 0, "no policy, no pruning");
+        for pol in [
+            PagedKvPolicy::H2o { budget: 8, recent: 4 },
+            PagedKvPolicy::SnapKv { budget: 8, recent: 4 },
+            PagedKvPolicy::Quest { budget: 8 },
+        ] {
+            let (mean_pol, peak_pol, pruned_pol, _) = run(Some(pol));
+            assert!(
+                peak_pol > peak_none && mean_pol > mean_none,
+                "{pol:?}: policy admission must raise concurrency \
+                 (peak {peak_pol} vs {peak_none}, mean {mean_pol:.2} vs {mean_none:.2})"
+            );
+            assert!(pruned_pol > 0, "{pol:?}: long prompts must be pruned");
+        }
     }
 
     /// Temperature sampling draws from a per-request stream, so it is

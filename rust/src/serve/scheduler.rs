@@ -30,6 +30,7 @@
 use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
+use crate::attention::decode::PagedKvPolicy;
 use crate::attention::registry::parse_spec;
 use crate::attention::session::{AttentionSession, LaneId, SessionConfig};
 use crate::attention::HeadTensor;
@@ -62,6 +63,14 @@ pub struct ServeConfig {
     pub max_seq: usize,
     /// Seed for the deterministic [`ToyLm`] and per-request samplers.
     pub model_seed: u64,
+    /// KV eviction policy for every admitted lane. `None` (default)
+    /// keeps worst-case `prompt + max_new` page reservations; `Some`
+    /// switches the [`ContinuousBatcher`] to **policy-budget
+    /// admission**: each lane reserves only its pruned steady-state
+    /// footprint (see [`pages_reserved`]), so more lanes fit the same
+    /// page budget. The wave baseline ignores this (it *is* the
+    /// worst-case comparison point).
+    pub kv_policy: Option<PagedKvPolicy>,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +85,7 @@ impl Default for ServeConfig {
             queue_capacity: 1024,
             max_seq: 4096,
             model_seed: 0x5FA,
+            kv_policy: None,
         }
     }
 }
@@ -101,6 +111,25 @@ pub fn pages_needed(prompt_len: usize, steps: usize, heads: usize, page_size: us
     heads * (prompt_len + steps).div_ceil(page_size)
 }
 
+/// Pages one request reserves at admission under the configured
+/// policy. Worst-case mode (`kv_policy: None`) reserves the full
+/// `prompt + steps` footprint. Policy-budget mode reserves the pruned
+/// steady state `min(prompt + steps, policy_limit + 1)` tokens (`+1`
+/// covers the append that precedes each prune) — the long-prompt
+/// prefill spike above that is a *transient*: `prefill_lane` prunes the
+/// lane back under budget before the admission pass moves on, so the
+/// batcher checks it against the momentarily free pool instead of
+/// reserving it for the lane's lifetime.
+pub fn pages_reserved(prompt_len: usize, steps: usize, cfg: &ServeConfig) -> usize {
+    match &cfg.kv_policy {
+        None => pages_needed(prompt_len, steps, cfg.heads, cfg.page_size),
+        Some(p) => {
+            let peak = (prompt_len + steps).min(p.max_cached_tokens(cfg.page_size) + 1);
+            cfg.heads * peak.div_ceil(cfg.page_size)
+        }
+    }
+}
+
 /// What one [`Scheduler::step`] did (the serving loop's observability
 /// surface; `bench serve` integrates these into page-occupancy curves).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -111,8 +140,11 @@ pub struct StepReport {
     pub decoded_tokens: usize,
     pub finished: usize,
     pub failed: usize,
-    /// KV pages returned to the budget this step.
+    /// KV pages returned to the budget this step by finished lanes.
     pub pages_freed: usize,
+    /// KV pages returned to the budget this step by policy eviction
+    /// (live lanes pruning themselves under their policy budget).
+    pub pages_pruned: usize,
     /// KV pages in use across all groups after the step.
     pub pages_in_use: usize,
     /// Live sequences after the step.
@@ -166,7 +198,11 @@ pub(crate) fn validate(req: &ServeRequest, cfg: &ServeConfig) -> Result<(), Serv
         return Err(ServeError::PromptTooLong { len: req.prompt.len(), max_seq: cfg.max_seq });
     }
     let budget_tokens = req.max_new.min(cfg.max_seq - req.prompt.len());
-    let needed = pages_needed(req.prompt.len(), budget_tokens, cfg.heads, cfg.page_size);
+    // A request never fits if its steady-state reservation *or* its
+    // prefill-time transient (the whole prompt is paged in before the
+    // post-prefill prune) exceeds an empty cache.
+    let needed = pages_reserved(req.prompt.len(), budget_tokens, cfg)
+        .max(pages_needed(req.prompt.len(), 0, cfg.heads, cfg.page_size));
     if needed > cfg.max_pages {
         return Err(ServeError::PageBudgetExceeded {
             needed_pages: needed,
@@ -262,7 +298,14 @@ pub(crate) fn start_seq(
     let plen = req.prompt.len();
     let budget = req.max_new.min(cfg.max_seq - plen);
     let (q, k, v) = model.qkv_prompt(&req.prompt, 0);
-    let lane = group.session.admit_lane();
+    // Policy-budget serving admits every lane with its eviction
+    // policy; prefill_lane prunes a long prompt back under the budget
+    // before this call returns, so the reservation accounting below
+    // only ever has to cover the pruned steady state.
+    let lane = match &cfg.kv_policy {
+        Some(p) => group.session.admit_lane_with_policy(p),
+        None => group.session.admit_lane(),
+    };
     let out = match group.session.prefill_lane(lane, &q, &k, &v, true) {
         Ok(o) => o,
         Err(e) => return Err((req, e.into())),
@@ -452,10 +495,22 @@ impl ContinuousBatcher {
             };
             let plen = front.req.prompt.len();
             let budget_tokens = front.req.max_new.min(self.core.cfg.max_seq - plen);
-            let needed =
-                pages_needed(plen, budget_tokens, self.core.cfg.heads, self.core.cfg.page_size);
+            let needed = pages_reserved(plen, budget_tokens, &self.core.cfg);
             if self.core.groups[gi].reserved_pages + needed > self.core.cfg.max_pages {
                 break; // wait for pages to drain
+            }
+            if self.core.cfg.kv_policy.is_some() {
+                // Transient check: the whole prompt is paged in during
+                // prefill before the post-prefill prune shrinks it to
+                // the reservation. Live lanes never exceed their own
+                // reservations, so the instantaneously free pool is a
+                // safe bound; the transient resolves inside this same
+                // admission pass.
+                let transient =
+                    pages_needed(plen, 0, self.core.cfg.heads, self.core.cfg.page_size);
+                if transient > self.core.groups[gi].session.pages_free() {
+                    break; // wait for pages to drain
+                }
             }
             let QueuedReq { id, req, submitted } =
                 self.core.queue.pop_front().expect("front exists");
@@ -582,6 +637,8 @@ impl Scheduler for ContinuousBatcher {
         let mut report = StepReport::default();
         self.admit(&mut report);
         self.decode(&mut report);
+        report.pages_pruned =
+            self.core.groups.iter_mut().map(|g| g.session.take_policy_freed()).sum();
         report.pages_in_use = self.core.pages_in_use();
         report.live = self.live();
         report

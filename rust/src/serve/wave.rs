@@ -41,8 +41,12 @@ pub struct WaveScheduler {
 
 impl WaveScheduler {
     /// Panics on a degenerate config (see `ServeConfig::assert_valid`);
-    /// CLI layers should range-check user input first.
-    pub fn new(cfg: ServeConfig) -> WaveScheduler {
+    /// CLI layers should range-check user input first. Any configured
+    /// `kv_policy` is stripped: the wave scheduler *is* the worst-case
+    /// reservation baseline the policy-budgeted batcher is measured
+    /// against, and its wave-sized reservations assume unpruned lanes.
+    pub fn new(mut cfg: ServeConfig) -> WaveScheduler {
+        cfg.kv_policy = None;
         WaveScheduler { core: SchedulerCore::new(cfg) }
     }
 
