@@ -264,6 +264,14 @@ impl AttentionSession {
     /// Drain the count of pages policy pruning has returned to the
     /// pool since the last drain (the scheduler's per-step
     /// `pages_pruned` observability).
+    ///
+    /// Accounting invariant (pinned by the session tests): pages
+    /// counted here are *disjoint* from the pages
+    /// [`Self::release_lane`] later reports — a pruned page left the
+    /// lane's table when `retain` compacted it, so releasing the lane
+    /// never counts it again. Over a lane's whole life,
+    /// `Σ policy_freed + release_freed ==
+    /// cache.pages_alloc_total() - cache.pages_rebuild_total()`.
     pub fn take_policy_freed(&mut self) -> usize {
         std::mem::take(&mut self.policy_freed)
     }
@@ -292,6 +300,167 @@ impl AttentionSession {
         }
     }
 
+    /// Admit a lane seeded from a cached prompt prefix: each head's
+    /// sequence is a [`PagedKvCache::fork_prefix`] of `src[h]` at
+    /// `prefix_tokens`, sharing the prefix pages instead of re-storing
+    /// (or re-computing) them. The lane starts at `len ==
+    /// prefix_tokens`; follow with [`Self::extend_lane`] for the
+    /// prompt suffix. Forking allocates nothing, so this never runs
+    /// out of pages. The radix prefix cache's hit path
+    /// (`serve::ContinuousBatcher`) drives this.
+    pub fn admit_lane_from_fork(
+        &mut self,
+        src: &[SeqId],
+        prefix_tokens: usize,
+    ) -> Result<LaneId, PageError> {
+        assert_eq!(src.len(), self.cfg.heads, "one source sequence per head");
+        let mut seqs = Vec::with_capacity(self.cfg.heads);
+        for &s in src {
+            seqs.push(self.cache.fork_prefix(s, prefix_tokens)?);
+        }
+        let lane = Lane { seqs, len: prefix_tokens, live: true, policy: None };
+        Ok(match self.lanes.iter().position(|l| !l.live) {
+            Some(slot) => {
+                self.lanes[slot] = lane;
+                slot
+            }
+            None => {
+                self.lanes.push(lane);
+                self.lanes.len() - 1
+            }
+        })
+    }
+
+    /// Append `k.n` tokens of K/V (batch-1 tensors) to a lane without
+    /// running an engine forward — the prefix-cache hit path stores the
+    /// prompt suffix with exactly the same per-token payloads
+    /// [`Self::prefill_lane`] would have produced, so the cache bytes
+    /// (and every downstream decode) are bit-identical to a cold
+    /// prefill of the whole prompt. On a page-budget error the lane is
+    /// auto-released, mirroring `prefill_lane`.
+    pub fn extend_lane(
+        &mut self,
+        lane: LaneId,
+        k: &HeadTensor,
+        v: &HeadTensor,
+    ) -> Result<(), PageError> {
+        assert_eq!((k.batch, v.batch), (1, 1), "extend_lane takes batch-1 tensors");
+        assert_eq!((k.heads, v.heads), (self.cfg.heads, self.cfg.heads));
+        assert_eq!((k.d, v.d), (self.cfg.d, self.cfg.d_v));
+        assert_eq!(k.n, v.n, "k/v length");
+        assert!(self.lanes[lane].live, "lane {lane} was released");
+        assert!(
+            self.lanes[lane].policy.is_none(),
+            "extend_lane does not drive policy observation (prefix cache runs policy-free)"
+        );
+        for h in 0..self.cfg.heads {
+            let seq = self.lanes[lane].seqs[h];
+            for t in 0..k.n {
+                if let Err(e) = self.push_token(seq, k.head_row(0, h, t), v.head_row(0, h, t)) {
+                    let _ = self.release_lane(lane);
+                    return Err(e);
+                }
+            }
+        }
+        self.lanes[lane].len += k.n;
+        Ok(())
+    }
+
+    /// Score a batch-1 single-row query against a lane's full cached
+    /// sequence, per head — the serve stack's first-token output (the
+    /// same scorer/softmax path as [`Self::decode_step_lanes`], minus
+    /// the append). Because it reads only cache bytes, a lane seeded
+    /// from a cached prefix and a cold-prefilled lane produce
+    /// bit-identical outputs, which is what makes the prefix cache's
+    /// greedy streams exactly equal to cold runs.
+    pub fn lane_last_output(&self, lane: LaneId, q: &HeadTensor) -> HeadTensor {
+        assert_eq!((q.batch, q.n), (1, 1), "lane_last_output takes one query row");
+        assert_eq!(q.heads, self.cfg.heads);
+        assert_eq!(q.d, self.cfg.d);
+        let l = &self.lanes[lane];
+        assert!(l.live, "lane {lane} was released");
+        let mut out = HeadTensor::zeros(1, self.cfg.heads, 1, self.cfg.d_v);
+        for h in 0..self.cfg.heads {
+            let seq = l.seqs[h];
+            let mut row = vec![0f32; self.cfg.d_v];
+            self.decode_head(seq, q.head_row(0, h, 0), &mut row, None);
+            out.head_row_mut(0, h, 0).copy_from_slice(&row);
+        }
+        out
+    }
+
+    /// Chunked-prefill outputs for a run of already-cached queries:
+    /// row `t` of `q` (batch-1, `n` suffix rows) is scored causally
+    /// against the lane's first `start_pos + t + 1` cached tokens —
+    /// the O(suffix × total) compute shape of a real KV-append prefill
+    /// kernel, which is what the prefix-cache hit path pays instead of
+    /// a full-prompt forward. Row `n - 1` equals
+    /// [`Self::lane_last_output`] when the suffix ends the prompt.
+    pub fn chunked_prefill_outputs(
+        &self,
+        lane: LaneId,
+        q: &HeadTensor,
+        start_pos: usize,
+    ) -> HeadTensor {
+        assert_eq!(q.batch, 1, "chunked_prefill_outputs takes batch-1 tensors");
+        assert_eq!(q.heads, self.cfg.heads);
+        assert_eq!(q.d, self.cfg.d);
+        let l = &self.lanes[lane];
+        assert!(l.live, "lane {lane} was released");
+        assert!(start_pos + q.n <= l.len, "suffix rows must already be cached");
+        let d_v = self.cfg.d_v;
+        let v_off = match self.scorer {
+            Scorer::Dense => self.cfg.d,
+            Scorer::Sfa { k } => k + k.div_ceil(2),
+        };
+        let mut out = HeadTensor::zeros(1, self.cfg.heads, q.n, d_v);
+        for h in 0..self.cfg.heads {
+            let slots = self.cache.token_slices(l.seqs[h]).expect("lane sequence exists");
+            for t in 0..q.n {
+                let upto = (start_pos + t + 1).min(slots.len());
+                let scores = self.head_scores(&slots[..upto], q.head_row(0, h, t));
+                softmax_weighted_sum(
+                    &scores,
+                    |j| slots[j][v_off..].as_ptr(),
+                    d_v,
+                    out.head_row_mut(0, h, t),
+                );
+            }
+        }
+        out
+    }
+
+    /// Fork the first `n_tokens` of every head-sequence of a live lane
+    /// (no pages copied or allocated) — the radix cache's insert path,
+    /// run at retirement right before the lane is released.
+    pub fn fork_lane_prefix(
+        &mut self,
+        lane: LaneId,
+        n_tokens: usize,
+    ) -> Result<Vec<SeqId>, PageError> {
+        assert!(self.lanes[lane].live, "lane {lane} was released");
+        let srcs = self.lanes[lane].seqs.clone();
+        let mut out = Vec::with_capacity(srcs.len());
+        for s in srcs {
+            out.push(self.cache.fork_prefix(s, n_tokens)?);
+        }
+        Ok(out)
+    }
+
+    /// The lane's backing cache sequences, one per head (prefix-cache
+    /// plumbing).
+    pub fn lane_seqs(&self, lane: LaneId) -> &[SeqId] {
+        let l = &self.lanes[lane];
+        assert!(l.live, "lane {lane} was released");
+        &l.seqs
+    }
+
+    /// Crate-internal access to the backing paged cache, for the radix
+    /// prefix cache living beside the session in a serve engine group.
+    pub(crate) fn cache_mut(&mut self) -> &mut PagedKvCache {
+        &mut self.cache
+    }
+
     /// Admit a policy-budgeted lane: like [`Self::admit_lane`], plus
     /// one [`KvPolicy`] per head that physically prunes the lane's
     /// pages back under `spec`'s token budget after prefill and
@@ -313,6 +482,9 @@ impl AttentionSession {
     /// Release a lane mid-wave, freeing its pages immediately; returns
     /// how many pages went back to the budget. The handle becomes
     /// invalid (its slot is recycled by the next [`Self::admit_lane`]).
+    /// Pages a policy prune already returned to the pool
+    /// ([`Self::take_policy_freed`]) are not in the lane's table any
+    /// more and are never re-counted here.
     pub fn release_lane(&mut self, lane: LaneId) -> Result<usize, PageError> {
         let l = self.lanes.get_mut(lane).ok_or(PageError::UnknownSeq)?;
         if !l.live {
@@ -1109,6 +1281,130 @@ mod tests {
             let held = sess.lane_pages(lane);
             assert_eq!(sess.release_lane(lane).unwrap(), held);
             assert_eq!(sess.pages_in_use(), 0);
+        }
+    }
+
+    /// Prefix-sharing path: a lane seeded by forking another lane's
+    /// prompt prefix, then extended with the suffix, holds bit-identical
+    /// cache bytes — so its last-position output and every subsequent
+    /// decode step equal a cold-prefilled lane's exactly.
+    #[test]
+    fn forked_prefix_lane_matches_cold_prefill_bitwise() {
+        for spec in ["dense", "sfa:k=8,bq=8,bk=8"] {
+            let (heads, d) = (2, 16);
+            let (plen, shared, steps) = (11, 6, 4);
+            let cfg = SessionConfig::new(0, heads, d, d).with_paging(4, 4096);
+            let (q, k, v) = full_qkv(1, heads, plen + steps, d, 17);
+            let mut sess = AttentionSession::from_spec(spec, cfg).unwrap();
+
+            // Cold lane: full prompt prefill.
+            let cold = sess.admit_lane();
+            sess.prefill_lane(cold, &pfx(&q, plen), &pfx(&k, plen), &pfx(&v, plen), true)
+                .unwrap();
+            let cold_out = sess.lane_last_output(cold, &at(&q, plen - 1));
+
+            // Warm lane: fork the cold lane's first `shared` tokens,
+            // append only the suffix.
+            let srcs = sess.lane_seqs(cold).to_vec();
+            let warm = sess.admit_lane_from_fork(&srcs, shared).unwrap();
+            assert_eq!(sess.lane_len(warm), shared);
+            let ksuf = k.slice_rows(shared, plen);
+            let vsuf = v.slice_rows(shared, plen);
+            sess.extend_lane(warm, &ksuf, &vsuf).unwrap();
+            assert_eq!(sess.lane_len(warm), plen);
+            let warm_out = sess.lane_last_output(warm, &at(&q, plen - 1));
+            assert_eq!(cold_out.data, warm_out.data, "{spec}: first-token output");
+
+            // The chunked-prefill compute path (suffix queries over
+            // the causally growing cache) ends on exactly the sampled
+            // first-token output.
+            let chunk =
+                sess.chunked_prefill_outputs(warm, &q.slice_rows(shared, plen), shared);
+            assert_eq!((chunk.n, chunk.d), (plen - shared, d));
+            for h in 0..heads {
+                assert_eq!(
+                    chunk.head_row(0, h, plen - shared - 1),
+                    warm_out.head_row(0, h, 0),
+                    "{spec}: chunked prefill last row == lane_last_output"
+                );
+            }
+
+            // Decode steps stay bitwise equal lane-for-lane.
+            for s in 0..steps {
+                let t = plen + s;
+                let oc = sess
+                    .decode_step_lanes(&[cold], &at(&q, t), &at(&k, t), &at(&v, t))
+                    .unwrap();
+                let ow = sess
+                    .decode_step_lanes(&[warm], &at(&q, t), &at(&k, t), &at(&v, t))
+                    .unwrap();
+                assert_eq!(oc.data, ow.data, "{spec}: decode step {s}");
+            }
+            // Shared full pages are refcounted, not copied: releasing
+            // the cold lane leaves the warm lane's stream intact.
+            sess.release_lane(cold).unwrap();
+            assert_eq!(sess.lane_len(warm), plen + steps);
+            sess.release_lane(warm).unwrap();
+            assert_eq!(sess.pages_in_use(), 0);
+        }
+    }
+
+    /// extend_lane mirrors prefill_lane's failure contract: a suffix
+    /// append that exhausts the page budget auto-releases the lane.
+    #[test]
+    fn failed_extend_auto_releases_the_lane() {
+        let (heads, d) = (1, 8);
+        let cfg = SessionConfig::new(0, heads, d, d).with_paging(2, 3);
+        let (q, k, v) = full_qkv(1, heads, 10, d, 23);
+        let mut sess = AttentionSession::from_spec("dense", cfg).unwrap();
+        let base = sess.admit_lane();
+        sess.prefill_lane(base, &pfx(&q, 4), &pfx(&k, 4), &pfx(&v, 4), true).unwrap();
+        let srcs = sess.lane_seqs(base).to_vec();
+        let lane = sess.admit_lane_from_fork(&srcs, 4).unwrap();
+        // Budget: 3 pages × 2 tokens; base holds 2 pages; the fork
+        // shares them, so appending 6 more tokens must run out.
+        let e = sess
+            .extend_lane(lane, &k.slice_rows(4, 10), &v.slice_rows(4, 10))
+            .unwrap_err();
+        assert_eq!(e, PageError::OutOfPages);
+        assert_eq!(sess.live_lanes(), 1, "failed extend releases the forked lane");
+        sess.release_lane(base).unwrap();
+        assert_eq!(sess.pages_in_use(), 0);
+    }
+
+    /// Satellite regression (release_lane vs take_policy_freed): pages
+    /// physically freed by mid-stream policy prunes are never counted
+    /// again at lane release — across the lane's whole life,
+    /// `Σ policy_freed + release_freed` equals the pages allocated for
+    /// appended tokens (`alloc_total - rebuild_total`), and the cache
+    /// drains to zero.
+    #[test]
+    fn policy_prune_and_release_free_each_page_exactly_once() {
+        for pol in tight_policies() {
+            let (heads, d) = (2, 16);
+            let (pre, steps) = (24, 16);
+            let cfg = SessionConfig::new(0, heads, d, d).with_paging(4, 4096);
+            let (q, k, v) = full_qkv(1, heads, pre + steps, d, 29);
+            let mut sess = AttentionSession::from_spec("dense", cfg).unwrap();
+            let lane = sess.admit_lane_with_policy(&pol);
+            sess.prefill_lane(lane, &pfx(&q, pre), &pfx(&k, pre), &pfx(&v, pre), true)
+                .unwrap();
+            let mut freed = sess.take_policy_freed();
+            for s in 0..steps {
+                let t = pre + s;
+                sess.decode_step_lanes(&[lane], &at(&q, t), &at(&k, t), &at(&v, t))
+                    .unwrap();
+                freed += sess.take_policy_freed();
+            }
+            freed += sess.release_lane(lane).unwrap();
+            assert_eq!(sess.pages_in_use(), 0, "{pol:?}: every page back in the pool");
+            let appended_allocs =
+                sess.cache.pages_alloc_total() - sess.cache.pages_rebuild_total();
+            assert_eq!(
+                freed, appended_allocs,
+                "{pol:?}: prune + release must free each appended page exactly once \
+                 (freed {freed} vs allocated {appended_allocs})"
+            );
         }
     }
 

@@ -15,11 +15,12 @@ use std::time::Instant;
 use crate::bench::table::{fmt_speedup, fmt_time, Table};
 use crate::coordinator::metrics::Percentiles;
 use crate::serve::{
-    ContinuousBatcher, PagedKvPolicy, RequestState, Scheduler, ServeConfig, ServeRequest,
-    WaveScheduler,
+    ContinuousBatcher, FinishedRequest, PagedKvPolicy, PrefixCacheConfig, PrefixCacheStats,
+    RequestState, Scheduler, ServeConfig, ServeRequest, WaveScheduler,
 };
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
+use crate::util::stats::mean;
 
 /// Workload shape for one `bench serve` run.
 #[derive(Debug, Clone)]
@@ -37,8 +38,30 @@ pub struct ServeBenchConfig {
     /// KV eviction policies to sweep the continuous batcher over
     /// (`None` = worst-case reservations, the policy baseline).
     pub policies: Vec<Option<PagedKvPolicy>>,
+    /// `Some` switches `bench serve` to the **prefix-cache comparison**
+    /// (`--prefix-cache`): a repeated-system-prompt workload driven
+    /// through the continuous batcher cold (no cache) and warm (radix
+    /// prefix cache on), pinning bit-identical greedy streams and
+    /// recording hit rate and TTFT gain.
+    pub prefix: Option<PrefixBenchConfig>,
     pub serve: ServeConfig,
     pub seed: u64,
+}
+
+/// Shape of the shared-prefix workload + cache sizing for the
+/// prefix-cache comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixBenchConfig {
+    /// Tokens of system prompt shared by every request.
+    pub system_prompt: usize,
+    /// Nominal page budget for the radix cache.
+    pub cache_pages: usize,
+}
+
+impl Default for PrefixBenchConfig {
+    fn default() -> PrefixBenchConfig {
+        PrefixBenchConfig { system_prompt: 512, cache_pages: 1024 }
+    }
 }
 
 /// Display label for one swept policy slot.
@@ -64,6 +87,7 @@ impl Default for ServeBenchConfig {
                 Some(PagedKvPolicy::SnapKv { budget: 128, recent: 16 }),
                 Some(PagedKvPolicy::Quest { budget: 128 }),
             ],
+            prefix: None,
             // Enough lanes that the page budget, not the lane cap, is
             // what policy-budget admission relaxes.
             serve: ServeConfig { max_lanes: 32, ..ServeConfig::default() },
@@ -95,6 +119,10 @@ pub struct RunStats {
     pub peak_live: usize,
     /// Pages returned to the pool by policy eviction over the run.
     pub pages_pruned: usize,
+    /// Mean time-to-first-token over all finished requests, s.
+    pub ttft_mean_s: f64,
+    /// Prompt-prefix cache counters (all-zero without a prefix cache).
+    pub prefix: PrefixCacheStats,
 }
 
 /// Build the deterministic mixed-length request stream.
@@ -122,6 +150,17 @@ pub fn drive(
     policy: &str,
     reqs: &[ServeRequest],
 ) -> RunStats {
+    drive_keep(sched, label, policy, reqs).0
+}
+
+/// [`drive`], also returning the finished-request records (the
+/// prefix-cache comparison pins cold-vs-warm token streams on them).
+pub fn drive_keep(
+    sched: &mut dyn Scheduler,
+    label: &str,
+    policy: &str,
+    reqs: &[ServeRequest],
+) -> (RunStats, Vec<FinishedRequest>) {
     let t0 = Instant::now();
     for r in reqs {
         sched.submit(r.clone()).expect("bench workload fits queue and budget");
@@ -147,7 +186,7 @@ pub fn drive(
     let failed =
         finished.iter().filter(|f| matches!(f.state, RequestState::Failed { .. })).count();
     let m = sched.metrics();
-    RunStats {
+    let stats = RunStats {
         scheduler: label.to_string(),
         policy: policy.to_string(),
         requests: finished.len(),
@@ -164,7 +203,177 @@ pub fn drive(
         mean_live: if steps == 0 { 0.0 } else { sum_live / steps as f64 },
         peak_live,
         pages_pruned,
+        ttft_mean_s: mean(&m.ttft_s),
+        prefix: sched.prefix_stats(),
+    };
+    (stats, finished)
+}
+
+/// Build the repeated-system-prompt request stream: every prompt is
+/// `system_prompt` shared tokens followed by a per-request suffix
+/// (first suffix token forced distinct so the shared prefix is exactly
+/// the system prompt), lengths drawn from the configured ranges.
+pub fn workload_shared_prefix(cfg: &ServeBenchConfig, px: &PrefixBenchConfig) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(cfg.seed ^ 0x5157_EA11);
+    let vocab = cfg.serve.vocab as u64;
+    let sys: Vec<i32> = (0..px.system_prompt).map(|_| rng.below(vocab) as i32).collect();
+    let max_suffix = cfg.prompt_max.saturating_sub(px.system_prompt).max(2);
+    (0..cfg.requests)
+        .map(|i| {
+            let suffix_len = rng.range(2, max_suffix + 1);
+            let mut prompt = sys.clone();
+            prompt.push((i % cfg.serve.vocab) as i32);
+            for _ in 1..suffix_len {
+                prompt.push(rng.below(vocab) as i32);
+            }
+            let max_new = rng.range(cfg.max_new_min, cfg.max_new_max + 1);
+            ServeRequest::new(prompt)
+                .max_new(max_new)
+                .engine(&cfg.engines[i % cfg.engines.len()])
+                .seed(i as u64)
+        })
+        .collect()
+}
+
+/// The prefix-cache comparison: cold vs warm continuous batching over
+/// the identical shared-prefix stream.
+#[derive(Debug, Clone)]
+pub struct PrefixComparison {
+    pub cold: RunStats,
+    pub warm: RunStats,
+    /// Hit fraction over the warm run's admissions.
+    pub hit_rate: f64,
+    /// Mean prompt tokens served from cache per finished request.
+    pub shared_tokens_mean: f64,
+    /// Greedy streams bit-for-bit identical cold vs warm (the
+    /// correctness pin; recorded so CI trajectories catch a break).
+    pub streams_identical: bool,
+    /// cold mean TTFT / warm mean TTFT (> 1 means the cache helps).
+    pub ttft_gain: f64,
+    /// warm tok/s / cold tok/s.
+    pub tok_s_gain: f64,
+}
+
+/// Run the shared-prefix workload cold (no prefix cache) and warm
+/// (radix prefix cache on) through the continuous batcher, staggering
+/// the first request so its prompt path is cached before the rest of
+/// the stream arrives (the steady-state serving shape).
+pub fn bench_serve_prefix(cfg: &ServeBenchConfig) -> (Table, PrefixComparison) {
+    let px = cfg.prefix.unwrap_or_default();
+    let reqs = workload_shared_prefix(cfg, &px);
+    assert!(!reqs.is_empty(), "prefix comparison needs at least one request");
+    let run = |prefix: Option<PrefixCacheConfig>, label: &str| {
+        let serve = ServeConfig { prefix_cache: prefix, kv_policy: None, ..cfg.serve };
+        let mut s = ContinuousBatcher::new(serve);
+        // Stagger: first request alone (it inserts the system-prompt
+        // path), then the rest of the stream.
+        let t0 = Instant::now();
+        let (warmup, rest) = reqs.split_at(1);
+        let (w0, mut f0) = drive_keep(&mut s, label, "none", warmup);
+        let (mut stats, mut fin) = drive_keep(&mut s, label, "none", rest);
+        // Merge the two drive segments into one run record: the
+        // metrics-derived fields (tokens_out, TTFT/latency
+        // percentiles, prefix stats) already accumulate across both
+        // drives; wall-clock, throughput, and the per-step integrals
+        // must be re-based on the whole staggered run or the JSON
+        // artifact over-reports tok/s.
+        fin.append(&mut f0);
+        fin.sort_by_key(|f| f.id);
+        let total_steps = w0.steps + stats.steps;
+        if total_steps > 0 {
+            stats.mean_pages = (w0.mean_pages * w0.steps as f64
+                + stats.mean_pages * stats.steps as f64)
+                / total_steps as f64;
+            stats.mean_live = (w0.mean_live * w0.steps as f64
+                + stats.mean_live * stats.steps as f64)
+                / total_steps as f64;
+        }
+        stats.steps = total_steps;
+        stats.peak_pages = stats.peak_pages.max(w0.peak_pages);
+        stats.peak_live = stats.peak_live.max(w0.peak_live);
+        stats.pages_pruned += w0.pages_pruned;
+        stats.requests += w0.requests;
+        stats.failed += w0.failed;
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.tok_s =
+            if stats.wall_s > 0.0 { stats.tokens_out as f64 / stats.wall_s } else { 0.0 };
+        s.metrics_mut().wall_s = stats.wall_s;
+        (stats, fin)
+    };
+    let (cold, cold_fin) = run(None, "continuous-cold");
+    let (warm, warm_fin) = run(
+        Some(PrefixCacheConfig { max_pages: px.cache_pages }),
+        "continuous-prefix",
+    );
+    let streams_identical = cold_fin.len() == warm_fin.len()
+        && cold_fin.iter().zip(&warm_fin).all(|(c, w)| c.id == w.id && c.tokens == w.tokens);
+    let admissions = warm.prefix.hits + warm.prefix.misses;
+    let hit_rate =
+        if admissions == 0 { 0.0 } else { warm.prefix.hits as f64 / admissions as f64 };
+    let shared_tokens_mean = if warm_fin.is_empty() {
+        0.0
+    } else {
+        warm_fin.iter().map(|f| f.prefix_shared as f64).sum::<f64>() / warm_fin.len() as f64
+    };
+    let cmp = PrefixComparison {
+        ttft_gain: if warm.ttft_mean_s > 0.0 { cold.ttft_mean_s / warm.ttft_mean_s } else { 0.0 },
+        tok_s_gain: if cold.tok_s > 0.0 { warm.tok_s / cold.tok_s } else { 0.0 },
+        hit_rate,
+        shared_tokens_mean,
+        streams_identical,
+        cold,
+        warm,
+    };
+
+    let mut t = Table::new(
+        &format!(
+            "bench serve --prefix-cache — cold vs radix prefix cache over {} requests \
+             (system prompt {}, prompts ≤{}, max_new {}–{}, engines {})",
+            cfg.requests,
+            px.system_prompt,
+            cfg.prompt_max,
+            cfg.max_new_min,
+            cfg.max_new_max,
+            cfg.engines.join(";"),
+        ),
+        &[
+            "run",
+            "tok/s",
+            "TTFT mean",
+            "TTFT p50",
+            "hit rate",
+            "shared tok (mean)",
+            "peak pages",
+            "identical streams",
+        ],
+    );
+    for (label, s) in [("cold", &cmp.cold), ("prefix", &cmp.warm)] {
+        t.row(vec![
+            label.into(),
+            format!("{:.1}", s.tok_s),
+            fmt_time(s.ttft_mean_s),
+            fmt_time(s.ttft.p50),
+            if label == "cold" {
+                "-".into()
+            } else {
+                format!("{:.0}%", cmp.hit_rate * 100.0)
+            },
+            if label == "cold" { "-".into() } else { format!("{:.1}", cmp.shared_tokens_mean) },
+            s.peak_pages.to_string(),
+            if label == "cold" { "-".into() } else { cmp.streams_identical.to_string() },
+        ]);
     }
+    t.row(vec![
+        "gain".into(),
+        fmt_speedup(cmp.tok_s_gain),
+        fmt_speedup(cmp.ttft_gain),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+    ]);
+    (t, cmp)
 }
 
 /// Run the workload through the wave baseline and the continuous
@@ -258,6 +467,17 @@ fn stats_json(s: &RunStats) -> Json {
         ("mean_live", Json::from(s.mean_live)),
         ("peak_live", Json::from(s.peak_live)),
         ("pages_pruned", Json::from(s.pages_pruned)),
+        ("ttft_mean_s", Json::from(s.ttft_mean_s)),
+        (
+            "prefix_cache",
+            obj(vec![
+                ("hits", Json::from(s.prefix.hits as usize)),
+                ("misses", Json::from(s.prefix.misses as usize)),
+                ("inserted", Json::from(s.prefix.inserted as usize)),
+                ("evicted", Json::from(s.prefix.evicted as usize)),
+                ("pages_nominal", Json::from(s.prefix.pages_nominal)),
+            ]),
+        ),
     ])
 }
 
@@ -266,6 +486,16 @@ fn stats_json(s: &RunStats) -> Json {
 /// policy-budget admission comparison (achieved concurrency at the
 /// fixed `max_pages` versus worst-case reservation).
 pub fn to_json(cfg: &ServeBenchConfig, runs: &[RunStats]) -> String {
+    to_json_with_prefix(cfg, runs, None)
+}
+
+/// [`to_json`], optionally embedding the `--prefix-cache` comparison
+/// block (hit rate, TTFT gain, and the bit-identical-streams pin).
+pub fn to_json_with_prefix(
+    cfg: &ServeBenchConfig,
+    runs: &[RunStats],
+    prefix: Option<&PrefixComparison>,
+) -> String {
     let baseline = runs.iter().find(|r| r.scheduler == "continuous" && r.policy == "none");
     let mut doc = vec![
         (
@@ -337,6 +567,25 @@ pub fn to_json(cfg: &ServeBenchConfig, runs: &[RunStats]) -> String {
             ]),
         ));
     }
+    if let Some(p) = prefix {
+        let px = cfg.prefix.unwrap_or_default();
+        doc.push((
+            "prefix_cache",
+            obj(vec![
+                ("system_prompt", Json::from(px.system_prompt)),
+                ("cache_pages", Json::from(px.cache_pages)),
+                ("hit_rate", Json::from(p.hit_rate)),
+                ("hits", Json::from(p.warm.prefix.hits as usize)),
+                ("misses", Json::from(p.warm.prefix.misses as usize)),
+                ("shared_tokens_mean", Json::from(p.shared_tokens_mean)),
+                ("streams_identical", Json::from(p.streams_identical)),
+                ("cold_ttft_mean_s", Json::from(p.cold.ttft_mean_s)),
+                ("warm_ttft_mean_s", Json::from(p.warm.ttft_mean_s)),
+                ("ttft_gain", Json::from(p.ttft_gain)),
+                ("tokens_per_s_gain", Json::from(p.tok_s_gain)),
+            ]),
+        ));
+    }
     obj(doc).to_string()
 }
 
@@ -353,6 +602,7 @@ mod tests {
             max_new_max: 6,
             engines: vec!["dense".into(), "sfa:k=4".into()],
             policies: vec![None],
+            prefix: None,
             serve: ServeConfig {
                 heads: 2,
                 d: 8,
@@ -364,6 +614,7 @@ mod tests {
                 max_seq: 128,
                 model_seed: 7,
                 kv_policy: None,
+                prefix_cache: None,
             },
             seed: 1,
         }
@@ -446,6 +697,66 @@ mod tests {
         let pa = j.get("policy_admission").unwrap();
         assert!(pa.get("concurrency_gain_mean_live").unwrap().as_f64().unwrap() > 1.0);
         assert!(pa.get("best_policy").unwrap().as_str().is_ok());
+    }
+
+    /// Acceptance pin for `sfa bench serve --prefix-cache`: on a
+    /// repeated-system-prompt workload the warm run hits (> 0 rate),
+    /// shares the system prompt, finishes everything, and its greedy
+    /// streams are bit-for-bit identical to the cold run; the JSON
+    /// document carries the whole comparison.
+    #[test]
+    fn prefix_cache_bench_hits_and_streams_match() {
+        let mut cfg = tiny();
+        cfg.requests = 8;
+        cfg.prompt_max = 48;
+        cfg.engines = vec!["sfa:k=4".into()];
+        cfg.prefix = Some(PrefixBenchConfig { system_prompt: 32, cache_pages: 256 });
+        let (table, cmp) = bench_serve_prefix(&cfg);
+        assert_eq!(cmp.cold.requests, 8);
+        assert_eq!(cmp.warm.requests, 8);
+        assert_eq!((cmp.cold.failed, cmp.warm.failed), (0, 0));
+        assert!(cmp.streams_identical, "prefix cache must not change greedy tokens");
+        assert!(cmp.hit_rate > 0.0, "staggered stream must hit ({:?})", cmp.warm.prefix);
+        assert!(
+            cmp.shared_tokens_mean > 0.0,
+            "hits share the system prompt ({})",
+            cmp.shared_tokens_mean
+        );
+        assert!(cmp.warm.prefix.hits >= 6, "{:?}", cmp.warm.prefix);
+        let rendered = table.render();
+        assert!(rendered.contains("prefix") && rendered.contains("hit rate"), "{rendered}");
+
+        let doc = to_json_with_prefix(&cfg, &[cmp.cold.clone(), cmp.warm.clone()], Some(&cmp));
+        let j = Json::parse(&doc).unwrap();
+        let p = j.get("prefix_cache").unwrap();
+        assert!(p.get("hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert!(p.get("streams_identical").unwrap().as_bool().unwrap());
+        assert!(p.get("warm_ttft_mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        // Per-run prefix counters ride along in the runs array.
+        let runs = j.get("runs").unwrap().as_arr().unwrap();
+        assert!(
+            runs[1].get("prefix_cache").unwrap().get("hits").unwrap().as_usize().unwrap() > 0
+        );
+    }
+
+    #[test]
+    fn shared_prefix_workload_shape() {
+        let mut cfg = tiny();
+        cfg.requests = 5;
+        cfg.prompt_max = 24;
+        let px = PrefixBenchConfig { system_prompt: 16, cache_pages: 64 };
+        let a = workload_shared_prefix(&cfg, &px);
+        let b = workload_shared_prefix(&cfg, &px);
+        assert_eq!(a.len(), 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt, "deterministic");
+            assert!(x.prompt.len() > px.system_prompt);
+            assert!(x.prompt.len() <= cfg.prompt_max.max(px.system_prompt + 2));
+            assert_eq!(&x.prompt[..16], &a[0].prompt[..16], "system prompt shared");
+        }
+        // First suffix token is forced distinct, so the shared prefix
+        // is exactly the system prompt.
+        assert_ne!(a[0].prompt[16], a[1].prompt[16]);
     }
 
     #[test]

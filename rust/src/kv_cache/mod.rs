@@ -1,17 +1,24 @@
 //! KV-cache management for the serving coordinator.
 //!
-//! Two layers:
+//! Three layers:
 //! * [`paged`] — a vLLM-style paged allocator: fixed-size pages, a page
-//!   table per sequence, copy-free append, reference-counted sharing,
-//!   and token eviction ([`PagedKvCache::retain`] /
+//!   table per sequence, copy-free append, reference-counted sharing
+//!   ([`PagedKvCache::fork`] / [`PagedKvCache::fork_prefix`], with
+//!   [`PagedKvCache::pin_seq`] pinning sequences out of every eviction
+//!   surface), and token eviction ([`PagedKvCache::retain`] /
 //!   [`PagedKvCache::evict_tokens`] — compaction that returns whole
 //!   pages to the pool, copy-on-evict safe under `fork`, the substrate
 //!   the serve stack's KV eviction policies prune through).
 //!   SFA shrinks the K-page payload to top-k codes (App. J memory).
+//! * [`radix`] — the radix/trie prompt-prefix cache mapping prompt
+//!   token prefixes to pinned forked sequences (the serve stack's
+//!   `ServeConfig::prefix_cache` substrate).
 //! * [`accounting`] — byte accounting across whole model instances
 //!   (drives Fig. 1b / Fig. 5 KV-memory curves).
 
 pub mod accounting;
 pub mod paged;
+pub mod radix;
 
 pub use paged::{PageError, PagedKvCache, SeqId, SlotLayout};
+pub use radix::{PrefixCacheStats, PrefixHit, RadixPrefixCache};

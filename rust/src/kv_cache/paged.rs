@@ -5,7 +5,7 @@
 //! allocated on append and freed when the sequence finishes. Prefix
 //! sharing is supported through per-page reference counts (fork).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Sequence handle.
 pub type SeqId = u64;
@@ -14,6 +14,9 @@ pub type SeqId = u64;
 pub enum PageError {
     OutOfPages,
     UnknownSeq,
+    /// The sequence is pinned (a prefix-cache entry): token eviction
+    /// and free are refused until it is unpinned.
+    PinnedSeq,
 }
 
 impl std::fmt::Display for PageError {
@@ -21,6 +24,9 @@ impl std::fmt::Display for PageError {
         match self {
             PageError::OutOfPages => write!(f, "paged KV cache is out of pages"),
             PageError::UnknownSeq => write!(f, "unknown KV-cache sequence id"),
+            PageError::PinnedSeq => {
+                write!(f, "sequence is pinned by a prefix cache (unpin before evicting)")
+            }
         }
     }
 }
@@ -58,8 +64,16 @@ pub struct PagedKvCache {
     ref_counts: Vec<u32>,
     /// seq -> (page ids, token count)
     tables: HashMap<SeqId, (Vec<u32>, usize)>,
+    /// Sequences pinned out of `retain`/`evict_tokens`/`free` (prefix
+    /// cache entries — see [`crate::kv_cache::radix`]).
+    pinned: HashSet<SeqId>,
     next_seq: SeqId,
     max_pages: usize,
+    /// Cumulative successful page allocations (appends + rebuilds).
+    alloc_total: usize,
+    /// Cumulative pages consumed by `retain` rebuilds — the share of
+    /// `alloc_total` that is compaction traffic, not new tokens.
+    rebuild_total: usize,
 }
 
 impl PagedKvCache {
@@ -71,14 +85,18 @@ impl PagedKvCache {
             free_list: Vec::new(),
             ref_counts: Vec::new(),
             tables: HashMap::new(),
+            pinned: HashSet::new(),
             next_seq: 0,
             max_pages,
+            alloc_total: 0,
+            rebuild_total: 0,
         }
     }
 
     fn alloc_page(&mut self) -> Result<u32, PageError> {
         if let Some(p) = self.free_list.pop() {
             self.ref_counts[p as usize] = 1;
+            self.alloc_total += 1;
             return Ok(p);
         }
         if self.pages.len() >= self.max_pages {
@@ -88,6 +106,7 @@ impl PagedKvCache {
         self.pages
             .push(vec![0.0; self.page_size * self.layout.floats_per_token()]);
         self.ref_counts.push(1);
+        self.alloc_total += 1;
         Ok(id)
     }
 
@@ -164,18 +183,64 @@ impl PagedKvCache {
 
     /// Fork a sequence sharing all current pages (prefix caching).
     pub fn fork(&mut self, seq: SeqId) -> Result<SeqId, PageError> {
-        let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?.clone();
+        let len = self.seq_len(seq).ok_or(PageError::UnknownSeq)?;
+        self.fork_prefix(seq, len)
+    }
+
+    /// Fork only the first `n_tokens` of a sequence: the new sequence
+    /// shares the `⌈n_tokens / page_size⌉` pages covering that prefix
+    /// (refcounted — never copied). A partially filled last page is
+    /// shared too: its beyond-prefix slots are unreachable (reads are
+    /// length-bounded) and the first append into it copy-on-writes
+    /// while the page is shared. This is the radix prefix cache's hit
+    /// path: seed a lane with a cached prompt prefix, then append only
+    /// the suffix.
+    pub fn fork_prefix(&mut self, seq: SeqId, n_tokens: usize) -> Result<SeqId, PageError> {
+        let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
+        assert!(n_tokens <= *len, "fork_prefix of {n_tokens} tokens from a {len}-token seq");
+        let shared = n_tokens.div_ceil(self.page_size);
+        let table: Vec<u32> = table[..shared].to_vec();
         for &p in &table {
             self.ref_counts[p as usize] += 1;
         }
         let id = self.next_seq;
         self.next_seq += 1;
-        self.tables.insert(id, (table, len));
+        self.tables.insert(id, (table, n_tokens));
         Ok(id)
     }
 
+    /// Pin a sequence: `retain`/`evict_tokens`/`free` refuse it until
+    /// [`PagedKvCache::unpin_seq`]. The radix prefix cache pins its
+    /// entries so no eviction path can prune pages a cached prefix
+    /// still references.
+    pub fn pin_seq(&mut self, seq: SeqId) -> Result<(), PageError> {
+        if !self.tables.contains_key(&seq) {
+            return Err(PageError::UnknownSeq);
+        }
+        self.pinned.insert(seq);
+        Ok(())
+    }
+
+    /// Remove a sequence's pin (no-op when not pinned).
+    pub fn unpin_seq(&mut self, seq: SeqId) -> Result<(), PageError> {
+        if !self.tables.contains_key(&seq) {
+            return Err(PageError::UnknownSeq);
+        }
+        self.pinned.remove(&seq);
+        Ok(())
+    }
+
+    pub fn is_pinned(&self, seq: SeqId) -> bool {
+        self.pinned.contains(&seq)
+    }
+
     /// Free a sequence, returning pages whose refcount drops to zero.
+    /// Pinned sequences are refused ([`PageError::PinnedSeq`]) — unpin
+    /// first, so a prefix-cache entry can't be dropped by accident.
     pub fn free(&mut self, seq: SeqId) -> Result<usize, PageError> {
+        if self.pinned.contains(&seq) {
+            return Err(PageError::PinnedSeq);
+        }
         let (table, _) = self.tables.remove(&seq).ok_or(PageError::UnknownSeq)?;
         let mut freed = 0;
         for p in table {
@@ -203,6 +268,9 @@ impl PagedKvCache {
     /// untouched — only when every surviving page is fork-shared *and*
     /// the pool has no headroom for the rebuilt copies.
     pub fn retain(&mut self, seq: SeqId, keep: &[usize]) -> Result<usize, PageError> {
+        if self.pinned.contains(&seq) {
+            return Err(PageError::PinnedSeq);
+        }
         let fpt = self.layout.floats_per_token();
         let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?.clone();
         for w in keep.windows(2) {
@@ -242,6 +310,7 @@ impl PagedKvCache {
         for _ in 0..new_pages {
             new_table.push(self.alloc_page().expect("feasibility checked above"));
         }
+        self.rebuild_total += new_pages;
         for (i, chunk) in kept.chunks(self.page_size * fpt).enumerate() {
             self.pages[new_table[i] as usize][..chunk.len()].copy_from_slice(chunk);
         }
@@ -291,6 +360,20 @@ impl PagedKvCache {
 
     pub fn bytes_in_use(&self) -> usize {
         self.pages_in_use() * self.page_size * self.layout.floats_per_token() * 4
+    }
+
+    /// Cumulative successful page allocations over the cache's life
+    /// (appends and `retain` rebuilds alike). With
+    /// [`PagedKvCache::pages_rebuild_total`] this gives the page
+    /// conservation law the session accounting tests pin: once every
+    /// sequence is freed, `net frees == alloc_total - rebuild_total`.
+    pub fn pages_alloc_total(&self) -> usize {
+        self.alloc_total
+    }
+
+    /// Cumulative pages consumed by `retain`/`evict_tokens` rebuilds.
+    pub fn pages_rebuild_total(&self) -> usize {
+        self.rebuild_total
     }
 }
 
@@ -521,6 +604,148 @@ mod tests {
         c.retain(a, &[0, 2]).unwrap();
         assert_eq!(c.seq_len(a), Some(2));
         assert_eq!(c.get(a, 1).unwrap()[0], 2.0);
+    }
+
+    /// fork_prefix shares only the pages covering the prefix; the fork
+    /// reads exactly the prefix, survives the parent's mutation of its
+    /// own tail (CoW on the shared partial page), and appends continue
+    /// from the prefix without disturbing the parent.
+    #[test]
+    fn fork_prefix_shares_prefix_pages_only() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(32, 4, layout);
+        let a = c.create_seq();
+        for i in 0..10 {
+            c.append(a, &payload(layout, i as f32)).unwrap();
+        }
+        assert_eq!(c.pages_in_use(), 3);
+        // Prefix of 6 tokens covers ceil(6/4) = 2 pages, page 1 partial.
+        let b = c.fork_prefix(a, 6).unwrap();
+        assert_eq!(c.pages_in_use(), 3, "fork_prefix allocates nothing");
+        assert_eq!(c.seq_len(b), Some(6));
+        for i in 0..6 {
+            assert_eq!(c.get(b, i).unwrap()[0], i as f32);
+        }
+        // Appending token 6 to the fork lands in the shared partial
+        // page -> copy-on-write; the parent's token 6 is untouched.
+        c.append(b, &payload(layout, 99.0)).unwrap();
+        assert_eq!(c.get(b, 6).unwrap()[0], 99.0);
+        assert_eq!(c.get(a, 6).unwrap()[0], 6.0);
+        assert_eq!(c.pages_in_use(), 4, "CoW consumed one fresh page");
+        // Parent release keeps the shared prefix alive for the fork.
+        c.free(a).unwrap();
+        for i in 0..6 {
+            assert_eq!(c.get(b, i).unwrap()[0], i as f32);
+        }
+        c.free(b).unwrap();
+        assert_eq!(c.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn fork_prefix_at_page_boundary_and_full_length() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(32, 4, layout);
+        let a = c.create_seq();
+        for i in 0..8 {
+            c.append(a, &payload(layout, i as f32)).unwrap();
+        }
+        let b = c.fork_prefix(a, 4).unwrap();
+        // Boundary prefix: the fork's next append opens a fresh page,
+        // no CoW needed.
+        c.append(b, &payload(layout, 50.0)).unwrap();
+        assert_eq!(c.get(b, 4).unwrap()[0], 50.0);
+        assert_eq!(c.get(a, 4).unwrap()[0], 4.0);
+        // Full-length fork_prefix == fork.
+        let full = c.fork_prefix(a, 8).unwrap();
+        assert_eq!(c.seq_len(full), Some(8));
+        let empty = c.fork_prefix(a, 0).unwrap();
+        assert_eq!(c.seq_len(empty), Some(0));
+    }
+
+    /// Satellite regression (fork-pin × eviction): a prefix pinned by
+    /// the radix cache must survive a child's `retain`/`evict_tokens`
+    /// and a child release — and the pinned sequence itself refuses
+    /// every eviction surface until unpinned.
+    #[test]
+    fn pinned_prefix_survives_child_retain_evict_and_release() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(64, 2, layout);
+        // Build the "cached prefix" and pin it (what RadixPrefixCache
+        // does at insert).
+        let parent = c.create_seq();
+        for i in 0..6 {
+            c.append(parent, &payload(layout, i as f32)).unwrap();
+        }
+        let entry = c.fork_prefix(parent, 6).unwrap();
+        c.pin_seq(entry).unwrap();
+        assert!(c.is_pinned(entry));
+        c.free(parent).unwrap();
+
+        // A child forks the cached prefix and lives its own life.
+        let child = c.fork_prefix(entry, 6).unwrap();
+        for i in 6..10 {
+            c.append(child, &payload(layout, i as f32)).unwrap();
+        }
+        // Child prunes hard (KV policy): the entry's pages only drop a
+        // ref (copy-on-evict), never mutate.
+        c.evict_tokens(child, &[0, 1, 2, 3, 4, 6, 8]).unwrap();
+        assert_eq!(c.seq_len(child), Some(3));
+        for i in 0..6 {
+            assert_eq!(c.get(entry, i).unwrap()[0], i as f32, "entry intact after child prune");
+        }
+        // Child release: entry still intact.
+        c.free(child).unwrap();
+        for i in 0..6 {
+            assert_eq!(c.get(entry, i).unwrap()[0], i as f32, "entry intact after child free");
+        }
+
+        // The pinned entry refuses every eviction surface.
+        assert_eq!(c.retain(entry, &[0]).unwrap_err(), PageError::PinnedSeq);
+        assert_eq!(c.evict_tokens(entry, &[0]).unwrap_err(), PageError::PinnedSeq);
+        assert_eq!(c.free(entry).unwrap_err(), PageError::PinnedSeq);
+        assert_eq!(c.seq_len(entry), Some(6), "refused eviction mutates nothing");
+
+        // Unpin -> the entry frees normally and every page drains.
+        c.unpin_seq(entry).unwrap();
+        c.free(entry).unwrap();
+        assert_eq!(c.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn pin_unknown_seq_errors_and_unpin_is_idempotent() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(4, 2, layout);
+        assert_eq!(c.pin_seq(42).unwrap_err(), PageError::UnknownSeq);
+        let s = c.create_seq();
+        c.pin_seq(s).unwrap();
+        c.pin_seq(s).unwrap();
+        c.unpin_seq(s).unwrap();
+        c.unpin_seq(s).unwrap();
+        assert!(!c.is_pinned(s));
+        c.free(s).unwrap();
+    }
+
+    /// Page conservation: once every sequence is freed, the pages that
+    /// came back equal cumulative allocations; rebuild traffic is
+    /// tracked separately (the counter the session's freed-accounting
+    /// test builds on).
+    #[test]
+    fn alloc_counters_track_appends_and_rebuilds() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(64, 2, layout);
+        let s = c.create_seq();
+        for i in 0..8 {
+            c.append(s, &payload(layout, i as f32)).unwrap();
+        }
+        assert_eq!(c.pages_alloc_total(), 4);
+        assert_eq!(c.pages_rebuild_total(), 0);
+        c.retain(s, &[0, 3, 6]).unwrap(); // 3 tokens -> 2 rebuild pages
+        assert_eq!(c.pages_alloc_total(), 6);
+        assert_eq!(c.pages_rebuild_total(), 2);
+        c.free(s).unwrap();
+        assert_eq!(c.pages_in_use(), 0);
+        // Conservation: everything allocated is back in the pool.
+        assert_eq!(c.pages_free(), 64);
     }
 
     #[test]

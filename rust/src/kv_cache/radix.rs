@@ -1,0 +1,671 @@
+//! [`RadixPrefixCache`] — a radix (compressed-trie) cache mapping
+//! prompt-token prefixes to forked [`PagedKvCache`] sequences, the
+//! prefix-sharing layer behind `serve`'s `ServeConfig::prefix_cache`.
+//!
+//! Serving millions of users means serving the *same system prompt*
+//! millions of times; re-prefilling it per request is pure waste. The
+//! serve stack records each finished request's prompt path here: one
+//! **entry** = one node on the token trie + one pinned cache sequence
+//! per head holding exactly that prefix's KV (created with
+//! [`PagedKvCache::fork_prefix`], so it shares pages — insertion never
+//! copies KV). On admission, the batcher looks up the longest cached
+//! prefix of the incoming prompt, forks it into the new lane, and
+//! prefills only the suffix.
+//!
+//! Key properties:
+//!
+//! * **Lookup is structural.** The match may end mid-edge; any entry in
+//!   the subtree below the match point starts with the matched tokens,
+//!   so it can be prefix-forked at the match length. Ancestor entries
+//!   serve shorter matches. A hit therefore never requires an exact
+//!   prompt repeat — only a shared prefix.
+//! * **Entries are pinned.** Every entry sequence is
+//!   [`PagedKvCache::pin_seq`]-pinned, so no eviction surface
+//!   (`retain`/`evict_tokens`/`free`) can prune pages a cached prefix
+//!   still references; children pruning themselves copy-on-evict
+//!   around the shared pages.
+//! * **LRU under a nominal page budget.** Each entry is charged
+//!   `heads × ⌈len / page_size⌉` pages (nominal: fork-sharing between
+//!   entries makes exact attribution ill-defined, and nominal
+//!   over-counts, which is the safe direction for admission math).
+//!   Inserting past the budget evicts least-recently-used entries
+//!   first. Entries currently borrowed by a live lane are never
+//!   evicted — their shared pages back that lane's suffix-only page
+//!   reservation.
+
+use std::collections::HashMap;
+
+use crate::kv_cache::paged::{PagedKvCache, SeqId};
+
+/// Stable handle for one cached prefix entry.
+pub type EntryId = u64;
+
+/// Counters the serve stack reports (`bench serve --prefix-cache`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixCacheStats {
+    /// Admissions that forked a cached prefix.
+    pub hits: u64,
+    /// Admissions that found no usable prefix.
+    pub misses: u64,
+    /// Entries inserted over the cache's life.
+    pub inserted: u64,
+    /// Entries evicted (LRU) over the cache's life.
+    pub evicted: u64,
+    /// Nominal pages currently attributed to live entries.
+    pub pages_nominal: usize,
+}
+
+/// One lookup result: fork `seqs[h]` at `shared` tokens per head.
+#[derive(Debug, Clone)]
+pub struct PrefixHit {
+    pub entry: EntryId,
+    /// Prompt tokens covered by the cached prefix.
+    pub shared: usize,
+    /// Entry sequences, one per head, to `fork_prefix` at `shared`.
+    pub seqs: Vec<SeqId>,
+}
+
+struct Entry {
+    id: EntryId,
+    /// One pinned sequence per head; each holds exactly `depth` tokens.
+    seqs: Vec<SeqId>,
+    /// `heads × ⌈depth / page_size⌉` — the LRU budget charge.
+    pages_nominal: usize,
+    last_used: u64,
+    /// Live lanes currently sharing this entry's pages.
+    borrowers: usize,
+}
+
+struct Node {
+    /// Compressed token run from the parent node.
+    edge: Vec<i32>,
+    /// First token of each child's edge -> arena index.
+    children: HashMap<i32, usize>,
+    parent: usize,
+    /// Token depth of this node (prefix length it represents).
+    depth: usize,
+    entry: Option<Entry>,
+}
+
+/// Radix tree over prompt tokens; entries hold pinned forked sequences.
+pub struct RadixPrefixCache {
+    nodes: Vec<Option<Node>>,
+    free_nodes: Vec<usize>,
+    root: usize,
+    heads: usize,
+    page_size: usize,
+    /// Nominal page budget across all entries.
+    max_pages: usize,
+    pages_nominal: usize,
+    clock: u64,
+    entries: HashMap<EntryId, usize>,
+    next_entry: EntryId,
+    hits: u64,
+    misses: u64,
+    inserted: u64,
+    evicted: u64,
+}
+
+impl RadixPrefixCache {
+    pub fn new(heads: usize, page_size: usize, max_pages: usize) -> RadixPrefixCache {
+        assert!(heads >= 1 && page_size >= 1 && max_pages >= 1);
+        let root = Node {
+            edge: Vec::new(),
+            children: HashMap::new(),
+            parent: usize::MAX,
+            depth: 0,
+            entry: None,
+        };
+        RadixPrefixCache {
+            nodes: vec![Some(root)],
+            free_nodes: Vec::new(),
+            root: 0,
+            heads,
+            page_size,
+            max_pages,
+            pages_nominal: 0,
+            clock: 0,
+            entries: HashMap::new(),
+            next_entry: 0,
+            hits: 0,
+            misses: 0,
+            inserted: 0,
+            evicted: 0,
+        }
+    }
+
+    fn node(&self, i: usize) -> &Node {
+        self.nodes[i].as_ref().expect("live node index")
+    }
+
+    fn node_mut(&mut self, i: usize) -> &mut Node {
+        self.nodes[i].as_mut().expect("live node index")
+    }
+
+    fn alloc_node(&mut self, n: Node) -> usize {
+        match self.free_nodes.pop() {
+            Some(i) => {
+                self.nodes[i] = Some(n);
+                i
+            }
+            None => {
+                self.nodes.push(Some(n));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn nominal(&self, len: usize) -> usize {
+        self.heads * len.div_ceil(self.page_size)
+    }
+
+    pub fn stats(&self) -> PrefixCacheStats {
+        PrefixCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            inserted: self.inserted,
+            evicted: self.evicted,
+            pages_nominal: self.pages_nominal,
+        }
+    }
+
+    /// Nominal pages currently held by entries (the admission pass adds
+    /// this to its reservation math — over-counting shared pages, which
+    /// is the safe direction).
+    pub fn pages_nominal(&self) -> usize {
+        self.pages_nominal
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Walk the trie as deep as `prompt[..limit]` matches. Returns
+    /// (deepest touched node, matched token count). The match may end
+    /// mid-edge of the returned node; every entry in that node's
+    /// subtree still starts with the matched tokens.
+    fn walk(&self, prompt: &[i32], limit: usize) -> (usize, usize) {
+        let mut cur = self.root;
+        let mut matched = 0usize;
+        while matched < limit {
+            let Some(&child) = self.node(cur).children.get(&prompt[matched]) else {
+                break;
+            };
+            let edge = &self.node(child).edge;
+            let cap = (limit - matched).min(edge.len());
+            let mut common = 0usize;
+            while common < cap && edge[common] == prompt[matched + common] {
+                common += 1;
+            }
+            matched += common;
+            cur = child;
+            if common < edge.len() {
+                break; // diverged (or limit hit) mid-edge
+            }
+        }
+        (cur, matched)
+    }
+
+    /// Most-recently-used entry in the subtree rooted at `start`.
+    fn subtree_best(&self, start: usize) -> Option<EntryId> {
+        let mut best: Option<(u64, EntryId)> = None;
+        let mut stack = vec![start];
+        while let Some(i) = stack.pop() {
+            let n = self.node(i);
+            if let Some(e) = &n.entry {
+                if best.map(|(t, _)| e.last_used > t).unwrap_or(true) {
+                    best = Some((e.last_used, e.id));
+                }
+            }
+            stack.extend(n.children.values().copied());
+        }
+        best.map(|(_, id)| id)
+    }
+
+    /// Longest usable cached prefix of `prompt`, capped at
+    /// `prompt.len() - 1` so at least one suffix token is always left
+    /// to prefill (the token whose output the first sample needs).
+    /// Read-only: stats and LRU move on [`RadixPrefixCache::borrow`] /
+    /// [`RadixPrefixCache::note_miss`], so a peek the admission pass
+    /// later abandons (page budget) costs nothing.
+    pub fn peek(&self, prompt: &[i32]) -> Option<PrefixHit> {
+        let limit = prompt.len().saturating_sub(1);
+        if limit == 0 {
+            return None;
+        }
+        let (deepest, matched) = self.walk(prompt, limit);
+        if matched == 0 {
+            return None;
+        }
+        // Preferred: an entry at/below the match point — it contains
+        // the full matched prefix. Fallback: the nearest ancestor
+        // entry, usable at its own (shorter) depth.
+        if let Some(id) = self.subtree_best(deepest) {
+            let node = self.entries[&id];
+            let e = self.node(node).entry.as_ref().expect("entry node");
+            debug_assert!(self.node(node).depth >= matched);
+            return Some(PrefixHit { entry: id, shared: matched, seqs: e.seqs.clone() });
+        }
+        let mut cur = self.node(deepest).parent;
+        while cur != usize::MAX {
+            if let Some(e) = &self.node(cur).entry {
+                let shared = self.node(cur).depth;
+                debug_assert!(shared <= matched);
+                if shared >= 1 {
+                    return Some(PrefixHit { entry: e.id, shared, seqs: e.seqs.clone() });
+                }
+            }
+            cur = self.node(cur).parent;
+        }
+        None
+    }
+
+    /// Record a consumed hit: bump the borrow count (the entry is now
+    /// backing a live lane and is exempt from LRU eviction) and touch
+    /// the LRU clock.
+    pub fn borrow(&mut self, entry: EntryId) {
+        let t = self.tick();
+        let node = self.entries[&entry];
+        let e = self.node_mut(node).entry.as_mut().expect("entry node");
+        e.borrowers += 1;
+        e.last_used = t;
+        self.hits += 1;
+    }
+
+    /// Release a borrow taken by [`RadixPrefixCache::borrow`] (lane
+    /// finished or failed).
+    pub fn release(&mut self, entry: EntryId) {
+        if let Some(&node) = self.entries.get(&entry) {
+            let e = self.node_mut(node).entry.as_mut().expect("entry node");
+            e.borrowers = e.borrowers.checked_sub(1).expect("borrow released twice");
+        }
+    }
+
+    pub fn note_miss(&mut self) {
+        self.misses += 1;
+    }
+
+    /// Insert `prompt`'s path, forking (and pinning) `src_seqs` — one
+    /// per head, each holding at least `prompt.len()` tokens — at the
+    /// prompt length. No-op (returns false) when the exact path is
+    /// already cached (LRU-touched instead), when the entry alone
+    /// exceeds the whole budget, or when eviction cannot make room
+    /// (every resident entry borrowed). Never allocates pages: forks
+    /// share, and the budget is enforced by evicting other entries.
+    pub fn insert(
+        &mut self,
+        prompt: &[i32],
+        cache: &mut PagedKvCache,
+        src_seqs: &[SeqId],
+    ) -> bool {
+        assert_eq!(src_seqs.len(), self.heads, "one source sequence per head");
+        if prompt.is_empty() {
+            return false;
+        }
+        // Duplicate check before any eviction: re-inserting an
+        // already-cached path must only touch its LRU clock, never
+        // evict innocent entries to "make room" for nothing.
+        let (node, matched) = self.walk(prompt, prompt.len());
+        if matched == prompt.len()
+            && self.node(node).depth == prompt.len()
+            && self.node(node).entry.is_some()
+        {
+            let t = self.tick();
+            self.node_mut(node).entry.as_mut().expect("checked").last_used = t;
+            return false;
+        }
+        let nominal = self.nominal(prompt.len());
+        if nominal > self.max_pages {
+            return false;
+        }
+        while self.pages_nominal + nominal > self.max_pages {
+            if !self.evict_lru(cache, None) {
+                return false;
+            }
+        }
+        // Walk/create the node for the full prompt path.
+        let mut cur = self.root;
+        let mut pos = 0usize;
+        while pos < prompt.len() {
+            let tok = prompt[pos];
+            let Some(&child) = self.node(cur).children.get(&tok) else {
+                let depth = prompt.len();
+                let leaf = Node {
+                    edge: prompt[pos..].to_vec(),
+                    children: HashMap::new(),
+                    parent: cur,
+                    depth,
+                    entry: None,
+                };
+                let leaf = self.alloc_node(leaf);
+                self.node_mut(cur).children.insert(tok, leaf);
+                cur = leaf;
+                pos = depth;
+                break;
+            };
+            let rest = &prompt[pos..];
+            let edge_len = self.node(child).edge.len();
+            let cap = rest.len().min(edge_len);
+            let mut common = 0usize;
+            while common < cap && self.node(child).edge[common] == rest[common] {
+                common += 1;
+            }
+            if common == edge_len {
+                pos += common;
+                cur = child;
+                continue;
+            }
+            // Split the child's edge at `common`.
+            let mid_depth = self.node(cur).depth + common;
+            let mid_edge = self.node(child).edge[..common].to_vec();
+            let child_rest = self.node(child).edge[common..].to_vec();
+            let mid = self.alloc_node(Node {
+                edge: mid_edge,
+                children: HashMap::new(),
+                parent: cur,
+                depth: mid_depth,
+                entry: None,
+            });
+            let child_first = child_rest[0];
+            {
+                let c = self.node_mut(child);
+                c.edge = child_rest;
+                c.parent = mid;
+            }
+            self.node_mut(mid).children.insert(child_first, child);
+            self.node_mut(cur).children.insert(tok, mid);
+            cur = mid;
+            pos += common;
+        }
+        debug_assert_eq!(self.node(cur).depth, prompt.len());
+        if self.node(cur).entry.is_some() {
+            let t = self.tick();
+            self.node_mut(cur).entry.as_mut().expect("checked").last_used = t;
+            return false;
+        }
+        let mut seqs = Vec::with_capacity(self.heads);
+        for &src in src_seqs {
+            let forked = cache
+                .fork_prefix(src, prompt.len())
+                .expect("insert source sequence exists");
+            cache.pin_seq(forked).expect("freshly forked sequence");
+            seqs.push(forked);
+        }
+        let id = self.next_entry;
+        self.next_entry += 1;
+        let t = self.tick();
+        self.node_mut(cur).entry = Some(Entry {
+            id,
+            seqs,
+            pages_nominal: nominal,
+            last_used: t,
+            borrowers: 0,
+        });
+        self.entries.insert(id, cur);
+        self.pages_nominal += nominal;
+        self.inserted += 1;
+        true
+    }
+
+    /// Evict the least-recently-used unborrowed entry (skipping
+    /// `exclude`), unpinning and freeing its sequences. Returns false
+    /// when nothing is evictable.
+    pub fn evict_lru(&mut self, cache: &mut PagedKvCache, exclude: Option<EntryId>) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .filter_map(|(&id, &node)| {
+                let e = self.node(node).entry.as_ref().expect("entry node");
+                (e.borrowers == 0 && Some(id) != exclude).then_some((e.last_used, id))
+            })
+            .min()
+            .map(|(_, id)| id);
+        match victim {
+            Some(id) => {
+                self.remove_entry(id, cache);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn remove_entry(&mut self, id: EntryId, cache: &mut PagedKvCache) {
+        let node = self.entries.remove(&id).expect("known entry");
+        let e = self.node_mut(node).entry.take().expect("entry node");
+        for s in e.seqs {
+            cache.unpin_seq(s).expect("entry sequence exists");
+            cache.free(s).expect("entry sequence exists");
+        }
+        self.pages_nominal -= e.pages_nominal;
+        self.evicted += 1;
+        // Prune now-useless nodes upward (entry-less, child-less).
+        let mut cur = node;
+        while cur != self.root {
+            let (prune, parent, first) = {
+                let n = self.node(cur);
+                (
+                    n.entry.is_none() && n.children.is_empty(),
+                    n.parent,
+                    n.edge.first().copied(),
+                )
+            };
+            if !prune {
+                break;
+            }
+            let first = first.expect("non-root node has a non-empty edge");
+            self.node_mut(parent).children.remove(&first);
+            self.nodes[cur] = None;
+            self.free_nodes.push(cur);
+            cur = parent;
+        }
+    }
+
+    /// Drop every entry, freeing all pinned sequences (shutdown /
+    /// tests).
+    pub fn clear(&mut self, cache: &mut PagedKvCache) {
+        let ids: Vec<EntryId> = self.entries.keys().copied().collect();
+        for id in ids {
+            self.remove_entry(id, cache);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv_cache::paged::SlotLayout;
+
+    const HEADS: usize = 2;
+    const PS: usize = 4;
+
+    fn cache() -> PagedKvCache {
+        PagedKvCache::new(1024, PS, SlotLayout::Dense { d: 1, d_v: 1 })
+    }
+
+    /// Append `tokens` into `heads` fresh sequences (payload = token
+    /// value, so reads identify tokens).
+    fn seed(cache: &mut PagedKvCache, tokens: &[i32]) -> Vec<SeqId> {
+        (0..HEADS)
+            .map(|_| {
+                let s = cache.create_seq();
+                for &t in tokens {
+                    cache.append(s, &[t as f32, 0.0]).unwrap();
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn prompt(tokens: &[i32]) -> Vec<i32> {
+        tokens.to_vec()
+    }
+
+    #[test]
+    fn miss_then_insert_then_hit_on_shared_prefix() {
+        let mut c = cache();
+        let mut px = RadixPrefixCache::new(HEADS, PS, 1024);
+        let p1 = prompt(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(px.peek(&p1).is_none());
+        px.note_miss();
+
+        let src = seed(&mut c, &p1);
+        assert!(px.insert(&p1, &mut c, &src));
+        assert_eq!(px.len(), 1);
+        assert_eq!(px.pages_nominal(), HEADS * 2); // ceil(8/4) per head
+
+        // Same system prompt, different user suffix: the match ends
+        // mid-path and the leaf entry serves it at the shared length.
+        let p2 = prompt(&[1, 2, 3, 4, 5, 99, 100]);
+        let hit = px.peek(&p2).expect("shared prefix of 5 tokens");
+        assert_eq!(hit.shared, 5);
+        assert_eq!(hit.seqs.len(), HEADS);
+        // The forked prefix reads exactly the shared tokens.
+        let f = c.fork_prefix(hit.seqs[0], hit.shared).unwrap();
+        for (i, &t) in p2[..5].iter().enumerate() {
+            assert_eq!(c.get(f, i).unwrap()[0], t as f32);
+        }
+        c.free(f).unwrap();
+
+        // Exact repeat is capped at len - 1 (one suffix token always
+        // remains to prefill).
+        let hit = px.peek(&p1).expect("full-path repeat");
+        assert_eq!(hit.shared, p1.len() - 1);
+
+        // Entirely different prompt: miss.
+        assert!(px.peek(&[9, 9, 9]).is_none());
+        let s = px.stats();
+        assert_eq!((s.misses, s.inserted), (1, 1));
+    }
+
+    #[test]
+    fn edge_split_keeps_both_paths_servable() {
+        let mut c = cache();
+        let mut px = RadixPrefixCache::new(HEADS, PS, 1024);
+        let a = prompt(&[1, 2, 3, 4, 5, 6]);
+        let b = prompt(&[1, 2, 3, 9, 9, 9]);
+        let sa = seed(&mut c, &a);
+        let sb = seed(&mut c, &b);
+        assert!(px.insert(&a, &mut c, &sa));
+        assert!(px.insert(&b, &mut c, &sb)); // splits the edge at depth 3
+        assert_eq!(px.len(), 2);
+
+        let ha = px.peek(&[1, 2, 3, 4, 5, 6, 7]).expect("a-path");
+        assert_eq!(ha.shared, 6);
+        let hb = px.peek(&[1, 2, 3, 9, 9, 9, 7]).expect("b-path");
+        assert_eq!(hb.shared, 6);
+        // Divergence right after the split point: either entry serves
+        // the 3-token shared prefix.
+        let hc = px.peek(&[1, 2, 3, 7, 7]).expect("split-point prefix");
+        assert_eq!(hc.shared, 3);
+        let f = c.fork_prefix(hc.seqs[0], 3).unwrap();
+        for i in 0..3 {
+            assert_eq!(c.get(f, i).unwrap()[0], (i as f32) + 1.0);
+        }
+        c.free(f).unwrap();
+    }
+
+    #[test]
+    fn duplicate_insert_is_an_lru_touch_not_a_leak() {
+        let mut c = cache();
+        let mut px = RadixPrefixCache::new(HEADS, PS, 1024);
+        let p = prompt(&[5, 6, 7, 8]);
+        let s1 = seed(&mut c, &p);
+        let s2 = seed(&mut c, &p);
+        assert!(px.insert(&p, &mut c, &s1));
+        let before = c.pages_in_use();
+        assert!(!px.insert(&p, &mut c, &s2), "duplicate path is not re-inserted");
+        assert_eq!(c.pages_in_use(), before, "duplicate insert forks nothing");
+        assert_eq!(px.len(), 1);
+        assert_eq!(px.stats().inserted, 1);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_borrowers() {
+        let mut c = cache();
+        // Budget fits exactly two 8-token entries (2 heads × 2 pages).
+        let mut px = RadixPrefixCache::new(HEADS, PS, 2 * HEADS * 2);
+        let p1 = prompt(&[1; 8]);
+        let p2 = prompt(&[2; 8]);
+        let p3 = prompt(&[3; 8]);
+        let s1 = seed(&mut c, &p1);
+        let s2 = seed(&mut c, &p2);
+        let s3 = seed(&mut c, &p3);
+        assert!(px.insert(&p1, &mut c, &s1));
+        assert!(px.insert(&p2, &mut c, &s2));
+        // Touch p1 so p2 is the LRU victim.
+        let h1 = px.peek(&[1, 1, 1, 1, 1, 1, 1, 1, 7]).unwrap();
+        px.borrow(h1.entry);
+        px.release(h1.entry);
+        assert!(px.insert(&p3, &mut c, &s3));
+        assert_eq!(px.len(), 2);
+        assert_eq!(px.stats().evicted, 1);
+        assert!(px.peek(&[2, 2, 2, 2, 2, 2, 2, 2, 7]).is_none(), "p2 evicted");
+        assert!(px.peek(&[1, 1, 1, 1, 1, 1, 1, 1, 7]).is_some(), "p1 survived");
+
+        // Borrowed entries are never evicted: borrow both residents,
+        // then try to insert a third.
+        let h1 = px.peek(&[1, 1, 1, 1, 1, 1, 1, 1, 7]).unwrap();
+        let h3 = px.peek(&[3, 3, 3, 3, 3, 3, 3, 3, 7]).unwrap();
+        px.borrow(h1.entry);
+        px.borrow(h3.entry);
+        let p4 = prompt(&[4; 8]);
+        let s4 = seed(&mut c, &p4);
+        assert!(!px.insert(&p4, &mut c, &s4), "no unborrowed victim -> insert refused");
+        assert_eq!(px.len(), 2);
+        px.release(h1.entry);
+        px.release(h3.entry);
+        assert!(px.insert(&p4, &mut c, &s4), "room after borrows release");
+    }
+
+    #[test]
+    fn eviction_unpins_and_frees_entry_pages() {
+        let mut c = cache();
+        let mut px = RadixPrefixCache::new(HEADS, PS, 1024);
+        let p = prompt(&[1, 2, 3, 4, 5]);
+        let src = seed(&mut c, &p);
+        assert!(px.insert(&p, &mut c, &src));
+        // Drop the source lanes (what retire does after inserting).
+        for &s in &src {
+            c.free(s).unwrap();
+        }
+        let held = c.pages_in_use();
+        assert!(held > 0, "entry keeps the prefix pages alive");
+        px.clear(&mut c);
+        assert_eq!(c.pages_in_use(), 0, "evicted entry returns its pages");
+        assert!(px.is_empty());
+        assert_eq!(px.pages_nominal(), 0);
+    }
+
+    #[test]
+    fn oversized_entry_is_refused_outright() {
+        let mut c = cache();
+        let mut px = RadixPrefixCache::new(HEADS, PS, 1); // 1-page budget
+        let p = prompt(&[1; 16]);
+        let src = seed(&mut c, &p);
+        assert!(!px.insert(&p, &mut c, &src));
+        assert!(px.is_empty());
+    }
+
+    #[test]
+    fn ancestor_entry_serves_deeper_probes() {
+        let mut c = cache();
+        let mut px = RadixPrefixCache::new(HEADS, PS, 1024);
+        let short = prompt(&[1, 2, 3]);
+        let s = seed(&mut c, &short);
+        assert!(px.insert(&short, &mut c, &s));
+        // Probe continues past the cached path with unseen tokens: the
+        // walk ends at the leaf (full edge match), whose own entry
+        // serves depth 3.
+        let hit = px.peek(&[1, 2, 3, 4, 5, 6]).expect("ancestor path");
+        assert_eq!(hit.shared, 3);
+    }
+}

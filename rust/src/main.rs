@@ -24,7 +24,10 @@ use sfa::bench::serve_bench::{self, ServeBenchConfig};
 use sfa::coordinator::router::{Router, RouterConfig};
 use sfa::coordinator::ServeMetrics;
 use sfa::runtime::{HostTensor, Runtime};
-use sfa::serve::{ContinuousBatcher, PagedKvPolicy, ServeConfig, WaveScheduler};
+use sfa::bench::serve_bench::PrefixBenchConfig;
+use sfa::serve::{
+    ContinuousBatcher, PagedKvPolicy, PrefixCacheConfig, ServeConfig, WaveScheduler,
+};
 use sfa::train::corpus::CorpusKind;
 use sfa::train::experiments;
 use sfa::train::trainer::Trainer;
@@ -39,9 +42,11 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
   sfa serve   --requests 16 --scheduler continuous|wave --engines \"SPEC;SPEC\"
               --prompt-min 16 --prompt-max 256 --max-new-min 8 --max-new-max 32
               --lanes 8 --page-size 16 --max-pages 4096 [--policy KVPOLICY]
+              [--prefix-cache [--prefix-pages 1024]]
               (synthetic load, request-lifecycle API over AttentionSession —
               no artifacts needed; --policy enables KV eviction with
-              policy-budget admission)
+              policy-budget admission, --prefix-cache enables radix
+              prompt-prefix sharing across requests)
   sfa serve   --legacy [--artifacts DIR] --variant sfa_k8 --requests 16 --workers 2
               --batch 4 --max-new 16 --queue-capacity 1024   (deprecated wave router)
   sfa exp     table1|table2|table3|fig8|table12 [--steps N] [--artifacts DIR]
@@ -53,6 +58,10 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
               [--policies \"none;h2o;snapkv;quest\"] [--lanes 32]
               [--serve-json PATH]   (wave vs continuous KV-policy sweep,
               writes BENCH_serve.json)
+  sfa bench   serve --prefix-cache [--system-prompt N] [--prefix-pages 1024]
+              (cold vs radix prefix cache on a repeated-system-prompt
+              workload: hit rate, TTFT gain, bit-identical streams —
+              recorded in BENCH_serve.json)
   sfa analyze entropy|svd|memory|session [--variant V] [--steps N] [--engine SPEC]
 engine SPECs: dense | flash_dense:bq=64,bk=64 | sfa:k=8,bq=64,bk=64 | sfa_ref:k=8
               | window:w=256,scorer=sfa_k8 | lowrank:r=16 | mla:r=16
@@ -135,6 +144,17 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         Some(s) => PagedKvPolicy::parse(s).map_err(|e| anyhow::anyhow!("--policy: {e}"))?,
         None => None,
     };
+    let prefix_cache = if args.has("prefix-cache") {
+        Some(PrefixCacheConfig { max_pages: args.usize_or("prefix-pages", 1024)? })
+    } else {
+        None
+    };
+    if kv_policy.is_some() && prefix_cache.is_some() {
+        bail!(
+            "--prefix-cache and --policy are mutually exclusive (a policy-pruned lane \
+             holds policy-dependent KV that a shared prefix must not serve)"
+        );
+    }
     let cfg = ServeConfig {
         heads: args.usize_or("heads", 4)?,
         d: args.usize_or("d", 32)?,
@@ -146,7 +166,13 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         max_seq: args.usize_or("max-seq", 4096)?,
         model_seed: args.u64_or("model-seed", 0x5FA)?,
         kv_policy,
+        prefix_cache,
     };
+    if let Some(px) = &cfg.prefix_cache {
+        if px.max_pages < 1 {
+            bail!("--prefix-pages must be >= 1");
+        }
+    }
     if cfg.heads < 1 || cfg.d < 1 || cfg.vocab < 2 {
         bail!("--heads/--d must be >= 1 and --vocab >= 2");
     }
@@ -178,6 +204,7 @@ fn serve_workload_cfg(
         // `bench serve` replaces this with the --policies sweep; plain
         // `sfa serve` drives one scheduler straight from `serve`.
         policies: vec![serve.kv_policy],
+        prefix: None,
         serve,
         seed: args.u64_or("seed", 42)?,
     };
@@ -246,11 +273,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let mut cfg = serve_workload_cfg(args, 16, (16, 256), (8, 32))?;
     let which = args.str_or("scheduler", "continuous");
-    if which == "wave" && cfg.serve.kv_policy.is_some() {
-        // The wave baseline ignores eviction policies (worst-case
-        // semantics); strip it and re-validate so submission can't
-        // reject what the policy-aware pre-check admitted.
+    if which == "wave" && (cfg.serve.kv_policy.is_some() || cfg.serve.prefix_cache.is_some()) {
+        // The wave baseline ignores eviction policies and prefix
+        // caching (worst-case, cold-prefill semantics); strip them and
+        // re-validate so submission can't reject what the policy-aware
+        // pre-check admitted.
         cfg.serve.kv_policy = None;
+        cfg.serve.prefix_cache = None;
         check_workload_fits(&cfg, None)?;
     }
     let reqs = serve_bench::workload(&cfg);
@@ -279,6 +308,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.mean_live,
         stats.peak_live,
     );
+    if cfg.serve.prefix_cache.is_some() {
+        let px = &stats.prefix;
+        println!(
+            "prefix-cache: hits={} misses={} inserted={} evicted={} pages_nominal={}",
+            px.hits, px.misses, px.inserted, px.evicted, px.pages_nominal
+        );
+    }
     println!(
         "tokens={} wall={:.2}s thpt={:.1} tok/s | TTFT p50={:.1}ms p95={:.1}ms p99={:.1}ms | \
          tok p50={:.1}ms p95={:.1}ms p99={:.1}ms",
@@ -435,6 +471,42 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 // Sweep default: enough lanes that the page budget,
                 // not the lane cap, is what policy admission relaxes.
                 cfg.serve.max_lanes = 32;
+            }
+            if args.has("prefix-cache") {
+                // Prefix-cache comparison: cold vs radix prefix cache
+                // on a repeated-system-prompt workload (the serving
+                // shape the paper's KV-halving claim cares about).
+                if cfg.serve.kv_policy.is_some() {
+                    bail!("--prefix-cache and --policy are mutually exclusive");
+                }
+                let system_prompt =
+                    args.usize_or("system-prompt", (cfg.prompt_max / 2).max(1))?;
+                if system_prompt + 2 > cfg.prompt_max {
+                    bail!(
+                        "--system-prompt {} leaves no suffix room under --prompt-max {}",
+                        system_prompt,
+                        cfg.prompt_max
+                    );
+                }
+                cfg.serve.kv_policy = None;
+                cfg.serve.prefix_cache = None; // bench_serve_prefix sets its own
+                cfg.prefix = Some(PrefixBenchConfig {
+                    system_prompt,
+                    cache_pages: args.usize_or("prefix-pages", 1024)?,
+                });
+                let (table, cmp) = serve_bench::bench_serve_prefix(&cfg);
+                table.print();
+                let runs = vec![cmp.cold.clone(), cmp.warm.clone()];
+                let path = args.str_or("serve-json", "BENCH_serve.json");
+                std::fs::write(
+                    &path,
+                    serve_bench::to_json_with_prefix(&cfg, &runs, Some(&cmp)),
+                )?;
+                println!("\n[bench] wrote prefix-cache comparison to {path}");
+                if !cmp.streams_identical {
+                    bail!("prefix cache changed greedy token streams — correctness bug");
+                }
+                return Ok(());
             }
             // `--policies` wins; a lone `--policy X` narrows the sweep
             // to that policy (instead of being silently ignored);

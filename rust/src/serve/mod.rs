@@ -28,7 +28,15 @@
 //!   concurrency at a fixed page budget;
 //! * [`ToyLm`] — the deterministic, artifact-free model the schedulers
 //!   drive (bit-for-bit independent of batch composition, which is
-//!   what makes the greedy solo-vs-batched equivalence testable).
+//!   what makes the greedy solo-vs-batched equivalence testable);
+//! * [`PrefixCacheConfig`] — optional radix prompt-prefix sharing
+//!   across requests: finished prompts are recorded in a
+//!   [`RadixPrefixCache`](crate::kv_cache::radix::RadixPrefixCache)
+//!   (pinned forked pages — no copies), admissions fork the longest
+//!   cached prefix and prefill only the suffix, and the admission
+//!   accounting charges only that un-shared suffix
+//!   ([`pages_reserved_shared`]). Greedy streams are bit-for-bit
+//!   identical with the cache on or off.
 //!
 //! See ARCHITECTURE.md §"Serving lifecycle" for the state machine and
 //! the admission rules, and `sfa bench serve` for the continuous-vs-
@@ -40,13 +48,15 @@ pub mod scheduler;
 pub mod wave;
 
 pub use crate::attention::decode::PagedKvPolicy;
+pub use crate::kv_cache::radix::PrefixCacheStats;
 pub use model::ToyLm;
 pub use request::{
     FinishReason, FinishedRequest, RequestId, RequestState, ServeError, ServeEvent,
     ServeRequest, ServeSampling,
 };
 pub use scheduler::{
-    pages_needed, pages_reserved, ContinuousBatcher, Scheduler, ServeConfig, StepReport,
+    pages_needed, pages_reserved, pages_reserved_shared, ContinuousBatcher, PrefixCacheConfig,
+    Scheduler, ServeConfig, StepReport,
 };
 pub use wave::WaveScheduler;
 
@@ -67,6 +77,7 @@ mod tests {
             max_seq: 256,
             model_seed: 7,
             kv_policy: None,
+            prefix_cache: None,
         }
     }
 
@@ -431,6 +442,7 @@ mod tests {
             max_seq: 128,
             model_seed: 7,
             kv_policy: None,
+            prefix_cache: None,
         };
         let run = |pol: Option<PagedKvPolicy>| -> (f64, usize, usize, usize) {
             let mut s = ContinuousBatcher::new(ServeConfig { kv_policy: pol, ..base });
@@ -474,6 +486,128 @@ mod tests {
             );
             assert!(pruned_pol > 0, "{pol:?}: long prompts must be pruned");
         }
+    }
+
+    /// The tentpole correctness pin: with the radix prefix cache ON,
+    /// greedy token streams are **bit-for-bit identical** to the
+    /// cache-OFF run — for the inserting request (miss) and for every
+    /// later request served from a cached prefix (hit) — while the
+    /// hits actually happen and are visible per request.
+    #[test]
+    fn prefix_cache_on_and_off_greedy_streams_are_bit_identical() {
+        for spec in ["dense", "sfa:k=4,bq=8,bk=8"] {
+            let sys = prompt(77, 24, 32);
+            let mk = |i: usize| {
+                let mut p = sys.clone();
+                p.push(20 + i as i32); // distinct first suffix token
+                p.extend(prompt(100 + i as u64, 5, 32));
+                p
+            };
+            let run = |prefix: Option<PrefixCacheConfig>| {
+                let cfg = ServeConfig { prefix_cache: prefix, ..tiny_cfg() };
+                let mut s = ContinuousBatcher::new(cfg);
+                // Stagger so the first prompt's path is cached before
+                // the rest arrive (insertion happens at retirement).
+                s.submit(ServeRequest::new(mk(0)).max_new(6).engine(spec)).unwrap();
+                let mut fin = s.run_to_completion();
+                for i in 1..4 {
+                    s.submit(ServeRequest::new(mk(i)).max_new(6).engine(spec)).unwrap();
+                }
+                fin.extend(s.run_to_completion());
+                fin.sort_by_key(|f| f.id);
+                (fin, s.prefix_stats())
+            };
+            let (cold, cold_stats) = run(None);
+            let (warm, warm_stats) = run(Some(PrefixCacheConfig::default()));
+            assert_eq!(cold_stats, PrefixCacheStats::default(), "{spec}: no cache, no stats");
+            assert_eq!(warm.len(), 4);
+            assert!(warm_stats.hits >= 3, "{spec}: later requests hit ({warm_stats:?})");
+            assert!(warm_stats.inserted >= 1, "{spec}: first prompt path inserted");
+            for (c, w) in cold.iter().zip(&warm) {
+                assert!(matches!(w.state, RequestState::Finished { .. }), "{spec}");
+                assert_eq!(
+                    c.tokens, w.tokens,
+                    "{spec}: prefix cache must not change greedy tokens"
+                );
+                assert_eq!(c.prefix_shared, 0, "{spec}: cache off shares nothing");
+            }
+            // Every staggered request shares the 24-token system
+            // prefix (the first one missed).
+            assert_eq!(warm[0].prefix_shared, 0);
+            for w in &warm[1..] {
+                assert_eq!(w.prefix_shared, 24, "{spec}: hit covers the system prompt");
+            }
+        }
+    }
+
+    /// Suffix-only admission accounting: at a page budget where two
+    /// worst-case reservations cannot coexist, two prefix-cache hits
+    /// (each charged only its un-shared suffix) are admitted in one
+    /// pass — the concurrency the prefix cache buys.
+    #[test]
+    fn prefix_hits_reserve_only_the_unshared_suffix() {
+        // heads=2, page_size=4. Prompt = 16 shared + 3 suffix = 19
+        // tokens, max_new=5 -> full footprint 2*ceil(24/4) = 12 pages;
+        // a hit reserves 12 - 2*(16/4) = 4. Entry nominal =
+        // 2*ceil(19/4) = 10. Budget 20: cold fits one (12+12 > 20),
+        // warm fits both hits (10+4+4 = 18 <= 20).
+        let base = ServeConfig { max_pages: 20, ..tiny_cfg() };
+        let sys = prompt(3, 16, 32);
+        let mk = |i: usize| {
+            let mut p = sys.clone();
+            p.push(20 + i as i32);
+            p.extend(prompt(50 + i as u64, 2, 32));
+            p
+        };
+        let admitted_together = |prefix: Option<PrefixCacheConfig>| -> (usize, usize) {
+            let cfg = ServeConfig { prefix_cache: prefix, ..base };
+            let mut s = ContinuousBatcher::new(cfg);
+            s.submit(ServeRequest::new(mk(0)).max_new(5).engine("dense")).unwrap();
+            s.run_to_completion();
+            s.submit(ServeRequest::new(mk(1)).max_new(5).engine("dense")).unwrap();
+            s.submit(ServeRequest::new(mk(2)).max_new(5).engine("dense")).unwrap();
+            let r = s.step();
+            let out = (r.admitted, r.prefix_hits);
+            s.run_to_completion();
+            out
+        };
+        let (cold_admitted, cold_hits) = admitted_together(None);
+        assert_eq!((cold_admitted, cold_hits), (1, 0), "worst-case fits one lane");
+        let (warm_admitted, warm_hits) =
+            admitted_together(Some(PrefixCacheConfig { max_pages: 10 }));
+        assert_eq!(warm_admitted, 2, "suffix-only reservations fit both");
+        assert_eq!(warm_hits, 2);
+    }
+
+    /// LRU pressure: a prefix cache whose budget cannot hold every
+    /// prompt path keeps serving (evicting old entries) and never
+    /// wedges admission.
+    #[test]
+    fn prefix_cache_evicts_under_pressure_and_serving_continues() {
+        // Each 8-token prompt path costs 2*ceil(8/4) = 4 nominal
+        // pages; budget 8 holds two entries.
+        let cfg = ServeConfig {
+            prefix_cache: Some(PrefixCacheConfig { max_pages: 8 }),
+            ..tiny_cfg()
+        };
+        let mut s = ContinuousBatcher::new(cfg);
+        for i in 0..6u64 {
+            s.submit(
+                ServeRequest::new(prompt(i, 8, 32)).max_new(3).engine("dense"),
+            )
+            .unwrap();
+            let fin = s.run_to_completion();
+            assert!(fin
+                .iter()
+                .all(|f| matches!(f.state, RequestState::Finished { .. })));
+        }
+        let st = s.prefix_stats();
+        assert!(st.inserted >= 3, "{st:?}");
+        assert!(st.evicted >= 1, "budget pressure evicts LRU entries: {st:?}");
+        assert!(st.pages_nominal <= 8, "{st:?}");
+        // Idle scheduler: the only pages still resident back cached
+        // entries, and nominal accounting over-counts them (safe side).
+        assert!(s.pages_in_use() <= st.pages_nominal, "{st:?}");
     }
 
     /// Temperature sampling draws from a per-request stream, so it is

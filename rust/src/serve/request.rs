@@ -205,6 +205,10 @@ pub struct FinishedRequest {
     pub ttft_s: f64,
     /// Submission-to-terminal latency, s.
     pub total_s: f64,
+    /// Prompt tokens served from the radix prefix cache (0 on a miss
+    /// or when `ServeConfig::prefix_cache` is off) — the per-request
+    /// hit observability `bench serve --prefix-cache` aggregates.
+    pub prefix_shared: usize,
 }
 
 #[cfg(test)]

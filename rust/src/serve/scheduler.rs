@@ -35,12 +35,30 @@ use crate::attention::registry::parse_spec;
 use crate::attention::session::{AttentionSession, LaneId, SessionConfig};
 use crate::attention::HeadTensor;
 use crate::coordinator::metrics::ServeMetrics;
+use crate::kv_cache::radix::{EntryId, PrefixCacheStats, PrefixHit, RadixPrefixCache};
 use crate::serve::model::{sample, ToyLm};
 use crate::serve::request::{
     FinishReason, FinishedRequest, RequestId, RequestState, ServeError, ServeEvent,
     ServeRequest,
 };
 use crate::util::rng::Rng;
+
+/// Radix prompt-prefix cache knobs (`ServeConfig::prefix_cache`).
+/// Composes with the batcher's admission accounting: cached entries are
+/// charged a nominal `heads × ⌈len / page_size⌉` pages against the same
+/// `max_pages` budget the lane reservations draw from, and admissions
+/// under pressure evict least-recently-used entries first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixCacheConfig {
+    /// Nominal page budget the cache may hold per engine group.
+    pub max_pages: usize,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> PrefixCacheConfig {
+        PrefixCacheConfig { max_pages: 1024 }
+    }
+}
 
 /// Geometry and policy knobs shared by every serve scheduler.
 #[derive(Debug, Clone, Copy)]
@@ -71,6 +89,16 @@ pub struct ServeConfig {
     /// page budget. The wave baseline ignores this (it *is* the
     /// worst-case comparison point).
     pub kv_policy: Option<PagedKvPolicy>,
+    /// Radix prompt-prefix cache. `Some` makes the
+    /// [`ContinuousBatcher`] record each finished request's prompt
+    /// path (pinned forked pages, never copies) and seed later
+    /// admissions from the longest cached prefix, prefilling only the
+    /// un-shared suffix — repeated-system-prompt workloads stop paying
+    /// per-request prefill. Mutually exclusive with `kv_policy`
+    /// (pruned lanes hold policy-dependent KV, which a shared prefix
+    /// must not). The wave baseline ignores this (it is the cold
+    /// comparison point).
+    pub prefix_cache: Option<PrefixCacheConfig>,
 }
 
 impl Default for ServeConfig {
@@ -86,6 +114,7 @@ impl Default for ServeConfig {
             max_seq: 4096,
             model_seed: 0x5FA,
             kv_policy: None,
+            prefix_cache: None,
         }
     }
 }
@@ -100,6 +129,14 @@ impl ServeConfig {
         assert!(self.max_lanes >= 1, "max_lanes must be >= 1 (a 0-lane scheduler never admits)");
         assert!(self.queue_capacity >= 1, "queue_capacity must be >= 1");
         assert!(self.max_seq >= 2, "max_seq must fit a prompt token plus a generated token");
+        assert!(
+            self.kv_policy.is_none() || self.prefix_cache.is_none(),
+            "prefix_cache and kv_policy are mutually exclusive: a policy-pruned lane holds \
+             policy-dependent KV that a shared prefix must not serve"
+        );
+        if let Some(px) = &self.prefix_cache {
+            assert!(px.max_pages >= 1, "prefix_cache.max_pages must be >= 1");
+        }
     }
 }
 
@@ -130,6 +167,25 @@ pub fn pages_reserved(prompt_len: usize, steps: usize, cfg: &ServeConfig) -> usi
     }
 }
 
+/// Pages a request reserves when the first `shared` prompt tokens come
+/// from a cached prefix: the whole pages covering the shared prefix
+/// (`⌊shared / page_size⌋` per head) belong to the prefix-cache entry
+/// (charged against its own nominal budget), so the lane is charged
+/// only its un-shared suffix — a partially-shared last page counts to
+/// the lane, because the first suffix append copy-on-writes it into a
+/// lane-owned page. With `shared == 0` this is exactly
+/// [`pages_reserved`] in worst-case mode.
+pub fn pages_reserved_shared(
+    prompt_len: usize,
+    steps: usize,
+    shared: usize,
+    cfg: &ServeConfig,
+) -> usize {
+    debug_assert!(shared <= prompt_len);
+    let total = pages_needed(prompt_len, steps, cfg.heads, cfg.page_size);
+    total - cfg.heads * (shared / cfg.page_size)
+}
+
 /// What one [`Scheduler::step`] did (the serving loop's observability
 /// surface; `bench serve` integrates these into page-occupancy curves).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -145,6 +201,9 @@ pub struct StepReport {
     /// KV pages returned to the budget this step by policy eviction
     /// (live lanes pruning themselves under their policy budget).
     pub pages_pruned: usize,
+    /// Admissions this step that forked a cached prompt prefix
+    /// (prefix-cache hits; zero unless `ServeConfig::prefix_cache`).
+    pub prefix_hits: usize,
     /// KV pages in use across all groups after the step.
     pub pages_in_use: usize,
     /// Live sequences after the step.
@@ -175,6 +234,12 @@ pub trait Scheduler {
 
     /// KV pages in use across all engine groups.
     fn pages_in_use(&self) -> usize;
+
+    /// Prompt-prefix cache counters summed across engine groups
+    /// (all-zero for schedulers without a prefix cache).
+    fn prefix_stats(&self) -> PrefixCacheStats {
+        PrefixCacheStats::default()
+    }
 
     /// Step until idle, then drain the terminal summaries.
     fn run_to_completion(&mut self) -> Vec<FinishedRequest> {
@@ -244,8 +309,13 @@ pub(crate) struct ActiveSeq {
     pub generated: Vec<i32>,
     /// Generation cap: `min(max_new, max_seq - prompt_len)`.
     pub budget: usize,
-    /// Pages reserved for this sequence at admission.
+    /// Pages reserved for this sequence at admission (the un-shared
+    /// suffix only, when `prefix` is a hit).
     pub reserved_pages: usize,
+    /// Prefix-cache hit backing this lane: the borrowed entry and the
+    /// shared prompt-token count. The borrow is released exactly once,
+    /// at retirement or failure.
+    pub prefix: Option<(EntryId, usize)>,
     /// Per-request sampler stream (independent of batch composition).
     pub rng: Rng,
     pub submitted: Instant,
@@ -263,6 +333,33 @@ pub(crate) struct EngineGroup {
     pub active: Vec<ActiveSeq>,
     /// Worst-case pages promised to live sequences.
     pub reserved_pages: usize,
+    /// Radix prompt-prefix cache over this group's paged cache
+    /// (`ServeConfig::prefix_cache`; continuous batcher only).
+    pub prefix: Option<RadixPrefixCache>,
+}
+
+impl EngineGroup {
+    /// Return one sequence's reservation to the pool — exactly once.
+    /// Checked subtraction: an underflow means a reservation was
+    /// returned twice (the accounting bug this guards against), which
+    /// must fail loudly rather than silently hand out phantom pages.
+    pub fn return_reservation(&mut self, seq: &ActiveSeq) {
+        self.reserved_pages = self
+            .reserved_pages
+            .checked_sub(seq.reserved_pages)
+            .unwrap_or_else(|| {
+                panic!(
+                    "page-reservation underflow: returning {} pages with only {} reserved \
+                     (request {} returned its reservation twice)",
+                    seq.reserved_pages, self.reserved_pages, seq.id
+                )
+            });
+        // Release the prefix-cache borrow alongside the reservation —
+        // the entry becomes LRU-evictable again.
+        if let (Some(px), Some((entry, _))) = (self.prefix.as_mut(), seq.prefix) {
+            px.release(entry);
+        }
+    }
 }
 
 /// Find or create the group for `spec_raw` in `groups`; returns its
@@ -279,13 +376,33 @@ pub(crate) fn group_index(
     let scfg =
         SessionConfig::new(0, cfg.heads, cfg.d, cfg.d).with_paging(cfg.page_size, cfg.max_pages);
     let session = AttentionSession::from_spec(&canon, scfg)?;
-    groups.push(EngineGroup { spec: canon, session, active: Vec::new(), reserved_pages: 0 });
+    let prefix = cfg.prefix_cache.map(|px| {
+        RadixPrefixCache::new(cfg.heads, cfg.page_size, px.max_pages.min(cfg.max_pages))
+    });
+    groups.push(EngineGroup {
+        spec: canon,
+        session,
+        active: Vec::new(),
+        reserved_pages: 0,
+        prefix,
+    });
     Ok(groups.len() - 1)
 }
 
 /// Prefill one admitted request into `group` at its own boundary and
-/// sample its first token. On failure the lane is gone (prefill_lane
-/// auto-releases) and the request is handed back with the error.
+/// sample its first token. On failure the lane is gone (`prefill_lane`
+/// / `extend_lane` auto-release) and the request is handed back with
+/// the error.
+///
+/// With `prefix: Some(hit)` the lane is seeded by forking the cached
+/// prefix at `hit.shared` tokens, and only the prompt *suffix* is
+/// stored and engine-prefilled. The first token is always sampled from
+/// [`AttentionSession::lane_last_output`] — the cache-scored output of
+/// the final prompt position — which reads only cache bytes; since a
+/// hit lane's cache bytes equal a cold prefill's exactly, greedy
+/// streams are **bit-for-bit identical** with the prefix cache on,
+/// off, hit, or missed. (The caller's borrow bookkeeping happens after
+/// this returns; a failed start leaves nothing to unwind here.)
 pub(crate) fn start_seq(
     model: &ToyLm,
     group: &mut EngineGroup,
@@ -294,6 +411,7 @@ pub(crate) fn start_seq(
     submitted: Instant,
     cfg: &ServeConfig,
     reserved_pages: usize,
+    prefix: Option<&PrefixHit>,
 ) -> Result<ActiveSeq, (ServeRequest, ServeError)> {
     let plen = req.prompt.len();
     let budget = req.max_new.min(cfg.max_seq - plen);
@@ -302,15 +420,52 @@ pub(crate) fn start_seq(
     // policy; prefill_lane prunes a long prompt back under the budget
     // before this call returns, so the reservation accounting below
     // only ever has to cover the pruned steady state.
-    let lane = match &cfg.kv_policy {
-        Some(p) => group.session.admit_lane_with_policy(p),
-        None => group.session.admit_lane(),
+    let lane = match prefix {
+        Some(hit) => {
+            debug_assert!(cfg.kv_policy.is_none(), "prefix cache runs policy-free");
+            let lane = match group.session.admit_lane_from_fork(&hit.seqs, hit.shared) {
+                Ok(l) => l,
+                Err(e) => return Err((req, e.into())),
+            };
+            // Store only the suffix KV (bit-identical payloads to a
+            // cold prefill of the same tokens) ...
+            let ks = k.slice_rows(hit.shared, plen);
+            let vs = v.slice_rows(hit.shared, plen);
+            if let Err(e) = group.session.extend_lane(lane, &ks, &vs) {
+                return Err((req, e.into()));
+            }
+            // ... and pay the chunked-prefill compute: every suffix
+            // query attends the cached prefix plus its causal suffix
+            // predecessors — O(suffix × total), the KV-append kernel
+            // shape (outputs discarded; the first token is sampled
+            // below through the exact same scoring path).
+            let qs = q.slice_rows(hit.shared, plen);
+            let _ = group.session.chunked_prefill_outputs(lane, &qs, hit.shared);
+            lane
+        }
+        None => {
+            let lane = match &cfg.kv_policy {
+                Some(p) => group.session.admit_lane_with_policy(p),
+                None => group.session.admit_lane(),
+            };
+            if let Err(e) = group.session.prefill_lane(lane, &q, &k, &v, true) {
+                return Err((req, e.into()));
+            }
+            lane
+        }
     };
-    let out = match group.session.prefill_lane(lane, &q, &k, &v, true) {
-        Ok(o) => o,
-        Err(e) => return Err((req, e.into())),
-    };
-    let logits = model.logits_at(&out, 0, plen - 1);
+    // First token: the cache-scored output at the last prompt position
+    // — one computation for every lane kind, which is what makes the
+    // greedy-stream pins structural rather than numerical: a prefix
+    // hit's cache bytes equal a cold prefill's (on/off/hit/miss
+    // bitwise-identical streams), and a no-op-budget policy lane's
+    // cache equals a plain lane's (the PR-4 no-op guarantee). For a
+    // *pruning* policy lane this is a deliberate semantic change from
+    // PR 4: the first token now reads the policy-pruned cache, so
+    // eviction error applies uniformly from the first sampled token
+    // instead of starting at the second.
+    let out = group.session.lane_last_output(lane, &q.slice_rows(plen - 1, plen));
+    let logits = model.logits_at(&out, 0, 0);
     let mut rng = Rng::new(cfg.model_seed ^ req.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
     let tok = sample(&logits, req.sampling, &mut rng);
     let now = Instant::now();
@@ -323,6 +478,7 @@ pub(crate) fn start_seq(
         generated: vec![tok],
         budget,
         reserved_pages,
+        prefix: prefix.map(|h| (h.entry, h.shared)),
         rng,
         submitted,
         last_token_at: now,
@@ -362,6 +518,7 @@ pub(crate) fn finished_record(
         state,
         ttft_s: seq.ttft_s,
         total_s: seq.submitted.elapsed().as_secs_f64(),
+        prefix_shared: seq.prefix.map(|(_, shared)| shared).unwrap_or(0),
     }
 }
 
@@ -441,6 +598,7 @@ impl SchedulerCore {
             state: RequestState::Failed { error: e },
             ttft_s: 0.0,
             total_s: 0.0,
+            prefix_shared: 0,
         });
         self.metrics.record_failed();
     }
@@ -475,7 +633,11 @@ impl ContinuousBatcher {
 
     /// Admission pass: fill free lanes from the queue under the page
     /// budget. FIFO with head-of-line blocking on a not-yet-fitting
-    /// request.
+    /// request. With a prefix cache, the longest cached prompt prefix
+    /// is looked up first: a hit reserves only the un-shared suffix
+    /// ([`pages_reserved_shared`]), and admission pressure evicts LRU
+    /// prefix entries (never the entry about to be used) before giving
+    /// up and waiting.
     fn admit(&mut self, report: &mut StepReport) {
         while let Some(front) = self.core.queue.front() {
             if self.live() >= self.core.cfg.max_lanes {
@@ -495,8 +657,33 @@ impl ContinuousBatcher {
             };
             let plen = front.req.prompt.len();
             let budget_tokens = front.req.max_new.min(self.core.cfg.max_seq - plen);
-            let needed = pages_reserved(plen, budget_tokens, &self.core.cfg);
-            if self.core.groups[gi].reserved_pages + needed > self.core.cfg.max_pages {
+            let hit = self.core.groups[gi]
+                .prefix
+                .as_ref()
+                .and_then(|px| px.peek(&front.req.prompt));
+            let needed = match &hit {
+                Some(h) => pages_reserved_shared(plen, budget_tokens, h.shared, &self.core.cfg),
+                None => pages_reserved(plen, budget_tokens, &self.core.cfg),
+            };
+            // Fit check, counting the prefix cache's nominal footprint
+            // against the same budget; evict LRU entries under
+            // pressure (never the entry about to be used).
+            let fits = loop {
+                let g = &mut self.core.groups[gi];
+                let nominal = g.prefix.as_ref().map(|p| p.pages_nominal()).unwrap_or(0);
+                if g.reserved_pages + nominal + needed <= self.core.cfg.max_pages {
+                    break true;
+                }
+                let exclude = hit.as_ref().map(|h| h.entry);
+                let evicted = match g.prefix.as_mut() {
+                    Some(px) => px.evict_lru(g.session.cache_mut(), exclude),
+                    None => false,
+                };
+                if !evicted {
+                    break false;
+                }
+            };
+            if !fits {
                 break; // wait for pages to drain
             }
             if self.core.cfg.kv_policy.is_some() {
@@ -523,6 +710,7 @@ impl ContinuousBatcher {
                 submitted,
                 &self.core.cfg,
                 needed,
+                hit.as_ref(),
             ) {
                 Ok(seq) => seq,
                 Err((req, e)) => {
@@ -531,6 +719,19 @@ impl ContinuousBatcher {
                     continue;
                 }
             };
+            // Prefix bookkeeping only once the lane actually started:
+            // a hit pins its entry against LRU eviction for the lane's
+            // lifetime (the shared pages back this lane's suffix-only
+            // reservation).
+            if let Some(px) = self.core.groups[gi].prefix.as_mut() {
+                match &hit {
+                    Some(h) => {
+                        px.borrow(h.entry);
+                        report.prefix_hits += 1;
+                    }
+                    None => px.note_miss(),
+                }
+            }
             report.admitted += 1;
             report.decoded_tokens += 1; // the TTFT token
             set_state(&mut self.core.states, &seq.req, id, RequestState::Decoding);
@@ -545,11 +746,18 @@ impl ContinuousBatcher {
 
     /// Release a finished sequence's lane and record its summary — on
     /// the same step it finished (the scheduler-invariant the tests
-    /// pin).
+    /// pin). With a prefix cache, the request's prompt path is
+    /// inserted first (forking the lane's prefix shares pages — no
+    /// copy), then the lane's own pages are freed and its reservation
+    /// (and prefix borrow) returned exactly once.
     fn retire(&mut self, gi: usize, seq: ActiveSeq, reason: FinishReason, report: &mut StepReport) {
         let group = &mut self.core.groups[gi];
+        if let Some(px) = group.prefix.as_mut() {
+            let seqs = group.session.lane_seqs(seq.lane).to_vec();
+            px.insert(&seq.req.prompt, group.session.cache_mut(), &seqs);
+        }
         let freed = group.session.release_lane(seq.lane).unwrap_or(0);
-        group.reserved_pages -= seq.reserved_pages;
+        group.return_reservation(&seq);
         report.pages_freed += freed;
         report.finished += 1;
         let state = RequestState::Finished { reason };
@@ -588,10 +796,13 @@ impl ContinuousBatcher {
                 Err(e) => {
                     // Unreachable under reservation accounting; fail
                     // the whole group defensively rather than panic.
+                    // Each sequence returns its reservation (and any
+                    // prefix borrow) exactly once — checked
+                    // subtraction in `return_reservation`.
                     let seqs = std::mem::take(&mut self.core.groups[gi].active);
                     for seq in seqs {
                         let _ = self.core.groups[gi].session.release_lane(seq.lane);
-                        self.core.groups[gi].reserved_pages -= seq.reserved_pages;
+                        self.core.groups[gi].return_reservation(&seq);
                         self.core.fail_request(seq.id, &seq.req, ServeError::from(e));
                         report.failed += 1;
                     }
@@ -666,5 +877,118 @@ impl Scheduler for ContinuousBatcher {
 
     fn pages_in_use(&self) -> usize {
         self.core.pages_in_use()
+    }
+
+    fn prefix_stats(&self) -> PrefixCacheStats {
+        let mut total = PrefixCacheStats::default();
+        for g in &self.core.groups {
+            if let Some(px) = &g.prefix {
+                let s = px.stats();
+                total.hits += s.hits;
+                total.misses += s.misses;
+                total.inserted += s.inserted;
+                total.evicted += s.evicted;
+                total.pages_nominal += s.pages_nominal;
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::session::SessionConfig;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            heads: 2,
+            d: 8,
+            vocab: 32,
+            page_size: 4,
+            max_pages: 512,
+            max_lanes: 4,
+            queue_capacity: 64,
+            max_seq: 256,
+            model_seed: 7,
+            kv_policy: None,
+            prefix_cache: None,
+        }
+    }
+
+    #[test]
+    fn reservation_formulas() {
+        let c = cfg();
+        // 19 prompt + 5 new across 2 heads at page_size 4.
+        assert_eq!(pages_reserved(19, 5, &c), 12);
+        assert_eq!(pages_reserved_shared(19, 5, 0, &c), 12, "no sharing == worst case");
+        // 16 shared tokens release 16/4 = 4 whole pages per head.
+        assert_eq!(pages_reserved_shared(19, 5, 16, &c), 4);
+        // A mid-page share point releases only the whole pages below it.
+        assert_eq!(pages_reserved_shared(19, 5, 18, &c), 4);
+        assert!(pages_reserved_shared(19, 5, 19, &c) >= c.heads);
+    }
+
+    /// Satellite regression: a sequence that fails after passing
+    /// admission checks must leave `group.reserved_pages` at its
+    /// pre-admission value — `start_seq` only charges the reservation
+    /// after the prefill succeeded, so the failure path has nothing to
+    /// give back (and `return_reservation`'s checked subtraction would
+    /// catch a double return loudly).
+    #[test]
+    fn failed_prefill_leaves_reservation_at_pre_admission_value() {
+        let c = cfg();
+        let mut core = SchedulerCore::new(c);
+        let gi = group_index(&mut core.groups, "dense", &c).unwrap();
+        // Swap in a session whose page budget cannot hold the prompt,
+        // so prefill_lane fails with OutOfPages after admission math
+        // (which uses cfg.max_pages) already said yes.
+        let tiny = SessionConfig::new(0, c.heads, c.d, c.d).with_paging(c.page_size, 1);
+        core.groups[gi].session =
+            crate::attention::session::AttentionSession::from_spec("dense", tiny).unwrap();
+        let req = ServeRequest::new(vec![1; 40]).max_new(4).engine("dense");
+        let before = core.groups[gi].reserved_pages;
+        let needed = pages_reserved(40, 4, &c);
+        let err = start_seq(
+            &core.model,
+            &mut core.groups[gi],
+            0,
+            req,
+            Instant::now(),
+            &c,
+            needed,
+            None,
+        );
+        let (_req, e) = err.expect_err("1-page session cannot prefill 40 tokens");
+        assert!(matches!(e, ServeError::Cache(_)), "{e}");
+        assert_eq!(
+            core.groups[gi].reserved_pages, before,
+            "failed prefill must not charge (or double-return) its reservation"
+        );
+        assert_eq!(core.groups[gi].session.live_lanes(), 0, "failed lane auto-released");
+    }
+
+    #[test]
+    #[should_panic(expected = "returned its reservation twice")]
+    fn double_reservation_return_is_a_loud_accounting_failure() {
+        let c = cfg();
+        let mut core = SchedulerCore::new(c);
+        let gi = group_index(&mut core.groups, "dense", &c).unwrap();
+        let req = ServeRequest::new(vec![1, 2, 3, 4]).max_new(2).engine("dense");
+        let needed = pages_reserved(4, 2, &c);
+        let seq = start_seq(
+            &core.model,
+            &mut core.groups[gi],
+            0,
+            req,
+            Instant::now(),
+            &c,
+            needed,
+            None,
+        )
+        .expect("fits comfortably");
+        core.groups[gi].return_reservation(&seq);
+        assert_eq!(core.groups[gi].reserved_pages, 0);
+        core.groups[gi].return_reservation(&seq); // must panic, not wrap
     }
 }

@@ -42,11 +42,12 @@ pub struct WaveScheduler {
 impl WaveScheduler {
     /// Panics on a degenerate config (see `ServeConfig::assert_valid`);
     /// CLI layers should range-check user input first. Any configured
-    /// `kv_policy` is stripped: the wave scheduler *is* the worst-case
-    /// reservation baseline the policy-budgeted batcher is measured
-    /// against, and its wave-sized reservations assume unpruned lanes.
+    /// `kv_policy` or `prefix_cache` is stripped: the wave scheduler
+    /// *is* the worst-case, cold-prefill baseline the policy-budgeted
+    /// and prefix-sharing batcher is measured against.
     pub fn new(mut cfg: ServeConfig) -> WaveScheduler {
         cfg.kv_policy = None;
+        cfg.prefix_cache = None;
         WaveScheduler { core: SchedulerCore::new(cfg) }
     }
 
@@ -127,6 +128,7 @@ impl WaveScheduler {
                 submitted,
                 &self.core.cfg,
                 reserved,
+                None,
             ) {
                 Ok(seq) => seq,
                 Err((req, e)) => {
@@ -236,7 +238,7 @@ impl WaveScheduler {
             let wave = std::mem::take(&mut group.active);
             for seq in wave {
                 let freed = group.session.release_lane(seq.lane).unwrap_or(0);
-                group.reserved_pages -= seq.reserved_pages;
+                group.return_reservation(&seq);
                 report.pages_freed += freed;
                 report.finished += 1;
                 let reason = seq.done.expect("wave member is done");

@@ -1,0 +1,285 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The image this repo builds in has neither crates.io access nor a
+//! PJRT runtime, so the `sfa` crate links against this vendored stub
+//! instead of the real bindings:
+//!
+//! * [`Literal`] is **real** — an in-memory (element type, dims, bytes)
+//!   container whose create/read/clone surface round-trips data, so
+//!   every host-side tensor path (and its tests) works;
+//! * the **runtime** surface ([`PjRtClient`], compile/execute, npz IO)
+//!   returns a typed [`Error`] explaining that the PJRT runtime is not
+//!   vendored. Artifact-driven paths (`sfa train`, `sfa exp`, legacy
+//!   serve) fail with that error at startup; the artifact-free serving
+//!   and bench stacks never touch it.
+
+use std::fmt;
+
+/// Stub error: always a message, implements `std::error::Error` so it
+/// flows through `?` into the caller's error type.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable in this offline build (the PJRT runtime is not vendored; \
+         host-side Literal operations still work)"
+    ))
+}
+
+/// Element types a literal can carry. Matches the real crate's naming
+/// for the variants the repo touches; marked non-exhaustive so
+/// downstream matches keep their wildcard arms.
+#[non_exhaustive]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    pub fn byte_width(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::S16 | ElementType::U16 | ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Array shape of a literal: element type + dimensions.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host types a literal can be decoded into.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+    fn write_le(self, out: &mut Vec<u8>);
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            fn from_le(bytes: &[u8]) -> Self {
+                <$t>::from_le_bytes(bytes.try_into().expect("byte width checked by caller"))
+            }
+            fn write_le(self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32);
+native!(i32, ElementType::S32);
+native!(f64, ElementType::F64);
+native!(i64, ElementType::S64);
+
+/// An in-memory host tensor: element type, dims, little-endian bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let expect = dims.iter().product::<usize>() * ty.byte_width();
+        if data.len() != expect {
+            return Err(Error(format!(
+                "literal data is {} bytes but shape {dims:?} of {ty:?} needs {expect}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { ty: self.ty, dims: self.dims.clone() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal holds {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let w = self.ty.byte_width();
+        Ok(self.data.chunks_exact(w).map(T::from_le).collect())
+    }
+
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        let v = self.to_vec::<T>()?;
+        if v.len() != dst.len() {
+            return Err(Error(format!(
+                "copy_raw_to: literal has {} elements, destination {}",
+                v.len(),
+                dst.len()
+            )));
+        }
+        dst.copy_from_slice(&v);
+        Ok(())
+    }
+
+    /// Decompose a tuple literal — tuples only exist as executable
+    /// outputs, which the stub cannot produce.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple decomposition of executable outputs"))
+    }
+
+    pub fn write_npz<T: AsRef<Literal>>(_entries: &[(&str, T)], _path: &str) -> Result<()> {
+        Err(unavailable("Literal::write_npz"))
+    }
+}
+
+/// Trait the real crate routes npz/raw-byte reads through; `read_npz`
+/// is called as `xla::Literal::read_npz(path, &())`.
+pub trait FromRawBytes: Sized {
+    fn read_npz(path: &str, config: &()) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    fn read_npz(_path: &str, _config: &()) -> Result<Vec<(String, Literal)>> {
+        Err(unavailable("Literal::read_npz"))
+    }
+}
+
+/// PJRT client handle — construction fails in the stub.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32_and_i32() {
+        let xs = [1.5f32, -2.0, 0.25];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), xs);
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.size_bytes(), 12);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[3]);
+        assert!(lit.to_vec::<i32>().is_err(), "type-checked decode");
+
+        let mut dst = [0f32; 3];
+        lit.copy_raw_to(&mut dst).unwrap();
+        assert_eq!(dst, xs);
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2, 2], &[0u8; 8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn runtime_surface_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline"), "{e}");
+        assert!(Literal::read_npz("x.npz", &()).is_err());
+    }
+}
