@@ -1,31 +1,48 @@
 //! FlashSFA on CPU — a structurally faithful port of the paper's CUDA
-//! kernel (App. C, Algorithm 1).
+//! kernel (App. C, Algorithm 1), extended with block-level tile
+//! skipping driven by the feature codes themselves.
 //!
 //! Pipeline per query tile (rows [i0, i0+Br)):
 //!
 //! 1. walk the CSR-style top-k codes of each query row (lines 3-8);
-//! 2. for every active feature f, BINARY_SEARCH_RANGE the feature-wise
-//!    CSC posting list of K̃ down to the current key tile (line 10);
-//! 3. scatter-add qv·kv into the Br×Bc score buffer (lines 11-15) —
-//!    the CPU analog of the register-resident 2×2 thread patches: each
-//!    (r, c) score cell is owned by exactly one accumulation pass, so
-//!    no synchronization is needed;
+//! 2. classify every Bc-wide key tile from the [`CscBlockIndex`]
+//!    summaries (skip mode): **dense** tiles run the SpGEMM-style
+//!    cursor walk, **empty** tiles (zero feature overlap) fold into the
+//!    online softmax in O(1) per row via precomputed per-tile V row
+//!    sums, and **negligible** tiles (score upper bound below the
+//!    running row max minus `skip_thresh`) are skipped entirely;
+//! 3. dense tiles scatter-add qv·kv into the Br×Bc score buffer
+//!    (lines 11-15) — the CPU analog of the register-resident 2×2
+//!    thread patches: each (r, c) score cell is owned by exactly one
+//!    accumulation pass, so no synchronization is needed;
 //! 4. causal-mask the tile, fold it into the online-softmax state, and
 //!    stream V rows (lines 21-32).
 //!
 //! Keys with empty support intersection keep score 0 — they still
 //! participate in the softmax, which is exactly the semantics of
 //! softmax(Q̃K̃ᵀ/√d)V (the paper's "mathematically identical" claim).
+//! The empty-tile fold preserves those semantics exactly (a tile of w
+//! zero scores contributes w·exp(-m) mass and exp(-m)·ΣV), so skip mode
+//! with `skip_thresh == 0` matches the non-skipping kernel up to f32
+//! summation order. Threshold skipping (`skip_thresh > 0`) drops per
+//! row at most n·exp(-skip_thresh) of unnormalized softmax mass — the
+//! documented approximation bound.
 //!
-//! Work per tile is proportional to the number of posting-list hits,
-//! i.e. Θ(n²k²/d) overall for balanced supports (paper Eq. 7), while
-//! the n×n score matrix is never materialized.
+//! Work per dense tile is proportional to the number of posting-list
+//! hits, i.e. Θ(n²k²/d) overall for balanced supports (paper Eq. 7),
+//! and empty tiles now cost O(Br·(k + d_v)) instead of O(Br·Bc·d_v) —
+//! the wall-clock no longer stays Θ(n²) when k-sparse supports barely
+//! intersect.
+//!
+//! Per-worker scratch (`OnlineSoftmax` buffers, score tile, posting
+//! cursors, bound buffers) is allocated once per forward and reused
+//! across query tiles, so the hot loop allocates nothing after warm-up.
 
 use crate::attention::online_softmax::OnlineSoftmax;
 use crate::attention::{Engine, NEG_INF};
-use crate::sparse::{topk_codes, CscFeat, TopkCodes};
+use crate::sparse::{topk_codes, CscBlockIndex, CscFeat, TopkCodes};
 use crate::util::matrix::Matrix;
-use crate::util::threadpool::{parallel_for_dynamic, SendPtr};
+use crate::util::threadpool::{parallel_for_dynamic_worker, SendPtr};
 
 #[derive(Debug, Clone, Copy)]
 pub struct FlashSfa {
@@ -34,6 +51,72 @@ pub struct FlashSfa {
     pub block_q: usize,
     pub block_k: usize,
     pub threads: usize,
+    /// Enable block-index tile classification (`skip=on` in the spec
+    /// grammar). With `skip_thresh == 0` this is exact: empty tiles
+    /// fold in O(1) per row, nothing is dropped.
+    pub skip: bool,
+    /// Threshold-skip margin in score units (`thresh=` in the spec
+    /// grammar): a key tile whose per-row score upper bound sits below
+    /// `row_max - skip_thresh` for every row of the query tile is
+    /// dropped entirely. 0 disables threshold skipping (exact mode).
+    pub skip_thresh: f32,
+}
+
+/// Tile-level work counters of one forward pass (the OpCounts-style
+/// observability surface of the block-skipping kernel): every
+/// enumerated key tile lands in exactly one of the three buckets, so
+/// `tiles_visited + tiles_folded + tiles_skipped` is the total tile
+/// count and the folded/skipped share is the realized block sparsity.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SfaTileCounts {
+    /// Tiles that ran the dense cursor-walk + online-softmax path.
+    pub tiles_visited: u64,
+    /// Empty-overlap tiles folded in O(1) per row (exact).
+    pub tiles_folded: u64,
+    /// Tiles dropped by the threshold bound (approximate, opt-in).
+    pub tiles_skipped: u64,
+    /// Posting-list entries consumed by the dense walks.
+    pub posting_hits: u64,
+}
+
+impl SfaTileCounts {
+    pub fn merge(&mut self, o: &SfaTileCounts) {
+        self.tiles_visited += o.tiles_visited;
+        self.tiles_folded += o.tiles_folded;
+        self.tiles_skipped += o.tiles_skipped;
+        self.posting_hits += o.posting_hits;
+    }
+
+    /// Total key tiles enumerated across all query tiles.
+    pub fn total_tiles(&self) -> u64 {
+        self.tiles_visited + self.tiles_folded + self.tiles_skipped
+    }
+}
+
+/// Per-worker reusable state: one slot per thread, no allocation in
+/// the tile loop after the first few tiles warm the capacities up.
+struct Scratch {
+    os: OnlineSoftmax,
+    score_tile: Vec<f32>,
+    cursors: Vec<u32>,
+    /// Per-row score upper bounds for the current key tile.
+    ub: Vec<f32>,
+    /// Distinct nonzero features of the current query tile.
+    feats: Vec<u16>,
+    counts: SfaTileCounts,
+}
+
+impl Scratch {
+    fn new(block_q: usize, block_k: usize, kq: usize, d_v: usize) -> Scratch {
+        Scratch {
+            os: OnlineSoftmax::new(block_q.max(1), d_v),
+            score_tile: vec![0f32; block_q * block_k],
+            cursors: Vec::with_capacity(block_q * kq),
+            ub: vec![0f32; block_q],
+            feats: Vec::with_capacity(block_q * kq),
+            counts: SfaTileCounts::default(),
+        }
+    }
 }
 
 impl FlashSfa {
@@ -43,6 +126,8 @@ impl FlashSfa {
             block_q: 64,
             block_k: 64,
             threads: crate::util::threadpool::default_threads(),
+            skip: false,
+            skip_thresh: 0.0,
         }
     }
 
@@ -56,56 +141,213 @@ impl FlashSfa {
         d_orig: usize,
         causal: bool,
     ) -> Matrix {
+        self.forward_codes_counted(q_codes, k_feat, v, d_orig, causal).0
+    }
+
+    /// [`Self::forward_codes`] plus the tile-level work counters.
+    pub fn forward_codes_counted(
+        &self,
+        q_codes: &TopkCodes,
+        k_feat: &CscFeat,
+        v: &Matrix,
+        d_orig: usize,
+        causal: bool,
+    ) -> (Matrix, SfaTileCounts) {
+        if causal {
+            assert_eq!(
+                q_codes.rows, k_feat.n_tokens,
+                "causal FlashSFA requires n_q == n_kv"
+            );
+        }
+        self.forward_impl(q_codes, k_feat, v, d_orig, causal.then_some(0))
+    }
+
+    /// KV-append variant for chunked prefill: query row `t` attends
+    /// keys `0..=start_pos + t` of the (longer) cached key sequence — a
+    /// suffix of `n_q` new positions over a `start_pos`-token cached
+    /// prefix plus the causal suffix itself. `start_pos == 0` with
+    /// `n_q == n_kv` is exactly the causal [`Self::forward_codes`].
+    pub fn forward_codes_append(
+        &self,
+        q_codes: &TopkCodes,
+        k_feat: &CscFeat,
+        v: &Matrix,
+        d_orig: usize,
+        start_pos: usize,
+    ) -> Matrix {
+        self.forward_impl(q_codes, k_feat, v, d_orig, Some(start_pos)).0
+    }
+
+    /// Shared tiled kernel. `causal` is the diagonal offset: `Some(off)`
+    /// lets query row `i` attend keys `0..=i + off`; `None` attends
+    /// everything (cross attention).
+    fn forward_impl(
+        &self,
+        q_codes: &TopkCodes,
+        k_feat: &CscFeat,
+        v: &Matrix,
+        d_orig: usize,
+        causal: Option<usize>,
+    ) -> (Matrix, SfaTileCounts) {
         assert_eq!(k_feat.n_tokens, v.rows);
         let n_q = q_codes.rows;
         let n_kv = k_feat.n_tokens;
-        if causal {
-            assert_eq!(n_q, n_kv, "causal FlashSFA requires n_q == n_kv");
-        }
+        let d_v = v.cols;
         let scale = 1.0 / (d_orig as f32).sqrt();
-        let mut out = Matrix::zeros(n_q, v.cols);
+        let mut out = Matrix::zeros(n_q, d_v);
         let n_tiles = n_q.div_ceil(self.block_q);
         let out_ptr = SendPtr(out.data.as_mut_ptr());
-
         let kq = q_codes.k;
-        parallel_for_dynamic(n_tiles, self.threads, 1, move |tile| {
+        let thresh_on = self.skip && self.skip_thresh > 0.0;
+
+        // Block-skip summaries, built once per forward: the per-cell
+        // posting index and the per-tile V row sums the empty fold
+        // streams instead of individual V rows.
+        let block_index = if self.skip { Some(k_feat.block_index(self.block_k)) } else { None };
+        let v_tile_sums = if self.skip {
+            let kt = n_kv.div_ceil(self.block_k).max(1);
+            let mut sums = vec![0f32; kt * d_v];
+            for j in 0..n_kv {
+                let row = &mut sums[(j / self.block_k) * d_v..(j / self.block_k + 1) * d_v];
+                for (a, &x) in row.iter_mut().zip(v.row(j)) {
+                    *a += x;
+                }
+            }
+            sums
+        } else {
+            Vec::new()
+        };
+
+        let n_workers = self.threads.max(1).min(n_tiles.max(1));
+        let mut scratch: Vec<Scratch> = (0..n_workers)
+            .map(|_| Scratch::new(self.block_q.min(n_q.max(1)), self.block_k, kq, d_v))
+            .collect();
+        let scratch_ptr = SendPtr(scratch.as_mut_ptr());
+        let bi = block_index.as_ref();
+        let v_sums = &v_tile_sums;
+
+        parallel_for_dynamic_worker(n_tiles, n_workers, 1, move |worker, tile| {
+            // SAFETY: worker indices are < n_workers and each worker
+            // touches only its own scratch slot.
+            let scr = unsafe { &mut *scratch_ptr.get().add(worker) };
             let i0 = tile * self.block_q;
             let br = self.block_q.min(n_q - i0);
-            let mut os = OnlineSoftmax::new(br, v.cols);
-            let mut score_tile = vec![0f32; br * self.block_k];
+            scr.os.reset(br, d_v);
 
             // §Perf iteration 1 (EXPERIMENTS.md): key tiles are scanned
             // in ascending j, so each (query row, feature) pair walks
             // its posting list monotonically — one cursor per pair
             // replaces the per-tile BINARY_SEARCH_RANGE with O(1)
-            // amortized advancement (each posting hit is consumed
-            // exactly once per query tile).
-            let mut cursors: Vec<u32> = Vec::with_capacity(br * kq);
+            // amortized advancement. Folded/skipped tiles hold the
+            // invariant too: empty tiles have no postings to pass, and
+            // the threshold-skip path jumps cursors to the block
+            // boundary via the block index.
+            scr.cursors.clear();
             for r in 0..br {
                 for &f in q_codes.row_idx(i0 + r) {
-                    cursors.push(k_feat.indptr[f as usize]);
+                    scr.cursors.push(k_feat.indptr[f as usize]);
                 }
             }
+            if bi.is_some() {
+                scr.feats.clear();
+                for r in 0..br {
+                    for (&f, &qv) in q_codes.row_idx(i0 + r).iter().zip(q_codes.row_vals(i0 + r)) {
+                        if qv != 0.0 {
+                            scr.feats.push(f);
+                        }
+                    }
+                }
+                scr.feats.sort_unstable();
+                scr.feats.dedup();
+            }
 
-            let j_end = if causal { (i0 + br).min(n_kv) } else { n_kv };
+            let j_end = match causal {
+                Some(off) => (i0 + br + off).min(n_kv),
+                None => n_kv,
+            };
             let mut j0 = 0;
             while j0 < j_end {
                 let bc = self.block_k.min(j_end - j0);
+                // j0 stays block_k-aligned (only the final tile of the
+                // loop can be partial), so this is the block-index cell.
+                let t = j0 / self.block_k;
+
+                if let Some(bi) = bi {
+                    let empty = scr.feats.iter().all(|&f| bi.degree(f as usize, t) == 0);
+                    // The O(1)-per-row fold needs the whole physical
+                    // tile unmasked for every row: V sums cover
+                    // [t·Bc, min((t+1)·Bc, n_kv)), and all of it must be
+                    // causally visible to row i0 (the strictest row).
+                    let phys_end = ((t + 1) * self.block_k).min(n_kv);
+                    let fully_visible = match causal {
+                        Some(off) => j0 + bc <= i0 + off + 1,
+                        None => true,
+                    };
+                    if empty && fully_visible && j0 + bc == phys_end {
+                        scr.os.fold_uniform(0.0, bc, &v_sums[t * d_v..(t + 1) * d_v]);
+                        scr.counts.tiles_folded += 1;
+                        j0 += bc;
+                        continue;
+                    }
+                    if thresh_on {
+                        // Per-row score upper bound from the per-cell
+                        // max-|value| summaries; zero-overlap keys in
+                        // the tile score exactly 0, covered by the
+                        // max(·, 0) below.
+                        let ubuf = &mut scr.ub[..br];
+                        if empty {
+                            ubuf.fill(0.0);
+                        } else {
+                            for (r, u) in ubuf.iter_mut().enumerate() {
+                                let idx = q_codes.row_idx(i0 + r);
+                                let vals = q_codes.row_vals(i0 + r);
+                                let mut acc = 0.0;
+                                for (&f, &qv) in idx.iter().zip(vals) {
+                                    if qv != 0.0 {
+                                        acc += qv.abs() * bi.cell_max_abs(f as usize, t);
+                                    }
+                                }
+                                *u = acc * scale;
+                            }
+                        }
+                        let skippable = (0..br).all(|r| {
+                            scr.ub[r].max(0.0) < scr.os.row_max(r) - self.skip_thresh
+                        });
+                        if skippable {
+                            // Jump every cursor to the next block
+                            // boundary so the monotone-walk invariant
+                            // survives the skipped postings.
+                            if !empty {
+                                for r in 0..br {
+                                    for (slot, &f) in q_codes.row_idx(i0 + r).iter().enumerate() {
+                                        scr.cursors[r * kq + slot] =
+                                            scr.cursors[r * kq + slot].max(bi.start(f as usize, t + 1));
+                                    }
+                                }
+                            }
+                            scr.counts.tiles_skipped += 1;
+                            j0 += bc;
+                            continue;
+                        }
+                    }
+                }
+
+                // Dense tile: lines 3-15, feature-overlap accumulation.
+                scr.counts.tiles_visited += 1;
+                let score_tile = &mut scr.score_tile;
                 score_tile[..br * bc].fill(0.0);
                 let tile_hi = (j0 + bc) as u32;
-
-                // Lines 3-15: feature-overlap accumulation.
                 for r in 0..br {
-                    let i = i0 + r;
                     let srow = &mut score_tile[r * bc..(r + 1) * bc];
-                    let idx = q_codes.row_idx(i);
-                    let vals = q_codes.row_vals(i);
+                    let idx = q_codes.row_idx(i0 + r);
+                    let vals = q_codes.row_vals(i0 + r);
                     for (slot, (&f, &qv)) in idx.iter().zip(vals).enumerate() {
                         if qv == 0.0 {
                             continue;
                         }
                         let end = k_feat.indptr[f as usize + 1];
-                        let mut c = cursors[r * kq + slot];
+                        let start = scr.cursors[r * kq + slot];
+                        let mut c = start;
                         while c < end {
                             let tok = k_feat.token_ids[c as usize];
                             if tok >= tile_hi {
@@ -114,33 +356,41 @@ impl FlashSfa {
                             srow[tok as usize - j0] += qv * k_feat.vals[c as usize];
                             c += 1;
                         }
-                        cursors[r * kq + slot] = c;
+                        scr.cursors[r * kq + slot] = c;
+                        scr.counts.posting_hits += (c - start) as u64;
                     }
                     // Scale + causal mask (line 21).
-                    for (c, s) in srow.iter_mut().enumerate() {
+                    let vis = match causal {
+                        Some(off) => (i0 + r + off + 1).saturating_sub(j0).min(bc),
+                        None => bc,
+                    };
+                    for s in srow[..vis].iter_mut() {
                         *s *= scale;
-                        if causal && j0 + c > i {
-                            *s = NEG_INF;
-                        }
+                    }
+                    for s in srow[vis..].iter_mut() {
+                        *s = NEG_INF;
                     }
                 }
 
                 // Lines 22-32: online softmax + V streaming.
                 let vdata = &v.data;
-                let vcols = v.cols;
-                os.update(&score_tile[..br * bc], bc, |c| {
-                    vdata[(j0 + c) * vcols..].as_ptr()
+                scr.os.update(&score_tile[..br * bc], bc, |c| {
+                    vdata[(j0 + c) * d_v..].as_ptr()
                 });
                 j0 += bc;
             }
 
             // SAFETY: tiles own disjoint output row ranges.
-            let out_slice = unsafe {
-                std::slice::from_raw_parts_mut(out_ptr.get().add(i0 * v.cols), br * v.cols)
-            };
-            os.finish(out_slice);
+            let out_slice =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(i0 * d_v), br * d_v) };
+            scr.os.finish_into(out_slice);
         });
-        out
+
+        let mut counts = SfaTileCounts::default();
+        for s in &scratch {
+            counts.merge(&s.counts);
+        }
+        (out, counts)
     }
 }
 
@@ -150,7 +400,14 @@ impl Engine for FlashSfa {
     }
 
     fn spec(&self) -> String {
-        format!("sfa:k={},bq={},bk={}", self.k, self.block_q, self.block_k)
+        let mut s = format!("sfa:k={},bq={},bk={}", self.k, self.block_q, self.block_k);
+        if self.skip {
+            s.push_str(",skip=on");
+            if self.skip_thresh != 0.0 {
+                s.push_str(&format!(",thresh={}", self.skip_thresh));
+            }
+        }
+        s
     }
 
     fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
@@ -180,7 +437,14 @@ mod tests {
             let bq = *g.choose(&[8usize, 32, 64]);
             let bk = *g.choose(&[8usize, 32, 64]);
             let (q, kk, v) = qkv(n, d, d.min(32), g.seed);
-            let engine = FlashSfa { k: k.min(d), block_q: bq, block_k: bk, threads: 2 };
+            let engine = FlashSfa {
+                k: k.min(d),
+                block_q: bq,
+                block_k: bk,
+                threads: 2,
+                skip: false,
+                skip_thresh: 0.0,
+            };
             let a = engine.forward(&q, &kk, &v, causal);
             let b = SfaReference { k: k.min(d) }.forward(&q, &kk, &v, causal);
             assert_close(&a, &b, 3e-5, 3e-6);
@@ -190,7 +454,7 @@ mod tests {
     #[test]
     fn k_equals_d_matches_dense() {
         let (q, k, v) = qkv(48, 32, 32, 1);
-        let a = FlashSfa { k: 32, block_q: 16, block_k: 16, threads: 2 }
+        let a = FlashSfa { block_q: 16, block_k: 16, threads: 2, ..FlashSfa::new(32) }
             .forward(&q, &k, &v, true);
         let b = DenseAttention.forward(&q, &k, &v, true);
         assert_close(&a, &b, 3e-5, 3e-6);
@@ -199,10 +463,10 @@ mod tests {
     #[test]
     fn tiling_invariance() {
         let (q, k, v) = qkv(100, 64, 48, 2);
-        let base = FlashSfa { k: 8, block_q: 100, block_k: 100, threads: 1 }
+        let base = FlashSfa { block_q: 100, block_k: 100, threads: 1, ..FlashSfa::new(8) }
             .forward(&q, &k, &v, true);
         for (bq, bk) in [(8, 8), (16, 64), (64, 16), (32, 100)] {
-            let other = FlashSfa { k: 8, block_q: bq, block_k: bk, threads: 3 }
+            let other = FlashSfa { block_q: bq, block_k: bk, threads: 3, ..FlashSfa::new(8) }
                 .forward(&q, &k, &v, true);
             assert_close(&other, &base, 2e-5, 2e-6);
         }
@@ -225,24 +489,27 @@ mod tests {
     #[test]
     fn empty_overlap_rows_attend_uniformly() {
         // Query supports disjoint from key supports -> all scores equal
-        // (zero), so output = causal running mean of V.
-        let n = 8;
-        let d = 16;
-        let mut q = Matrix::zeros(n, d);
-        let mut k = Matrix::zeros(n, d);
-        let mut v = Matrix::zeros(n, 1);
-        for i in 0..n {
-            q.set(i, 0, 5.0);
-            q.set(i, 1, 4.0);
-            k.set(i, 8, 5.0);
-            k.set(i, 9, 4.0);
-            v.set(i, 0, i as f32);
-        }
-        let out = FlashSfa { k: 2, block_q: 4, block_k: 4, threads: 1 }
-            .forward(&q, &k, &v, true);
-        for i in 0..n {
-            let mean = (0..=i).sum::<usize>() as f32 / (i + 1) as f32;
-            assert!((out.get(i, 0) - mean).abs() < 1e-5, "row {i}");
+        // (zero), so output = causal running mean of V. Exercised both
+        // with and without the block-skip fold.
+        for skip in [false, true] {
+            let n = 8;
+            let d = 16;
+            let mut q = Matrix::zeros(n, d);
+            let mut k = Matrix::zeros(n, d);
+            let mut v = Matrix::zeros(n, 1);
+            for i in 0..n {
+                q.set(i, 0, 5.0);
+                q.set(i, 1, 4.0);
+                k.set(i, 8, 5.0);
+                k.set(i, 9, 4.0);
+                v.set(i, 0, i as f32);
+            }
+            let out = FlashSfa { block_q: 4, block_k: 4, threads: 1, skip, ..FlashSfa::new(2) }
+                .forward(&q, &k, &v, true);
+            for i in 0..n {
+                let mean = (0..=i).sum::<usize>() as f32 / (i + 1) as f32;
+                assert!((out.get(i, 0) - mean).abs() < 1e-5, "skip={skip} row {i}");
+            }
         }
     }
 
@@ -254,7 +521,7 @@ mod tests {
         let qc = topk_codes(&q, 4);
         let kc = topk_codes(&k, 4);
         let kf = CscFeat::from_codes(&kc);
-        let eng = FlashSfa { k: 4, block_q: 16, block_k: 16, threads: 2 };
+        let eng = FlashSfa { block_q: 16, block_k: 16, threads: 2, ..FlashSfa::new(4) };
         let a = eng.forward_codes(&qc, &kf, &v, 32, false);
         let b = DenseAttention.forward(&qc.densify(), &kc.densify(), &v, false);
         assert_close(&a, &b, 3e-5, 3e-6);
@@ -269,5 +536,208 @@ mod tests {
         let kc = topk_codes(&k, 2);
         let kf = CscFeat::from_codes(&kc);
         FlashSfa::new(2).forward_codes(&qc, &kf, &v, 16, true);
+    }
+
+    #[test]
+    fn skip_on_exact_mode_matches_skip_off() {
+        // The tentpole equivalence: exact skip mode (empty-tile fold,
+        // no threshold) must match the non-skipping kernel within the
+        // reference pin across tilings, sparsity budgets, causal and
+        // cross-attention shapes.
+        check("skip=on(exact) == skip=off", 32, |g| {
+            let d = *g.choose(&[16usize, 32, 64]);
+            let k = *g.choose(&[2usize, 4, 8]);
+            let causal = g.bool();
+            let (n_q, n_kv) = if causal {
+                let n = g.usize_in(1..96);
+                (n, n)
+            } else {
+                (g.usize_in(1..96), g.usize_in(1..96))
+            };
+            let bq = *g.choose(&[8usize, 32, 64]);
+            let bk = *g.choose(&[8usize, 32, 64]);
+            let (q, _, _) = qkv(n_q, d, d.min(32), g.seed);
+            let (_, kk, v) = qkv(n_kv, d, d.min(32), g.seed.wrapping_add(1));
+            let qc = topk_codes(&q, k.min(d));
+            let kc = topk_codes(&kk, k.min(d));
+            let kf = CscFeat::from_codes(&kc);
+            let off = FlashSfa {
+                k: k.min(d),
+                block_q: bq,
+                block_k: bk,
+                threads: 2,
+                skip: false,
+                skip_thresh: 0.0,
+            };
+            let on = FlashSfa { skip: true, ..off };
+            let (a, ca) = on.forward_codes_counted(&qc, &kf, &v, d, causal);
+            let (b, cb) = off.forward_codes_counted(&qc, &kf, &v, d, causal);
+            assert_close(&a, &b, 3e-5, 3e-6);
+            assert_eq!(cb.tiles_folded + cb.tiles_skipped, 0, "skip=off never folds");
+            assert_eq!(ca.total_tiles(), cb.total_tiles(), "same tiles enumerated");
+            assert_eq!(ca.tiles_skipped, 0, "exact mode never threshold-skips");
+        });
+    }
+
+    #[test]
+    fn disjoint_supports_fold_most_tiles() {
+        // Query features 0..8, key features 8..16: every off-diagonal
+        // tile has zero overlap, so skip mode folds nearly everything
+        // and the output still matches the non-skipping kernel tightly.
+        let n = 128;
+        let d = 16;
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut q = Matrix::zeros(n, d);
+        let mut k = Matrix::zeros(n, d);
+        let v = Matrix::randn(n, 8, &mut rng, 1.0);
+        for i in 0..n {
+            for j in 0..4 {
+                q.set(i, (i + j) % 8, 1.0 + (j as f32));
+                k.set(i, 8 + (i + j) % 8, 1.0 + (j as f32));
+            }
+        }
+        let qc = topk_codes(&q, 4);
+        let kc = topk_codes(&k, 4);
+        let kf = CscFeat::from_codes(&kc);
+        let off =
+            FlashSfa { k: 4, block_q: 16, block_k: 16, threads: 2, skip: false, skip_thresh: 0.0 };
+        let on = FlashSfa { skip: true, ..off };
+        let (a, counts) = on.forward_codes_counted(&qc, &kf, &v, d, true);
+        let b = off.forward_codes(&qc, &kf, &v, d, true);
+        assert_close(&a, &b, 1e-5, 1e-6);
+        assert!(counts.tiles_folded > 0, "zero-overlap tiles must fold: {counts:?}");
+        assert_eq!(counts.posting_hits, 0, "no feature overlap -> no posting hits");
+    }
+
+    #[test]
+    fn threshold_skip_drops_only_negligible_mass() {
+        // One dominant shared feature in the first keys gives every row
+        // a large running max; later keys overlap the same feature with
+        // tiny values, so their tiles' upper bounds fall under
+        // m - thresh and get skipped — within the documented
+        // n·exp(-thresh) mass bound, outputs stay close to exact.
+        let n = 96;
+        let d = 16;
+        let mut q = Matrix::zeros(n, d);
+        let mut k = Matrix::zeros(n, d);
+        let mut v = Matrix::zeros(n, 4);
+        for i in 0..n {
+            q.set(i, 0, 8.0);
+            q.set(i, 1, 1.0);
+            if i < 8 {
+                k.set(i, 0, 8.0); // score ≈ 64/√16 = 16
+            } else {
+                k.set(i, 0, 1e-3); // upper bound ≈ 8e-3/4 « 16 - thresh
+            }
+            k.set(i, 2 + (i % 4), 0.5);
+            for c in 0..4 {
+                v.set(i, c, (i % 7) as f32 - 3.0);
+            }
+        }
+        let qc = topk_codes(&q, 2);
+        let kc = topk_codes(&k, 2);
+        let kf = CscFeat::from_codes(&kc);
+        let exact =
+            FlashSfa { k: 2, block_q: 16, block_k: 16, threads: 2, skip: false, skip_thresh: 0.0 };
+        let approx = FlashSfa { skip: true, skip_thresh: 8.0, ..exact };
+        let (a, counts) = approx.forward_codes_counted(&qc, &kf, &v, d, false);
+        let b = exact.forward_codes(&qc, &kf, &v, d, false);
+        assert!(counts.tiles_skipped > 0, "threshold must engage: {counts:?}");
+        // Dropped unnormalized mass per row ≤ n·exp(-8) ≈ 3e-2 relative
+        // to the exp(0)-scale retained mass; outputs move O(1e-3).
+        assert_close(&a, &b, 5e-3, 5e-3);
+    }
+
+    #[test]
+    fn append_matches_per_row_reference() {
+        // forward_codes_append == per-row softmax over the causally
+        // growing key prefix (the chunked-prefill contract), and the
+        // start_pos == 0 square case degenerates to forward_codes.
+        check("append kernel == per-row reference", 24, |g| {
+            let d = 16;
+            let k = g.usize_in(2..5);
+            let total = g.usize_in(2..48);
+            let n_q = g.usize_in(1..total + 1);
+            let start = total - n_q;
+            let skip = g.bool();
+            let (kk, _, v) = qkv(total, d, 8, g.seed);
+            let (q, _, _) = qkv(total, d, 8, g.seed.wrapping_add(7));
+            let mut qsuf = Matrix::zeros(n_q, d);
+            for t in 0..n_q {
+                qsuf.row_mut(t).copy_from_slice(q.row(start + t));
+            }
+            let qc_suffix = topk_codes(&qsuf, k);
+            let kc = topk_codes(&kk, k);
+            let kf = CscFeat::from_codes(&kc);
+            let eng = FlashSfa {
+                k,
+                block_q: *g.choose(&[4usize, 8, 64]),
+                block_k: *g.choose(&[4usize, 8, 64]),
+                threads: 2,
+                skip,
+                skip_thresh: 0.0,
+            };
+            let got = eng.forward_codes_append(&qc_suffix, &kf, &v, d, start);
+            // Reference: densified codes, two-pass softmax per row over
+            // keys 0..=start+t.
+            let qd = qc_suffix.densify();
+            let kd = kc.densify();
+            let scale = 1.0 / (d as f32).sqrt();
+            for t in 0..n_q {
+                let upto = start + t + 1;
+                let mut scores = vec![0f32; upto];
+                for (j, s) in scores.iter_mut().enumerate() {
+                    let mut acc = 0.0;
+                    for c in 0..d {
+                        acc += qd.get(t, c) * kd.get(j, c);
+                    }
+                    *s = acc * scale;
+                }
+                let m = scores.iter().fold(NEG_INF, |a, &b| a.max(b));
+                let exps: Vec<f32> = scores.iter().map(|&s| (s - m).exp()).collect();
+                let l: f32 = exps.iter().sum();
+                for c in 0..v.cols {
+                    let want: f32 =
+                        (0..upto).map(|j| exps[j] / l * v.get(j, c)).sum();
+                    let diff = (got.get(t, c) - want).abs();
+                    assert!(
+                        diff <= 3e-5 + 3e-5 * want.abs(),
+                        "skip={skip} row {t} col {c}: {} vs {want}",
+                        got.get(t, c)
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn append_with_zero_start_equals_causal_forward() {
+        let (q, k, v) = qkv(40, 32, 16, 12);
+        let qc = topk_codes(&q, 4);
+        let kc = topk_codes(&k, 4);
+        let kf = CscFeat::from_codes(&kc);
+        for skip in [false, true] {
+            let eng =
+                FlashSfa { k: 4, block_q: 8, block_k: 8, threads: 2, skip, skip_thresh: 0.0 };
+            let a = eng.forward_codes_append(&qc, &kf, &v, 32, 0);
+            let b = eng.forward_codes(&qc, &kf, &v, 32, true);
+            assert_close(&a, &b, 1e-6, 1e-7);
+        }
+    }
+
+    #[test]
+    fn counters_partition_the_tile_grid() {
+        let (q, k, v) = qkv(70, 32, 16, 13);
+        let qc = topk_codes(&q, 4);
+        let kc = topk_codes(&k, 4);
+        let kf = CscFeat::from_codes(&kc);
+        let eng =
+            FlashSfa { k: 4, block_q: 16, block_k: 16, threads: 3, skip: true, skip_thresh: 0.0 };
+        let (_, c) = eng.forward_codes_counted(&qc, &kf, &v, 32, true);
+        // Causal 70 rows, Bq=Bc=16: query tile ti enumerates
+        // ceil(min(70, (ti+1)*16)/16) key tiles.
+        let expected: u64 = (0..5u64).map(|ti| (ti + 1).min(5)).sum();
+        assert_eq!(c.total_tiles(), expected);
+        assert!(c.posting_hits > 0);
     }
 }

@@ -29,6 +29,28 @@ impl OnlineSoftmax {
         }
     }
 
+    /// Re-initialize for a new `(rows, d_v)` block, keeping the
+    /// allocations — the per-worker scratch reuse path of the tiled
+    /// engines.
+    pub fn reset(&mut self, rows: usize, d_v: usize) {
+        self.rows = rows;
+        self.d_v = d_v;
+        self.m.clear();
+        self.m.resize(rows, NEG_INF);
+        self.l.clear();
+        self.l.resize(rows, 0.0);
+        self.acc.clear();
+        self.acc.resize(rows * d_v, 0.0);
+    }
+
+    /// The running row maximum (NEG_INF until the row sees an unmasked
+    /// score) — the block-skipping classifier compares tile upper
+    /// bounds against this.
+    #[inline]
+    pub fn row_max(&self, r: usize) -> f32 {
+        self.m[r]
+    }
+
     /// Consume one score tile: `scores` is rows × tile_w (row-major),
     /// `v_tile` is tile_w × d_v (row-major slice accessor).
     ///
@@ -73,9 +95,46 @@ impl OnlineSoftmax {
         }
     }
 
+    /// Fold a whole tile of `width` keys that all share one unmasked
+    /// score `s` for every row, given `v_sum` = the column sum of the
+    /// tile's V rows. Mathematically equal to [`Self::update`] on a
+    /// constant score tile, but O(d_v) per row instead of
+    /// O(width · d_v) — the FlashSFA empty-tile fast path (zero-overlap
+    /// keys score 0 yet still participate in the softmax).
+    pub fn fold_uniform(&mut self, s: f32, width: usize, v_sum: &[f32]) {
+        debug_assert_eq!(v_sum.len(), self.d_v);
+        if width == 0 {
+            return;
+        }
+        let w = width as f32;
+        for r in 0..self.rows {
+            let m_new = self.m[r].max(s);
+            let alpha = if self.m[r] <= NEG_INF { 0.0 } else { (self.m[r] - m_new).exp() };
+            let acc_row = &mut self.acc[r * self.d_v..(r + 1) * self.d_v];
+            if alpha != 1.0 {
+                for a in acc_row.iter_mut() {
+                    *a *= alpha;
+                }
+                self.l[r] *= alpha;
+            }
+            let p = (s - m_new).exp();
+            self.l[r] += p * w;
+            for (a, &vs) in acc_row.iter_mut().zip(v_sum) {
+                *a += p * vs;
+            }
+            self.m[r] = m_new;
+        }
+    }
+
     /// Normalize into the output block (rows × d_v). Rows that never saw
     /// an unmasked score produce zeros.
     pub fn finish(self, out: &mut [f32]) {
+        self.finish_into(out);
+    }
+
+    /// Non-consuming [`Self::finish`] — scratch-reuse callers normalize
+    /// and then [`Self::reset`] the same state for the next tile.
+    pub fn finish_into(&self, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.rows * self.d_v);
         for r in 0..self.rows {
             let l = self.l[r];
@@ -168,6 +227,75 @@ mod tests {
         // Fully masked row yields zeros.
         assert_eq!(&out.data[2..4], &[0.0, 0.0]);
         s.set(0, 0, 1.0);
+    }
+
+    #[test]
+    fn fold_uniform_matches_update_on_constant_tile() {
+        check("fold_uniform == update(const tile)", 48, |g| {
+            let rows = g.usize_in(1..6);
+            let dv = g.usize_in(1..10);
+            let w = g.usize_in(1..12);
+            let s = g.f32_in(-4.0..4.0);
+            let pre = g.usize_in(0..10);
+            // Shared prefix of random scores so both states start from
+            // a non-trivial (m, l, acc).
+            let spre = Matrix::from_vec(rows, pre.max(1), g.vec_normal(rows * pre.max(1), 2.0));
+            let vpre = Matrix::from_vec(pre.max(1), dv, g.vec_normal(pre.max(1) * dv, 1.0));
+            let vtile = Matrix::from_vec(w, dv, g.vec_normal(w * dv, 1.0));
+            let mut a = OnlineSoftmax::new(rows, dv);
+            let mut b = OnlineSoftmax::new(rows, dv);
+            if pre > 0 {
+                for os in [&mut a, &mut b] {
+                    let vdata = &vpre.data;
+                    os.update(&spre.data[..rows * pre], pre, |c| vdata[c * dv..].as_ptr());
+                }
+            }
+            // a: explicit constant tile through update.
+            let tile = vec![s; rows * w];
+            let vdata = &vtile.data;
+            a.update(&tile, w, |c| vdata[c * dv..].as_ptr());
+            // b: the O(1)-per-row fold over the same tile.
+            let mut v_sum = vec![0f32; dv];
+            for c in 0..w {
+                for t in 0..dv {
+                    v_sum[t] += vtile.get(c, t);
+                }
+            }
+            b.fold_uniform(s, w, &v_sum);
+            let mut oa = vec![0f32; rows * dv];
+            let mut ob = vec![0f32; rows * dv];
+            a.finish_into(&mut oa);
+            b.finish_into(&mut ob);
+            for (x, y) in oa.iter().zip(&ob) {
+                assert!((x - y).abs() <= 1e-5 + 1e-5 * y.abs(), "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn reset_reuses_state_like_fresh() {
+        let s = Matrix::from_vec(2, 3, vec![1.0, -0.5, 2.0, 0.0, 0.3, -1.0]);
+        let v = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let fresh = run_tiled(&s, &v, 2);
+        let mut os = OnlineSoftmax::new(5, 2);
+        let vdata = &v.data;
+        os.update(&[9.0; 15], 3, |c| vdata[c * 2..].as_ptr());
+        os.reset(2, 2);
+        assert_eq!(os.row_max(0), NEG_INF);
+        let mut j0 = 0;
+        while j0 < 3 {
+            let w = 2.min(3 - j0);
+            let mut tile = vec![0f32; 2 * w];
+            for r in 0..2 {
+                tile[r * w..(r + 1) * w].copy_from_slice(&s.row(r)[j0..j0 + w]);
+            }
+            os.update(&tile, w, |c| vdata[(j0 + c) * 2..].as_ptr());
+            j0 += w;
+        }
+        let mut out = Matrix::zeros(2, 2);
+        os.finish_into(&mut out.data);
+        assert_close(&out, &fresh, 0.0, 0.0);
+        assert!(os.row_max(0) > NEG_INF);
     }
 
     #[test]

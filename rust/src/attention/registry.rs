@@ -8,6 +8,8 @@
 //! dense
 //! flash_dense:bq=64,bk=64
 //! sfa:k=8,bq=64,bk=64            (alias: flash_sfa)
+//! sfa:k=8,skip=on,thresh=8      (block-skipping FlashSFA; thresh
+//!                                 optional, 0 = exact empty-tile folds)
 //! sfa_ref:k=8
 //! window:w=256,scorer=sfa_k8
 //! lowrank:r=16,iters=6,seed=0,scorer=dense
@@ -68,12 +70,14 @@ fn err(msg: impl Into<String>) -> SpecError {
 }
 
 /// Parsed, typed engine specification — one variant per engine family.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// (`FlashSfa::thresh` is an `f32`, so the enum is `PartialEq` but not
+/// `Eq` — specs are compared, never used as map keys.)
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum EngineSpec {
     Dense,
     SfaRef { k: usize },
     FlashDense { bq: usize, bk: usize },
-    FlashSfa { k: usize, bq: usize, bk: usize },
+    FlashSfa { k: usize, bq: usize, bk: usize, skip: bool, thresh: f32 },
     Window { w: usize, scorer: Scorer },
     LowRank { r: usize, iters: usize, seed: u64, scorer: Scorer },
     Mla { r: usize, seed: u64, scorer: Scorer },
@@ -109,6 +113,31 @@ impl<'a> Params<'a> {
                     self.family
                 ))
             }),
+        }
+    }
+
+    fn take_f32(&mut self, key: &str, default: f32) -> Result<f32, SpecError> {
+        match self.map.remove(key) {
+            None => Ok(default),
+            Some(v) => match v.parse::<f32>() {
+                Ok(x) if x.is_finite() => Ok(x),
+                _ => Err(err(format!(
+                    "{}: key {key:?} expects a finite number, got {v:?}",
+                    self.family
+                ))),
+            },
+        }
+    }
+
+    fn take_on_off(&mut self, key: &str, default: bool) -> Result<bool, SpecError> {
+        match self.map.remove(key) {
+            None => Ok(default),
+            Some("on") => Ok(true),
+            Some("off") => Ok(false),
+            Some(v) => Err(err(format!(
+                "{}: key {key:?} expects `on` or `off`, got {v:?}",
+                self.family
+            ))),
         }
     }
 
@@ -171,6 +200,8 @@ pub fn parse_spec(spec: &str) -> Result<EngineSpec, SpecError> {
             k: p.take_usize("k", 8)?,
             bq: p.take_usize("bq", 64)?,
             bk: p.take_usize("bk", 64)?,
+            skip: p.take_on_off("skip", false)?,
+            thresh: p.take_f32("thresh", 0.0)?,
         },
         "window" => EngineSpec::Window {
             w: p.take_usize("w", 256)?,
@@ -225,7 +256,7 @@ impl EngineSpec {
             EngineSpec::Dense => false,
             EngineSpec::SfaRef { k } => k == 0,
             EngineSpec::FlashDense { bq, bk } => bq == 0 || bk == 0,
-            EngineSpec::FlashSfa { k, bq, bk } => k == 0 || bq == 0 || bk == 0,
+            EngineSpec::FlashSfa { k, bq, bk, .. } => k == 0 || bq == 0 || bk == 0,
             EngineSpec::Window { w, .. } => w == 0,
             EngineSpec::LowRank { r, iters, .. } => r == 0 || iters == 0,
             EngineSpec::Mla { r, .. } => r == 0,
@@ -238,6 +269,14 @@ impl EngineSpec {
                 self.family()
             )));
         }
+        if let EngineSpec::FlashSfa { skip, thresh, .. } = *self {
+            if thresh < 0.0 {
+                return Err(err("sfa: thresh must be >= 0"));
+            }
+            if thresh > 0.0 && !skip {
+                return Err(err("sfa: thresh requires skip=on"));
+            }
+        }
         Ok(())
     }
 
@@ -247,7 +286,16 @@ impl EngineSpec {
             EngineSpec::Dense => "dense".into(),
             EngineSpec::SfaRef { k } => format!("sfa_ref:k={k}"),
             EngineSpec::FlashDense { bq, bk } => format!("flash_dense:bq={bq},bk={bk}"),
-            EngineSpec::FlashSfa { k, bq, bk } => format!("sfa:k={k},bq={bq},bk={bk}"),
+            EngineSpec::FlashSfa { k, bq, bk, skip, thresh } => {
+                let mut s = format!("sfa:k={k},bq={bq},bk={bk}");
+                if skip {
+                    s.push_str(",skip=on");
+                    if thresh != 0.0 {
+                        s.push_str(&format!(",thresh={thresh}"));
+                    }
+                }
+                s
+            }
             EngineSpec::Window { w, scorer } => {
                 format!("window:w={w},scorer={}", scorer.label())
             }
@@ -300,8 +348,8 @@ impl EngineSpec {
             EngineSpec::FlashDense { bq, bk } => {
                 Box::new(FlashDense { block_q: bq, block_k: bk, threads })
             }
-            EngineSpec::FlashSfa { k, bq, bk } => {
-                Box::new(FlashSfa { k, block_q: bq, block_k: bk, threads })
+            EngineSpec::FlashSfa { k, bq, bk, skip, thresh } => {
+                Box::new(FlashSfa { k, block_q: bq, block_k: bk, threads, skip, skip_thresh: thresh })
             }
             EngineSpec::Window { w, scorer } => {
                 Box::new(WindowAttention { window: w, scorer, threads })
@@ -343,7 +391,7 @@ mod tests {
             "dense",
             "sfa_ref:k=4",
             "flash_dense:bq=32,bk=16",
-            "sfa:k=8,bq=32,bk=32",
+            "sfa:k=8,bq=32,bk=32,skip=on,thresh=2.5",
             "window:w=64,scorer=sfa_k4",
             "lowrank:r=8,iters=4,seed=1,scorer=dense",
             "mla:r=8,seed=2,scorer=sfa_k4",
@@ -387,10 +435,82 @@ mod tests {
             ("quant:scorer=sfa8", "scorer"),
             ("", "empty spec"),
             ("sfa:k=2,k=3", "duplicate"),
+            ("sfa:skip=maybe", "`on` or `off`"),
+            ("sfa:skip=on,thresh=nan", "finite number"),
+            ("sfa:skip=on,thresh=-1", "thresh must be >= 0"),
+            ("sfa:thresh=2", "thresh requires skip=on"),
         ] {
             let e = parse_spec(s).unwrap_err();
             assert!(e.0.contains(needle), "{s:?} -> {e}");
         }
+    }
+
+    #[test]
+    fn spec_string_roundtrip_property_every_family() {
+        // Satellite pin: parse(engine.spec()).build().spec() == engine.spec()
+        // for randomized configurations of every registry family —
+        // including the FlashSfa skip/thresh parameters, whose f32
+        // display must survive the string round-trip.
+        use crate::util::prop::check;
+        check("parse(spec()).spec() == spec()", 96, |g| {
+            let scorers = ["dense", "sfa_k2", "sfa_k8"];
+            let fam = *g.choose(FAMILIES);
+            let s = match fam {
+                "dense" => "dense".to_string(),
+                "sfa_ref" => format!("sfa_ref:k={}", g.usize_in(1..17)),
+                "flash_dense" => format!(
+                    "flash_dense:bq={},bk={}",
+                    g.usize_in(1..129),
+                    g.usize_in(1..129)
+                ),
+                "sfa" => {
+                    let mut s = format!(
+                        "sfa:k={},bq={},bk={}",
+                        g.usize_in(1..17),
+                        g.usize_in(1..129),
+                        g.usize_in(1..129)
+                    );
+                    if g.bool() {
+                        s.push_str(",skip=on");
+                        if g.bool() {
+                            s.push_str(&format!(",thresh={}", g.f32_in(0.0..16.0)));
+                        }
+                    }
+                    s
+                }
+                "window" => {
+                    format!("window:w={},scorer={}", g.usize_in(1..512), g.choose(&scorers))
+                }
+                "lowrank" => format!(
+                    "lowrank:r={},iters={},seed={},scorer={}",
+                    g.usize_in(1..33),
+                    g.usize_in(1..9),
+                    g.usize_in(0..100),
+                    g.choose(&scorers)
+                ),
+                "mla" => format!(
+                    "mla:r={},seed={},scorer={}",
+                    g.usize_in(1..33),
+                    g.usize_in(0..100),
+                    g.choose(&scorers)
+                ),
+                "performer" => {
+                    format!("performer:m={},seed={}", g.usize_in(1..257), g.usize_in(0..100))
+                }
+                "quant" => format!("quant:scorer={}", g.choose(&scorers)),
+                other => other.to_string(),
+            };
+            let parsed = parse_spec(&s).unwrap();
+            let spec_str = parsed.build().spec();
+            let reparsed = parse_spec(&spec_str).unwrap();
+            assert_eq!(reparsed, parsed, "engine.spec() of {s:?}");
+            assert_eq!(
+                reparsed.build().spec(),
+                spec_str,
+                "parse(spec()).spec() == spec() for {s:?}"
+            );
+            assert_eq!(parsed.canonical(), spec_str, "engine.spec() is canonical for {s:?}");
+        });
     }
 
     #[test]

@@ -50,9 +50,12 @@
 use crate::attention::decode::{
     softmax_probs, softmax_weighted_sum, topk_row, weighted_sum, KvPolicy, PagedKvPolicy,
 };
+use crate::attention::flash_sfa::FlashSfa;
 use crate::attention::registry::{parse_spec, EngineSpec, SpecError};
 use crate::attention::{Engine, HeadTensor, Scorer};
 use crate::kv_cache::paged::{PageError, PagedKvCache, SeqId, SlotLayout};
+use crate::sparse::{topk_codes, CscFeat, TopkCodes};
+use crate::util::matrix::Matrix;
 use crate::util::threadpool::{default_threads, parallel_for_dynamic, SendPtr};
 
 /// Pack two u16 feature ids into one f32 payload slot bit-for-bit.
@@ -392,10 +395,18 @@ impl AttentionSession {
     /// Chunked-prefill outputs for a run of already-cached queries:
     /// row `t` of `q` (batch-1, `n` suffix rows) is scored causally
     /// against the lane's first `start_pos + t + 1` cached tokens —
-    /// the O(suffix × total) compute shape of a real KV-append prefill
-    /// kernel, which is what the prefix-cache hit path pays instead of
-    /// a full-prompt forward. Row `n - 1` equals
-    /// [`Self::lane_last_output`] when the suffix ends the prompt.
+    /// the compute shape of a real KV-append prefill kernel, which is
+    /// what the prefix-cache hit path pays instead of a full-prompt
+    /// forward.
+    ///
+    /// For the Sfa scorer this runs the tiled
+    /// [`FlashSfa::forward_codes_append`] kernel over codes
+    /// reconstructed from the cache payloads (exact skip mode, online
+    /// softmax), so row `n - 1` matches [`Self::lane_last_output`]
+    /// within f32 summation-order tolerance; the Dense scorer keeps the
+    /// per-token two-pass path and stays bitwise equal to it. Greedy
+    /// serve streams never depend on either: the scheduler samples the
+    /// first token from `lane_last_output`.
     pub fn chunked_prefill_outputs(
         &self,
         lane: LaneId,
@@ -414,17 +425,69 @@ impl AttentionSession {
             Scorer::Sfa { k } => k + k.div_ceil(2),
         };
         let mut out = HeadTensor::zeros(1, self.cfg.heads, q.n, d_v);
-        for h in 0..self.cfg.heads {
-            let slots = self.cache.token_slices(l.seqs[h]).expect("lane sequence exists");
-            for t in 0..q.n {
-                let upto = (start_pos + t + 1).min(slots.len());
-                let scores = self.head_scores(&slots[..upto], q.head_row(0, h, t));
-                softmax_weighted_sum(
-                    &scores,
-                    |j| slots[j][v_off..].as_ptr(),
-                    d_v,
-                    out.head_row_mut(0, h, t),
-                );
+        match self.scorer {
+            Scorer::Dense => {
+                for h in 0..self.cfg.heads {
+                    let slots =
+                        self.cache.token_slices(l.seqs[h]).expect("lane sequence exists");
+                    for t in 0..q.n {
+                        let upto = (start_pos + t + 1).min(slots.len());
+                        let scores = self.head_scores(&slots[..upto], q.head_row(0, h, t));
+                        softmax_weighted_sum(
+                            &scores,
+                            |j| slots[j][v_off..].as_ptr(),
+                            d_v,
+                            out.head_row_mut(0, h, t),
+                        );
+                    }
+                }
+            }
+            Scorer::Sfa { k } => {
+                // Tiled KV-append kernel: rebuild the cached top-k key
+                // codes + dense V from the sparse slot payloads, top-k
+                // the suffix queries, and run the block-skipping
+                // FlashSFA append kernel (exact mode) instead of a
+                // per-token scalar loop.
+                let (bq, bk) = match self.spec {
+                    EngineSpec::FlashSfa { bq, bk, .. } => (bq, bk),
+                    _ => (64, 64),
+                };
+                let eng = FlashSfa {
+                    k,
+                    block_q: bq,
+                    block_k: bk,
+                    threads: default_threads(),
+                    skip: true,
+                    skip_thresh: 0.0,
+                };
+                for h in 0..self.cfg.heads {
+                    let slots =
+                        self.cache.token_slices(l.seqs[h]).expect("lane sequence exists");
+                    let total = slots.len();
+                    let mut kvals = Vec::with_capacity(total * k);
+                    let mut kidx = Vec::with_capacity(total * k);
+                    let mut vmat = Matrix::zeros(total, d_v);
+                    for (j, slot) in slots.iter().enumerate() {
+                        kvals.extend_from_slice(&slot[..k]);
+                        for pos in 0..k {
+                            let pair = unpack_idx(slot[k + pos / 2]);
+                            kidx.push(if pos % 2 == 0 { pair.0 } else { pair.1 });
+                        }
+                        vmat.row_mut(j).copy_from_slice(&slot[v_off..v_off + d_v]);
+                    }
+                    let kcodes =
+                        TopkCodes { rows: total, dim: self.cfg.d, k, vals: kvals, idx: kidx };
+                    let kfeat = CscFeat::from_codes(&kcodes);
+                    let mut qm = Matrix::zeros(q.n, self.cfg.d);
+                    for t in 0..q.n {
+                        qm.row_mut(t).copy_from_slice(q.head_row(0, h, t));
+                    }
+                    let qcodes = topk_codes(&qm, k);
+                    let o = eng.forward_codes_append(&qcodes, &kfeat, &vmat, self.cfg.d, start_pos);
+                    for t in 0..q.n {
+                        out.head_row_mut(0, h, t).copy_from_slice(o.row(t));
+                    }
+                }
             }
         }
         out
@@ -1316,17 +1379,26 @@ mod tests {
             assert_eq!(cold_out.data, warm_out.data, "{spec}: first-token output");
 
             // The chunked-prefill compute path (suffix queries over
-            // the causally growing cache) ends on exactly the sampled
-            // first-token output.
+            // the causally growing cache) ends on the sampled
+            // first-token output: bitwise for the dense per-token
+            // loop, within f32 summation-order tolerance for the
+            // tiled SFA append kernel.
             let chunk =
                 sess.chunked_prefill_outputs(warm, &q.slice_rows(shared, plen), shared);
             assert_eq!((chunk.n, chunk.d), (plen - shared, d));
             for h in 0..heads {
-                assert_eq!(
-                    chunk.head_row(0, h, plen - shared - 1),
-                    warm_out.head_row(0, h, 0),
-                    "{spec}: chunked prefill last row == lane_last_output"
-                );
+                let got = chunk.head_row(0, h, plen - shared - 1);
+                let want = warm_out.head_row(0, h, 0);
+                if spec == "dense" {
+                    assert_eq!(got, want, "{spec}: chunked prefill last row");
+                } else {
+                    for (x, y) in got.iter().zip(want) {
+                        assert!(
+                            (x - y).abs() <= 3e-6 + 3e-5 * y.abs().max(x.abs()),
+                            "{spec}: chunked prefill last row: {x} vs {y}"
+                        );
+                    }
+                }
             }
 
             // Decode steps stay bitwise equal lane-for-lane.
@@ -1346,6 +1418,47 @@ mod tests {
             assert_eq!(sess.lane_len(warm), plen + steps);
             sess.release_lane(warm).unwrap();
             assert_eq!(sess.pages_in_use(), 0);
+        }
+    }
+
+    /// The tiled SFA append kernel behind `chunked_prefill_outputs`
+    /// must reproduce the old per-token semantics: every suffix row `t`
+    /// equals a one-row scoring pass over the lane's first
+    /// `start_pos + t + 1` cached tokens (realised here through
+    /// `lane_last_output` on a fork truncated at that depth — the exact
+    /// per-token scalar path the kernel replaced). Greedy serve streams
+    /// can't drift either way: the scheduler samples from
+    /// `lane_last_output` and discards the chunked outputs.
+    #[test]
+    fn chunked_prefill_tiled_kernel_matches_per_token_reference() {
+        for spec in ["sfa:k=4,bq=8,bk=8", "sfa:k=4", "sfa:k=4,bq=4,bk=16"] {
+            let (heads, d) = (2, 16);
+            let (plen, shared) = (13, 5);
+            let cfg = SessionConfig::new(0, heads, d, d).with_paging(4, 4096);
+            let (q, k, v) = full_qkv(1, heads, plen, d, 29);
+            let mut sess = AttentionSession::from_spec(spec, cfg).unwrap();
+            let lane = sess.admit_lane();
+            sess.prefill_lane(lane, &q, &k, &v, true).unwrap();
+
+            let chunk =
+                sess.chunked_prefill_outputs(lane, &q.slice_rows(shared, plen), shared);
+            let srcs = sess.lane_seqs(lane).to_vec();
+            for t in 0..plen - shared {
+                let fork = sess.admit_lane_from_fork(&srcs, shared + t + 1).unwrap();
+                let want = sess.lane_last_output(fork, &at(&q, shared + t));
+                for h in 0..heads {
+                    for (x, y) in
+                        chunk.head_row(0, h, t).iter().zip(want.head_row(0, h, 0))
+                    {
+                        assert!(
+                            (x - y).abs() <= 3e-6 + 3e-5 * y.abs().max(x.abs()),
+                            "{spec}: suffix row {t} head {h}: {x} vs {y}"
+                        );
+                    }
+                }
+                sess.release_lane(fork).unwrap();
+            }
+            sess.release_lane(lane).unwrap();
         }
     }
 

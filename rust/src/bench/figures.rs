@@ -19,6 +19,7 @@ use crate::analysis::bandwidth::{
 use crate::analysis::costmodel::PowerLaw;
 use crate::analysis::flops::{dense_forward, sfa_forward, AttnShape};
 use crate::attention::decode::{DenseKvCache, SparseKvCache};
+use crate::attention::flash_sfa::{FlashSfa, SfaTileCounts};
 use crate::attention::registry::{parse_spec, EngineSpec};
 use crate::attention::{Engine, Scorer};
 use crate::bench::harness::{bench, BenchResult};
@@ -40,14 +41,51 @@ fn qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
 /// Benchmark one registry spec's causal forward and log the result for
 /// `BENCH_attention.json`.
 fn run_forward_spec(spec: &str, n: usize, d: usize, budget_s: f64) -> BenchResult {
+    run_forward_spec_counted(spec, n, d, budget_s).0
+}
+
+/// [`run_forward_spec`] that additionally instruments FlashSFA specs:
+/// one extra counted forward at the same shape yields the tile-level
+/// work counters (dense-visited / folded / threshold-skipped), logged
+/// alongside the timing in `BENCH_attention.json`.
+fn run_forward_spec_counted(
+    spec: &str,
+    n: usize,
+    d: usize,
+    budget_s: f64,
+) -> (BenchResult, Option<SfaTileCounts>) {
     let parsed = parse_spec(spec).expect("engine spec");
     let engine = parsed.build();
     let (q, k, v) = qkv(n, d, 42);
     let r = bench(&engine.name(), budget_s, || {
         std::hint::black_box(engine.forward(&q, &k, &v, true));
     });
-    crate::bench::record(&parsed.canonical(), n, d, parsed.feature_k().unwrap_or(0), &r);
-    r
+    let tiles = match parsed {
+        EngineSpec::FlashSfa { k: fk, bq, bk, skip, thresh } => {
+            let eng = FlashSfa {
+                k: fk,
+                block_q: bq,
+                block_k: bk,
+                threads: crate::util::threadpool::default_threads(),
+                skip,
+                skip_thresh: thresh,
+            };
+            let qc = crate::sparse::topk_codes(&q, fk);
+            let kc = crate::sparse::topk_codes(&k, fk);
+            let kf = crate::sparse::CscFeat::from_codes(&kc);
+            Some(eng.forward_codes_counted(&qc, &kf, &v, d, true).1)
+        }
+        _ => None,
+    };
+    crate::bench::record_with_tiles(
+        &parsed.canonical(),
+        n,
+        d,
+        parsed.feature_k().unwrap_or(0),
+        &r,
+        tiles,
+    );
+    (r, tiles)
 }
 
 /// Paper-taxonomy category of an engine family (Table 10/11 rows).
@@ -75,16 +113,36 @@ fn spec_category(spec: &EngineSpec) -> &'static str {
 pub fn engine_grid(specs: &[String], ctxs: &[usize], d: usize, budget_s: f64) -> Table {
     let mut t = Table::new(
         &format!("Engine grid — forward latency via registry specs (d={d})"),
-        &["engine spec", "ctx", "median", "p95", "speedup vs flash_dense"],
+        &[
+            "engine spec",
+            "ctx",
+            "median",
+            "p95",
+            "speedup vs flash_dense",
+            "tiles v/f/s",
+            "posting hits",
+        ],
     );
+    let tile_cols = |tiles: Option<SfaTileCounts>| -> (String, String) {
+        match tiles {
+            Some(c) => (
+                format!("{}/{}/{}", c.tiles_visited, c.tiles_folded, c.tiles_skipped),
+                c.posting_hits.to_string(),
+            ),
+            None => ("-".into(), "-".into()),
+        }
+    };
     for &ctx in ctxs {
-        let dense = run_forward_spec("flash_dense", ctx, d, budget_s);
+        let (dense, _) = run_forward_spec_counted("flash_dense", ctx, d, budget_s);
+        let (dv, dp) = tile_cols(None);
         t.row(vec![
             "flash_dense".into(),
             ctx.to_string(),
             fmt_time(dense.median_s),
             fmt_time(dense.p95_s),
             "1.00x".into(),
+            dv,
+            dp,
         ]);
         for spec in specs {
             // Only the exact default baseline is deduplicated; other
@@ -92,13 +150,16 @@ pub fn engine_grid(specs: &[String], ctxs: &[usize], d: usize, budget_s: f64) ->
             if parse_spec(spec).ok() == parse_spec("flash_dense").ok() {
                 continue;
             }
-            let r = run_forward_spec(spec, ctx, d, budget_s);
+            let (r, tiles) = run_forward_spec_counted(spec, ctx, d, budget_s);
+            let (tv, tp) = tile_cols(tiles);
             t.row(vec![
                 spec.clone(),
                 ctx.to_string(),
                 fmt_time(r.median_s),
                 fmt_time(r.p95_s),
                 fmt_speedup(dense.median_s / r.median_s),
+                tv,
+                tp,
             ]);
         }
     }
@@ -497,15 +558,37 @@ mod tests {
 
     #[test]
     fn engine_grid_runs_and_records() {
-        let t = engine_grid(&["sfa:k=4".to_string()], &[128], 32, 0.01);
-        assert_eq!(t.rows.len(), 2);
+        let t = engine_grid(
+            &["sfa:k=4,bq=16,bk=16".to_string(), "sfa:k=4,bq=16,bk=16,skip=on".to_string()],
+            &[128],
+            32,
+            0.01,
+        );
+        assert_eq!(t.rows.len(), 3);
         let recs = crate::bench::snapshot_records();
         let hit = recs
             .iter()
-            .find(|r| r.spec == "sfa:k=4,bq=64,bk=64" && r.n == 128 && r.d == 32)
+            .find(|r| r.spec == "sfa:k=4,bq=16,bk=16" && r.n == 128 && r.d == 32)
             .expect("engine grid logged its measurement");
         assert_eq!(hit.k, 4);
         assert!(hit.median_s > 0.0 && hit.p95_s >= hit.median_s);
+        // FlashSFA rows carry tile counters; skip=off runs every
+        // enumerated tile through the dense path, and skip=on
+        // partitions the same causal tile grid.
+        let tiles = hit.tiles.expect("sfa rows carry tile counters");
+        assert!(tiles.tiles_visited > 0 && tiles.total_tiles() > 0);
+        assert_eq!(tiles.tiles_folded + tiles.tiles_skipped, 0);
+        let skip_hit = recs
+            .iter()
+            .find(|r| r.spec == "sfa:k=4,bq=16,bk=16,skip=on" && r.n == 128)
+            .expect("skip=on row recorded");
+        let st = skip_hit.tiles.expect("skip row carries counters");
+        assert_eq!(st.total_tiles(), tiles.total_tiles());
+        let dense_rec = recs
+            .iter()
+            .find(|r| r.spec == "flash_dense:bq=64,bk=64" && r.n == 128)
+            .expect("baseline recorded");
+        assert!(dense_rec.tiles.is_none(), "non-sfa rows omit counters");
     }
 
     #[test]

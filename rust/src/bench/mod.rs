@@ -17,6 +17,8 @@ pub mod table;
 
 use std::sync::Mutex;
 
+use crate::attention::flash_sfa::SfaTileCounts;
+
 pub use harness::{bench, bench_n, BenchResult};
 pub use table::Table;
 
@@ -33,12 +35,28 @@ pub struct BenchRecord {
     pub k: usize,
     pub median_s: f64,
     pub p95_s: f64,
+    /// Tile-level work counters from one instrumented FlashSFA forward
+    /// (None for engines without a tiled sparse kernel).
+    pub tiles: Option<SfaTileCounts>,
 }
 
 static RECORDS: Mutex<Vec<BenchRecord>> = Mutex::new(Vec::new());
 
 /// Append one engine measurement to the process-wide record log.
 pub fn record(spec: &str, n: usize, d: usize, k: usize, r: &BenchResult) {
+    record_with_tiles(spec, n, d, k, r, None);
+}
+
+/// [`record`] plus the tile counters from one instrumented FlashSFA
+/// forward at the same shape.
+pub fn record_with_tiles(
+    spec: &str,
+    n: usize,
+    d: usize,
+    k: usize,
+    r: &BenchResult,
+    tiles: Option<SfaTileCounts>,
+) {
     RECORDS.lock().unwrap().push(BenchRecord {
         spec: spec.to_string(),
         n,
@@ -46,6 +64,7 @@ pub fn record(spec: &str, n: usize, d: usize, k: usize, r: &BenchResult) {
         k,
         median_s: r.median_s,
         p95_s: r.p95_s,
+        tiles,
     });
 }
 
@@ -79,14 +98,21 @@ pub fn records_to_json(records: &[BenchRecord]) -> String {
         records
             .iter()
             .map(|r| {
-                obj(vec![
+                let mut fields = vec![
                     ("engine", Json::from(r.spec.as_str())),
                     ("n", Json::from(r.n)),
                     ("d", Json::from(r.d)),
                     ("k", Json::from(r.k)),
                     ("median_s", Json::from(r.median_s)),
                     ("p95_s", Json::from(r.p95_s)),
-                ])
+                ];
+                if let Some(t) = &r.tiles {
+                    fields.push(("tiles_visited", Json::from(t.tiles_visited as usize)));
+                    fields.push(("tiles_folded", Json::from(t.tiles_folded as usize)));
+                    fields.push(("tiles_skipped", Json::from(t.tiles_skipped as usize)));
+                    fields.push(("posting_hits", Json::from(t.posting_hits as usize)));
+                }
+                obj(fields)
             })
             .collect(),
     )
@@ -108,6 +134,12 @@ mod tests {
                 k: 8,
                 median_s: 0.0123,
                 p95_s: 0.0150,
+                tiles: Some(SfaTileCounts {
+                    tiles_visited: 100,
+                    tiles_folded: 20,
+                    tiles_skipped: 16,
+                    posting_hits: 4096,
+                }),
             },
             BenchRecord {
                 spec: "flash_dense:bq=64,bk=64".into(),
@@ -116,6 +148,7 @@ mod tests {
                 k: 0,
                 median_s: 0.05,
                 p95_s: 0.06,
+                tiles: None,
             },
         ];
         let text = records_to_json(&recs);
@@ -125,6 +158,9 @@ mod tests {
         assert_eq!(arr[0].get("engine").unwrap().as_str().unwrap(), "sfa:k=8,bq=64,bk=64");
         assert_eq!(arr[0].get("n").unwrap().as_usize().unwrap(), 1024);
         assert_eq!(arr[0].get("k").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(arr[0].get("tiles_folded").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(arr[0].get("posting_hits").unwrap().as_usize().unwrap(), 4096);
+        assert!(arr[1].get("tiles_visited").is_none(), "non-sfa rows omit tile counters");
         assert!((arr[1].get("median_s").unwrap().as_f64().unwrap() - 0.05).abs() < 1e-12);
     }
 }

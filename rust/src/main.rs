@@ -63,7 +63,8 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
               workload: hit rate, TTFT gain, bit-identical streams —
               recorded in BENCH_serve.json)
   sfa analyze entropy|svd|memory|session [--variant V] [--steps N] [--engine SPEC]
-engine SPECs: dense | flash_dense:bq=64,bk=64 | sfa:k=8,bq=64,bk=64 | sfa_ref:k=8
+engine SPECs: dense | flash_dense:bq=64,bk=64 | sfa:k=8,bq=64,bk=64[,skip=on[,thresh=T]]
+              | sfa_ref:k=8
               | window:w=256,scorer=sfa_k8 | lowrank:r=16 | mla:r=16
               | performer:m=128 | quant:scorer=sfa_k8
 KV policies:  none | h2o[:budget=128,recent=16] | snapkv[:budget=128,recent=16]
@@ -569,7 +570,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
             b.print();
         }
         Some("engines") => {
-            let specs = parse_spec_list(&args.str_or("engines", "flash_dense;sfa:k=8"))?;
+            let specs = parse_spec_list(
+                &args.str_or("engines", "flash_dense;sfa:k=8;sfa:k=8,skip=on"),
+            )?;
             figures::engine_grid(
                 &specs,
                 &args.usize_list_or("ctxs", &[1024, 4096])?,

@@ -436,9 +436,11 @@ pub(crate) fn start_seq(
             }
             // ... and pay the chunked-prefill compute: every suffix
             // query attends the cached prefix plus its causal suffix
-            // predecessors — O(suffix × total), the KV-append kernel
-            // shape (outputs discarded; the first token is sampled
-            // below through the exact same scoring path).
+            // predecessors. For SFA specs this runs the tiled
+            // block-skipping append kernel; dense keeps the per-token
+            // loop. Outputs are discarded either way — the first token
+            // is sampled below from `lane_last_output`, so greedy
+            // streams are bit-for-bit independent of which kernel ran.
             let qs = q.slice_rows(hit.shared, plen);
             let _ = group.session.chunked_prefill_outputs(lane, &qs, hit.shared);
             lane

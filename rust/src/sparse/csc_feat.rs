@@ -96,6 +96,12 @@ impl CscFeat {
             .sum()
     }
 
+    /// Build the per-(feature, key-tile) block index used by the
+    /// block-skipping FlashSFA kernel. O(nnz + dim · n_tiles).
+    pub fn block_index(&self, tile: usize) -> CscBlockIndex {
+        CscBlockIndex::build(self, tile)
+    }
+
     /// Structural invariants.
     pub fn validate(&self) -> Result<(), String> {
         if self.indptr.len() != self.dim + 1 {
@@ -118,6 +124,92 @@ impl CscFeat {
             }
         }
         Ok(())
+    }
+}
+
+/// Block index over a [`CscFeat`]: key tiles of `tile` tokens, and for
+/// every (feature, tile) cell the posting sub-range plus a max-|value|
+/// summary. The block-skipping FlashSFA kernel classifies each key tile
+/// from this in O(k) per query row — *empty* cells (zero degree) fold
+/// into the softmax in O(1) per row, and the max-|value| summaries give
+/// a tile score upper bound for threshold skipping ("Block Sparse Flash
+/// Attention"-style, driven by feature overlap instead of a learned
+/// block mask).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscBlockIndex {
+    /// Tokens per key tile (the kernel's Bc).
+    pub tile: usize,
+    pub n_tiles: usize,
+    pub dim: usize,
+    /// dim × (n_tiles + 1), row-major: `starts[f · (n_tiles+1) + t]` is
+    /// the absolute offset into `token_ids`/`vals` of the first posting
+    /// of feature f with token id ≥ t·tile; the cell's range is
+    /// `starts[f][t]..starts[f][t+1]` (so the trailing entry is
+    /// `indptr[f+1]`).
+    pub starts: Vec<u32>,
+    /// dim × n_tiles, row-major: max |value| within the cell, 0.0 when
+    /// the cell is empty.
+    pub max_abs: Vec<f32>,
+}
+
+impl CscBlockIndex {
+    pub fn build(feat: &CscFeat, tile: usize) -> CscBlockIndex {
+        assert!(tile >= 1, "tile width must be >= 1");
+        let n_tiles = feat.n_tokens.div_ceil(tile).max(1);
+        let stride = n_tiles + 1;
+        let mut starts = vec![0u32; feat.dim * stride];
+        let mut max_abs = vec![0f32; feat.dim * n_tiles];
+        for f in 0..feat.dim {
+            let base = feat.indptr[f];
+            let end = feat.indptr[f + 1];
+            let row = &mut starts[f * stride..(f + 1) * stride];
+            row[0] = base;
+            // One monotone walk over the posting list: emit each tile
+            // boundary as the walk crosses it, fold |v| into the cell.
+            let mut t = 0usize;
+            for c in base..end {
+                let tok = feat.token_ids[c as usize] as usize;
+                let cell = tok / tile;
+                while t < cell {
+                    t += 1;
+                    row[t] = c;
+                }
+                let m = &mut max_abs[f * n_tiles + cell];
+                *m = m.max(feat.vals[c as usize].abs());
+            }
+            while t < n_tiles {
+                t += 1;
+                row[t] = end;
+            }
+        }
+        CscBlockIndex { tile, n_tiles, dim: feat.dim, starts, max_abs }
+    }
+
+    /// Absolute posting offset of the first posting of feature `f` in
+    /// tile `t` (or past it, when the cell is empty). `t == n_tiles`
+    /// gives the end of the feature's posting list.
+    #[inline]
+    pub fn start(&self, f: usize, t: usize) -> u32 {
+        self.starts[f * (self.n_tiles + 1) + t]
+    }
+
+    /// Posting sub-range of the (feature, tile) cell, as absolute
+    /// offsets into the parent's `token_ids` / `vals`.
+    #[inline]
+    pub fn range(&self, f: usize, t: usize) -> std::ops::Range<usize> {
+        self.start(f, t) as usize..self.start(f, t + 1) as usize
+    }
+
+    /// Number of postings of feature `f` inside tile `t`.
+    #[inline]
+    pub fn degree(&self, f: usize, t: usize) -> u32 {
+        self.start(f, t + 1) - self.start(f, t)
+    }
+
+    /// Max |value| of feature `f` inside tile `t` (0.0 when empty).
+    #[inline]
+    pub fn cell_max_abs(&self, f: usize, t: usize) -> f32 {
+        self.max_abs[f * self.n_tiles + t]
     }
 }
 
@@ -245,6 +337,54 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn block_index_ranges_match_binary_search() {
+        // Every (feature, tile) cell of the block index must agree with
+        // posting_range on the same token window, and the max-|value|
+        // summary must equal the true max over that window.
+        check("block index == posting_range", 48, |g| {
+            let n = g.usize_in(1..96);
+            let d = 32;
+            let k = g.usize_in(1..9);
+            let tile = *g.choose(&[1usize, 3, 8, 16, 64]);
+            let (_, feat) = fixture(n, d, k, g.seed);
+            let bi = feat.block_index(tile);
+            assert_eq!(bi.n_tiles, n.div_ceil(tile).max(1));
+            for f in 0..d {
+                for t in 0..bi.n_tiles {
+                    let lo = (t * tile) as u32;
+                    let hi = ((t + 1) * tile).min(n) as u32;
+                    let expect = feat.posting_range(f, lo, hi.max(lo));
+                    assert_eq!(bi.range(f, t), expect, "f={f} t={t}");
+                    assert_eq!(bi.degree(f, t) as usize, expect.len());
+                    let true_max = feat.vals[expect]
+                        .iter()
+                        .fold(0f32, |a, &v| a.max(v.abs()));
+                    assert_eq!(bi.cell_max_abs(f, t), true_max, "f={f} t={t}");
+                }
+                assert_eq!(bi.start(f, bi.n_tiles), feat.indptr[f + 1]);
+            }
+        });
+    }
+
+    #[test]
+    fn block_index_degenerate_shapes() {
+        // Zero tokens and tile widths larger than the sequence.
+        let codes = TopkCodes { rows: 0, dim: 4, k: 2, vals: vec![], idx: vec![] };
+        let feat = CscFeat::from_codes(&codes);
+        let bi = feat.block_index(8);
+        assert_eq!(bi.n_tiles, 1);
+        for f in 0..4 {
+            assert_eq!(bi.degree(f, 0), 0);
+            assert_eq!(bi.cell_max_abs(f, 0), 0.0);
+        }
+        let (_, feat) = fixture(5, 16, 2, 11);
+        let bi = feat.block_index(64);
+        assert_eq!(bi.n_tiles, 1);
+        let total: u32 = (0..16).map(|f| bi.degree(f, 0)).sum();
+        assert_eq!(total as usize, feat.nnz());
     }
 
     #[test]

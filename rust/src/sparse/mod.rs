@@ -12,6 +12,6 @@ pub mod memory;
 pub mod spgemm;
 pub mod topk;
 
-pub use csc_feat::CscFeat;
+pub use csc_feat::{CscBlockIndex, CscFeat};
 pub use csr::{CsrMatrix, TopkCodes};
 pub use topk::{topk_codes, topk_codes_full_sort, TopkAlgo};

@@ -90,6 +90,41 @@ where
     });
 }
 
+/// [`parallel_for_dynamic`] with a stable worker index: `f(worker, i)`
+/// where `worker < threads` identifies the executing thread. Callers
+/// hand each worker its own reusable scratch slot (disjoint `&mut`
+/// access via raw splitting) so hot loops allocate nothing after
+/// warm-up.
+pub fn parallel_for_dynamic_worker<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        for i in 0..n {
+            f(0, i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let grain = grain.max(1);
+    std::thread::scope(|s| {
+        for w in 0..threads {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + grain).min(n) {
+                    f(w, i);
+                }
+            });
+        }
+    });
+}
+
 /// Map over `[0, n)` in parallel, collecting results in order.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
@@ -149,6 +184,24 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 777);
+    }
+
+    #[test]
+    fn worker_indexed_covers_range_with_bounded_workers() {
+        let hits = AtomicU64::new(0);
+        let bad_worker = AtomicU64::new(0);
+        parallel_for_dynamic_worker(500, 4, 7, |w, _| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            if w >= 4 {
+                bad_worker.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 500);
+        assert_eq!(bad_worker.load(Ordering::Relaxed), 0);
+        // Single-thread path pins worker 0.
+        parallel_for_dynamic_worker(10, 1, 1, |w, _| {
+            assert_eq!(w, 0);
+        });
     }
 
     #[test]
