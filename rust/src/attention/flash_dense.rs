@@ -26,12 +26,14 @@ impl Default for FlashDense {
 }
 
 impl FlashDense {
+    /// `causal` is the diagonal offset: `Some(off)` lets query row `i`
+    /// attend keys `0..=i + off`; `None` attends everything.
     fn forward_tile(
         &self,
         q: &Matrix,
         k: &Matrix,
         v: &Matrix,
-        causal: bool,
+        causal: Option<usize>,
         i0: usize,
         out: &mut [f32],
     ) {
@@ -42,7 +44,10 @@ impl FlashDense {
         let mut os = OnlineSoftmax::new(br, v.cols);
         let mut score_tile = vec![0f32; br * self.block_k];
 
-        let j_max = if causal { (i0 + br).min(n) } else { n };
+        let j_max = match causal {
+            Some(off) => (i0 + br + off).min(n),
+            None => n,
+        };
         let mut j0 = 0;
         while j0 < j_max {
             let bc = self.block_k.min(j_max - j0);
@@ -58,10 +63,10 @@ impl FlashDense {
                     }
                     *s = acc * scale;
                 }
-                if causal {
-                    let row_global = i0 + r;
+                if let Some(off) = causal {
+                    let visible = i0 + r + off;
                     for (c, s) in srow.iter_mut().enumerate() {
-                        if j0 + c > row_global {
+                        if j0 + c > visible {
                             *s = NEG_INF;
                         }
                     }
@@ -76,18 +81,8 @@ impl FlashDense {
         }
         os.finish(out);
     }
-}
 
-impl Engine for FlashDense {
-    fn name(&self) -> String {
-        format!("flash_dense(bq={},bk={})", self.block_q, self.block_k)
-    }
-
-    fn spec(&self) -> String {
-        format!("flash_dense:bq={},bk={}", self.block_q, self.block_k)
-    }
-
-    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+    fn forward_offset(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: Option<usize>) -> Matrix {
         assert_eq!(q.cols, k.cols);
         assert_eq!(k.rows, v.rows);
         let mut out = Matrix::zeros(q.rows, v.cols);
@@ -103,6 +98,36 @@ impl Engine for FlashDense {
             self.forward_tile(q, k, v, causal, i0, out_slice);
         });
         out
+    }
+
+    /// KV-append variant for chunked prefill: query row `t` attends
+    /// keys `0..=start_pos + t` of the (longer) cached key sequence — a
+    /// suffix of `q.rows` new positions over a `start_pos`-token cached
+    /// prefix plus the causal suffix itself. `start_pos == 0` with
+    /// `q.rows == k.rows` is exactly the causal [`Engine::forward`].
+    pub fn forward_append(&self, q: &Matrix, k: &Matrix, v: &Matrix, start_pos: usize) -> Matrix {
+        assert!(
+            start_pos + q.rows <= k.rows,
+            "append window {}+{} exceeds cached keys {}",
+            start_pos,
+            q.rows,
+            k.rows
+        );
+        self.forward_offset(q, k, v, Some(start_pos))
+    }
+}
+
+impl Engine for FlashDense {
+    fn name(&self) -> String {
+        format!("flash_dense(bq={},bk={})", self.block_q, self.block_k)
+    }
+
+    fn spec(&self) -> String {
+        format!("flash_dense:bq={},bk={}", self.block_q, self.block_k)
+    }
+
+    fn forward(&self, q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+        self.forward_offset(q, k, v, causal.then_some(0))
     }
 }
 
@@ -144,5 +169,45 @@ mod tests {
         let a = FlashDense { block_q: 16, block_k: 32, threads: 4 }.forward(&q, &k, &v, true);
         let b = DenseAttention.forward(&q, &k, &v, true);
         assert_close(&a, &b, 2e-5, 2e-6);
+    }
+
+    #[test]
+    fn append_suffix_matches_causal_forward_rows() {
+        // forward_append over a query suffix must reproduce the matching
+        // rows of the full causal forward — the chunked-prefill contract.
+        check("dense append == causal suffix rows", 24, |g| {
+            let total = g.usize_in(2..80);
+            let n_q = g.usize_in(1..total + 1);
+            let start = total - n_q;
+            let d = *g.choose(&[8usize, 16, 32]);
+            let bq = *g.choose(&[4usize, 16, 64]);
+            let bk = *g.choose(&[4usize, 16, 64]);
+            let (q, k, v) = qkv(total, d, d, g.seed);
+            let mut qsuf = Matrix::zeros(n_q, d);
+            for t in 0..n_q {
+                qsuf.row_mut(t).copy_from_slice(q.row(start + t));
+            }
+            let eng = FlashDense { block_q: bq, block_k: bk, threads: 2 };
+            let got = eng.forward_append(&qsuf, &k, &v, start);
+            let full = DenseAttention.forward(&q, &k, &v, true);
+            for t in 0..n_q {
+                for c in 0..v.cols {
+                    let (a, b) = (got.get(t, c), full.get(start + t, c));
+                    assert!(
+                        (a - b).abs() <= 2e-5 + 2e-5 * b.abs(),
+                        "row {t} col {c}: {a} vs {b}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn append_with_zero_start_equals_causal_forward() {
+        let (q, k, v) = qkv(50, 16, 16, 11);
+        let eng = FlashDense { block_q: 16, block_k: 16, threads: 2 };
+        let a = eng.forward_append(&q, &k, &v, 0);
+        let b = eng.forward(&q, &k, &v, true);
+        assert_close(&a, &b, 0.0, 0.0); // identical fp sequence
     }
 }

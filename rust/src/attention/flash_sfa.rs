@@ -60,6 +60,13 @@ pub struct FlashSfa {
     /// `row_max - skip_thresh` for every row of the query tile is
     /// dropped entirely. 0 disables threshold skipping (exact mode).
     pub skip_thresh: f32,
+    /// Target dropped unnormalized mass per row (`mass=` in the spec
+    /// grammar): when > 0 the threshold margin is derived at forward
+    /// time as `ln(n_kv / mass)` so the per-row dropped mass stays
+    /// bounded by `mass` at any context length, instead of the
+    /// hand-picked `skip_thresh` constant. Mutually exclusive with
+    /// `skip_thresh`; 0 disables the auto-tuned mode.
+    pub skip_mass: f32,
 }
 
 /// Tile-level work counters of one forward pass (the OpCounts-style
@@ -75,6 +82,11 @@ pub struct SfaTileCounts {
     pub tiles_folded: u64,
     /// Tiles dropped by the threshold bound (approximate, opt-in).
     pub tiles_skipped: u64,
+    /// Individual rows of *visited* tiles dropped by the same per-row
+    /// bound (sub-tile early exit; approximate, opt-in with the tile
+    /// threshold). Not part of [`Self::total_tiles`] — a row skip
+    /// happens inside a tile that still counts as visited.
+    pub rows_skipped: u64,
     /// Posting-list entries consumed by the dense walks.
     pub posting_hits: u64,
 }
@@ -84,6 +96,7 @@ impl SfaTileCounts {
         self.tiles_visited += o.tiles_visited;
         self.tiles_folded += o.tiles_folded;
         self.tiles_skipped += o.tiles_skipped;
+        self.rows_skipped += o.rows_skipped;
         self.posting_hits += o.posting_hits;
     }
 
@@ -128,6 +141,7 @@ impl FlashSfa {
             threads: crate::util::threadpool::default_threads(),
             skip: false,
             skip_thresh: 0.0,
+            skip_mass: 0.0,
         }
     }
 
@@ -198,7 +212,16 @@ impl FlashSfa {
         let n_tiles = n_q.div_ceil(self.block_q);
         let out_ptr = SendPtr(out.data.as_mut_ptr());
         let kq = q_codes.k;
-        let thresh_on = self.skip && self.skip_thresh > 0.0;
+        // Auto-tuned margin: `mass=EPS` derives thresh from the actual
+        // key count so the per-row dropped unnormalized mass stays
+        // bounded by EPS (n·exp(-ln(n/EPS)) = EPS). EPS >= n would need
+        // thresh <= 0 — the bound is vacuous there, so stay exact.
+        let eff_thresh = if self.skip_mass > 0.0 {
+            (n_kv.max(1) as f32 / self.skip_mass).ln().max(0.0)
+        } else {
+            self.skip_thresh
+        };
+        let thresh_on = self.skip && eff_thresh > 0.0;
 
         // Block-skip summaries, built once per forward: the per-cell
         // posting index and the per-tile V row sums the empty fold
@@ -271,6 +294,10 @@ impl FlashSfa {
                 // j0 stays block_k-aligned (only the final tile of the
                 // loop can be partial), so this is the block-index cell.
                 let t = j0 / self.block_k;
+                // True once `scr.ub[..br]` holds this tile's per-row
+                // score bounds — the dense path reuses them for the
+                // sub-tile (per-row) early exit.
+                let mut rows_bounded = false;
 
                 if let Some(bi) = bi {
                     let empty = scr.feats.iter().all(|&f| bi.degree(f as usize, t) == 0);
@@ -310,8 +337,9 @@ impl FlashSfa {
                                 *u = acc * scale;
                             }
                         }
+                        rows_bounded = true;
                         let skippable = (0..br).all(|r| {
-                            scr.ub[r].max(0.0) < scr.os.row_max(r) - self.skip_thresh
+                            scr.ub[r].max(0.0) < scr.os.row_max(r) - eff_thresh
                         });
                         if skippable {
                             // Jump every cursor to the next block
@@ -341,6 +369,22 @@ impl FlashSfa {
                     let srow = &mut score_tile[r * bc..(r + 1) * bc];
                     let idx = q_codes.row_idx(i0 + r);
                     let vals = q_codes.row_vals(i0 + r);
+                    // Sub-tile early exit: the tile as a whole was dense,
+                    // but this row's bound is still negligible — drop the
+                    // row alone (NEG_INF scores contribute zero mass,
+                    // exactly a threshold skip restricted to one row) and
+                    // jump its cursors past the tile.
+                    if rows_bounded && scr.ub[r].max(0.0) < scr.os.row_max(r) - eff_thresh {
+                        srow.fill(NEG_INF);
+                        if let Some(bi) = bi {
+                            for (slot, &f) in idx.iter().enumerate() {
+                                scr.cursors[r * kq + slot] =
+                                    scr.cursors[r * kq + slot].max(bi.start(f as usize, t + 1));
+                            }
+                        }
+                        scr.counts.rows_skipped += 1;
+                        continue;
+                    }
                     for (slot, (&f, &qv)) in idx.iter().zip(vals).enumerate() {
                         if qv == 0.0 {
                             continue;
@@ -403,7 +447,9 @@ impl Engine for FlashSfa {
         let mut s = format!("sfa:k={},bq={},bk={}", self.k, self.block_q, self.block_k);
         if self.skip {
             s.push_str(",skip=on");
-            if self.skip_thresh != 0.0 {
+            if self.skip_mass > 0.0 {
+                s.push_str(&format!(",mass={}", self.skip_mass));
+            } else if self.skip_thresh != 0.0 {
                 s.push_str(&format!(",thresh={}", self.skip_thresh));
             }
         }
@@ -444,6 +490,7 @@ mod tests {
                 threads: 2,
                 skip: false,
                 skip_thresh: 0.0,
+                skip_mass: 0.0,
             };
             let a = engine.forward(&q, &kk, &v, causal);
             let b = SfaReference { k: k.min(d) }.forward(&q, &kk, &v, causal);
@@ -568,6 +615,7 @@ mod tests {
                 threads: 2,
                 skip: false,
                 skip_thresh: 0.0,
+                skip_mass: 0.0,
             };
             let on = FlashSfa { skip: true, ..off };
             let (a, ca) = on.forward_codes_counted(&qc, &kf, &v, d, causal);
@@ -600,7 +648,7 @@ mod tests {
         let kc = topk_codes(&k, 4);
         let kf = CscFeat::from_codes(&kc);
         let off =
-            FlashSfa { k: 4, block_q: 16, block_k: 16, threads: 2, skip: false, skip_thresh: 0.0 };
+            FlashSfa { k: 4, block_q: 16, block_k: 16, threads: 2, skip: false, skip_thresh: 0.0, skip_mass: 0.0 };
         let on = FlashSfa { skip: true, ..off };
         let (a, counts) = on.forward_codes_counted(&qc, &kf, &v, d, true);
         let b = off.forward_codes(&qc, &kf, &v, d, true);
@@ -638,7 +686,7 @@ mod tests {
         let kc = topk_codes(&k, 2);
         let kf = CscFeat::from_codes(&kc);
         let exact =
-            FlashSfa { k: 2, block_q: 16, block_k: 16, threads: 2, skip: false, skip_thresh: 0.0 };
+            FlashSfa { k: 2, block_q: 16, block_k: 16, threads: 2, skip: false, skip_thresh: 0.0, skip_mass: 0.0 };
         let approx = FlashSfa { skip: true, skip_thresh: 8.0, ..exact };
         let (a, counts) = approx.forward_codes_counted(&qc, &kf, &v, d, false);
         let b = exact.forward_codes(&qc, &kf, &v, d, false);
@@ -676,6 +724,7 @@ mod tests {
                 threads: 2,
                 skip,
                 skip_thresh: 0.0,
+                skip_mass: 0.0,
             };
             let got = eng.forward_codes_append(&qc_suffix, &kf, &v, d, start);
             // Reference: densified codes, two-pass softmax per row over
@@ -718,7 +767,7 @@ mod tests {
         let kf = CscFeat::from_codes(&kc);
         for skip in [false, true] {
             let eng =
-                FlashSfa { k: 4, block_q: 8, block_k: 8, threads: 2, skip, skip_thresh: 0.0 };
+                FlashSfa { k: 4, block_q: 8, block_k: 8, threads: 2, skip, skip_thresh: 0.0, skip_mass: 0.0 };
             let a = eng.forward_codes_append(&qc, &kf, &v, 32, 0);
             let b = eng.forward_codes(&qc, &kf, &v, 32, true);
             assert_close(&a, &b, 1e-6, 1e-7);
@@ -732,12 +781,131 @@ mod tests {
         let kc = topk_codes(&k, 4);
         let kf = CscFeat::from_codes(&kc);
         let eng =
-            FlashSfa { k: 4, block_q: 16, block_k: 16, threads: 3, skip: true, skip_thresh: 0.0 };
+            FlashSfa { k: 4, block_q: 16, block_k: 16, threads: 3, skip: true, skip_thresh: 0.0, skip_mass: 0.0 };
         let (_, c) = eng.forward_codes_counted(&qc, &kf, &v, 32, true);
         // Causal 70 rows, Bq=Bc=16: query tile ti enumerates
         // ceil(min(70, (ti+1)*16)/16) key tiles.
         let expected: u64 = (0..5u64).map(|ti| (ti + 1).min(5)).sum();
         assert_eq!(c.total_tiles(), expected);
         assert!(c.posting_hits > 0);
+        assert_eq!(c.rows_skipped, 0, "exact mode never row-skips");
+    }
+
+    #[test]
+    fn per_row_early_exit_engages_inside_dense_tiles() {
+        // Even query rows carry only the dominant feature 0 (matched
+        // strongly by the first keys, so their running max is huge and
+        // later tiles' bounds are negligible); odd rows also carry
+        // feature 1, which later keys match strongly — so every later
+        // tile is dense *for the tile* but skippable row-by-row: the
+        // even rows must take the sub-tile early exit while the odd
+        // rows still accumulate exactly.
+        let n = 64;
+        let d = 16;
+        let mut q = Matrix::zeros(n, d);
+        let mut k = Matrix::zeros(n, d);
+        let mut v = Matrix::zeros(n, 4);
+        for i in 0..n {
+            q.set(i, 0, 8.0);
+            if i % 2 == 1 {
+                q.set(i, 1, 6.0);
+            }
+            if i < 8 {
+                k.set(i, 0, 8.0); // score 64/√16 = 16 for every row
+            } else {
+                k.set(i, 0, 1e-3); // even-row bound ≈ 2e-3 « 16 − 8
+                k.set(i, 1, 6.0); // odd-row score 9 > 16 − 8: tile stays
+            }
+            for c in 0..4 {
+                v.set(i, c, ((i + c) % 5) as f32 - 2.0);
+            }
+        }
+        let qc = topk_codes(&q, 2);
+        let kc = topk_codes(&k, 2);
+        let kf = CscFeat::from_codes(&kc);
+        let exact = FlashSfa {
+            k: 2,
+            block_q: 8,
+            block_k: 8,
+            threads: 2,
+            skip: false,
+            skip_thresh: 0.0,
+            skip_mass: 0.0,
+        };
+        let approx = FlashSfa { skip: true, skip_thresh: 8.0, ..exact };
+        let (a, counts) = approx.forward_codes_counted(&qc, &kf, &v, d, false);
+        let b = exact.forward_codes(&qc, &kf, &v, d, false);
+        assert!(counts.rows_skipped > 0, "per-row exit must engage: {counts:?}");
+        assert!(counts.tiles_visited > 0, "odd rows keep the tiles dense: {counts:?}");
+        // Same n·exp(-thresh) mass bound as whole-tile skipping.
+        assert_close(&a, &b, 5e-3, 5e-3);
+    }
+
+    #[test]
+    fn mass_mode_equals_explicitly_derived_thresh() {
+        // skip_mass=EPS must take exactly the path skip_thresh=ln(n/EPS)
+        // takes: same tile decisions, same fp sequence, identical output.
+        let (q, k, v) = qkv(96, 32, 16, 21);
+        let qc = topk_codes(&q, 4);
+        let kc = topk_codes(&k, 4);
+        let kf = CscFeat::from_codes(&kc);
+        let eps = 0.05f32;
+        let base = FlashSfa {
+            k: 4,
+            block_q: 16,
+            block_k: 16,
+            threads: 2,
+            skip: true,
+            skip_thresh: 0.0,
+            skip_mass: 0.0,
+        };
+        let by_mass = FlashSfa { skip_mass: eps, ..base };
+        let by_thresh = FlashSfa { skip_thresh: (96.0f32 / eps).ln(), ..base };
+        let (a, ca) = by_mass.forward_codes_counted(&qc, &kf, &v, 32, true);
+        let (b, cb) = by_thresh.forward_codes_counted(&qc, &kf, &v, 32, true);
+        assert_close(&a, &b, 0.0, 0.0);
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn mass_bound_property() {
+        // Satellite pin: with `mass=EPS` the per-row dropped
+        // unnormalized mass is ≤ EPS (thresh = ln(n/EPS) ⇒ each dropped
+        // key ≤ exp(-thresh), at most n of them), and the retained mass
+        // is ≥ exp(0) = 1 (the max key always survives: its bound equals
+        // the running max, never below it). So every output element
+        // moves by at most ~2·EPS·max|V| — the property a hand-picked
+        // thresh can't promise across context lengths.
+        check("mass=EPS bounds output drift", 24, |g| {
+            let n = g.usize_in(16..128);
+            let d = 16;
+            let k = g.usize_in(2..5);
+            let causal = g.bool();
+            let eps = *g.choose(&[0.5f32, 0.05, 0.005]);
+            let (q, kk, v) = qkv(n, d, 4, g.seed);
+            let qc = topk_codes(&q, k);
+            let kc = topk_codes(&kk, k);
+            let kf = CscFeat::from_codes(&kc);
+            let exact = FlashSfa {
+                k,
+                block_q: 8,
+                block_k: 8,
+                threads: 2,
+                skip: false,
+                skip_thresh: 0.0,
+                skip_mass: 0.0,
+            };
+            let approx = FlashSfa { skip: true, skip_mass: eps, ..exact };
+            let a = approx.forward_codes(&qc, &kf, &v, d, causal);
+            let b = exact.forward_codes(&qc, &kf, &v, d, causal);
+            let vmax = v.data.iter().fold(0f32, |m, x| m.max(x.abs()));
+            let tol = 2.2 * eps * vmax + 1e-4;
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert!(
+                    (x - y).abs() <= tol,
+                    "n={n} eps={eps}: {x} vs {y} beyond mass bound {tol}"
+                );
+            }
+        });
     }
 }

@@ -10,6 +10,10 @@
 //! sfa:k=8,bq=64,bk=64            (alias: flash_sfa)
 //! sfa:k=8,skip=on,thresh=8      (block-skipping FlashSFA; thresh
 //!                                 optional, 0 = exact empty-tile folds)
+//! sfa:k=8,skip=on,mass=0.01     (auto-tuned threshold: derives
+//!                                 thresh = ln(n/mass) at forward time so
+//!                                 the dropped mass per row is bounded by
+//!                                 `mass`; mutually exclusive with thresh)
 //! sfa_ref:k=8
 //! window:w=256,scorer=sfa_k8
 //! lowrank:r=16,iters=6,seed=0,scorer=dense
@@ -77,7 +81,7 @@ pub enum EngineSpec {
     Dense,
     SfaRef { k: usize },
     FlashDense { bq: usize, bk: usize },
-    FlashSfa { k: usize, bq: usize, bk: usize, skip: bool, thresh: f32 },
+    FlashSfa { k: usize, bq: usize, bk: usize, skip: bool, thresh: f32, mass: f32 },
     Window { w: usize, scorer: Scorer },
     LowRank { r: usize, iters: usize, seed: u64, scorer: Scorer },
     Mla { r: usize, seed: u64, scorer: Scorer },
@@ -202,6 +206,7 @@ pub fn parse_spec(spec: &str) -> Result<EngineSpec, SpecError> {
             bk: p.take_usize("bk", 64)?,
             skip: p.take_on_off("skip", false)?,
             thresh: p.take_f32("thresh", 0.0)?,
+            mass: p.take_f32("mass", 0.0)?,
         },
         "window" => EngineSpec::Window {
             w: p.take_usize("w", 256)?,
@@ -269,12 +274,23 @@ impl EngineSpec {
                 self.family()
             )));
         }
-        if let EngineSpec::FlashSfa { skip, thresh, .. } = *self {
+        if let EngineSpec::FlashSfa { skip, thresh, mass, .. } = *self {
             if thresh < 0.0 {
                 return Err(err("sfa: thresh must be >= 0"));
             }
             if thresh > 0.0 && !skip {
                 return Err(err("sfa: thresh requires skip=on"));
+            }
+            if mass < 0.0 {
+                return Err(err("sfa: mass must be >= 0"));
+            }
+            if mass > 0.0 && !skip {
+                return Err(err("sfa: mass requires skip=on"));
+            }
+            if mass > 0.0 && thresh > 0.0 {
+                return Err(err(
+                    "sfa: mass and thresh are mutually exclusive (mass derives thresh)",
+                ));
             }
         }
         Ok(())
@@ -286,11 +302,13 @@ impl EngineSpec {
             EngineSpec::Dense => "dense".into(),
             EngineSpec::SfaRef { k } => format!("sfa_ref:k={k}"),
             EngineSpec::FlashDense { bq, bk } => format!("flash_dense:bq={bq},bk={bk}"),
-            EngineSpec::FlashSfa { k, bq, bk, skip, thresh } => {
+            EngineSpec::FlashSfa { k, bq, bk, skip, thresh, mass } => {
                 let mut s = format!("sfa:k={k},bq={bq},bk={bk}");
                 if skip {
                     s.push_str(",skip=on");
-                    if thresh != 0.0 {
+                    if mass > 0.0 {
+                        s.push_str(&format!(",mass={mass}"));
+                    } else if thresh != 0.0 {
                         s.push_str(&format!(",thresh={thresh}"));
                     }
                 }
@@ -348,9 +366,15 @@ impl EngineSpec {
             EngineSpec::FlashDense { bq, bk } => {
                 Box::new(FlashDense { block_q: bq, block_k: bk, threads })
             }
-            EngineSpec::FlashSfa { k, bq, bk, skip, thresh } => {
-                Box::new(FlashSfa { k, block_q: bq, block_k: bk, threads, skip, skip_thresh: thresh })
-            }
+            EngineSpec::FlashSfa { k, bq, bk, skip, thresh, mass } => Box::new(FlashSfa {
+                k,
+                block_q: bq,
+                block_k: bk,
+                threads,
+                skip,
+                skip_thresh: thresh,
+                skip_mass: mass,
+            }),
             EngineSpec::Window { w, scorer } => {
                 Box::new(WindowAttention { window: w, scorer, threads })
             }
@@ -439,6 +463,9 @@ mod tests {
             ("sfa:skip=on,thresh=nan", "finite number"),
             ("sfa:skip=on,thresh=-1", "thresh must be >= 0"),
             ("sfa:thresh=2", "thresh requires skip=on"),
+            ("sfa:skip=on,mass=-0.5", "mass must be >= 0"),
+            ("sfa:mass=0.1", "mass requires skip=on"),
+            ("sfa:skip=on,thresh=4,mass=0.1", "mutually exclusive"),
         ] {
             let e = parse_spec(s).unwrap_err();
             assert!(e.0.contains(needle), "{s:?} -> {e}");
@@ -473,7 +500,11 @@ mod tests {
                     if g.bool() {
                         s.push_str(",skip=on");
                         if g.bool() {
-                            s.push_str(&format!(",thresh={}", g.f32_in(0.0..16.0)));
+                            if g.bool() {
+                                s.push_str(&format!(",mass={}", g.f32_in(0.001..2.0)));
+                            } else {
+                                s.push_str(&format!(",thresh={}", g.f32_in(0.0..16.0)));
+                            }
                         }
                     }
                     s

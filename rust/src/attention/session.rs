@@ -50,6 +50,7 @@
 use crate::attention::decode::{
     softmax_probs, softmax_weighted_sum, topk_row, weighted_sum, KvPolicy, PagedKvPolicy,
 };
+use crate::attention::flash_dense::FlashDense;
 use crate::attention::flash_sfa::FlashSfa;
 use crate::attention::registry::{parse_spec, EngineSpec, SpecError};
 use crate::attention::{Engine, HeadTensor, Scorer};
@@ -105,6 +106,18 @@ impl SessionConfig {
 /// handle is only valid until its lane is released.
 pub type LaneId = usize;
 
+/// Progress of an in-flight chunked lane prefill
+/// ([`AttentionSession::prefill_chunk`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillState {
+    /// Prompt tokens appended so far (equals the lane's length while
+    /// the prefill is in flight).
+    pub consumed: usize,
+    /// Full prompt length; the chunk whose append reaches it finishes
+    /// the prefill (policy observe/prune run there).
+    pub total: usize,
+}
+
 /// One batch slot: `heads` paged-cache sequences plus its own length.
 struct Lane {
     /// One cache sequence per head (empty once released).
@@ -116,6 +129,9 @@ struct Lane {
     live: bool,
     /// Eviction-policy state for a policy-budgeted lane.
     policy: Option<LanePolicy>,
+    /// In-flight chunked prefill progress; `None` once complete (or for
+    /// monolithic [`AttentionSession::prefill_lane`] lanes).
+    prefill: Option<PrefillState>,
 }
 
 /// Eviction-policy state of one policy-budgeted lane.
@@ -129,6 +145,11 @@ struct LanePolicy {
     /// One policy instance per head — heads prune independently, so
     /// their cached lengths may diverge.
     heads: Vec<Box<dyn KvPolicy>>,
+    /// Rolling tail of prompt query rows (per head, flattened rows ×
+    /// `d`, newest last) a chunked prefill stashes so the final-chunk
+    /// observe replay sees exactly the rows a monolithic prefill would.
+    /// Trimmed to `observe_window.max(1)` rows; drained at finish.
+    q_tail: Vec<Vec<f32>>,
 }
 
 /// One live multi-head attention session over a paged KV cache.
@@ -185,6 +206,7 @@ impl AttentionSession {
                 len: 0,
                 live: true,
                 policy: None,
+                prefill: None,
             })
             .collect();
         AttentionSession { engine: spec.build(), cfg, spec, scorer, cache, lanes, policy_freed: 0 }
@@ -290,6 +312,7 @@ impl AttentionSession {
             len: 0,
             live: true,
             policy: None,
+            prefill: None,
         };
         match self.lanes.iter().position(|l| !l.live) {
             Some(slot) => {
@@ -321,7 +344,7 @@ impl AttentionSession {
         for &s in src {
             seqs.push(self.cache.fork_prefix(s, prefix_tokens)?);
         }
-        let lane = Lane { seqs, len: prefix_tokens, live: true, policy: None };
+        let lane = Lane { seqs, len: prefix_tokens, live: true, policy: None, prefill: None };
         Ok(match self.lanes.iter().position(|l| !l.live) {
             Some(slot) => {
                 self.lanes[slot] = lane;
@@ -399,14 +422,15 @@ impl AttentionSession {
     /// what the prefix-cache hit path pays instead of a full-prompt
     /// forward.
     ///
-    /// For the Sfa scorer this runs the tiled
-    /// [`FlashSfa::forward_codes_append`] kernel over codes
-    /// reconstructed from the cache payloads (exact skip mode, online
-    /// softmax), so row `n - 1` matches [`Self::lane_last_output`]
-    /// within f32 summation-order tolerance; the Dense scorer keeps the
-    /// per-token two-pass path and stays bitwise equal to it. Greedy
-    /// serve streams never depend on either: the scheduler samples the
-    /// first token from `lane_last_output`.
+    /// Both scorer families run a tiled KV-append kernel (online
+    /// softmax) over payloads rebuilt from the cache: the Sfa scorer
+    /// runs [`FlashSfa::forward_codes_append`] over reconstructed
+    /// top-k codes (exact skip mode), the Dense scorer runs
+    /// [`FlashDense::forward_append`] over the dense key slots — no
+    /// per-token scalar loop on either path. Row `n - 1` matches
+    /// [`Self::lane_last_output`] within f32 summation-order
+    /// tolerance. Greedy serve streams never depend on either: the
+    /// scheduler samples the first token from `lane_last_output`.
     pub fn chunked_prefill_outputs(
         &self,
         lane: LaneId,
@@ -427,18 +451,33 @@ impl AttentionSession {
         let mut out = HeadTensor::zeros(1, self.cfg.heads, q.n, d_v);
         match self.scorer {
             Scorer::Dense => {
+                // Tiled KV-append kernel: rebuild dense K and V from the
+                // slot payloads and run the FlashDense append kernel
+                // (online softmax, query row `t` masked to keys
+                // `0..=start_pos + t`) instead of a per-token two-pass
+                // scalar loop over the prefix.
+                let (bq, bk) = match self.spec {
+                    EngineSpec::FlashDense { bq, bk } => (bq, bk),
+                    _ => (64, 64),
+                };
+                let eng = FlashDense { block_q: bq, block_k: bk, threads: default_threads() };
                 for h in 0..self.cfg.heads {
                     let slots =
                         self.cache.token_slices(l.seqs[h]).expect("lane sequence exists");
+                    let total = slots.len();
+                    let mut kmat = Matrix::zeros(total, self.cfg.d);
+                    let mut vmat = Matrix::zeros(total, d_v);
+                    for (j, slot) in slots.iter().enumerate() {
+                        kmat.row_mut(j).copy_from_slice(&slot[..self.cfg.d]);
+                        vmat.row_mut(j).copy_from_slice(&slot[v_off..v_off + d_v]);
+                    }
+                    let mut qm = Matrix::zeros(q.n, self.cfg.d);
                     for t in 0..q.n {
-                        let upto = (start_pos + t + 1).min(slots.len());
-                        let scores = self.head_scores(&slots[..upto], q.head_row(0, h, t));
-                        softmax_weighted_sum(
-                            &scores,
-                            |j| slots[j][v_off..].as_ptr(),
-                            d_v,
-                            out.head_row_mut(0, h, t),
-                        );
+                        qm.row_mut(t).copy_from_slice(q.head_row(0, h, t));
+                    }
+                    let o = eng.forward_append(&qm, &kmat, &vmat, start_pos);
+                    for t in 0..q.n {
+                        out.head_row_mut(0, h, t).copy_from_slice(o.row(t));
                     }
                 }
             }
@@ -459,6 +498,7 @@ impl AttentionSession {
                     threads: default_threads(),
                     skip: true,
                     skip_thresh: 0.0,
+                    skip_mass: 0.0,
                 };
                 for h in 0..self.cfg.heads {
                     let slots =
@@ -538,6 +578,7 @@ impl AttentionSession {
             heads: (0..self.cfg.heads)
                 .map(|_| spec.build(self.cfg.d, self.cfg.page_size))
                 .collect(),
+            q_tail: vec![Vec::new(); self.cfg.heads],
         });
         lane
     }
@@ -556,6 +597,7 @@ impl AttentionSession {
         l.live = false;
         l.len = 0;
         l.policy = None;
+        l.prefill = None;
         let seqs = std::mem::take(&mut l.seqs);
         let mut freed = 0;
         for s in seqs {
@@ -675,6 +717,160 @@ impl AttentionSession {
             self.seed_lane_policy(lane, q, k, causal);
         }
         Ok(self.engine.forward_batched(q, k, v, causal))
+    }
+
+    /// In-flight chunked prefill progress of a lane; `None` once the
+    /// prefill completed (or for monolithic [`Self::prefill_lane`]
+    /// lanes, which never enter the chunked path).
+    pub fn lane_prefill_state(&self, lane: LaneId) -> Option<PrefillState> {
+        let l = &self.lanes[lane];
+        assert!(l.live, "lane {lane} was released");
+        l.prefill
+    }
+
+    /// Append one causal prompt **chunk** (batch-1 tensors, `k.n`
+    /// tokens) to a lane mid-prefill and return the chunk's attention
+    /// outputs, computed against the full cached prefix through the
+    /// tiled KV-append kernels ([`Self::chunked_prefill_outputs`] —
+    /// [`FlashSfa::forward_codes_append`] / `FlashDense::forward_append`).
+    /// `total` is the full prompt length; the call whose append reaches
+    /// it finishes the prefill. The first chunk may start at a non-zero
+    /// lane length (the radix prefix cache's hit path: fork the shared
+    /// prefix, then chunk through the un-shared suffix).
+    ///
+    /// Cache bytes after the final chunk are bit-identical to a
+    /// monolithic [`Self::prefill_lane`] of the same prompt — appends
+    /// store the same per-token payloads in the same per-sequence
+    /// order — so every downstream decode (and the scheduler's
+    /// first-token [`Self::lane_last_output`]) is bitwise independent
+    /// of the chunking. Policy lanes ingest each chunk's keys as they
+    /// append and stash the tail of prompt queries; the final chunk
+    /// replays the last `observe_window` queries' attention over the
+    /// (complete) cache and prunes — the exact call sequence
+    /// [`Self::seed_lane_policy`] makes, so policy state and prune
+    /// selection are also bitwise chunk-invariant. Chunk outputs are
+    /// computed *before* the finishing prune, preserving "row `t`
+    /// attends the whole prefix".
+    ///
+    /// On a page-budget error the lane is auto-released (previously
+    /// appended chunks included), mirroring `prefill_lane`'s contract.
+    pub fn prefill_chunk(
+        &mut self,
+        lane: LaneId,
+        q: &HeadTensor,
+        k: &HeadTensor,
+        v: &HeadTensor,
+        total: usize,
+    ) -> Result<HeadTensor, PageError> {
+        assert_eq!(q.batch, 1, "prefill_chunk takes batch-1 tensors");
+        assert_eq!((k.batch, v.batch), (1, 1), "prefill_chunk takes batch-1 tensors");
+        assert_eq!((q.heads, k.heads, v.heads), (self.cfg.heads, self.cfg.heads, self.cfg.heads));
+        assert_eq!((q.d, k.d, v.d), (self.cfg.d, self.cfg.d, self.cfg.d_v));
+        assert_eq!((q.n, v.n), (k.n, k.n), "one q/v row per chunk token");
+        assert!(k.n > 0, "prefill_chunk takes a non-empty chunk");
+        assert!(self.lanes[lane].live, "lane {lane} was released");
+        let start = self.lanes[lane].len;
+        match self.lanes[lane].prefill {
+            None => assert!(
+                start + k.n <= total,
+                "lane {lane}: first chunk {start}+{} overruns prompt length {total}",
+                k.n
+            ),
+            Some(st) => {
+                assert_eq!(st.total, total, "lane {lane}: prompt length changed mid-prefill");
+                assert_eq!(st.consumed, start, "lane {lane}: chunk progress out of sync");
+                assert!(
+                    start + k.n <= total,
+                    "lane {lane}: chunk {start}+{} overruns prompt length {total}",
+                    k.n
+                );
+            }
+        }
+        for h in 0..self.cfg.heads {
+            let seq = self.lanes[lane].seqs[h];
+            for t in 0..k.n {
+                if let Err(e) = self.push_token(seq, k.head_row(0, h, t), v.head_row(0, h, t)) {
+                    let _ = self.release_lane(lane);
+                    return Err(e);
+                }
+            }
+        }
+        self.lanes[lane].len = start + k.n;
+        if self.lanes[lane].policy.is_some() {
+            let window = {
+                let pol = self.lanes[lane].policy.as_ref().expect("checked above");
+                pol.observe_window.max(1)
+            };
+            let d = self.cfg.d;
+            let pol = self.lanes[lane].policy.as_mut().expect("checked above");
+            for h in 0..self.cfg.heads {
+                for t in 0..k.n {
+                    pol.heads[h].ingest_key(start + t, k.head_row(0, h, t));
+                }
+                let tail = &mut pol.q_tail[h];
+                for t in 0..q.n {
+                    tail.extend_from_slice(q.head_row(0, h, t));
+                }
+                let rows = tail.len() / d;
+                if rows > window {
+                    tail.drain(..(rows - window) * d);
+                }
+            }
+        }
+        let done = start + k.n == total;
+        self.lanes[lane].prefill =
+            (!done).then_some(PrefillState { consumed: start + k.n, total });
+        let out = self.chunked_prefill_outputs(lane, q, start);
+        if done && self.lanes[lane].policy.is_some() {
+            self.finish_lane_policy(lane);
+        }
+        Ok(out)
+    }
+
+    /// Final-chunk policy hook — the chunked twin of
+    /// [`Self::seed_lane_policy`]: replay the attention of the stashed
+    /// last `observe_window` prompt queries over the now-complete
+    /// cache, set the final query, observe, and prune. Keys were
+    /// already ingested chunk-by-chunk in the same absolute order a
+    /// monolithic seed would ingest them, and the replay reads only
+    /// cached slots, so the policy sees a call sequence bitwise
+    /// identical to the monolithic path's.
+    fn finish_lane_policy(&mut self, lane: LaneId) {
+        let n = self.lanes[lane].len;
+        if n == 0 {
+            return;
+        }
+        let d = self.cfg.d;
+        let window =
+            self.lanes[lane].policy.as_ref().expect("policy lane").observe_window.min(n);
+        for h in 0..self.cfg.heads {
+            let seq = self.lanes[lane].seqs[h];
+            let (tail, rows) = {
+                let pol = self.lanes[lane].policy.as_ref().expect("policy lane");
+                let tail = pol.q_tail[h].clone();
+                let rows = tail.len() / d;
+                (tail, rows)
+            };
+            assert!(rows >= window.max(1).min(n), "q tail must cover the observe window");
+            let slots = self.cache.token_slices(seq).expect("lane sequence exists");
+            let mut observed: Vec<Vec<(u32, f32)>> = Vec::with_capacity(window);
+            for i in rows - window..rows {
+                // Chunked prefill is causal: replay query at absolute
+                // position p against keys 0..=p, matching
+                // seed_lane_policy's causal branch.
+                let p = n - rows + i;
+                let scores = self.head_scores(&slots[..p + 1], &tail[i * d..(i + 1) * d]);
+                observed.push(softmax_probs(&scores));
+            }
+            drop(slots);
+            let pol = self.lanes[lane].policy.as_mut().expect("policy lane");
+            pol.heads[h].set_query(&tail[(rows - 1) * d..rows * d]);
+            for probs in &observed {
+                pol.heads[h].observe(probs);
+            }
+            pol.q_tail[h].clear();
+        }
+        self.prune_lane(lane);
     }
 
     /// Post-prefill policy hook: feed every cached key and the final
@@ -801,6 +997,10 @@ impl AttentionSession {
         let mut seqs: Vec<SeqId> = Vec::with_capacity(lanes.len() * heads);
         for (bi, &lane) in lanes.iter().enumerate() {
             assert!(self.lanes[lane].live, "lane {lane} was released");
+            assert!(
+                self.lanes[lane].prefill.is_none(),
+                "lane {lane} has an unfinished chunked prefill"
+            );
             for h in 0..heads {
                 let seq = self.lanes[lane].seqs[h];
                 self.push_token(seq, k.head_row(bi, h, 0), v.head_row(bi, h, 0))?;
@@ -1380,24 +1580,22 @@ mod tests {
 
             // The chunked-prefill compute path (suffix queries over
             // the causally growing cache) ends on the sampled
-            // first-token output: bitwise for the dense per-token
-            // loop, within f32 summation-order tolerance for the
-            // tiled SFA append kernel.
+            // first-token output within f32 summation-order tolerance:
+            // both scorer families now run tiled append kernels
+            // (FlashDense::forward_append / FlashSfa's code append),
+            // whose online-softmax fold orders sums differently from
+            // the per-token scalar path behind lane_last_output.
             let chunk =
                 sess.chunked_prefill_outputs(warm, &q.slice_rows(shared, plen), shared);
             assert_eq!((chunk.n, chunk.d), (plen - shared, d));
             for h in 0..heads {
                 let got = chunk.head_row(0, h, plen - shared - 1);
                 let want = warm_out.head_row(0, h, 0);
-                if spec == "dense" {
-                    assert_eq!(got, want, "{spec}: chunked prefill last row");
-                } else {
-                    for (x, y) in got.iter().zip(want) {
-                        assert!(
-                            (x - y).abs() <= 3e-6 + 3e-5 * y.abs().max(x.abs()),
-                            "{spec}: chunked prefill last row: {x} vs {y}"
-                        );
-                    }
+                for (x, y) in got.iter().zip(want) {
+                    assert!(
+                        (x - y).abs() <= 3e-6 + 3e-5 * y.abs().max(x.abs()),
+                        "{spec}: chunked prefill last row: {x} vs {y}"
+                    );
                 }
             }
 
@@ -1419,6 +1617,218 @@ mod tests {
             sess.release_lane(warm).unwrap();
             assert_eq!(sess.pages_in_use(), 0);
         }
+    }
+
+    /// Drive one lane's prompt through [`AttentionSession::prefill_chunk`]
+    /// in `chunk`-token pieces, starting at `start` already-cached
+    /// tokens (0 for a cold lane, the shared depth for a forked one).
+    fn chunk_prefill(
+        sess: &mut AttentionSession,
+        lane: LaneId,
+        q: &HeadTensor,
+        k: &HeadTensor,
+        v: &HeadTensor,
+        start: usize,
+        chunk: usize,
+    ) {
+        let total = k.n;
+        let mut c0 = start;
+        while c0 < total {
+            let c1 = (c0 + chunk).min(total);
+            let out = sess
+                .prefill_chunk(
+                    lane,
+                    &q.slice_rows(c0, c1),
+                    &k.slice_rows(c0, c1),
+                    &v.slice_rows(c0, c1),
+                    total,
+                )
+                .unwrap();
+            assert_eq!((out.n, out.d), (c1 - c0, v.d), "chunk output shape");
+            let st = sess.lane_prefill_state(lane);
+            if c1 < total {
+                assert_eq!(st, Some(PrefillState { consumed: c1, total }));
+            } else {
+                assert_eq!(st, None, "final chunk clears the prefill state");
+            }
+            c0 = c1;
+        }
+        assert_eq!(sess.lane_len(lane), total);
+    }
+
+    /// The tentpole invariance: chunked prefill stores the exact same
+    /// per-token payloads in the same per-sequence order as a
+    /// monolithic `prefill_lane`, so for **any** chunk size the
+    /// first-token output and every subsequent decode step are
+    /// bit-for-bit identical — dense and SFA layouts.
+    #[test]
+    fn chunked_prefill_matches_monolithic_bitwise() {
+        for spec in ["dense", "sfa:k=8,bq=8,bk=8"] {
+            for chunk in [1usize, 3, 5, 13, 64] {
+                let (heads, d) = (2, 16);
+                let (plen, steps) = (13, 4);
+                let cfg = SessionConfig::new(0, heads, d, d).with_paging(4, 4096);
+                let (q, k, v) = full_qkv(1, heads, plen + steps, d, 31);
+                let mut mono = AttentionSession::from_spec(spec, cfg).unwrap();
+                let mut chk = AttentionSession::from_spec(spec, cfg).unwrap();
+                let a = mono.admit_lane();
+                mono.prefill_lane(a, &pfx(&q, plen), &pfx(&k, plen), &pfx(&v, plen), true)
+                    .unwrap();
+                let b = chk.admit_lane();
+                chunk_prefill(
+                    &mut chk,
+                    b,
+                    &pfx(&q, plen),
+                    &pfx(&k, plen),
+                    &pfx(&v, plen),
+                    0,
+                    chunk,
+                );
+                assert_eq!(mono.cache_bytes(), chk.cache_bytes(), "{spec} chunk={chunk}");
+                let oa = mono.lane_last_output(a, &at(&q, plen - 1));
+                let ob = chk.lane_last_output(b, &at(&q, plen - 1));
+                assert_eq!(oa.data, ob.data, "{spec} chunk={chunk}: first-token output");
+                for s in 0..steps {
+                    let t = plen + s;
+                    let xa = mono
+                        .decode_step_lanes(&[a], &at(&q, t), &at(&k, t), &at(&v, t))
+                        .unwrap();
+                    let xb = chk
+                        .decode_step_lanes(&[b], &at(&q, t), &at(&k, t), &at(&v, t))
+                        .unwrap();
+                    assert_eq!(xa.data, xb.data, "{spec} chunk={chunk} step {s}");
+                }
+            }
+        }
+    }
+
+    /// Chunked prefill × KV policies: per-chunk key ingestion plus the
+    /// final-chunk observe replay reproduce the monolithic policy
+    /// seeding exactly — same pruned cache, same freed-page count,
+    /// bitwise-equal decode streams (tight budgets), and a no-op
+    /// budget chunked policy lane stays bit-identical to a plain
+    /// chunked lane.
+    #[test]
+    fn chunked_prefill_policy_lanes_match_monolithic() {
+        let (heads, d) = (2, 16);
+        let (pre, steps, chunk) = (24, 8, 5);
+        let cfg = SessionConfig::new(0, heads, d, d).with_paging(4, 4096);
+        let (q, k, v) = full_qkv(1, heads, pre + steps, d, 37);
+        for pol in tight_policies() {
+            let mut mono = AttentionSession::from_spec("dense", cfg).unwrap();
+            let mut chk = AttentionSession::from_spec("dense", cfg).unwrap();
+            let a = mono.admit_lane_with_policy(&pol);
+            let b = chk.admit_lane_with_policy(&pol);
+            mono.prefill_lane(a, &pfx(&q, pre), &pfx(&k, pre), &pfx(&v, pre), true).unwrap();
+            chunk_prefill(&mut chk, b, &pfx(&q, pre), &pfx(&k, pre), &pfx(&v, pre), 0, chunk);
+            assert_eq!(
+                mono.lane_cached(a),
+                chk.lane_cached(b),
+                "{pol:?}: same prune survivors"
+            );
+            assert_eq!(
+                mono.take_policy_freed(),
+                chk.take_policy_freed(),
+                "{pol:?}: same pages freed at prefill end"
+            );
+            for s in 0..steps {
+                let t = pre + s;
+                let xa =
+                    mono.decode_step_lanes(&[a], &at(&q, t), &at(&k, t), &at(&v, t)).unwrap();
+                let xb =
+                    chk.decode_step_lanes(&[b], &at(&q, t), &at(&k, t), &at(&v, t)).unwrap();
+                assert_eq!(xa.data, xb.data, "{pol:?} step {s}");
+                assert_eq!(mono.lane_cached(a), chk.lane_cached(b), "{pol:?} step {s} cached");
+            }
+        }
+        // No-op budget: chunked policy lane == plain chunked lane.
+        let loose = PagedKvPolicy::SnapKv { budget: 64, recent: 8 };
+        let mut plain = AttentionSession::from_spec("dense", cfg).unwrap();
+        let mut pol = AttentionSession::from_spec("dense", cfg).unwrap();
+        let a = plain.admit_lane();
+        let b = pol.admit_lane_with_policy(&loose);
+        chunk_prefill(&mut plain, a, &pfx(&q, pre), &pfx(&k, pre), &pfx(&v, pre), 0, chunk);
+        chunk_prefill(&mut pol, b, &pfx(&q, pre), &pfx(&k, pre), &pfx(&v, pre), 0, chunk);
+        assert_eq!(pol.take_policy_freed(), 0, "no-op budget never prunes");
+        for s in 0..steps {
+            let t = pre + s;
+            let xa = plain.decode_step_lanes(&[a], &at(&q, t), &at(&k, t), &at(&v, t)).unwrap();
+            let xb = pol.decode_step_lanes(&[b], &at(&q, t), &at(&k, t), &at(&v, t)).unwrap();
+            assert_eq!(xa.data, xb.data, "no-op budget step {s}");
+        }
+    }
+
+    /// Chunked prefill × prefix sharing: a lane forked at the shared
+    /// depth and chunked through only the un-shared suffix ends with
+    /// the same cache bytes as a cold monolithic prefill — the radix
+    /// cache's hit path under chunked ingestion.
+    #[test]
+    fn chunked_suffix_after_fork_matches_cold_prefill_bitwise() {
+        for spec in ["dense", "sfa:k=8,bq=8,bk=8"] {
+            let (heads, d) = (2, 16);
+            let (plen, shared, steps, chunk) = (11, 6, 4, 2);
+            let cfg = SessionConfig::new(0, heads, d, d).with_paging(4, 4096);
+            let (q, k, v) = full_qkv(1, heads, plen + steps, d, 41);
+            let mut sess = AttentionSession::from_spec(spec, cfg).unwrap();
+            let cold = sess.admit_lane();
+            sess.prefill_lane(cold, &pfx(&q, plen), &pfx(&k, plen), &pfx(&v, plen), true)
+                .unwrap();
+            let srcs = sess.lane_seqs(cold).to_vec();
+            let warm = sess.admit_lane_from_fork(&srcs, shared).unwrap();
+            chunk_prefill(
+                &mut sess,
+                warm,
+                &pfx(&q, plen),
+                &pfx(&k, plen),
+                &pfx(&v, plen),
+                shared,
+                chunk,
+            );
+            let oc = sess.lane_last_output(cold, &at(&q, plen - 1));
+            let ow = sess.lane_last_output(warm, &at(&q, plen - 1));
+            assert_eq!(oc.data, ow.data, "{spec}: first-token output");
+            for s in 0..steps {
+                let t = plen + s;
+                let xc = sess
+                    .decode_step_lanes(&[cold], &at(&q, t), &at(&k, t), &at(&v, t))
+                    .unwrap();
+                let xw = sess
+                    .decode_step_lanes(&[warm], &at(&q, t), &at(&k, t), &at(&v, t))
+                    .unwrap();
+                assert_eq!(xc.data, xw.data, "{spec}: decode step {s}");
+            }
+            sess.release_lane(cold).unwrap();
+            sess.release_lane(warm).unwrap();
+            assert_eq!(sess.pages_in_use(), 0);
+        }
+    }
+
+    /// A chunk append that exhausts the page budget auto-releases the
+    /// whole lane (previous chunks included) — prefill_lane's failure
+    /// contract, chunk edition.
+    #[test]
+    fn failed_prefill_chunk_auto_releases() {
+        let (heads, d) = (2, 8);
+        let (q, k, v) = full_qkv(1, heads, 12, d, 43);
+        let cfg = SessionConfig::new(0, heads, d, d).with_paging(2, 2);
+        let mut sess = AttentionSession::from_spec("dense", cfg).unwrap();
+        let lane = sess.admit_lane();
+        // First chunk fits (2 pages × 2 tokens covers 2 tokens × 2
+        // heads), the second must run out mid-append.
+        sess.prefill_chunk(lane, &pfx(&q, 2), &pfx(&k, 2), &pfx(&v, 2), 12).unwrap();
+        let e = sess
+            .prefill_chunk(
+                lane,
+                &q.slice_rows(2, 8),
+                &k.slice_rows(2, 8),
+                &v.slice_rows(2, 8),
+                12,
+            )
+            .unwrap_err();
+        assert_eq!(e, PageError::OutOfPages);
+        assert_eq!(sess.live_lanes(), 0, "failed chunk releases the lane");
+        assert_eq!(sess.pages_in_use(), 0, "all chunks' pages are returned");
+        assert_eq!(sess.admit_lane(), lane, "slot is recyclable");
     }
 
     /// The tiled SFA append kernel behind `chunked_prefill_outputs`

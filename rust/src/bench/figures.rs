@@ -61,7 +61,7 @@ fn run_forward_spec_counted(
         std::hint::black_box(engine.forward(&q, &k, &v, true));
     });
     let tiles = match parsed {
-        EngineSpec::FlashSfa { k: fk, bq, bk, skip, thresh } => {
+        EngineSpec::FlashSfa { k: fk, bq, bk, skip, thresh, mass } => {
             let eng = FlashSfa {
                 k: fk,
                 block_q: bq,
@@ -69,6 +69,7 @@ fn run_forward_spec_counted(
                 threads: crate::util::threadpool::default_threads(),
                 skip,
                 skip_thresh: thresh,
+                skip_mass: mass,
             };
             let qc = crate::sparse::topk_codes(&q, fk);
             let kc = crate::sparse::topk_codes(&k, fk);

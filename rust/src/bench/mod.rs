@@ -110,6 +110,7 @@ pub fn records_to_json(records: &[BenchRecord]) -> String {
                     fields.push(("tiles_visited", Json::from(t.tiles_visited as usize)));
                     fields.push(("tiles_folded", Json::from(t.tiles_folded as usize)));
                     fields.push(("tiles_skipped", Json::from(t.tiles_skipped as usize)));
+                    fields.push(("rows_skipped", Json::from(t.rows_skipped as usize)));
                     fields.push(("posting_hits", Json::from(t.posting_hits as usize)));
                 }
                 obj(fields)
@@ -138,6 +139,7 @@ mod tests {
                     tiles_visited: 100,
                     tiles_folded: 20,
                     tiles_skipped: 16,
+                    rows_skipped: 7,
                     posting_hits: 4096,
                 }),
             },
@@ -159,6 +161,7 @@ mod tests {
         assert_eq!(arr[0].get("n").unwrap().as_usize().unwrap(), 1024);
         assert_eq!(arr[0].get("k").unwrap().as_usize().unwrap(), 8);
         assert_eq!(arr[0].get("tiles_folded").unwrap().as_usize().unwrap(), 20);
+        assert_eq!(arr[0].get("rows_skipped").unwrap().as_usize().unwrap(), 7);
         assert_eq!(arr[0].get("posting_hits").unwrap().as_usize().unwrap(), 4096);
         assert!(arr[1].get("tiles_visited").is_none(), "non-sfa rows omit tile counters");
         assert!((arr[1].get("median_s").unwrap().as_f64().unwrap() - 0.05).abs() < 1e-12);

@@ -15,8 +15,9 @@ use std::time::Instant;
 use crate::bench::table::{fmt_speedup, fmt_time, Table};
 use crate::coordinator::metrics::Percentiles;
 use crate::serve::{
-    ContinuousBatcher, FinishedRequest, PagedKvPolicy, PrefixCacheConfig, PrefixCacheStats,
-    RequestState, Scheduler, ServeConfig, ServeRequest, WaveScheduler,
+    pages_needed, ContinuousBatcher, FinishedRequest, PagedKvPolicy, PrefixCacheConfig,
+    PrefixCacheStats, RequestId, RequestState, Scheduler, ServeConfig, ServeRequest,
+    WaveScheduler,
 };
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -44,8 +45,47 @@ pub struct ServeBenchConfig {
     /// prefix cache on), pinning bit-identical greedy streams and
     /// recording hit rate and TTFT gain.
     pub prefix: Option<PrefixBenchConfig>,
+    /// `Some` switches `bench serve` to the **chunked-prefill
+    /// interference comparison** (`--prefill-chunk`): one long prompt
+    /// against a set of short decode lanes, swept over chunk sizes
+    /// (0 = monolithic baseline), reporting the decode lanes'
+    /// time-to-first-token under long-prompt interference and pinning
+    /// bit-identical greedy streams across every chunk size.
+    pub chunked: Option<ChunkedBenchConfig>,
     pub serve: ServeConfig,
     pub seed: u64,
+}
+
+/// Shape of the long-prompt-interference workload + chunk sweep for
+/// the chunked-prefill comparison.
+#[derive(Debug, Clone)]
+pub struct ChunkedBenchConfig {
+    /// Tokens in the single interfering long prompt.
+    pub long_prompt: usize,
+    /// `max_new` for the long request (small — its decode tail is not
+    /// what this bench measures).
+    pub long_max_new: usize,
+    /// Number of short requests competing with the long prefill.
+    pub decode_lanes: usize,
+    /// Prompt length of each short request.
+    pub decode_prompt: usize,
+    /// `max_new` of each short request.
+    pub decode_max_new: usize,
+    /// Chunk sizes to sweep; must include 0 (the monolithic baseline).
+    pub chunks: Vec<usize>,
+}
+
+impl Default for ChunkedBenchConfig {
+    fn default() -> ChunkedBenchConfig {
+        ChunkedBenchConfig {
+            long_prompt: 4096,
+            long_max_new: 8,
+            decode_lanes: 8,
+            decode_prompt: 16,
+            decode_max_new: 32,
+            chunks: vec![0, 64, 256, 1024],
+        }
+    }
 }
 
 /// Shape of the shared-prefix workload + cache sizing for the
@@ -88,6 +128,7 @@ impl Default for ServeBenchConfig {
                 Some(PagedKvPolicy::Quest { budget: 128 }),
             ],
             prefix: None,
+            chunked: None,
             // Enough lanes that the page budget, not the lane cap, is
             // what policy-budget admission relaxes.
             serve: ServeConfig { max_lanes: 32, ..ServeConfig::default() },
@@ -376,6 +417,182 @@ pub fn bench_serve_prefix(cfg: &ServeBenchConfig) -> (Table, PrefixComparison) {
     (t, cmp)
 }
 
+/// One chunk size's measurements over the interference workload.
+#[derive(Debug, Clone)]
+pub struct ChunkedRun {
+    /// Swept `ServeConfig::prefill_chunk` (0 = monolithic baseline).
+    pub chunk: usize,
+    /// Time-to-first-token over the short decode lanes only — the
+    /// latency the long prompt's prefill interferes with.
+    pub decode_ttft: Percentiles,
+    pub decode_ttft_mean_s: f64,
+    /// The long request's own TTFT (chunking trades it away).
+    pub long_ttft_s: f64,
+    pub tok_s: f64,
+    pub wall_s: f64,
+    pub steps: usize,
+    /// Per-request greedy streams, id-ordered (the invariance pin).
+    pub streams: Vec<(RequestId, Vec<i32>)>,
+}
+
+/// The chunked-prefill comparison: the chunk-size sweep over the
+/// identical interference workload.
+#[derive(Debug, Clone)]
+pub struct ChunkedComparison {
+    pub shape: ChunkedBenchConfig,
+    pub runs: Vec<ChunkedRun>,
+    /// Greedy streams bit-for-bit identical across every chunk size,
+    /// monolithic included (the correctness pin; recorded so CI
+    /// trajectories catch a break).
+    pub streams_identical: bool,
+    /// Chunk size with the lowest decode-lane TTFT p95.
+    pub best_chunk: usize,
+    /// monolithic decode-TTFT p95 / best chunked decode-TTFT p95
+    /// (> 1 means interleaving shields the decode lanes).
+    pub ttft_p95_gain: f64,
+}
+
+/// The chunked-prefill interference comparison: one long prompt
+/// submitted ahead of `decode_lanes` short requests, the whole stream
+/// re-run at every swept chunk size. Monolithic (chunk 0) stalls the
+/// short lanes' first tokens behind the entire long prefill; chunked
+/// runs bound the per-step interference to one chunk.
+pub fn bench_serve_chunked(cfg: &ServeBenchConfig) -> (Table, ChunkedComparison) {
+    let ck = cfg.chunked.clone().unwrap_or_default();
+    assert!(ck.chunks.contains(&0), "sweep needs the monolithic baseline (chunk 0)");
+    assert!(ck.long_prompt >= 1 && ck.decode_lanes >= 1 && ck.decode_prompt >= 1);
+    let mut rng = Rng::new(cfg.seed ^ 0xC41C);
+    let vocab = cfg.serve.vocab as u64;
+    let long_prompt: Vec<i32> = (0..ck.long_prompt).map(|_| rng.below(vocab) as i32).collect();
+    let shorts: Vec<Vec<i32>> = (0..ck.decode_lanes)
+        .map(|_| (0..ck.decode_prompt).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+    let engine = cfg.engines.first().cloned().unwrap_or_else(|| "sfa:k=8".into());
+    let mut runs: Vec<ChunkedRun> = Vec::with_capacity(ck.chunks.len());
+    for &chunk in &ck.chunks {
+        let mut serve = ServeConfig {
+            prefill_chunk: chunk,
+            kv_policy: None,
+            prefix_cache: None,
+            ..cfg.serve
+        };
+        // Auto-size the geometry so the workload itself (not the
+        // config defaults) decides what fits: every lane must be live
+        // at once for the interference to be measured.
+        serve.max_seq = serve.max_seq.max(ck.long_prompt + ck.long_max_new + 1);
+        serve.max_lanes = serve.max_lanes.max(ck.decode_lanes + 1);
+        let needed = pages_needed(ck.long_prompt, ck.long_max_new, serve.heads, serve.page_size)
+            + ck.decode_lanes
+                * pages_needed(ck.decode_prompt, ck.decode_max_new, serve.heads, serve.page_size);
+        serve.max_pages = serve.max_pages.max(needed);
+        let mut s = ContinuousBatcher::new(serve);
+        let t0 = Instant::now();
+        let long_id = s
+            .submit(
+                ServeRequest::new(long_prompt.clone())
+                    .max_new(ck.long_max_new)
+                    .engine(&engine)
+                    .seed(0),
+            )
+            .expect("interference workload fits the auto-sized budget");
+        let short_ids: Vec<RequestId> = shorts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                s.submit(
+                    ServeRequest::new(p.clone())
+                        .max_new(ck.decode_max_new)
+                        .engine(&engine)
+                        .seed(1 + i as u64),
+                )
+                .expect("interference workload fits the auto-sized budget")
+            })
+            .collect();
+        let mut steps = 0usize;
+        while s.has_work() {
+            s.step();
+            steps += 1;
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        s.metrics_mut().wall_s = wall_s;
+        let tok_s = s.metrics().throughput_tok_s();
+        let fin = s.take_finished();
+        assert!(
+            fin.iter().all(|f| matches!(f.state, RequestState::Finished { .. })),
+            "chunk={chunk}: every interference request terminates"
+        );
+        let ttfts: Vec<f64> = short_ids
+            .iter()
+            .map(|id| fin.iter().find(|f| f.id == *id).expect("short finished").ttft_s)
+            .collect();
+        let long_ttft_s = fin.iter().find(|f| f.id == long_id).expect("long finished").ttft_s;
+        let mut streams: Vec<(RequestId, Vec<i32>)> =
+            fin.iter().map(|f| (f.id, f.tokens.clone())).collect();
+        streams.sort_by_key(|(id, _)| *id);
+        runs.push(ChunkedRun {
+            chunk,
+            decode_ttft: Percentiles::of(&ttfts),
+            decode_ttft_mean_s: mean(&ttfts),
+            long_ttft_s,
+            tok_s,
+            wall_s,
+            steps,
+            streams,
+        });
+    }
+    let mono = runs.iter().find(|r| r.chunk == 0).expect("baseline present").clone();
+    let streams_identical = runs.iter().all(|r| r.streams == mono.streams);
+    let best = runs
+        .iter()
+        .filter(|r| r.chunk > 0)
+        .min_by(|a, b| a.decode_ttft.p95.partial_cmp(&b.decode_ttft.p95).unwrap())
+        .cloned();
+    let (best_chunk, ttft_p95_gain) = match &best {
+        Some(b) if b.decode_ttft.p95 > 0.0 => {
+            (b.chunk, mono.decode_ttft.p95 / b.decode_ttft.p95)
+        }
+        Some(b) => (b.chunk, 0.0),
+        None => (0, 0.0),
+    };
+    let cmp = ChunkedComparison { shape: ck.clone(), runs, streams_identical, best_chunk, ttft_p95_gain };
+
+    let mut t = Table::new(
+        &format!(
+            "bench serve --prefill-chunk — prefill–decode interleaving: one {}-token prompt \
+             against {} decode lanes (prompt {}, max_new {}, engine {})",
+            ck.long_prompt, ck.decode_lanes, ck.decode_prompt, ck.decode_max_new, engine,
+        ),
+        &[
+            "chunk",
+            "decode TTFT p50",
+            "decode TTFT p95",
+            "long TTFT",
+            "tok/s",
+            "steps",
+            "identical streams",
+        ],
+    );
+    for r in &cmp.runs {
+        t.row(vec![
+            if r.chunk == 0 { "0 (monolithic)".into() } else { r.chunk.to_string() },
+            fmt_time(r.decode_ttft.p50),
+            fmt_time(r.decode_ttft.p95),
+            fmt_time(r.long_ttft_s),
+            format!("{:.1}", r.tok_s),
+            r.steps.to_string(),
+            cmp.streams_identical.to_string(),
+        ]);
+    }
+    let mut row = vec![
+        format!("gain (chunk {})", cmp.best_chunk),
+        String::new(),
+        fmt_speedup(cmp.ttft_p95_gain),
+    ];
+    row.resize(7, String::new());
+    t.row(row);
+    (t, cmp)
+}
+
 /// Run the workload through the wave baseline and the continuous
 /// batcher under every configured KV policy, and render the comparison.
 pub fn bench_serve(cfg: &ServeBenchConfig) -> (Table, Vec<RunStats>) {
@@ -496,6 +713,19 @@ pub fn to_json_with_prefix(
     runs: &[RunStats],
     prefix: Option<&PrefixComparison>,
 ) -> String {
+    to_json_full(cfg, runs, prefix, None)
+}
+
+/// The full BENCH_serve.json document: [`to_json_with_prefix`] plus an
+/// optional `chunked_prefill` block (the `--prefill-chunk` interference
+/// sweep: decode-lane TTFT per chunk size and the stream-invariance
+/// pin).
+pub fn to_json_full(
+    cfg: &ServeBenchConfig,
+    runs: &[RunStats],
+    prefix: Option<&PrefixComparison>,
+    chunked: Option<&ChunkedComparison>,
+) -> String {
     let baseline = runs.iter().find(|r| r.scheduler == "continuous" && r.policy == "none");
     let mut doc = vec![
         (
@@ -586,6 +816,41 @@ pub fn to_json_with_prefix(
             ]),
         ));
     }
+    if let Some(c) = chunked {
+        doc.push((
+            "chunked_prefill",
+            obj(vec![
+                ("long_prompt", Json::from(c.shape.long_prompt)),
+                ("long_max_new", Json::from(c.shape.long_max_new)),
+                ("decode_lanes", Json::from(c.shape.decode_lanes)),
+                ("decode_prompt", Json::from(c.shape.decode_prompt)),
+                ("decode_max_new", Json::from(c.shape.decode_max_new)),
+                ("streams_identical", Json::from(c.streams_identical)),
+                ("best_chunk", Json::from(c.best_chunk)),
+                ("decode_ttft_p95_gain", Json::from(c.ttft_p95_gain)),
+                (
+                    "runs",
+                    Json::Arr(
+                        c.runs
+                            .iter()
+                            .map(|r| {
+                                obj(vec![
+                                    ("chunk", Json::from(r.chunk)),
+                                    ("decode_ttft_p50_s", Json::from(r.decode_ttft.p50)),
+                                    ("decode_ttft_p95_s", Json::from(r.decode_ttft.p95)),
+                                    ("decode_ttft_mean_s", Json::from(r.decode_ttft_mean_s)),
+                                    ("long_ttft_s", Json::from(r.long_ttft_s)),
+                                    ("tokens_per_s", Json::from(r.tok_s)),
+                                    ("wall_s", Json::from(r.wall_s)),
+                                    ("steps", Json::from(r.steps)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ));
+    }
     obj(doc).to_string()
 }
 
@@ -603,6 +868,7 @@ mod tests {
             engines: vec!["dense".into(), "sfa:k=4".into()],
             policies: vec![None],
             prefix: None,
+            chunked: None,
             serve: ServeConfig {
                 heads: 2,
                 d: 8,
@@ -615,6 +881,7 @@ mod tests {
                 model_seed: 7,
                 kv_policy: None,
                 prefix_cache: None,
+                prefill_chunk: 0,
             },
             seed: 1,
         }
@@ -737,6 +1004,53 @@ mod tests {
         assert!(
             runs[1].get("prefix_cache").unwrap().get("hits").unwrap().as_usize().unwrap() > 0
         );
+    }
+
+    /// Acceptance pin for `sfa bench serve --prefill-chunk`: the
+    /// interference sweep completes at every chunk size, greedy
+    /// streams are bit-for-bit identical across the sweep, chunked
+    /// runs spread the long prefill over many more scheduler steps
+    /// than the monolithic baseline, and the JSON document carries the
+    /// whole `chunked_prefill` block. (The wall-clock TTFT gain is
+    /// asserted by the CI bench at real scale, not here — timer
+    /// resolution at toy sizes would make it flaky.)
+    #[test]
+    fn chunked_prefill_bench_pins_streams_and_serializes() {
+        let mut cfg = tiny();
+        cfg.engines = vec!["sfa:k=4".into()];
+        cfg.chunked = Some(ChunkedBenchConfig {
+            long_prompt: 96,
+            long_max_new: 3,
+            decode_lanes: 4,
+            decode_prompt: 6,
+            decode_max_new: 8,
+            chunks: vec![0, 8, 32],
+        });
+        let (table, cmp) = bench_serve_chunked(&cfg);
+        assert_eq!(cmp.runs.len(), 3);
+        assert!(cmp.streams_identical, "chunk size must not change greedy streams");
+        let mono = cmp.runs.iter().find(|r| r.chunk == 0).unwrap();
+        let c8 = cmp.runs.iter().find(|r| r.chunk == 8).unwrap();
+        assert!(
+            c8.steps > mono.steps,
+            "chunk 8 spreads a 96-token prefill over many steps ({} vs {})",
+            c8.steps,
+            mono.steps
+        );
+        assert!(cmp.best_chunk > 0, "best chunk comes from the swept non-zero sizes");
+        let rendered = table.render();
+        assert!(rendered.contains("monolithic") && rendered.contains("decode TTFT p95"));
+        let doc = to_json_full(&cfg, &[], None, Some(&cmp));
+        let j = Json::parse(&doc).unwrap();
+        let c = j.get("chunked_prefill").unwrap();
+        assert_eq!(c.get("long_prompt").unwrap().as_usize().unwrap(), 96);
+        assert_eq!(c.get("decode_lanes").unwrap().as_usize().unwrap(), 4);
+        assert!(c.get("streams_identical").unwrap().as_bool().unwrap());
+        let runs = c.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 3);
+        assert_eq!(runs[0].get("chunk").unwrap().as_usize().unwrap(), 0);
+        assert!(runs[1].get("decode_ttft_p95_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(runs[1].get("steps").unwrap().as_usize().unwrap() > 0);
     }
 
     #[test]

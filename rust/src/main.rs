@@ -42,11 +42,13 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
   sfa serve   --requests 16 --scheduler continuous|wave --engines \"SPEC;SPEC\"
               --prompt-min 16 --prompt-max 256 --max-new-min 8 --max-new-max 32
               --lanes 8 --page-size 16 --max-pages 4096 [--policy KVPOLICY]
-              [--prefix-cache [--prefix-pages 1024]]
+              [--prefix-cache [--prefix-pages 1024]] [--prefill-chunk N]
               (synthetic load, request-lifecycle API over AttentionSession —
               no artifacts needed; --policy enables KV eviction with
               policy-budget admission, --prefix-cache enables radix
-              prompt-prefix sharing across requests)
+              prompt-prefix sharing across requests, --prefill-chunk N
+              ingests prompts N tokens per step so long prefills
+              interleave with decode; 0 = monolithic)
   sfa serve   --legacy [--artifacts DIR] --variant sfa_k8 --requests 16 --workers 2
               --batch 4 --max-new 16 --queue-capacity 1024   (deprecated wave router)
   sfa exp     table1|table2|table3|fig8|table12 [--steps N] [--artifacts DIR]
@@ -62,8 +64,15 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
               (cold vs radix prefix cache on a repeated-system-prompt
               workload: hit rate, TTFT gain, bit-identical streams —
               recorded in BENCH_serve.json)
+  sfa bench   serve --prefill-chunk [N] [--chunks 0,64,256,1024]
+              [--long-prompt 4096] [--long-max-new 8] [--decode-lanes 8]
+              [--decode-prompt 16] [--decode-max-new 32]
+              (chunked-prefill interference: one long prompt vs short
+              decode lanes per chunk size; decode-lane TTFT p50/p95,
+              bit-identical streams — recorded in BENCH_serve.json)
   sfa analyze entropy|svd|memory|session [--variant V] [--steps N] [--engine SPEC]
-engine SPECs: dense | flash_dense:bq=64,bk=64 | sfa:k=8,bq=64,bk=64[,skip=on[,thresh=T]]
+engine SPECs: dense | flash_dense:bq=64,bk=64
+              | sfa:k=8,bq=64,bk=64[,skip=on[,thresh=T|,mass=EPS]]
               | sfa_ref:k=8
               | window:w=256,scorer=sfa_k8 | lowrank:r=16 | mla:r=16
               | performer:m=128 | quant:scorer=sfa_k8
@@ -168,6 +177,7 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         model_seed: args.u64_or("model-seed", 0x5FA)?,
         kv_policy,
         prefix_cache,
+        prefill_chunk: args.usize_or("prefill-chunk", 0)?,
     };
     if let Some(px) = &cfg.prefix_cache {
         if px.max_pages < 1 {
@@ -206,6 +216,7 @@ fn serve_workload_cfg(
         // `sfa serve` drives one scheduler straight from `serve`.
         policies: vec![serve.kv_policy],
         prefix: None,
+        chunked: None,
         serve,
         seed: args.u64_or("seed", 42)?,
     };
@@ -472,6 +483,51 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 // Sweep default: enough lanes that the page budget,
                 // not the lane cap, is what policy admission relaxes.
                 cfg.serve.max_lanes = 32;
+            }
+            if args.has("prefill-chunk") || args.get("prefill-chunk").is_some() {
+                // Chunked-prefill interference comparison: one long
+                // prompt submitted ahead of a fleet of short decode
+                // lanes, the whole stream re-run per chunk size
+                // (chunk 0 = monolithic baseline). Measures how far
+                // chunking shields decode-lane TTFT from long-prompt
+                // admission stalls.
+                if args.has("prefix-cache") || cfg.serve.prefix_cache.is_some() {
+                    bail!(
+                        "--prefill-chunk and --prefix-cache are separate bench \
+                         comparisons — pick one"
+                    );
+                }
+                let mut ck = serve_bench::ChunkedBenchConfig {
+                    long_prompt: args.usize_or("long-prompt", 4096)?,
+                    long_max_new: args.usize_or("long-max-new", 8)?,
+                    decode_lanes: args.usize_or("decode-lanes", 8)?,
+                    decode_prompt: args.usize_or("decode-prompt", 16)?,
+                    decode_max_new: args.usize_or("decode-max-new", 32)?,
+                    chunks: args.usize_list_or("chunks", &[0, 64, 256, 1024])?,
+                };
+                // `--prefill-chunk N` narrows the sweep to {0, N};
+                // an explicit `--chunks` list wins over both.
+                let n = args.usize_or("prefill-chunk", 0)?;
+                if n > 0 && args.get("chunks").is_none() {
+                    ck.chunks = vec![0, n];
+                }
+                if !ck.chunks.contains(&0) {
+                    ck.chunks.insert(0, 0);
+                }
+                cfg.serve.kv_policy = None;
+                cfg.chunked = Some(ck);
+                let (table, cmp) = serve_bench::bench_serve_chunked(&cfg);
+                table.print();
+                let path = args.str_or("serve-json", "BENCH_serve.json");
+                std::fs::write(
+                    &path,
+                    serve_bench::to_json_full(&cfg, &[], None, Some(&cmp)),
+                )?;
+                println!("\n[bench] wrote chunked-prefill comparison to {path}");
+                if !cmp.streams_identical {
+                    bail!("chunked prefill changed greedy token streams — correctness bug");
+                }
+                return Ok(());
             }
             if args.has("prefix-cache") {
                 // Prefix-cache comparison: cold vs radix prefix cache

@@ -36,7 +36,14 @@
 //!   cached prefix and prefill only the suffix, and the admission
 //!   accounting charges only that un-shared suffix
 //!   ([`pages_reserved_shared`]). Greedy streams are bit-for-bit
-//!   identical with the cache on or off.
+//!   identical with the cache on or off;
+//! * `ServeConfig::prefill_chunk` — chunked prefill with
+//!   prefill–decode interleaving: prompts are ingested incrementally
+//!   (at most one chunk per lane per step) so a long prompt no longer
+//!   stalls live decode lanes, with `RequestState::Prefilling {
+//!   consumed, total }` reporting per-chunk progress. `0` keeps the
+//!   legacy monolithic path; greedy streams are bit-for-bit identical
+//!   across every chunk size, including 0.
 //!
 //! See ARCHITECTURE.md §"Serving lifecycle" for the state machine and
 //! the admission rules, and `sfa bench serve` for the continuous-vs-
@@ -78,6 +85,7 @@ mod tests {
             model_seed: 7,
             kv_policy: None,
             prefix_cache: None,
+            prefill_chunk: 0,
         }
     }
 
@@ -334,7 +342,7 @@ mod tests {
             })
             .collect();
         assert_eq!(states[0], RequestState::Queued);
-        assert_eq!(states[1], RequestState::Prefilling);
+        assert!(matches!(states[1], RequestState::Prefilling { .. }));
         assert_eq!(states[2], RequestState::Decoding);
         assert!(states[3].is_terminal());
         let streamed: Vec<i32> = events
@@ -443,6 +451,7 @@ mod tests {
             model_seed: 7,
             kv_policy: None,
             prefix_cache: None,
+            prefill_chunk: 0,
         };
         let run = |pol: Option<PagedKvPolicy>| -> (f64, usize, usize, usize) {
             let mut s = ContinuousBatcher::new(ServeConfig { kv_policy: pol, ..base });
@@ -634,5 +643,205 @@ mod tests {
             fin.iter().find(|f| f.id == id).unwrap().tokens.clone()
         };
         assert_eq!(run(false), run(true));
+    }
+
+    /// The tentpole acceptance pin: greedy token streams are
+    /// **bit-for-bit identical** for `prefill_chunk ∈ {0, 64, 256,
+    /// 1024}` — plus small chunk sizes that split the prompt many
+    /// times — for every engine family. Chunking changes *when* cache
+    /// bytes land, never which bytes.
+    #[test]
+    fn chunked_prefill_streams_are_chunk_size_invariant() {
+        for spec in ["dense", "flash_dense", "sfa:k=4,bq=8,bk=8"] {
+            let run = |chunk: usize| -> Vec<(RequestId, Vec<i32>)> {
+                let cfg = ServeConfig { prefill_chunk: chunk, ..tiny_cfg() };
+                let mut s = ContinuousBatcher::new(cfg);
+                s.submit(ServeRequest::new(prompt(1, 200, 32)).max_new(5).engine(spec))
+                    .unwrap();
+                s.submit(ServeRequest::new(prompt(2, 7, 32)).max_new(5).engine(spec))
+                    .unwrap();
+                s.submit(ServeRequest::new(prompt(3, 33, 32)).max_new(5).engine(spec))
+                    .unwrap();
+                let mut fin = s.run_to_completion();
+                fin.sort_by_key(|f| f.id);
+                assert_eq!(s.pages_in_use(), 0, "{spec}: idle scheduler holds no pages");
+                fin.iter()
+                    .map(|f| {
+                        assert!(matches!(f.state, RequestState::Finished { .. }), "{spec}");
+                        (f.id, f.tokens.clone())
+                    })
+                    .collect()
+            };
+            let monolithic = run(0);
+            for chunk in [1, 5, 64, 256, 1024] {
+                assert_eq!(
+                    run(chunk),
+                    monolithic,
+                    "{spec}: chunk={chunk} must reproduce the monolithic streams"
+                );
+            }
+        }
+    }
+
+    /// Chunked prefill composes with KV eviction policies: per-chunk
+    /// key observation plus the finish-time query replay leave the
+    /// policy in exactly the monolithic state (pinned bitwise at the
+    /// session layer), so greedy streams match chunk-for-chunk — for
+    /// a no-op budget *and* for genuinely pruning ones.
+    #[test]
+    fn chunked_prefill_composes_with_kv_policies() {
+        let spec = "sfa:k=4,bq=8,bk=8";
+        let policies = [
+            PagedKvPolicy::H2o { budget: 48, recent: 8 }, // no-op for this workload
+            PagedKvPolicy::SnapKv { budget: 16, recent: 4 }, // prunes the long prompt
+            PagedKvPolicy::Quest { budget: 16 },
+        ];
+        for pol in policies {
+            let run = |chunk: usize| -> Vec<Vec<i32>> {
+                let cfg =
+                    ServeConfig { kv_policy: Some(pol), prefill_chunk: chunk, ..tiny_cfg() };
+                let mut s = ContinuousBatcher::new(cfg);
+                s.submit(ServeRequest::new(prompt(11, 24, 32)).max_new(8).engine(spec))
+                    .unwrap();
+                s.submit(ServeRequest::new(prompt(12, 9, 32)).max_new(8).engine(spec))
+                    .unwrap();
+                let mut fin = s.run_to_completion();
+                fin.sort_by_key(|f| f.id);
+                fin.iter()
+                    .map(|f| {
+                        assert!(matches!(f.state, RequestState::Finished { .. }), "{pol:?}");
+                        f.tokens.clone()
+                    })
+                    .collect()
+            };
+            let mono = run(0);
+            for chunk in [1, 5, 64] {
+                assert_eq!(run(chunk), mono, "{pol:?}: chunk={chunk} changed greedy tokens");
+            }
+        }
+    }
+
+    /// Chunked prefill composes with the radix prefix cache: a hit
+    /// forks the shared prefix and chunk-ingests only the un-shared
+    /// suffix, reproducing the monolithic streams bit-for-bit while
+    /// the hits still happen and share the same token counts.
+    #[test]
+    fn chunked_prefill_composes_with_prefix_cache() {
+        for spec in ["dense", "sfa:k=4,bq=8,bk=8"] {
+            let sys = prompt(77, 24, 32);
+            let mk = |i: usize| {
+                let mut p = sys.clone();
+                p.push(20 + i as i32);
+                p.extend(prompt(100 + i as u64, 5, 32));
+                p
+            };
+            let run = |chunk: usize| -> (Vec<Vec<i32>>, Vec<usize>, u64) {
+                let cfg = ServeConfig {
+                    prefix_cache: Some(PrefixCacheConfig::default()),
+                    prefill_chunk: chunk,
+                    ..tiny_cfg()
+                };
+                let mut s = ContinuousBatcher::new(cfg);
+                s.submit(ServeRequest::new(mk(0)).max_new(6).engine(spec)).unwrap();
+                let mut fin = s.run_to_completion();
+                for i in 1..4 {
+                    s.submit(ServeRequest::new(mk(i)).max_new(6).engine(spec)).unwrap();
+                }
+                fin.extend(s.run_to_completion());
+                fin.sort_by_key(|f| f.id);
+                let shared = fin.iter().map(|f| f.prefix_shared).collect();
+                let toks = fin
+                    .iter()
+                    .map(|f| {
+                        assert!(matches!(f.state, RequestState::Finished { .. }), "{spec}");
+                        f.tokens.clone()
+                    })
+                    .collect();
+                (toks, shared, s.prefix_stats().hits)
+            };
+            let (mono_toks, mono_shared, mono_hits) = run(0);
+            assert!(mono_hits >= 3, "{spec}: later requests hit");
+            for chunk in [2, 7, 64] {
+                let (toks, shared, hits) = run(chunk);
+                assert_eq!(toks, mono_toks, "{spec}: chunk={chunk} changed greedy tokens");
+                assert_eq!(shared, mono_shared, "{spec}: chunk={chunk} changed sharing");
+                assert_eq!(hits, mono_hits, "{spec}: chunk={chunk} changed hit counts");
+            }
+        }
+    }
+
+    /// The tentpole behavior: while a long prompt is mid-prefill,
+    /// decode lanes keep producing a token every step — prompt
+    /// ingestion no longer stalls the wave. Also pins the per-chunk
+    /// progress surface: `Prefilling { consumed, total }` advances by
+    /// at most the chunk quantum per step.
+    #[test]
+    fn chunked_prefill_interleaves_decode_with_a_long_prompt() {
+        let cfg = ServeConfig { prefill_chunk: 8, ..tiny_cfg() };
+        let mut s = ContinuousBatcher::new(cfg);
+        // A short request first; one step makes it a live decode lane.
+        let short = s
+            .submit(ServeRequest::new(prompt(1, 5, 32)).max_new(40).engine("dense"))
+            .unwrap();
+        s.step();
+        assert!(matches!(s.state(short), Some(RequestState::Decoding)));
+        // The long prompt arrives: 120 tokens at chunk 8 = 15 steps.
+        let long = s
+            .submit(ServeRequest::new(prompt(2, 120, 32)).max_new(4).engine("dense"))
+            .unwrap();
+        let mut interleaved_steps = 0;
+        let mut last_consumed = 0;
+        while matches!(
+            s.state(long),
+            Some(RequestState::Queued) | Some(RequestState::Prefilling { .. })
+        ) {
+            let r = s.step();
+            if let Some(RequestState::Prefilling { consumed, total }) = s.state(long) {
+                assert_eq!(*total, 120);
+                assert!(*consumed > last_consumed && *consumed - last_consumed <= 8);
+                last_consumed = *consumed;
+                assert!(r.prefill_tokens > 0);
+                assert!(
+                    r.decoded_tokens >= 1,
+                    "the short lane decodes while the long one prefills"
+                );
+                interleaved_steps += 1;
+            }
+        }
+        assert!(
+            interleaved_steps >= 10,
+            "a 120-token prompt at chunk 8 spends many steps mid-prefill \
+             ({interleaved_steps} observed)"
+        );
+        let fin = s.run_to_completion();
+        for id in [short, long] {
+            let f = fin.iter().find(|f| f.id == id).unwrap();
+            assert!(matches!(f.state, RequestState::Finished { .. }));
+        }
+    }
+
+    /// Satellite regression: the wave scheduler's `take_finished`
+    /// (via `SchedulerCore`) prunes terminal lifecycle entries just
+    /// like the batcher's, so a long-running wave server's state map
+    /// stays bounded by queued + live requests.
+    #[test]
+    fn wave_take_finished_prunes_terminal_lifecycle_entries() {
+        let mut s = WaveScheduler::new(tiny_cfg());
+        let id = s
+            .submit(ServeRequest::new(prompt(1, 6, 32)).max_new(3).engine("dense"))
+            .unwrap();
+        while s.has_work() {
+            s.step();
+        }
+        assert!(
+            matches!(s.state(id), Some(RequestState::Finished { .. })),
+            "terminal state visible until drained"
+        );
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 1);
+        assert!(
+            s.state(id).is_none(),
+            "take_finished prunes terminal lifecycle entries (bounded memory)"
+        );
     }
 }

@@ -5,9 +5,10 @@
 //! budget) reports through.
 //!
 //! ```text
-//! Queued ──► Prefilling ──► Decoding ──► Finished { reason }
-//!    │            │             │
-//!    └────────────┴─────────────┴─────► Failed { error }
+//! Queued ──► Prefilling { consumed, total } ──► Decoding ──► Finished { reason }
+//!    │            │ (consumed advances            │
+//!    │            │  chunk-by-chunk)              │
+//!    └────────────┴───────────────────────────────┴─────► Failed { error }
 //! ```
 
 use std::sync::mpsc::Sender;
@@ -102,7 +103,13 @@ pub enum FinishReason {
 #[derive(Debug, Clone, PartialEq)]
 pub enum RequestState {
     Queued,
-    Prefilling,
+    /// Prompt ingestion in flight. Under chunked prefill
+    /// (`ServeConfig::prefill_chunk > 0`) `consumed` advances by one
+    /// chunk per scheduler step, with a `State` event per chunk; the
+    /// legacy monolithic path jumps straight from `consumed: 0` to
+    /// `Decoding` in one step. `consumed` counts prompt tokens whose
+    /// KV is cached, including any radix-cache shared prefix.
+    Prefilling { consumed: usize, total: usize },
     Decoding,
     Finished { reason: FinishReason },
     Failed { error: ServeError },
@@ -233,7 +240,7 @@ mod tests {
     #[test]
     fn terminal_states() {
         assert!(!RequestState::Queued.is_terminal());
-        assert!(!RequestState::Prefilling.is_terminal());
+        assert!(!RequestState::Prefilling { consumed: 0, total: 4 }.is_terminal());
         assert!(!RequestState::Decoding.is_terminal());
         assert!(RequestState::Finished { reason: FinishReason::MaxTokens }.is_terminal());
         assert!(RequestState::Failed { error: ServeError::EmptyPrompt }.is_terminal());

@@ -14,7 +14,11 @@
 //! 2. **Prefills** each admitted request at its own boundary (batch-1,
 //!    its own prompt length — no padding to a wave-wide length) and
 //!    samples its first token: time-to-first-token does not wait for
-//!    any other sequence.
+//!    any other sequence. With `ServeConfig::prefill_chunk > 0` the
+//!    prompt is instead ingested **incrementally**: each step every
+//!    mid-prefill lane advances by at most one chunk before the
+//!    decode pass runs, so a long prompt interleaves with live decode
+//!    lanes instead of stalling them.
 //! 3. **Decodes** one token for every live sequence of every engine
 //!    group in one mixed batch per group, then **releases finished
 //!    lanes' pages on the same step** — the mid-wave eviction that
@@ -32,7 +36,7 @@ use std::time::Instant;
 
 use crate::attention::decode::PagedKvPolicy;
 use crate::attention::registry::parse_spec;
-use crate::attention::session::{AttentionSession, LaneId, SessionConfig};
+use crate::attention::session::{AttentionSession, LaneId, PrefillState, SessionConfig};
 use crate::attention::HeadTensor;
 use crate::coordinator::metrics::ServeMetrics;
 use crate::kv_cache::radix::{EntryId, PrefixCacheStats, PrefixHit, RadixPrefixCache};
@@ -99,6 +103,19 @@ pub struct ServeConfig {
     /// must not). The wave baseline ignores this (it is the cold
     /// comparison point).
     pub prefix_cache: Option<PrefixCacheConfig>,
+    /// Chunked-prefill quantum in prompt tokens. `0` (default) keeps
+    /// the legacy monolithic path: a request's whole prompt is
+    /// ingested in its admission step, stalling every live decode
+    /// lane for the duration. `N > 0` makes the [`ContinuousBatcher`]
+    /// interleave: each step, every mid-prefill lane advances by at
+    /// most `N` prompt tokens and then all fully-prefilled lanes
+    /// decode one token — a long prompt no longer blocks short
+    /// requests' tokens. Greedy streams are bit-for-bit identical
+    /// across chunk sizes (including 0): chunking changes *when*
+    /// cache bytes land, never which bytes, and the first token is
+    /// always sampled from the cache-scored last prompt position.
+    /// The wave baseline ignores this (monolithic is its semantics).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -115,6 +132,7 @@ impl Default for ServeConfig {
             model_seed: 0x5FA,
             kv_policy: None,
             prefix_cache: None,
+            prefill_chunk: 0,
         }
     }
 }
@@ -192,6 +210,9 @@ pub fn pages_reserved_shared(
 pub struct StepReport {
     /// Requests admitted (prefilled) this step.
     pub admitted: usize,
+    /// Prompt tokens ingested by the chunked-prefill pass this step
+    /// (0 under the monolithic path, which ingests inside admission).
+    pub prefill_tokens: usize,
     /// Tokens sampled this step (prefill first-tokens + decode).
     pub decoded_tokens: usize,
     pub finished: usize,
@@ -323,6 +344,12 @@ pub(crate) struct ActiveSeq {
     pub ttft_s: f64,
     /// Wave scheduling only: finished but still holding its lane.
     pub done: Option<FinishReason>,
+    /// Chunked prefill in flight (`ServeConfig::prefill_chunk > 0`):
+    /// prompt-ingestion progress. `None` once the prompt is fully
+    /// cached — only then does the lane join decode batches. Until the
+    /// first token is sampled, `last_token`/`generated`/`ttft_s` hold
+    /// placeholder values.
+    pub prefill: Option<PrefillState>,
 }
 
 /// All sequences sharing one engine spec (and one session / cache).
@@ -403,6 +430,12 @@ pub(crate) fn group_index(
 /// streams are **bit-for-bit identical** with the prefix cache on,
 /// off, hit, or missed. (The caller's borrow bookkeeping happens after
 /// this returns; a failed start leaves nothing to unwind here.)
+///
+/// Under chunked prefill (`cfg.prefill_chunk > 0`) this only *claims*
+/// the lane (forking any cached prefix) and returns a sequence with
+/// `prefill: Some(..)` — prompt ingestion and the first-token sample
+/// happen chunk-by-chunk in [`ContinuousBatcher::step`]'s prefill
+/// pass, so admission never stalls live decode lanes on a long prompt.
 pub(crate) fn start_seq(
     model: &ToyLm,
     group: &mut EngineGroup,
@@ -415,6 +448,47 @@ pub(crate) fn start_seq(
 ) -> Result<ActiveSeq, (ServeRequest, ServeError)> {
     let plen = req.prompt.len();
     let budget = req.max_new.min(cfg.max_seq - plen);
+    if cfg.prefill_chunk > 0 {
+        // Chunked admission: claim the lane now, ingest the prompt in
+        // the scheduler's per-step chunk pass. A prefix hit starts
+        // with the shared tokens already consumed (`peek` caps shared
+        // at plen - 1, so at least one suffix chunk always follows).
+        let (lane, consumed) = match prefix {
+            Some(hit) => {
+                debug_assert!(cfg.kv_policy.is_none(), "prefix cache runs policy-free");
+                match group.session.admit_lane_from_fork(&hit.seqs, hit.shared) {
+                    Ok(l) => (l, hit.shared),
+                    Err(e) => return Err((req, e.into())),
+                }
+            }
+            None => {
+                let lane = match &cfg.kv_policy {
+                    Some(p) => group.session.admit_lane_with_policy(p),
+                    None => group.session.admit_lane(),
+                };
+                (lane, 0)
+            }
+        };
+        let rng = Rng::new(cfg.model_seed ^ req.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let now = Instant::now();
+        group.reserved_pages += reserved_pages;
+        return Ok(ActiveSeq {
+            id,
+            req,
+            lane,
+            last_token: 0,
+            generated: Vec::new(),
+            budget,
+            reserved_pages,
+            prefix: prefix.map(|h| (h.entry, h.shared)),
+            rng,
+            submitted,
+            last_token_at: now,
+            ttft_s: 0.0,
+            done: None,
+            prefill: Some(PrefillState { consumed, total: plen }),
+        });
+    }
     let (q, k, v) = model.qkv_prompt(&req.prompt, 0);
     // Policy-budget serving admits every lane with its eviction
     // policy; prefill_lane prunes a long prompt back under the budget
@@ -486,6 +560,7 @@ pub(crate) fn start_seq(
         last_token_at: now,
         ttft_s: now.duration_since(submitted).as_secs_f64(),
         done: None,
+        prefill: None,
     })
 }
 
@@ -703,7 +778,13 @@ impl ContinuousBatcher {
             }
             let QueuedReq { id, req, submitted } =
                 self.core.queue.pop_front().expect("front exists");
-            set_state(&mut self.core.states, &req, id, RequestState::Prefilling);
+            let shared = hit.as_ref().map(|h| h.shared).unwrap_or(0);
+            set_state(
+                &mut self.core.states,
+                &req,
+                id,
+                RequestState::Prefilling { consumed: shared, total: plen },
+            );
             let seq = match start_seq(
                 &self.core.model,
                 &mut self.core.groups[gi],
@@ -735,6 +816,13 @@ impl ContinuousBatcher {
                 }
             }
             report.admitted += 1;
+            if seq.prefill.is_some() {
+                // Chunked mode: the lane is claimed but the prompt is
+                // not ingested yet — the chunk pass (same step) does
+                // that, and samples the TTFT token when it completes.
+                self.core.groups[gi].active.push(seq);
+                continue;
+            }
             report.decoded_tokens += 1; // the TTFT token
             set_state(&mut self.core.states, &seq.req, id, RequestState::Decoding);
             emit(&seq.req, ServeEvent::Token { id, index: 0, token: seq.last_token });
@@ -772,13 +860,118 @@ impl ContinuousBatcher {
         self.core.finished.push(finished_record(&seq, &self.core.groups[gi].spec, state));
     }
 
-    /// One mixed decode step per engine group over all its live lanes.
+    /// Chunked-prefill pass (`ServeConfig::prefill_chunk > 0`): every
+    /// lane still ingesting its prompt advances by up to one chunk of
+    /// prompt tokens, then lanes whose prefill just completed sample
+    /// their first token and join this same step's decode wave. The
+    /// budget is **per lane**, not shared across lanes: a short prompt
+    /// admitted behind a half-ingested 4096-token prompt finishes its
+    /// own prefill in its first step — the decode-lane TTFT win `sfa
+    /// bench serve --prefill-chunk` measures.
+    ///
+    /// Chunk attention outputs are discarded; the first token is
+    /// sampled from [`AttentionSession::lane_last_output`] with the
+    /// regenerated last-position query row ([`ToyLm`] rows are pure
+    /// functions of (token, position)), reading only cache bytes — the
+    /// same computation as the monolithic path, so greedy streams are
+    /// bit-for-bit chunk-size-invariant.
+    fn advance_prefills(&mut self, report: &mut StepReport) {
+        let chunk = self.core.cfg.prefill_chunk;
+        if chunk == 0 {
+            return;
+        }
+        for gi in 0..self.core.groups.len() {
+            let mut i = 0;
+            while i < self.core.groups[gi].active.len() {
+                let Some(st) = self.core.groups[gi].active[i].prefill else {
+                    i += 1;
+                    continue;
+                };
+                let take = chunk.min(st.total - st.consumed);
+                let (id, lane) = {
+                    let seq = &self.core.groups[gi].active[i];
+                    (seq.id, seq.lane)
+                };
+                let (q, k, v) = self.core.model.qkv_prompt(
+                    &self.core.groups[gi].active[i].req.prompt[st.consumed..st.consumed + take],
+                    st.consumed,
+                );
+                if let Err(e) =
+                    self.core.groups[gi].session.prefill_chunk(lane, &q, &k, &v, st.total)
+                {
+                    // The session auto-released the lane; drop the
+                    // sequence and return its reservation (and prefix
+                    // borrow) exactly once.
+                    let seq = self.core.groups[gi].active.swap_remove(i);
+                    self.core.groups[gi].return_reservation(&seq);
+                    self.core.fail_request(id, &seq.req, ServeError::from(e));
+                    report.failed += 1;
+                    continue; // i now holds the swapped-in element
+                }
+                report.prefill_tokens += take;
+                let consumed = st.consumed + take;
+                if consumed < st.total {
+                    self.core.groups[gi].active[i].prefill =
+                        Some(PrefillState { consumed, total: st.total });
+                    set_state(
+                        &mut self.core.states,
+                        &self.core.groups[gi].active[i].req,
+                        id,
+                        RequestState::Prefilling { consumed, total: st.total },
+                    );
+                    i += 1;
+                    continue;
+                }
+                // Prompt fully cached: sample the TTFT token from the
+                // cache-scored output at the last prompt position.
+                let (ql, _, _) = {
+                    let prompt = &self.core.groups[gi].active[i].req.prompt;
+                    self.core.model.qkv_prompt(&prompt[st.total - 1..], st.total - 1)
+                };
+                let out = self.core.groups[gi].session.lane_last_output(lane, &ql);
+                let logits = self.core.model.logits_at(&out, 0, 0);
+                let now = Instant::now();
+                {
+                    let seq = &mut self.core.groups[gi].active[i];
+                    let tok = sample(&logits, seq.req.sampling, &mut seq.rng);
+                    seq.prefill = None;
+                    seq.last_token = tok;
+                    seq.generated.push(tok);
+                    seq.last_token_at = now;
+                    seq.ttft_s = now.duration_since(seq.submitted).as_secs_f64();
+                }
+                report.decoded_tokens += 1; // the TTFT token
+                set_state(
+                    &mut self.core.states,
+                    &self.core.groups[gi].active[i].req,
+                    id,
+                    RequestState::Decoding,
+                );
+                let seq = &self.core.groups[gi].active[i];
+                emit(&seq.req, ServeEvent::Token { id, index: 0, token: seq.last_token });
+                if let Some(reason) = finish_reason(seq) {
+                    let seq = self.core.groups[gi].active.swap_remove(i);
+                    self.retire(gi, seq, reason, report);
+                    continue;
+                }
+                i += 1;
+            }
+        }
+    }
+
+    /// One mixed decode step per engine group over all its live lanes
+    /// whose prefill is complete (mid-prefill lanes are skipped — they
+    /// have no sampled token to extend yet).
     /// Index iteration is load-bearing: the body calls `&mut self`
     /// methods (retire / fail_request) that an iterator borrow would
     /// forbid.
     fn decode(&mut self, report: &mut StepReport) {
         for gi in 0..self.core.groups.len() {
-            let n = self.core.groups[gi].active.len();
+            // Batch rows → active indices, skipping mid-prefill lanes.
+            let rows: Vec<usize> = (0..self.core.groups[gi].active.len())
+                .filter(|&ai| self.core.groups[gi].active[ai].prefill.is_none())
+                .collect();
+            let n = rows.len();
             if n == 0 {
                 continue;
             }
@@ -788,7 +981,8 @@ impl ContinuousBatcher {
             let mut k = HeadTensor::zeros(n, heads, 1, d);
             let mut v = HeadTensor::zeros(n, heads, 1, d);
             let mut lanes: Vec<LaneId> = Vec::with_capacity(n);
-            for (bi, seq) in self.core.groups[gi].active.iter().enumerate() {
+            for (bi, &ai) in rows.iter().enumerate() {
+                let seq = &self.core.groups[gi].active[ai];
                 let pos = self.core.groups[gi].session.lane_len(seq.lane);
                 self.core.model.fill_decode_row(&mut q, &mut k, &mut v, bi, seq.last_token, pos);
                 lanes.push(seq.lane);
@@ -813,7 +1007,8 @@ impl ContinuousBatcher {
             };
             let now = Instant::now();
             let mut done: Vec<(usize, FinishReason)> = Vec::new();
-            for (bi, seq) in self.core.groups[gi].active.iter_mut().enumerate() {
+            for (bi, &ai) in rows.iter().enumerate() {
+                let seq = &mut self.core.groups[gi].active[ai];
                 let logits = self.core.model.logits_at(&out, bi, 0);
                 let tok = sample(&logits, seq.req.sampling, &mut seq.rng);
                 seq.last_token = tok;
@@ -828,13 +1023,13 @@ impl ContinuousBatcher {
                 seq.last_token_at = now;
                 report.decoded_tokens += 1;
                 if let Some(reason) = finish_reason(seq) {
-                    done.push((bi, reason));
+                    done.push((ai, reason));
                 }
             }
-            // Evict finished lanes immediately (descending index keeps
-            // the remaining swap_remove targets stable).
-            for &(bi, reason) in done.iter().rev() {
-                let seq = self.core.groups[gi].active.swap_remove(bi);
+            // Evict finished lanes immediately (descending active index
+            // keeps the remaining swap_remove targets stable).
+            for &(ai, reason) in done.iter().rev() {
+                let seq = self.core.groups[gi].active.swap_remove(ai);
                 self.retire(gi, seq, reason, report);
             }
         }
@@ -849,6 +1044,7 @@ impl Scheduler for ContinuousBatcher {
     fn step(&mut self) -> StepReport {
         let mut report = StepReport::default();
         self.admit(&mut report);
+        self.advance_prefills(&mut report);
         self.decode(&mut report);
         report.pages_pruned =
             self.core.groups.iter_mut().map(|g| g.session.take_policy_freed()).sum();
@@ -915,6 +1111,7 @@ mod tests {
             model_seed: 7,
             kv_policy: None,
             prefix_cache: None,
+            prefill_chunk: 0,
         }
     }
 

@@ -42,12 +42,14 @@ pub struct WaveScheduler {
 impl WaveScheduler {
     /// Panics on a degenerate config (see `ServeConfig::assert_valid`);
     /// CLI layers should range-check user input first. Any configured
-    /// `kv_policy` or `prefix_cache` is stripped: the wave scheduler
-    /// *is* the worst-case, cold-prefill baseline the policy-budgeted
-    /// and prefix-sharing batcher is measured against.
+    /// `kv_policy`, `prefix_cache`, or `prefill_chunk` is stripped:
+    /// the wave scheduler *is* the worst-case, cold-monolithic
+    /// baseline the policy-budgeted, prefix-sharing, chunk-prefilling
+    /// batcher is measured against.
     pub fn new(mut cfg: ServeConfig) -> WaveScheduler {
         cfg.kv_policy = None;
         cfg.prefix_cache = None;
+        cfg.prefill_chunk = 0;
         WaveScheduler { core: SchedulerCore::new(cfg) }
     }
 
@@ -113,7 +115,12 @@ impl WaveScheduler {
 
         for qr in members {
             let QueuedReq { id, req, submitted } = qr;
-            set_state(&mut self.core.states, &req, id, RequestState::Prefilling);
+            set_state(
+                &mut self.core.states,
+                &req,
+                id,
+                RequestState::Prefilling { consumed: 0, total: req.prompt.len() },
+            );
             let reserved = pages_needed(
                 req.prompt.len(),
                 wave_steps,
