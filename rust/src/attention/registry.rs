@@ -403,6 +403,33 @@ pub fn split_spec_list(s: &str) -> Vec<String> {
     s.split(';').map(str::trim).filter(|x| !x.is_empty()).map(String::from).collect()
 }
 
+/// Sanity-check a speculative-decoding draft spec against its target.
+/// Correctness never depends on the draft (the target verifies every
+/// position), so this only rejects configurations that are nonsense
+/// rather than merely slow: a draft identical to the target (speculation
+/// becomes pure overhead) and a feature-sparse draft whose top-k budget
+/// *exceeds* the target's (the "cheap" engine would out-spend the
+/// engine checking it).
+pub fn validate_draft_spec(draft: &EngineSpec, target: &EngineSpec) -> Result<(), SpecError> {
+    if draft == target {
+        return Err(err(format!(
+            "speculative draft {:?} is identical to the target engine — \
+             drafting would only add overhead",
+            draft.canonical()
+        )));
+    }
+    if let (Some(dk), Some(tk)) = (draft.feature_k(), target.feature_k()) {
+        if dk > tk {
+            return Err(err(format!(
+                "speculative draft {:?} has feature budget k={dk} above the \
+                 target's k={tk} — the draft must be the cheaper engine",
+                draft.canonical()
+            )));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -551,6 +578,27 @@ mod tests {
         assert_eq!(parse_spec("flash_dense").unwrap().feature_k(), None);
         assert_eq!(parse_spec("dense").unwrap().cache_scorer(), Scorer::Dense);
         assert_eq!(parse_spec("sfa_ref:k=3").unwrap().cache_scorer(), Scorer::Sfa { k: 3 });
+    }
+
+    #[test]
+    fn draft_spec_validation_rejects_nonsense_pairs() {
+        let target = parse_spec("sfa:k=8").unwrap();
+        // Cheaper SFA drafts and non-SFA drafts pass.
+        validate_draft_spec(&parse_spec("sfa:k=2").unwrap(), &target).unwrap();
+        validate_draft_spec(&parse_spec("window:w=64").unwrap(), &target).unwrap();
+        validate_draft_spec(&parse_spec("lowrank:r=4").unwrap(), &target).unwrap();
+        // Equal-k drafts with different tiling are still distinct engines.
+        validate_draft_spec(&parse_spec("sfa:k=8,bq=16,bk=16").unwrap(), &target).unwrap();
+        // Identical draft == target is rejected.
+        let e = validate_draft_spec(&parse_spec("sfa:k=8,bq=64,bk=64").unwrap(), &target)
+            .unwrap_err();
+        assert!(e.0.contains("identical to the target"), "{e}");
+        // A draft more feature-hungry than the target is rejected.
+        let e = validate_draft_spec(&parse_spec("sfa:k=12").unwrap(), &target).unwrap_err();
+        assert!(e.0.contains("above the"), "{e}");
+        // Dense targets accept any feature budget (nothing to compare).
+        validate_draft_spec(&parse_spec("sfa:k=12").unwrap(), &parse_spec("dense").unwrap())
+            .unwrap();
     }
 
     #[test]

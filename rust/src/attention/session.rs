@@ -1083,6 +1083,102 @@ impl AttentionSession {
         Ok(out)
     }
 
+    /// Multi-position verify step for speculative decoding: append `n`
+    /// new tokens' K/V per lane (batch row `i` of `q`/`k`/`v` belongs
+    /// to `lanes[i]`), then score query row `t` against the lane's
+    /// cached prefix up to and including appended token `t`.
+    ///
+    /// The output is **bit-for-bit** what `n` sequential
+    /// [`Self::decode_step_lanes`] calls would have produced: every
+    /// position runs the same [`Self::head_scores`] +
+    /// `softmax_weighted_sum` scalar kernel over the same slot prefix.
+    /// That exactness is deliberate — the tiled append kernels behind
+    /// [`Self::chunked_prefill_outputs`] fold their online softmax in
+    /// tile order and are only tolerance-equal, which would break the
+    /// speculation-on/off greedy stream pin. The batch dimension only
+    /// adds parallelism, never changes a lane's result.
+    ///
+    /// Speculation runs policy-free (a KV policy observes exactly one
+    /// position per decode step; a multi-position verify would feed it
+    /// a different call sequence), so policy lanes are rejected.
+    ///
+    /// On a page-budget error the failing lane is auto-released
+    /// (mirroring [`Self::extend_lane`]); lanes earlier in the batch
+    /// keep their appended rows — callers on the speculative path
+    /// release the forked verify lane on any error anyway.
+    pub fn score_lanes(
+        &mut self,
+        lanes: &[LaneId],
+        q: &HeadTensor,
+        k: &HeadTensor,
+        v: &HeadTensor,
+    ) -> Result<HeadTensor, PageError> {
+        assert!(!lanes.is_empty(), "score_lanes needs at least one lane");
+        assert_eq!(q.batch, lanes.len(), "one q batch row per lane");
+        assert_eq!((k.batch, v.batch), (lanes.len(), lanes.len()), "one k/v batch row per lane");
+        assert_eq!((q.heads, k.heads, v.heads), (self.cfg.heads, self.cfg.heads, self.cfg.heads));
+        assert_eq!((q.d, k.d, v.d), (self.cfg.d, self.cfg.d, self.cfg.d_v));
+        assert_eq!((k.n, v.n), (q.n, q.n), "one k/v row per scored position");
+        assert!(q.n > 0, "score_lanes needs at least one position");
+        let heads = self.cfg.heads;
+        let n = q.n;
+        let mut seqs: Vec<SeqId> = Vec::with_capacity(lanes.len() * heads);
+        let mut base: Vec<usize> = Vec::with_capacity(lanes.len());
+        for (bi, &lane) in lanes.iter().enumerate() {
+            assert!(self.lanes[lane].live, "lane {lane} was released");
+            assert!(
+                self.lanes[lane].prefill.is_none(),
+                "lane {lane} has an unfinished chunked prefill"
+            );
+            assert!(
+                self.lanes[lane].policy.is_none(),
+                "score_lanes does not drive policy observation (speculation runs policy-free)"
+            );
+            base.push(self.lanes[lane].len);
+            for h in 0..heads {
+                let seq = self.lanes[lane].seqs[h];
+                for t in 0..n {
+                    if let Err(e) =
+                        self.push_token(seq, k.head_row(bi, h, t), v.head_row(bi, h, t))
+                    {
+                        let _ = self.release_lane(lane);
+                        return Err(e);
+                    }
+                }
+                seqs.push(seq);
+            }
+            self.lanes[lane].len += n;
+        }
+
+        let bh = lanes.len() * heads;
+        let d_v = self.cfg.d_v;
+        let v_off = match self.scorer {
+            Scorer::Dense => self.cfg.d,
+            Scorer::Sfa { k } => k + k.div_ceil(2),
+        };
+        let mut out = HeadTensor::zeros(lanes.len(), heads, n, d_v);
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let this: &AttentionSession = self;
+        let seqs_ref = &seqs;
+        let base_ref = &base;
+        let threads = default_threads().min(bh.max(1));
+        parallel_for_dynamic(bh, threads, 1, move |i| {
+            let (bi, h) = (i / heads, i % heads);
+            let slots = this.cache.token_slices(seqs_ref[i]).expect("session sequence exists");
+            for t in 0..n {
+                // SAFETY: each (lane, head, position) owns a disjoint
+                // output range.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.get().add((i * n + t) * d_v), d_v)
+                };
+                let scores =
+                    this.head_scores(&slots[..base_ref[bi] + t + 1], q.head_row(bi, h, t));
+                softmax_weighted_sum(&scores, |j| slots[j][v_off..].as_ptr(), d_v, dst);
+            }
+        });
+        Ok(out)
+    }
+
     /// Score one query row against a prefix of cached token slots with
     /// the session's scorer — the shared kernel of the decode path and
     /// the policy observation pass.
@@ -1929,6 +2025,124 @@ mod tests {
                  (freed {freed} vs allocated {appended_allocs})"
             );
         }
+    }
+
+    /// The speculative verify forward: one `score_lanes` call over γ+1
+    /// positions is bit-for-bit the γ+1 sequential `decode_step_lanes`
+    /// outputs — the property that makes greedy streams identical with
+    /// speculation on/off. Run on a fork of the sequential lane so the
+    /// two paths score byte-identical cache prefixes.
+    #[test]
+    fn score_lanes_matches_sequential_decode_bitwise() {
+        for spec in ["dense", "flash_dense:bq=4,bk=4", "sfa:k=4,bq=8,bk=8"] {
+            let (heads, d) = (2, 16);
+            let (plen, n) = (9, 5);
+            let cfg = SessionConfig::new(0, heads, d, d).with_paging(4, 4096);
+            let (q, k, v) = full_qkv(1, heads, plen + n, d, 53);
+            let mut sess = AttentionSession::from_spec(spec, cfg).unwrap();
+            let lane = sess.admit_lane();
+            sess.prefill_lane(lane, &pfx(&q, plen), &pfx(&k, plen), &pfx(&v, plen), true)
+                .unwrap();
+            let srcs = sess.lane_seqs(lane).to_vec();
+            let fork = sess.admit_lane_from_fork(&srcs, plen).unwrap();
+
+            let mut step_outs = Vec::with_capacity(n);
+            for t in plen..plen + n {
+                let o = sess
+                    .decode_step_lanes(&[lane], &at(&q, t), &at(&k, t), &at(&v, t))
+                    .unwrap();
+                step_outs.push(o);
+            }
+            let verify = sess
+                .score_lanes(
+                    &[fork],
+                    &q.slice_rows(plen, plen + n),
+                    &k.slice_rows(plen, plen + n),
+                    &v.slice_rows(plen, plen + n),
+                )
+                .unwrap();
+            assert_eq!((verify.n, verify.d), (n, d));
+            for (t, o) in step_outs.iter().enumerate() {
+                for h in 0..heads {
+                    assert_eq!(
+                        verify.head_row(0, h, t),
+                        o.head_row(0, h, 0),
+                        "{spec}: verify position {t} head {h} diverged from sequential decode"
+                    );
+                }
+            }
+            assert_eq!(sess.lane_len(fork), plen + n);
+            sess.release_lane(fork).unwrap();
+            sess.release_lane(lane).unwrap();
+            assert_eq!(sess.pages_in_use(), 0);
+        }
+    }
+
+    /// Speculation rollback (satellite regression, session level):
+    /// releasing the forked verify lane returns page accounting to its
+    /// pre-fork value exactly, and the source lane's decode stream is
+    /// untouched — including when the verify append itself dies with
+    /// OutOfPages mid-step (the fork is auto-released, the source lane
+    /// and its pages survive).
+    #[test]
+    fn speculative_fork_rollback_restores_pages_and_source_stream() {
+        let (heads, d) = (2, 8);
+        let (plen, n) = (6, 3);
+        let (q, k, v) = full_qkv(1, heads, plen + 2 * n, d, 59);
+        let cfg = SessionConfig::new(0, heads, d, d).with_paging(2, 4096);
+        let mut sess = AttentionSession::from_spec("dense", cfg).unwrap();
+        let lane = sess.admit_lane();
+        sess.prefill_lane(lane, &pfx(&q, plen), &pfx(&k, plen), &pfx(&v, plen), true).unwrap();
+        let before = sess.pages_in_use();
+
+        // Fork allocates nothing; the verify append pays only new pages.
+        let srcs = sess.lane_seqs(lane).to_vec();
+        let fork = sess.admit_lane_from_fork(&srcs, plen).unwrap();
+        assert_eq!(sess.pages_in_use(), before, "fork_prefix allocates no pages");
+        sess.score_lanes(
+            &[fork],
+            &q.slice_rows(plen, plen + n),
+            &k.slice_rows(plen, plen + n),
+            &v.slice_rows(plen, plen + n),
+        )
+        .unwrap();
+        assert!(sess.pages_in_use() > before, "verify rows occupy fresh pages");
+        sess.release_lane(fork).unwrap();
+        assert_eq!(sess.pages_in_use(), before, "rollback returns every verify page");
+
+        // Source lane decodes as if the speculation never happened.
+        let o1 = sess
+            .decode_step_lanes(&[lane], &at(&q, plen), &at(&k, plen), &at(&v, plen))
+            .unwrap();
+        let mut clean = AttentionSession::from_spec("dense", cfg).unwrap();
+        let c = clean.admit_lane();
+        clean.prefill_lane(c, &pfx(&q, plen), &pfx(&k, plen), &pfx(&v, plen), true).unwrap();
+        let o2 =
+            clean.decode_step_lanes(&[c], &at(&q, plen), &at(&k, plen), &at(&v, plen)).unwrap();
+        assert_eq!(o1.data, o2.data, "source lane stream unchanged by fork + rollback");
+
+        // Mid-step OutOfPages during the verify append: the fork is
+        // auto-released and the source lane keeps its pages.
+        let tight = SessionConfig::new(0, heads, d, d).with_paging(2, 4);
+        let mut sess = AttentionSession::from_spec("dense", tight).unwrap();
+        let lane = sess.admit_lane();
+        sess.prefill_lane(lane, &pfx(&q, 4), &pfx(&k, 4), &pfx(&v, 4), true).unwrap();
+        let used = sess.pages_in_use();
+        let srcs = sess.lane_seqs(lane).to_vec();
+        let fork = sess.admit_lane_from_fork(&srcs, 4).unwrap();
+        let e = sess
+            .score_lanes(
+                &[fork],
+                &q.slice_rows(4, 10),
+                &k.slice_rows(4, 10),
+                &v.slice_rows(4, 10),
+            )
+            .unwrap_err();
+        assert_eq!(e, PageError::OutOfPages);
+        assert_eq!(sess.live_lanes(), 1, "failed verify auto-releases the fork");
+        assert_eq!(sess.pages_in_use(), used, "source lane pages intact after OOP");
+        sess.release_lane(lane).unwrap();
+        assert_eq!(sess.pages_in_use(), 0);
     }
 
     #[test]

@@ -14,10 +14,11 @@ use std::time::Instant;
 
 use crate::bench::table::{fmt_speedup, fmt_time, Table};
 use crate::coordinator::metrics::Percentiles;
+use crate::attention::registry::{parse_spec, validate_draft_spec};
 use crate::serve::{
     pages_needed, ContinuousBatcher, FinishedRequest, PagedKvPolicy, PrefixCacheConfig,
     PrefixCacheStats, RequestId, RequestState, Scheduler, ServeConfig, ServeRequest,
-    WaveScheduler,
+    ServeSampling, SpeculateConfig, WaveScheduler,
 };
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -52,8 +53,22 @@ pub struct ServeBenchConfig {
     /// time-to-first-token under long-prompt interference and pinning
     /// bit-identical greedy streams across every chunk size.
     pub chunked: Option<ChunkedBenchConfig>,
+    /// `Some` switches `bench serve` to the **speculative-decoding
+    /// comparison** (`--speculate draft=<spec> --gamma N`): the same
+    /// workload driven through the continuous batcher plain and
+    /// speculating, pinning bit-identical token streams and recording
+    /// acceptance rate and tokens per decode step vs the baseline.
+    pub speculate: Option<SpeculateConfig>,
     pub serve: ServeConfig,
     pub seed: u64,
+    /// Base for per-request sampler seeds: request `i` decodes with
+    /// sampler seed `sampler_seed + i` (`--sampler-seed`; 0 keeps the
+    /// historical seeds). Only observable under stochastic sampling.
+    pub sampler_seed: u64,
+    /// `Some(t)` samples every workload request at temperature `t`
+    /// instead of greedy (`--temperature`) — the stochastic path the
+    /// speculative verify must also preserve bit-for-bit.
+    pub temperature: Option<f32>,
 }
 
 /// Shape of the long-prompt-interference workload + chunk sweep for
@@ -129,10 +144,13 @@ impl Default for ServeBenchConfig {
             ],
             prefix: None,
             chunked: None,
+            speculate: None,
             // Enough lanes that the page budget, not the lane cap, is
             // what policy-budget admission relaxes.
             serve: ServeConfig { max_lanes: 32, ..ServeConfig::default() },
             seed: 42,
+            sampler_seed: 0,
+            temperature: None,
         }
     }
 }
@@ -175,10 +193,14 @@ pub fn workload(cfg: &ServeBenchConfig) -> Vec<ServeRequest> {
             let plen = rng.range(cfg.prompt_min, cfg.prompt_max + 1);
             let max_new = rng.range(cfg.max_new_min, cfg.max_new_max + 1);
             let prompt: Vec<i32> = (0..plen).map(|_| rng.below(vocab) as i32).collect();
-            ServeRequest::new(prompt)
+            let mut req = ServeRequest::new(prompt)
                 .max_new(max_new)
                 .engine(&cfg.engines[i % cfg.engines.len()])
-                .seed(i as u64)
+                .seed(cfg.sampler_seed.wrapping_add(i as u64));
+            if let Some(t) = cfg.temperature {
+                req = req.sampling(ServeSampling::Temperature(t));
+            }
+            req
         })
         .collect()
 }
@@ -268,10 +290,14 @@ pub fn workload_shared_prefix(cfg: &ServeBenchConfig, px: &PrefixBenchConfig) ->
                 prompt.push(rng.below(vocab) as i32);
             }
             let max_new = rng.range(cfg.max_new_min, cfg.max_new_max + 1);
-            ServeRequest::new(prompt)
+            let mut req = ServeRequest::new(prompt)
                 .max_new(max_new)
                 .engine(&cfg.engines[i % cfg.engines.len()])
-                .seed(i as u64)
+                .seed(cfg.sampler_seed.wrapping_add(i as u64));
+            if let Some(t) = cfg.temperature {
+                req = req.sampling(ServeSampling::Temperature(t));
+            }
+            req
         })
         .collect()
 }
@@ -593,6 +619,165 @@ pub fn bench_serve_chunked(cfg: &ServeBenchConfig) -> (Table, ChunkedComparison)
     (t, cmp)
 }
 
+/// The speculative-decoding comparison: plain vs speculating
+/// continuous batching over the identical request stream.
+#[derive(Debug, Clone)]
+pub struct SpecComparison {
+    /// Canonical draft-engine spec.
+    pub draft: String,
+    pub gamma: usize,
+    pub baseline: RunStats,
+    pub speculative: RunStats,
+    /// Token streams bit-for-bit identical with speculation on vs off
+    /// (the correctness pin; the CLI hard-fails when false).
+    pub streams_identical: bool,
+    /// Fraction of proposed draft tokens the target accepted.
+    pub acceptance_rate: f64,
+    /// Mean tokens committed per decode-pass lane-step, speculating.
+    pub tokens_per_step: f64,
+    /// Same for the plain run — exactly 1.0 by construction.
+    pub baseline_tokens_per_step: f64,
+    /// `tokens_per_step / baseline_tokens_per_step` — > 1.0 iff any
+    /// draft token was ever accepted.
+    pub tokens_per_step_gain: f64,
+    /// speculating tok/s ÷ plain tok/s (wall-clock; the toy model's
+    /// draft forwards are not free, so this can sit below the
+    /// tokens/step gain).
+    pub tok_s_gain: f64,
+}
+
+/// Drive the workload through the continuous batcher twice — plain and
+/// speculating — pinning bit-identical streams and reporting the
+/// acceptance economics.
+pub fn bench_serve_spec(cfg: &ServeBenchConfig) -> (Table, SpecComparison) {
+    let sp = cfg.speculate.expect("speculative comparison requires a draft spec + γ");
+    // Fail fast with the registry's own message if any workload engine
+    // is an invalid target for this draft (drive() would panic later).
+    for e in &cfg.engines {
+        let target = parse_spec(e).expect("workload engine parses");
+        if let Err(err) = validate_draft_spec(&sp.draft, &target) {
+            panic!("--speculate: {}", err.0);
+        }
+    }
+    let reqs = workload(cfg);
+    let run = |speculate: Option<SpeculateConfig>, label: &str| {
+        let serve = ServeConfig { speculate, kv_policy: None, ..cfg.serve };
+        let mut s = ContinuousBatcher::new(serve);
+        let (stats, mut fin) = drive_keep(&mut s, label, "none", &reqs);
+        fin.sort_by_key(|f| f.id);
+        let m = s.metrics();
+        (stats, fin, m.acceptance_rate(), m.tokens_per_step())
+    };
+    let (base, base_fin, _, base_tps) = run(None, "continuous");
+    let (spec, spec_fin, acceptance_rate, spec_tps) = run(Some(sp), "continuous-spec");
+    let streams_identical = base_fin.len() == spec_fin.len()
+        && base_fin.iter().zip(&spec_fin).all(|(a, b)| a.id == b.id && a.tokens == b.tokens);
+    let cmp = SpecComparison {
+        draft: sp.draft.canonical(),
+        gamma: sp.gamma,
+        streams_identical,
+        acceptance_rate,
+        tokens_per_step: spec_tps,
+        baseline_tokens_per_step: base_tps,
+        tokens_per_step_gain: if base_tps > 0.0 { spec_tps / base_tps } else { 0.0 },
+        tok_s_gain: if base.tok_s > 0.0 { spec.tok_s / base.tok_s } else { 0.0 },
+        baseline: base,
+        speculative: spec,
+    };
+
+    let mut t = Table::new(
+        &format!(
+            "bench serve --speculate — plain vs draft-and-verify (draft {}, γ={}) over {} \
+             requests (prompts {}–{}, max_new {}–{}, engines {})",
+            cmp.draft,
+            cmp.gamma,
+            cfg.requests,
+            cfg.prompt_min,
+            cfg.prompt_max,
+            cfg.max_new_min,
+            cfg.max_new_max,
+            cfg.engines.join(";"),
+        ),
+        &["run", "tok/s", "tok/step", "accept rate", "steps", "identical streams"],
+    );
+    for (label, s, tps, acc) in [
+        ("plain", &cmp.baseline, cmp.baseline_tokens_per_step, None),
+        ("speculative", &cmp.speculative, cmp.tokens_per_step, Some(cmp.acceptance_rate)),
+    ] {
+        t.row(vec![
+            label.into(),
+            format!("{:.1}", s.tok_s),
+            format!("{tps:.2}"),
+            match acc {
+                None => "-".into(),
+                Some(a) => format!("{:.0}%", a * 100.0),
+            },
+            s.steps.to_string(),
+            if label == "plain" { "-".into() } else { cmp.streams_identical.to_string() },
+        ]);
+    }
+    let mut row = vec![
+        "gain".into(),
+        fmt_speedup(cmp.tok_s_gain),
+        fmt_speedup(cmp.tokens_per_step_gain),
+    ];
+    row.resize(6, String::new());
+    t.row(row);
+    (t, cmp)
+}
+
+/// The BENCH_serve_spec.json document: workload shape plus the
+/// `speculative` comparison block (stream pin, acceptance rate,
+/// tokens/step vs the non-speculative baseline).
+pub fn spec_to_json(cfg: &ServeBenchConfig, cmp: &SpecComparison) -> String {
+    obj(vec![
+        (
+            "workload",
+            obj(vec![
+                ("requests", Json::from(cfg.requests)),
+                ("prompt_min", Json::from(cfg.prompt_min)),
+                ("prompt_max", Json::from(cfg.prompt_max)),
+                ("max_new_min", Json::from(cfg.max_new_min)),
+                ("max_new_max", Json::from(cfg.max_new_max)),
+                (
+                    "engines",
+                    Json::Arr(cfg.engines.iter().map(|e| Json::from(e.as_str())).collect()),
+                ),
+                ("max_lanes", Json::from(cfg.serve.max_lanes)),
+                ("max_pages", Json::from(cfg.serve.max_pages)),
+                ("page_size", Json::from(cfg.serve.page_size)),
+                ("heads", Json::from(cfg.serve.heads)),
+                ("d", Json::from(cfg.serve.d)),
+                ("seed", Json::from(cfg.seed as usize)),
+                ("sampler_seed", Json::from(cfg.sampler_seed as usize)),
+                (
+                    "temperature",
+                    match cfg.temperature {
+                        None => Json::from("greedy"),
+                        Some(t) => Json::from(t as f64),
+                    },
+                ),
+            ]),
+        ),
+        (
+            "speculative",
+            obj(vec![
+                ("draft", Json::from(cmp.draft.as_str())),
+                ("gamma", Json::from(cmp.gamma)),
+                ("streams_identical", Json::from(cmp.streams_identical)),
+                ("acceptance_rate", Json::from(cmp.acceptance_rate)),
+                ("tokens_per_step", Json::from(cmp.tokens_per_step)),
+                ("baseline_tokens_per_step", Json::from(cmp.baseline_tokens_per_step)),
+                ("tokens_per_step_gain", Json::from(cmp.tokens_per_step_gain)),
+                ("tokens_per_s_gain", Json::from(cmp.tok_s_gain)),
+                ("baseline", stats_json(&cmp.baseline)),
+                ("speculative_run", stats_json(&cmp.speculative)),
+            ]),
+        ),
+    ])
+    .to_string()
+}
+
 /// Run the workload through the wave baseline and the continuous
 /// batcher under every configured KV policy, and render the comparison.
 pub fn bench_serve(cfg: &ServeBenchConfig) -> (Table, Vec<RunStats>) {
@@ -869,6 +1054,7 @@ mod tests {
             policies: vec![None],
             prefix: None,
             chunked: None,
+            speculate: None,
             serve: ServeConfig {
                 heads: 2,
                 d: 8,
@@ -882,8 +1068,11 @@ mod tests {
                 kv_policy: None,
                 prefix_cache: None,
                 prefill_chunk: 0,
+                speculate: None,
             },
             seed: 1,
+            sampler_seed: 0,
+            temperature: None,
         }
     }
 
@@ -1051,6 +1240,60 @@ mod tests {
         assert_eq!(runs[0].get("chunk").unwrap().as_usize().unwrap(), 0);
         assert!(runs[1].get("decode_ttft_p95_s").unwrap().as_f64().unwrap() >= 0.0);
         assert!(runs[1].get("steps").unwrap().as_usize().unwrap() > 0);
+    }
+
+    /// Acceptance pin for `sfa bench serve --speculate`: streams are
+    /// bit-for-bit identical plain vs speculating (the hard-fail pin),
+    /// the plain run's tokens/step is exactly 1.0 (which makes any
+    /// gain > 1.0 certify real acceptance), and BENCH_serve_spec.json
+    /// carries the whole `speculative` block. Runs greedy *and* at
+    /// temperature with per-request sampler seeds — the stochastic
+    /// path the CLI satellites expose.
+    #[test]
+    fn speculative_bench_pins_streams_and_serializes() {
+        for temperature in [None, Some(0.8)] {
+            let mut cfg = tiny();
+            cfg.engines = vec!["sfa:k=4".into()];
+            cfg.speculate = Some(SpeculateConfig::parse("sfa:k=2", 4).unwrap());
+            cfg.temperature = temperature;
+            cfg.sampler_seed = 9;
+            let (table, cmp) = bench_serve_spec(&cfg);
+            assert_eq!(cmp.baseline.failed, 0);
+            assert_eq!(cmp.speculative.failed, 0);
+            assert_eq!(cmp.baseline.requests, cfg.requests);
+            assert_eq!(cmp.speculative.requests, cfg.requests);
+            assert!(
+                cmp.streams_identical,
+                "temperature={temperature:?}: speculation must not change streams"
+            );
+            assert!(
+                (cmp.baseline_tokens_per_step - 1.0).abs() < 1e-12,
+                "plain decoding commits exactly one token per lane-step"
+            );
+            assert!(cmp.tokens_per_step >= 1.0, "verify always commits at least one token");
+            assert!((0.0..=1.0).contains(&cmp.acceptance_rate));
+            assert_eq!(cmp.draft, "sfa:k=2,bq=64,bk=64");
+            let rendered = table.render();
+            assert!(rendered.contains("speculative") && rendered.contains("accept rate"));
+            let j = Json::parse(&spec_to_json(&cfg, &cmp)).unwrap();
+            let s = j.get("speculative").unwrap();
+            assert_eq!(s.get("gamma").unwrap().as_usize().unwrap(), 4);
+            assert!(s.get("streams_identical").unwrap().as_bool().unwrap());
+            assert!(s.get("acceptance_rate").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(s.get("tokens_per_step_gain").unwrap().as_f64().unwrap() >= 1.0);
+            assert!(s.get("baseline").unwrap().get("tokens_out").unwrap().as_usize().is_ok());
+        }
+    }
+
+    /// The draft must be a valid cheap engine for every workload
+    /// target — nonsense pairs die before any scheduler runs.
+    #[test]
+    #[should_panic(expected = "--speculate")]
+    fn speculative_bench_rejects_draft_equal_to_target() {
+        let mut cfg = tiny();
+        cfg.engines = vec!["sfa:k=2,bq=64,bk=64".into()];
+        cfg.speculate = Some(SpeculateConfig::parse("sfa:k=2", 4).unwrap());
+        bench_serve_spec(&cfg);
     }
 
     #[test]

@@ -44,6 +44,19 @@ pub struct ServeMetrics {
     pub requests: u64,
     pub failed: u64,
     pub wall_s: f64,
+    /// Decode-pass lane-steps (one per lane per scheduler decode pass;
+    /// prefill/TTFT tokens are excluded). The denominator of
+    /// [`Self::tokens_per_step`].
+    pub decode_steps: u64,
+    /// Tokens committed by those lane-steps (1 per plain step, `m` per
+    /// speculative step that emitted `m`). Non-speculative serving has
+    /// `decode_tokens == decode_steps` exactly, so `tokens_per_step`
+    /// is ≡ 1.0 off and > 1.0 iff speculation ever accepted a token.
+    pub decode_tokens: u64,
+    /// Draft tokens proposed by speculative steps (γ_eff per step).
+    pub spec_proposed: u64,
+    /// Draft tokens accepted (committed to the stream) by those steps.
+    pub spec_accepted: u64,
 }
 
 impl ServeMetrics {
@@ -72,6 +85,40 @@ impl ServeMetrics {
 
     pub fn record_failed(&mut self) {
         self.failed += 1;
+    }
+
+    /// Record one decode-pass lane-step that committed `tokens` tokens
+    /// (1 for a plain step, the emitted count for a speculative step).
+    pub fn record_decode(&mut self, tokens: usize) {
+        self.decode_steps += 1;
+        self.decode_tokens += tokens as u64;
+    }
+
+    /// Record one speculative verify: `proposed` draft tokens offered
+    /// (γ_eff), `accepted` of them committed to the stream.
+    pub fn record_speculation(&mut self, proposed: usize, accepted: usize) {
+        self.spec_proposed += proposed as u64;
+        self.spec_accepted += accepted as u64;
+    }
+
+    /// Fraction of proposed draft tokens the target accepted; 0.0
+    /// before any speculative step ran.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_proposed as f64
+    }
+
+    /// Mean tokens committed per decode-pass lane-step. Exactly 1.0
+    /// for non-speculative serving (every step commits one token), so
+    /// any value > 1.0 certifies acceptance happened; 0.0 before any
+    /// decode step ran.
+    pub fn tokens_per_step(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.decode_tokens as f64 / self.decode_steps as f64
     }
 
     pub fn throughput_tok_s(&self) -> f64 {
@@ -109,7 +156,7 @@ impl ServeMetrics {
         let ttft = self.ttft();
         let tok = self.token_latency();
         let e2e = self.e2e();
-        format!(
+        let mut base = format!(
             "requests={} failed={} tokens={} wall={:.2}s thpt={:.1} tok/s | \
              TTFT p50={:.1}ms p95={:.1}ms p99={:.1}ms | \
              tok p50={:.1}ms p95={:.1}ms p99={:.1}ms | \
@@ -127,7 +174,15 @@ impl ServeMetrics {
             tok.p99 * 1e3,
             e2e.p50 * 1e3,
             if self.total_s.is_empty() { 0.0 } else { mean(&self.total_s) * 1e3 },
-        )
+        );
+        if self.spec_proposed > 0 {
+            base.push_str(&format!(
+                " | spec accept={:.1}% tok/step={:.2}",
+                self.acceptance_rate() * 100.0,
+                self.tokens_per_step(),
+            ));
+        }
+        base
     }
 }
 
@@ -174,6 +229,30 @@ mod tests {
         let mut m = ServeMetrics::default();
         m.record(&resp(1, 0.1, 0.1));
         assert!(m.tpot_s.is_empty());
+    }
+
+    #[test]
+    fn speculation_counters_and_ratios() {
+        let mut m = ServeMetrics::default();
+        // Before anything runs the ratios are defined and zero.
+        assert_eq!(m.acceptance_rate(), 0.0);
+        assert_eq!(m.tokens_per_step(), 0.0);
+        // Three plain steps: tokens/step pinned at exactly 1.0.
+        for _ in 0..3 {
+            m.record_decode(1);
+        }
+        assert_eq!(m.tokens_per_step(), 1.0);
+        assert!(!m.summary().contains("spec"), "no spec line without speculation");
+        // One speculative step: γ=4 proposed, 3 accepted → 4 tokens.
+        m.record_speculation(4, 3);
+        m.record_decode(4);
+        assert!((m.acceptance_rate() - 0.75).abs() < 1e-12);
+        assert!((m.tokens_per_step() - 7.0 / 4.0).abs() < 1e-12);
+        assert!(m.tokens_per_step() > 1.0, "acceptance must lift tokens/step above 1");
+        m.record_finished(0.1, 0.5, 7);
+        let s = m.summary();
+        assert!(s.contains("spec accept=75.0%"), "{s}");
+        assert!(s.contains("tok/step=1.75"), "{s}");
     }
 
     #[test]

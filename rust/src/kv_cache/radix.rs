@@ -655,6 +655,131 @@ mod tests {
         assert!(px.is_empty());
     }
 
+    /// Speculation-style rollback over a pinned radix parent
+    /// (satellite regression): a lane admitted from a cache hit forks
+    /// the entry's pinned sequences; a verify fork then forks *that*
+    /// lane. Releasing the verify fork — cleanly or after a mid-append
+    /// OutOfPages — must return page accounting exactly to its
+    /// pre-fork value, leave the lane's own bytes intact, and leave
+    /// the pinned parent entry borrowable and forkable for the next
+    /// hit.
+    #[test]
+    fn speculative_fork_release_keeps_pinned_parents_borrowable() {
+        let mut c = cache();
+        let mut px = RadixPrefixCache::new(HEADS, PS, 1024);
+        let p = prompt(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let src = seed(&mut c, &p);
+        assert!(px.insert(&p, &mut c, &src));
+        for &s in &src {
+            c.free(s).unwrap(); // retire the inserting lane
+        }
+
+        // Hit path: borrow the entry, fork a serving lane from the
+        // pinned parent, extend it past the shared prefix (decode).
+        let hit = px.peek(&[1, 2, 3, 4, 5, 6, 7, 8, 9]).expect("warm hit");
+        px.borrow(hit.entry);
+        let lanes: Vec<SeqId> = hit
+            .seqs
+            .iter()
+            .map(|&s| c.fork_prefix(s, hit.shared).unwrap())
+            .collect();
+        for &l in &lanes {
+            for t in [9, 10, 11] {
+                c.append(l, &[t as f32, 0.0]).unwrap();
+            }
+        }
+        let before = c.pages_in_use();
+
+        // Speculative verify: fork the lane at its full length, append
+        // γ+1 rows, then roll back.
+        let forks: Vec<SeqId> = lanes
+            .iter()
+            .map(|&l| c.fork_prefix(l, hit.shared + 3).unwrap())
+            .collect();
+        assert_eq!(c.pages_in_use(), before, "fork_prefix allocates nothing");
+        for &f in &forks {
+            for t in [12, 13, 14, 15, 16] {
+                c.append(f, &[t as f32, 0.0]).unwrap();
+            }
+            c.free(f).unwrap();
+        }
+        assert_eq!(c.pages_in_use(), before, "rollback returns every verify page");
+        // The lane's own tail bytes survived the shared-page rollback.
+        for &l in &lanes {
+            for (i, t) in [9, 10, 11].iter().enumerate() {
+                assert_eq!(c.get(l, hit.shared + i).unwrap()[0], *t as f32);
+            }
+        }
+
+        // The pinned parent is still a servable hit: release the
+        // borrow, hit again, fork again, read the prefix bytes.
+        px.release(hit.entry);
+        let hit2 = px.peek(&[1, 2, 3, 4, 5, 6, 7, 8, 9]).expect("still cached");
+        assert_eq!(hit2.shared, hit.shared);
+        px.borrow(hit2.entry);
+        let f2 = c.fork_prefix(hit2.seqs[0], hit2.shared).unwrap();
+        for (i, &t) in p[..hit2.shared].iter().enumerate() {
+            assert_eq!(c.get(f2, i).unwrap()[0], t as f32);
+        }
+        c.free(f2).unwrap();
+        px.release(hit2.entry);
+
+        // Mid-append OutOfPages on the verify fork: tight pool where
+        // the verify rows can't fit. The failed fork frees without
+        // touching the lane or the pinned parent.
+        let mut tc = PagedKvCache::new(
+            // prefix pages for HEADS seqs + one freshly-opened page per
+            // lane fork — nothing spare for verify appends.
+            HEADS * 2 + HEADS,
+            PS,
+            SlotLayout::Dense { d: 1, d_v: 1 },
+        );
+        let mut tpx = RadixPrefixCache::new(HEADS, PS, 1024);
+        let tp = prompt(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let tsrc = seed(&mut tc, &tp);
+        assert!(tpx.insert(&tp, &mut tc, &tsrc));
+        for &s in &tsrc {
+            tc.free(s).unwrap();
+        }
+        let th = tpx.peek(&[1, 2, 3, 4, 5, 6, 7, 8, 9]).expect("warm hit");
+        tpx.borrow(th.entry);
+        let tl: Vec<SeqId> =
+            th.seqs.iter().map(|&s| tc.fork_prefix(s, th.shared).unwrap()).collect();
+        for &l in &tl {
+            tc.append(l, &[9.0, 0.0]).unwrap(); // opens the lane's own page
+        }
+        let used = tc.pages_in_use();
+        let tf = tc.fork_prefix(tl[0], th.shared + 1).unwrap();
+        let mut failed = false;
+        for t in 0..2 * PS as i32 {
+            if tc.append(tf, &[t as f32, 0.0]).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "tight pool must exhaust mid-verify");
+        tc.free(tf).unwrap();
+        assert_eq!(tc.pages_in_use(), used, "failed verify rolls back to pre-fork use");
+        assert_eq!(tc.get(tl[0], th.shared).unwrap()[0], 9.0, "lane tail intact");
+        tpx.release(th.entry);
+        assert!(
+            tpx.peek(&[1, 2, 3, 4, 5, 6, 7, 8, 9]).is_some(),
+            "pinned parent survives the failed speculation"
+        );
+
+        // Full drain of both pools: lanes, then entries.
+        for l in tl {
+            tc.free(l).unwrap();
+        }
+        tpx.clear(&mut tc);
+        assert_eq!(tc.pages_in_use(), 0);
+        for l in lanes {
+            c.free(l).unwrap();
+        }
+        px.clear(&mut c);
+        assert_eq!(c.pages_in_use(), 0);
+    }
+
     #[test]
     fn ancestor_entry_serves_deeper_probes() {
         let mut c = cache();

@@ -26,7 +26,8 @@ use sfa::coordinator::ServeMetrics;
 use sfa::runtime::{HostTensor, Runtime};
 use sfa::bench::serve_bench::PrefixBenchConfig;
 use sfa::serve::{
-    ContinuousBatcher, PagedKvPolicy, PrefixCacheConfig, ServeConfig, WaveScheduler,
+    ContinuousBatcher, PagedKvPolicy, PrefixCacheConfig, Scheduler, ServeConfig,
+    SpeculateConfig, WaveScheduler,
 };
 use sfa::train::corpus::CorpusKind;
 use sfa::train::experiments;
@@ -43,12 +44,17 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
               --prompt-min 16 --prompt-max 256 --max-new-min 8 --max-new-max 32
               --lanes 8 --page-size 16 --max-pages 4096 [--policy KVPOLICY]
               [--prefix-cache [--prefix-pages 1024]] [--prefill-chunk N]
+              [--speculate draft=SPEC [--gamma 4]]
+              [--sampler-seed N] [--temperature T]
               (synthetic load, request-lifecycle API over AttentionSession —
               no artifacts needed; --policy enables KV eviction with
               policy-budget admission, --prefix-cache enables radix
               prompt-prefix sharing across requests, --prefill-chunk N
               ingests prompts N tokens per step so long prefills
-              interleave with decode; 0 = monolithic)
+              interleave with decode (0 = monolithic), --speculate runs
+              draft-and-verify decoding with γ draft tokens per step;
+              --sampler-seed seeds request i's sampler with N+i and
+              --temperature switches the workload to stochastic sampling)
   sfa serve   --legacy [--artifacts DIR] --variant sfa_k8 --requests 16 --workers 2
               --batch 4 --max-new 16 --queue-capacity 1024   (deprecated wave router)
   sfa exp     table1|table2|table3|fig8|table12 [--steps N] [--artifacts DIR]
@@ -64,6 +70,10 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
               (cold vs radix prefix cache on a repeated-system-prompt
               workload: hit rate, TTFT gain, bit-identical streams —
               recorded in BENCH_serve.json)
+  sfa bench   serve --speculate draft=SPEC [--gamma 4] [--sampler-seed N]
+              [--temperature T]   (plain vs draft-and-verify speculative
+              decoding on the same workload: acceptance rate, tokens/step,
+              bit-identical streams — writes BENCH_serve_spec.json)
   sfa bench   serve --prefill-chunk [N] [--chunks 0,64,256,1024]
               [--long-prompt 4096] [--long-max-new 8] [--decode-lanes 8]
               [--decode-prompt 16] [--decode-max-new 32]
@@ -165,6 +175,19 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
              holds policy-dependent KV that a shared prefix must not serve)"
         );
     }
+    let speculate = match args.get("speculate") {
+        Some(s) => Some(
+            SpeculateConfig::parse(s, args.usize_or("gamma", 4)?)
+                .map_err(|e| anyhow::anyhow!("--speculate: {}", e.0))?,
+        ),
+        None => None,
+    };
+    if kv_policy.is_some() && speculate.is_some() {
+        bail!(
+            "--speculate and --policy are mutually exclusive (verify replays exact \
+             cached prefixes that an eviction policy cannot guarantee)"
+        );
+    }
     let cfg = ServeConfig {
         heads: args.usize_or("heads", 4)?,
         d: args.usize_or("d", 32)?,
@@ -178,6 +201,7 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         kv_policy,
         prefix_cache,
         prefill_chunk: args.usize_or("prefill-chunk", 0)?,
+        speculate,
     };
     if let Some(px) = &cfg.prefix_cache {
         if px.max_pages < 1 {
@@ -217,11 +241,31 @@ fn serve_workload_cfg(
         policies: vec![serve.kv_policy],
         prefix: None,
         chunked: None,
+        speculate: serve.speculate,
+        sampler_seed: args.u64_or("sampler-seed", 0)?,
+        temperature: match args.get("temperature") {
+            Some(_) => Some(args.f64_or("temperature", 0.0)? as f32),
+            None => None,
+        },
         serve,
         seed: args.u64_or("seed", 42)?,
     };
     if cfg.requests == 0 || cfg.engines.is_empty() {
         bail!("need at least one request and one engine spec");
+    }
+    if let Some(t) = cfg.temperature {
+        if !(t > 0.0) {
+            bail!("--temperature must be > 0 (omit the flag for greedy decoding)");
+        }
+    }
+    // A draft spec must be valid against *every* workload engine, or
+    // submission would reject requests mid-drive.
+    if let Some(sp) = &cfg.serve.speculate {
+        for e in &cfg.engines {
+            let target = sfa::attention::registry::parse_spec(e)?;
+            sfa::attention::registry::validate_draft_spec(&sp.draft, &target)
+                .map_err(|er| anyhow::anyhow!("--speculate: {}", er.0))?;
+        }
     }
     if cfg.prompt_min < 1 || cfg.prompt_min > cfg.prompt_max {
         bail!("--prompt-min must be in 1..=--prompt-max");
@@ -285,13 +329,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let mut cfg = serve_workload_cfg(args, 16, (16, 256), (8, 32))?;
     let which = args.str_or("scheduler", "continuous");
-    if which == "wave" && (cfg.serve.kv_policy.is_some() || cfg.serve.prefix_cache.is_some()) {
-        // The wave baseline ignores eviction policies and prefix
-        // caching (worst-case, cold-prefill semantics); strip them and
-        // re-validate so submission can't reject what the policy-aware
-        // pre-check admitted.
-        cfg.serve.kv_policy = None;
-        cfg.serve.prefix_cache = None;
+    if which == "wave"
+        && (cfg.serve.kv_policy.is_some()
+            || cfg.serve.prefix_cache.is_some()
+            || cfg.serve.prefill_chunk > 0
+            || cfg.serve.speculate.is_some())
+    {
+        // The wave baseline ignores every batcher-only knob (worst-case,
+        // cold-prefill, one-token-per-step semantics); strip them through
+        // the shared helper and re-validate so submission can't reject
+        // what the policy-aware pre-check admitted.
+        cfg.serve = cfg.serve.strip_incompatible();
         check_workload_fits(&cfg, None)?;
     }
     let reqs = serve_bench::workload(&cfg);
@@ -299,7 +347,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stats = match which.as_str() {
         "continuous" => {
             let mut s = ContinuousBatcher::new(cfg.serve);
-            serve_bench::drive(&mut s, "continuous", &policy, &reqs)
+            let stats = serve_bench::drive(&mut s, "continuous", &policy, &reqs);
+            if cfg.serve.speculate.is_some() {
+                println!(
+                    "speculate: accept={:.1}% tokens/step={:.2}",
+                    s.metrics().acceptance_rate() * 100.0,
+                    s.metrics().tokens_per_step(),
+                );
+            }
+            stats
         }
         "wave" => {
             let mut s = WaveScheduler::new(cfg.serve);
@@ -483,6 +539,32 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 // Sweep default: enough lanes that the page budget,
                 // not the lane cap, is what policy admission relaxes.
                 cfg.serve.max_lanes = 32;
+            }
+            if args.get("speculate").is_some() {
+                // Speculative-decoding comparison: the same workload run
+                // plain and with draft-and-verify lanes, streams pinned
+                // bit-for-bit, acceptance rate and tokens/step recorded.
+                if args.has("prefix-cache") || args.has("prefill-chunk") {
+                    bail!(
+                        "--speculate, --prefix-cache, and --prefill-chunk are separate \
+                         bench comparisons — pick one"
+                    );
+                }
+                if cfg.serve.kv_policy.is_some() {
+                    bail!("--speculate and --policy are mutually exclusive");
+                }
+                let sp = cfg.serve.speculate.expect("serve_config parsed --speculate");
+                cfg.serve.speculate = None; // bench_serve_spec toggles it per run
+                cfg.speculate = Some(sp);
+                let (table, cmp) = serve_bench::bench_serve_spec(&cfg);
+                table.print();
+                let path = args.str_or("serve-json", "BENCH_serve_spec.json");
+                std::fs::write(&path, serve_bench::spec_to_json(&cfg, &cmp))?;
+                println!("\n[bench] wrote speculative-decoding comparison to {path}");
+                if !cmp.streams_identical {
+                    bail!("speculative decoding changed token streams — correctness bug");
+                }
+                return Ok(());
             }
             if args.has("prefill-chunk") || args.get("prefill-chunk").is_some() {
                 // Chunked-prefill interference comparison: one long

@@ -44,6 +44,14 @@
 //!   consumed, total }` reporting per-chunk progress. `0` keeps the
 //!   legacy monolithic path; greedy streams are bit-for-bit identical
 //!   across every chunk size, including 0.
+//! * `ServeConfig::speculate` — speculative decoding
+//!   ([`SpeculateConfig`]): a cheap registry engine drafts γ tokens on
+//!   a lane in its own draft session, the target scores all γ+1
+//!   positions in one [`AttentionSession::score_lanes`] verify forward
+//!   on a `fork_prefix`-forked lane, and the exact-match acceptance
+//!   rule commits the agreed prefix (rollback = `release_lane` on the
+//!   fork). Streams — greedy *and* temperature — are bit-for-bit
+//!   identical with speculation on or off; only tokens/step changes.
 //!
 //! See ARCHITECTURE.md §"Serving lifecycle" for the state machine and
 //! the admission rules, and `sfa bench serve` for the continuous-vs-
@@ -52,6 +60,7 @@
 pub mod model;
 pub mod request;
 pub mod scheduler;
+pub mod speculate;
 pub mod wave;
 
 pub use crate::attention::decode::PagedKvPolicy;
@@ -65,6 +74,7 @@ pub use scheduler::{
     pages_needed, pages_reserved, pages_reserved_shared, ContinuousBatcher, PrefixCacheConfig,
     Scheduler, ServeConfig, StepReport,
 };
+pub use speculate::SpeculateConfig;
 pub use wave::WaveScheduler;
 
 #[cfg(test)]
@@ -86,6 +96,7 @@ mod tests {
             kv_policy: None,
             prefix_cache: None,
             prefill_chunk: 0,
+            speculate: None,
         }
     }
 
@@ -452,6 +463,7 @@ mod tests {
             kv_policy: None,
             prefix_cache: None,
             prefill_chunk: 0,
+            speculate: None,
         };
         let run = |pol: Option<PagedKvPolicy>| -> (f64, usize, usize, usize) {
             let mut s = ContinuousBatcher::new(ServeConfig { kv_policy: pol, ..base });
@@ -681,6 +693,171 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The speculative-decoding acceptance pin at the scheduler level:
+    /// token streams are **bit-for-bit identical** with
+    /// `ServeConfig::speculate` on or off — for greedy *and*
+    /// temperature sampling, across engine families and γ values, in a
+    /// mixed multi-request batch. Speculation changes how many tokens
+    /// a step commits, never which tokens.
+    #[test]
+    fn speculative_streams_match_plain_decoding_bitwise() {
+        for (spec, draft) in
+            [("dense", "sfa:k=2,bq=8,bk=8"), ("sfa:k=4,bq=8,bk=8", "sfa:k=2,bq=8,bk=8")]
+        {
+            let run = |speculate: Option<SpeculateConfig>| -> (Vec<(RequestId, Vec<i32>)>, u64) {
+                let cfg = ServeConfig { speculate, ..tiny_cfg() };
+                let mut s = ContinuousBatcher::new(cfg);
+                s.submit(ServeRequest::new(prompt(1, 24, 32)).max_new(12).engine(spec))
+                    .unwrap();
+                s.submit(
+                    ServeRequest::new(prompt(2, 7, 32))
+                        .max_new(9)
+                        .engine(spec)
+                        .sampling(ServeSampling::Temperature(0.8))
+                        .seed(42),
+                )
+                .unwrap();
+                s.submit(ServeRequest::new(prompt(3, 15, 32)).max_new(1).engine(spec))
+                    .unwrap();
+                let mut fin = s.run_to_completion();
+                fin.sort_by_key(|f| f.id);
+                assert_eq!(s.pages_in_use(), 0, "{spec}: idle scheduler holds no pages");
+                let toks = fin
+                    .iter()
+                    .map(|f| {
+                        assert!(matches!(f.state, RequestState::Finished { .. }), "{spec}");
+                        (f.id, f.tokens.clone())
+                    })
+                    .collect();
+                (toks, s.metrics().spec_proposed)
+            };
+            let (plain, _) = run(None);
+            for gamma in [1, 3, 8] {
+                let sp = SpeculateConfig::parse(draft, gamma).unwrap();
+                let (spec_toks, proposed) = run(Some(sp));
+                assert_eq!(
+                    spec_toks, plain,
+                    "{spec}: γ={gamma} draft={draft} must reproduce the plain streams"
+                );
+                assert!(proposed > 0, "{spec}: γ={gamma} speculation never ran");
+            }
+        }
+    }
+
+    /// Stop tokens end a speculative step mid-batch: emissions past the
+    /// first stop are discarded (sequential decoding would never have
+    /// sampled them), so the finished stream and its `StopToken` finish
+    /// reason match the plain run exactly.
+    #[test]
+    fn speculative_stop_token_truncation_matches_plain() {
+        let spec = "dense";
+        let run = |speculate: Option<SpeculateConfig>, stop: Vec<i32>| -> FinishedRequest {
+            let cfg = ServeConfig { speculate, ..tiny_cfg() };
+            let mut s = ContinuousBatcher::new(cfg);
+            let id = s
+                .submit(
+                    ServeRequest::new(prompt(5, 18, 32))
+                        .max_new(20)
+                        .engine(spec)
+                        .stop_tokens(stop),
+                )
+                .unwrap();
+            let fin = s.run_to_completion();
+            fin.into_iter().find(|f| f.id == id).unwrap()
+        };
+        // Learn the greedy stream, then stop on a token from its middle
+        // so the speculative run must truncate inside a verify batch.
+        let free = run(None, vec![]);
+        assert!(free.tokens.len() >= 4, "need a few tokens to pick a stop from");
+        let stop = vec![free.tokens[2]];
+        let plain = run(None, stop.clone());
+        assert!(matches!(plain.state, RequestState::Finished { reason: FinishReason::StopToken }));
+        let sp = SpeculateConfig::parse("sfa:k=2,bq=8,bk=8", 4).unwrap();
+        let speced = run(Some(sp), stop);
+        assert_eq!(speced.tokens, plain.tokens, "stop truncation changed the stream");
+        assert!(
+            matches!(speced.state, RequestState::Finished { reason: FinishReason::StopToken }),
+            "{:?}",
+            speced.state
+        );
+    }
+
+    /// Speculation composes with the radix prefix cache: forked-prefix
+    /// admissions, cache hits, and speculative verify forks coexist on
+    /// one paged pool, and streams still match the both-knobs-off run.
+    #[test]
+    fn speculation_composes_with_prefix_cache() {
+        let spec = "sfa:k=4,bq=8,bk=8";
+        let sys = prompt(77, 24, 32);
+        let mk = |i: usize| {
+            let mut p = sys.clone();
+            p.push(20 + i as i32);
+            p.extend(prompt(200 + i as u64, 5, 32));
+            p
+        };
+        let run = |px: Option<PrefixCacheConfig>,
+                   sp: Option<SpeculateConfig>|
+         -> (Vec<Vec<i32>>, u64) {
+            let cfg = ServeConfig { prefix_cache: px, speculate: sp, ..tiny_cfg() };
+            let mut s = ContinuousBatcher::new(cfg);
+            s.submit(ServeRequest::new(mk(0)).max_new(6).engine(spec)).unwrap();
+            let mut fin = s.run_to_completion();
+            for i in 1..4 {
+                s.submit(ServeRequest::new(mk(i)).max_new(6).engine(spec)).unwrap();
+            }
+            fin.extend(s.run_to_completion());
+            fin.sort_by_key(|f| f.id);
+            let toks = fin
+                .iter()
+                .map(|f| {
+                    assert!(matches!(f.state, RequestState::Finished { .. }));
+                    f.tokens.clone()
+                })
+                .collect();
+            (toks, s.prefix_stats().hits)
+        };
+        let (base, _) = run(None, None);
+        let sp = SpeculateConfig::parse("sfa:k=2,bq=8,bk=8", 3).unwrap();
+        let (both, hits) = run(Some(PrefixCacheConfig::default()), Some(sp));
+        assert_eq!(both, base, "prefix cache + speculation changed greedy streams");
+        assert!(hits >= 3, "later requests still hit the prefix cache");
+    }
+
+    /// Satellite rollback pin at the scheduler level: with the page
+    /// pool sized exactly to the admission reservation, the verify
+    /// fork's γ+1 scratch appends routinely hit OutOfPages mid-step.
+    /// Every such failure must roll back (fork auto-released, draft
+    /// lane dropped) and fall back to plain decode — every request
+    /// still finishes, streams still match the plain run, and the idle
+    /// pool is empty.
+    #[test]
+    fn speculative_oop_fallback_preserves_streams_and_accounting() {
+        let spec = "dense";
+        let base = tiny_cfg();
+        // One request's worst case: heads × ⌈(18 + 10) / 4⌉ = 14 pages.
+        let tight = pages_reserved(18, 10, &base);
+        let run = |speculate: Option<SpeculateConfig>| -> Vec<Vec<i32>> {
+            let cfg = ServeConfig { max_pages: tight, speculate, ..base };
+            let mut s = ContinuousBatcher::new(cfg);
+            for i in 0..3u64 {
+                s.submit(ServeRequest::new(prompt(30 + i, 18, 32)).max_new(10).engine(spec))
+                    .unwrap();
+            }
+            let mut fin = s.run_to_completion();
+            fin.sort_by_key(|f| f.id);
+            assert_eq!(s.pages_in_use(), 0, "idle pool must be empty after rollbacks");
+            fin.iter()
+                .map(|f| {
+                    assert!(matches!(f.state, RequestState::Finished { .. }), "{:?}", f.state);
+                    f.tokens.clone()
+                })
+                .collect()
+        };
+        let plain = run(None);
+        let sp = SpeculateConfig::parse("sfa:k=2,bq=8,bk=8", 6).unwrap();
+        assert_eq!(run(Some(sp)), plain, "OOP fallbacks must not change streams");
     }
 
     /// Chunked prefill composes with KV eviction policies: per-chunk

@@ -35,7 +35,7 @@ use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 use crate::attention::decode::PagedKvPolicy;
-use crate::attention::registry::parse_spec;
+use crate::attention::registry::{parse_spec, validate_draft_spec};
 use crate::attention::session::{AttentionSession, LaneId, PrefillState, SessionConfig};
 use crate::attention::HeadTensor;
 use crate::coordinator::metrics::ServeMetrics;
@@ -43,8 +43,9 @@ use crate::kv_cache::radix::{EntryId, PrefixCacheStats, PrefixHit, RadixPrefixCa
 use crate::serve::model::{sample, ToyLm};
 use crate::serve::request::{
     FinishReason, FinishedRequest, RequestId, RequestState, ServeError, ServeEvent,
-    ServeRequest,
+    ServeRequest, ServeSampling,
 };
+use crate::serve::speculate::{verify_emit, SpeculateConfig};
 use crate::util::rng::Rng;
 
 /// Radix prompt-prefix cache knobs (`ServeConfig::prefix_cache`).
@@ -116,6 +117,21 @@ pub struct ServeConfig {
     /// always sampled from the cache-scored last prompt position.
     /// The wave baseline ignores this (monolithic is its semantics).
     pub prefill_chunk: usize,
+    /// Speculative decoding. `Some` makes the [`ContinuousBatcher`]
+    /// run draft-and-verify decode steps: a cheap draft engine
+    /// proposes up to γ tokens per step, the target engine verifies
+    /// all γ+1 positions in one multi-position forward on a
+    /// `fork_prefix`-forked lane, and the exact-match acceptance rule
+    /// ([`crate::serve::speculate`]) keeps the agreed prefix — so
+    /// token streams are **bit-for-bit identical** with speculation on
+    /// or off, for greedy and temperature sampling alike. Mutually
+    /// exclusive with `kv_policy`: a policy observes exactly one
+    /// position per decode step, which a multi-position verify would
+    /// not reproduce. Composes with `prefix_cache` and
+    /// `prefill_chunk` (draft lanes are seeded lazily at the first
+    /// speculative step, after the target prefill completes). The
+    /// wave baseline ignores this.
+    pub speculate: Option<SpeculateConfig>,
 }
 
 impl Default for ServeConfig {
@@ -133,6 +149,7 @@ impl Default for ServeConfig {
             kv_policy: None,
             prefix_cache: None,
             prefill_chunk: 0,
+            speculate: None,
         }
     }
 }
@@ -155,6 +172,27 @@ impl ServeConfig {
         if let Some(px) = &self.prefix_cache {
             assert!(px.max_pages >= 1, "prefix_cache.max_pages must be >= 1");
         }
+        if let Some(sp) = &self.speculate {
+            assert!(sp.gamma >= 1, "speculate.gamma must be >= 1");
+            assert!(
+                self.kv_policy.is_none(),
+                "speculate and kv_policy are mutually exclusive: a policy observes one \
+                 position per decode step, which a multi-position verify cannot reproduce"
+            );
+        }
+    }
+
+    /// Drop every continuous-batcher-only feature in one place — the
+    /// config a baseline scheduler (the deprecated wave path) actually
+    /// implements. Baselines must go through this helper rather than
+    /// hand-stripping fields, so a newly added knob cannot silently
+    /// leak into the baseline and diverge the comparison.
+    pub fn strip_incompatible(mut self) -> ServeConfig {
+        self.kv_policy = None;
+        self.prefix_cache = None;
+        self.prefill_chunk = 0;
+        self.speculate = None;
+        self
     }
 }
 
@@ -225,6 +263,11 @@ pub struct StepReport {
     /// Admissions this step that forked a cached prompt prefix
     /// (prefix-cache hits; zero unless `ServeConfig::prefix_cache`).
     pub prefix_hits: usize,
+    /// Draft tokens accepted by speculative verify steps this step
+    /// (zero unless `ServeConfig::speculate`). Each accepted token is
+    /// a decode token the target engine got "for free" — also counted
+    /// in `decoded_tokens`.
+    pub spec_accepted: usize,
     /// KV pages in use across all groups after the step.
     pub pages_in_use: usize,
     /// Live sequences after the step.
@@ -279,7 +322,13 @@ pub(crate) fn validate(req: &ServeRequest, cfg: &ServeConfig) -> Result<(), Serv
     if req.max_new == 0 {
         return Err(ServeError::NothingToGenerate);
     }
-    parse_spec(&req.engine)?;
+    let target = parse_spec(&req.engine)?;
+    if let Some(sp) = &cfg.speculate {
+        // Draft/target compatibility is per-request (targets are a
+        // request property): reject drafts that are nonsense for this
+        // target before the request ever reaches a lane.
+        validate_draft_spec(&sp.draft, &target)?;
+    }
     if req.prompt.len() + 1 > cfg.max_seq {
         return Err(ServeError::PromptTooLong { len: req.prompt.len(), max_seq: cfg.max_seq });
     }
@@ -350,6 +399,13 @@ pub(crate) struct ActiveSeq {
     /// first token is sampled, `last_token`/`generated`/`ttft_s` hold
     /// placeholder values.
     pub prefill: Option<PrefillState>,
+    /// Speculative decoding: this sequence's lane in the group's
+    /// *draft* session, mirroring the stream prefix the target lane
+    /// has cached. Seeded lazily at the first speculative step and
+    /// reconciled (re-forked or extended) after each verify; `None`
+    /// when speculation is off or the draft pool is momentarily out of
+    /// pages (the lane decodes plainly until it can be re-seeded).
+    pub draft_lane: Option<LaneId>,
 }
 
 /// All sequences sharing one engine spec (and one session / cache).
@@ -363,6 +419,11 @@ pub(crate) struct EngineGroup {
     /// Radix prompt-prefix cache over this group's paged cache
     /// (`ServeConfig::prefix_cache`; continuous batcher only).
     pub prefix: Option<RadixPrefixCache>,
+    /// Speculative decoding: the group's draft-engine session
+    /// (`ServeConfig::speculate`), with its own page pool — draft KV
+    /// is the memory cost of speculation and never touches the target
+    /// budget or its reservation accounting.
+    pub draft: Option<AttentionSession>,
 }
 
 impl EngineGroup {
@@ -406,12 +467,17 @@ pub(crate) fn group_index(
     let prefix = cfg.prefix_cache.map(|px| {
         RadixPrefixCache::new(cfg.heads, cfg.page_size, px.max_pages.min(cfg.max_pages))
     });
+    let draft = match &cfg.speculate {
+        Some(sp) => Some(AttentionSession::from_spec(&sp.draft.canonical(), scfg)?),
+        None => None,
+    };
     groups.push(EngineGroup {
         spec: canon,
         session,
         active: Vec::new(),
         reserved_pages: 0,
         prefix,
+        draft,
     });
     Ok(groups.len() - 1)
 }
@@ -487,6 +553,7 @@ pub(crate) fn start_seq(
             ttft_s: 0.0,
             done: None,
             prefill: Some(PrefillState { consumed, total: plen }),
+            draft_lane: None,
         });
     }
     let (q, k, v) = model.qkv_prompt(&req.prompt, 0);
@@ -561,6 +628,7 @@ pub(crate) fn start_seq(
         ttft_s: now.duration_since(submitted).as_secs_f64(),
         done: None,
         prefill: None,
+        draft_lane: None,
     })
 }
 
@@ -846,6 +914,11 @@ impl ContinuousBatcher {
             let seqs = group.session.lane_seqs(seq.lane).to_vec();
             px.insert(&seq.req.prompt, group.session.cache_mut(), &seqs);
         }
+        // The draft lane's pages live in the draft session's own pool;
+        // they are freed here and never show in the target accounting.
+        if let (Some(dl), Some(draft)) = (seq.draft_lane, group.draft.as_mut()) {
+            let _ = draft.release_lane(dl);
+        }
         let freed = group.session.release_lane(seq.lane).unwrap_or(0);
         group.return_reservation(&seq);
         report.pages_freed += freed;
@@ -959,81 +1032,396 @@ impl ContinuousBatcher {
         }
     }
 
+    /// One speculative draft-and-verify step for a single lane.
+    ///
+    /// 1. **Draft.** The lane's draft-session lane (lazily seeded with
+    ///    the stream prefix the target lane has cached) proposes
+    ///    `γ_eff = min(γ, budget_remaining − 1)` tokens by greedy
+    ///    argmax. Greedy draws nothing from any rng, so the request's
+    ///    sampler stream is untouched no matter how far the draft runs.
+    /// 2. **Verify.** The target scores all γ_eff+1 positions in one
+    ///    [`AttentionSession::score_lanes`] forward on a
+    ///    `fork_prefix`-forked lane — the fork is the scratch space;
+    ///    rollback is `release_lane` on it, so the real lane's paged
+    ///    accounting never sees the speculation.
+    /// 3. **Emit.** [`verify_emit`] replays exactly the `sample` calls
+    ///    sequential decoding would make (the exact-match acceptance
+    ///    rule — see the `speculate` module docs), emissions are
+    ///    truncated at the first stop token, and the committed stream
+    ///    prefix's K/V rows are appended to the real lane.
+    /// 4. **Reconcile.** The draft lane is shrunk (re-forked at the
+    ///    agreed prefix) after a rejection or extended with the bonus
+    ///    row after a full accept, ready for the next step.
+    ///
+    /// Every failure path inside speculation degrades to
+    /// [`SpecOutcome::Fallback`] — the lane decodes plainly this step —
+    /// except a real-lane `extend_lane` failure, which is
+    /// [`SpecOutcome::Fatal`] (the lane is auto-released; unreachable
+    /// under reservation accounting since the committed rows are within
+    /// the sequence's reserved footprint).
+    fn speculate_lane(&mut self, gi: usize, ai: usize, report: &mut StepReport) -> SpecOutcome {
+        let sp = self.core.cfg.speculate.expect("speculate_lane requires ServeConfig::speculate");
+        let heads = self.core.cfg.heads;
+        let d = self.core.cfg.d;
+        let (lane, last_token, remaining) = {
+            let seq = &self.core.groups[gi].active[ai];
+            (seq.lane, seq.last_token, seq.budget - seq.generated.len())
+        };
+        // With one token of budget left nothing past the correction
+        // could ever be committed — plain decode is strictly cheaper.
+        if remaining < 2 {
+            return SpecOutcome::Fallback;
+        }
+        let gamma = sp.gamma.min(remaining - 1);
+        let p = self.core.groups[gi].session.lane_len(lane);
+
+        // Draft lane: reuse if it mirrors the target's cached prefix,
+        // otherwise drop and re-seed (a stale length can only follow a
+        // fallback path that already advanced the target without it).
+        let mut dl = match self.core.groups[gi].active[ai].draft_lane {
+            Some(l)
+                if self
+                    .core
+                    .groups[gi]
+                    .draft
+                    .as_ref()
+                    .expect("draft lane implies draft session")
+                    .lane_len(l)
+                    == p =>
+            {
+                Some(l)
+            }
+            Some(l) => {
+                let draft =
+                    self.core.groups[gi].draft.as_mut().expect("draft lane implies draft session");
+                let _ = draft.release_lane(l);
+                None
+            }
+            None => None,
+        };
+        if dl.is_none() {
+            // Seed with the stream prefix the target lane has cached:
+            // prompt ++ generated[..len-1] (the last sampled token is
+            // never cached — the decode-state invariant). ToyLm rows
+            // are pure functions of (token, position), so a monolithic
+            // prefill reproduces what incremental drafting would have.
+            let stream: Vec<i32> = {
+                let seq = &self.core.groups[gi].active[ai];
+                let gen = &seq.generated[..seq.generated.len() - 1];
+                seq.req.prompt.iter().chain(gen.iter()).copied().collect()
+            };
+            debug_assert_eq!(stream.len(), p, "target lane caches exactly the stream prefix");
+            let (q, k, v) = self.core.model.qkv_prompt(&stream, 0);
+            let draft = self.core.groups[gi].draft.as_mut().expect("speculation is on");
+            let new_dl = draft.admit_lane();
+            match draft.prefill_lane(new_dl, &q, &k, &v, true) {
+                Ok(_) => dl = Some(new_dl),
+                // Draft pool out of pages (the lane auto-released):
+                // decode plainly, retry seeding once pages drain.
+                Err(_) => {
+                    self.core.groups[gi].active[ai].draft_lane = None;
+                    return SpecOutcome::Fallback;
+                }
+            }
+        }
+        let dl = dl.expect("seeded above");
+        self.core.groups[gi].active[ai].draft_lane = Some(dl);
+
+        // -- 1. Draft proposes γ tokens by greedy argmax. -------------
+        let mut scratch = Rng::new(0); // greedy sample() draws nothing
+        let mut candidates: Vec<i32> = Vec::with_capacity(gamma);
+        let mut tok = last_token;
+        for j in 0..gamma {
+            let mut q1 = HeadTensor::zeros(1, heads, 1, d);
+            let mut k1 = HeadTensor::zeros(1, heads, 1, d);
+            let mut v1 = HeadTensor::zeros(1, heads, 1, d);
+            self.core.model.fill_decode_row(&mut q1, &mut k1, &mut v1, 0, tok, p + j);
+            let draft = self.core.groups[gi].draft.as_mut().expect("speculation is on");
+            let out = match draft.decode_step_lanes(&[dl], &q1, &k1, &v1) {
+                Ok(o) => o,
+                Err(_) => {
+                    // decode_step_lanes does not auto-release; drop the
+                    // half-advanced draft lane and fall back.
+                    let _ = draft.release_lane(dl);
+                    self.core.groups[gi].active[ai].draft_lane = None;
+                    return SpecOutcome::Fallback;
+                }
+            };
+            let logits = self.core.model.logits_at(&out, 0, 0);
+            tok = sample(&logits, ServeSampling::Greedy, &mut scratch);
+            candidates.push(tok);
+        }
+
+        // -- 2. Target verifies all γ+1 positions in one forward. -----
+        // verify_tokens is the stream continuation *if* every candidate
+        // is accepted: S[p] (= last_token, K/V not yet cached) followed
+        // by the draft's proposals, at positions p..p+γ+1.
+        let mut verify_tokens = Vec::with_capacity(gamma + 1);
+        verify_tokens.push(last_token);
+        verify_tokens.extend_from_slice(&candidates);
+        let (vq, vk, vv) = self.core.model.qkv_prompt(&verify_tokens, p);
+        let src = self.core.groups[gi].session.lane_seqs(lane).to_vec();
+        let fork = match self.core.groups[gi].session.admit_lane_from_fork(&src, p) {
+            Ok(f) => f,
+            Err(_) => {
+                // The draft already advanced γ rows the target won't
+                // match this step — drop it and re-seed next step.
+                let draft = self.core.groups[gi].draft.as_mut().expect("speculation is on");
+                let _ = draft.release_lane(dl);
+                self.core.groups[gi].active[ai].draft_lane = None;
+                return SpecOutcome::Fallback;
+            }
+        };
+        let out = match self.core.groups[gi].session.score_lanes(&[fork], &vq, &vk, &vv) {
+            Ok(o) => o,
+            Err(_) => {
+                // score_lanes auto-released the fork (mid-step
+                // OutOfPages during verify); same staleness cleanup.
+                let draft = self.core.groups[gi].draft.as_mut().expect("speculation is on");
+                let _ = draft.release_lane(dl);
+                self.core.groups[gi].active[ai].draft_lane = None;
+                return SpecOutcome::Fallback;
+            }
+        };
+        // Rollback: the fork (and the γ+1 rows just appended to it) is
+        // scratch — the real lane still holds exactly p tokens.
+        let _ = self.core.groups[gi].session.release_lane(fork);
+
+        // -- 3. Emit under the exact-match acceptance rule. -----------
+        let logits: Vec<Vec<f32>> =
+            (0..gamma + 1).map(|t| self.core.model.logits_at(&out, 0, t)).collect();
+        let emitted = {
+            let seq = &mut self.core.groups[gi].active[ai];
+            verify_emit(&candidates, &logits, seq.req.sampling, &mut seq.rng)
+        };
+        // Truncate at the first stop token: sequential decoding would
+        // have stopped sampling there. (verify_emit's extra rng draws
+        // past it are harmless — the request finishes and its rng is
+        // never consulted again.)
+        let m_e = {
+            let stop = &self.core.groups[gi].active[ai].req.stop_tokens;
+            match emitted.iter().position(|t| stop.contains(t)) {
+                Some(i) => i + 1,
+                None => emitted.len(),
+            }
+        };
+        report.spec_accepted += m_e - 1;
+        self.core.metrics.record_speculation(gamma, m_e - 1);
+        self.core.metrics.record_decode(m_e);
+
+        // Commit the accepted stream prefix's K/V: rows 0..m_e of the
+        // verify tensors are exactly S[p..p+m_e], bit-identical to what
+        // m_e sequential decode steps would have appended.
+        if let Err(e) = self
+            .core
+            .groups[gi]
+            .session
+            .extend_lane(lane, &vk.slice_rows(0, m_e), &vv.slice_rows(0, m_e))
+        {
+            // extend_lane auto-released the lane. Unreachable under
+            // reservation accounting — the committed rows fit the
+            // sequence's reserved worst-case footprint — so surface it
+            // as a request failure, not a panic. The removal pass
+            // releases the draft lane and returns the reservation.
+            return SpecOutcome::Fatal(ServeError::from(e));
+        }
+        let now = Instant::now();
+        let mut finish = None;
+        for &tok in &emitted[..m_e] {
+            let seq = &mut self.core.groups[gi].active[ai];
+            seq.last_token = tok;
+            seq.generated.push(tok);
+            emit(
+                &seq.req,
+                ServeEvent::Token { id: seq.id, index: seq.generated.len() - 1, token: tok },
+            );
+            self.core
+                .metrics
+                .record_token_latency(now.duration_since(seq.last_token_at).as_secs_f64());
+            // The first emission pays the real inter-step gap; the rest
+            // of the batch landed in the same instant.
+            self.core.groups[gi].active[ai].last_token_at = now;
+            report.decoded_tokens += 1;
+            finish = finish_reason(&self.core.groups[gi].active[ai]);
+        }
+        if finish.is_some() {
+            // retire() (run by the caller's removal pass) releases the
+            // draft lane alongside the target lane.
+            return SpecOutcome::Done(finish);
+        }
+
+        // -- 4. Reconcile the draft lane with the committed stream. ---
+        let target_len = p + m_e;
+        let group = &mut self.core.groups[gi];
+        let draft = group.draft.as_mut().expect("speculation is on");
+        let dlen = draft.lane_len(dl);
+        debug_assert_eq!(dlen, p + gamma, "draft advanced exactly γ rows");
+        let new_dl = if target_len < dlen {
+            // A rejection: draft rows past the agreed prefix follow a
+            // divergent continuation. Shrink by forking the prefix
+            // (shares pages, allocates nothing) and dropping the stale
+            // lane.
+            let dsrc = draft.lane_seqs(dl).to_vec();
+            let forked = draft.admit_lane_from_fork(&dsrc, target_len);
+            let _ = draft.release_lane(dl);
+            forked.ok()
+        } else if target_len == dlen {
+            // Accepted exactly the rows the draft holds — nothing to do.
+            Some(dl)
+        } else {
+            // Full accept + bonus: the draft is one row short — append
+            // the bonus token's K/V (row γ of the verify tensors, the
+            // same bytes a draft decode step would have pushed).
+            match draft.extend_lane(dl, &vk.slice_rows(gamma, gamma + 1), &vv.slice_rows(gamma, gamma + 1))
+            {
+                Ok(()) => Some(dl),
+                Err(_) => None, // auto-released; re-seed next step
+            }
+        };
+        group.active[ai].draft_lane = new_dl;
+        SpecOutcome::Done(None)
+    }
+
     /// One mixed decode step per engine group over all its live lanes
     /// whose prefill is complete (mid-prefill lanes are skipped — they
     /// have no sampled token to extend yet).
+    ///
+    /// With `ServeConfig::speculate` set, every eligible lane first
+    /// attempts a speculative step ([`Self::speculate_lane`]); lanes
+    /// that can't speculate right now (budget tail, draft pool out of
+    /// pages, verify-fork failure) fall back to the plain batched
+    /// single-token path below, so speculation never stalls a stream —
+    /// it changes how many tokens a step commits, never which tokens.
+    ///
     /// Index iteration is load-bearing: the body calls `&mut self`
     /// methods (retire / fail_request) that an iterator borrow would
-    /// forbid.
+    /// forbid. Retirements and failures are collected per active index
+    /// and processed once at the end of each group's pass in descending
+    /// index order, keeping the pending `swap_remove` targets stable.
     fn decode(&mut self, report: &mut StepReport) {
         for gi in 0..self.core.groups.len() {
             // Batch rows → active indices, skipping mid-prefill lanes.
             let rows: Vec<usize> = (0..self.core.groups[gi].active.len())
                 .filter(|&ai| self.core.groups[gi].active[ai].prefill.is_none())
                 .collect();
-            let n = rows.len();
-            if n == 0 {
+            if rows.is_empty() {
                 continue;
             }
-            let heads = self.core.cfg.heads;
-            let d = self.core.cfg.d;
-            let mut q = HeadTensor::zeros(n, heads, 1, d);
-            let mut k = HeadTensor::zeros(n, heads, 1, d);
-            let mut v = HeadTensor::zeros(n, heads, 1, d);
-            let mut lanes: Vec<LaneId> = Vec::with_capacity(n);
-            for (bi, &ai) in rows.iter().enumerate() {
-                let seq = &self.core.groups[gi].active[ai];
-                let pos = self.core.groups[gi].session.lane_len(seq.lane);
-                self.core.model.fill_decode_row(&mut q, &mut k, &mut v, bi, seq.last_token, pos);
-                lanes.push(seq.lane);
+            let mut done: Vec<(usize, FinishReason)> = Vec::new();
+            let mut failed: Vec<(usize, ServeError)> = Vec::new();
+            let mut plain: Vec<usize> = Vec::new();
+            if self.core.cfg.speculate.is_some() {
+                for &ai in &rows {
+                    match self.speculate_lane(gi, ai, report) {
+                        SpecOutcome::Done(Some(reason)) => done.push((ai, reason)),
+                        SpecOutcome::Done(None) => {}
+                        SpecOutcome::Fallback => plain.push(ai),
+                        SpecOutcome::Fatal(e) => failed.push((ai, e)),
+                    }
+                }
+            } else {
+                plain = rows;
             }
-            let out = match self.core.groups[gi].session.decode_step_lanes(&lanes, &q, &k, &v) {
-                Ok(o) => o,
-                Err(e) => {
-                    // Unreachable under reservation accounting; fail
-                    // the whole group defensively rather than panic.
-                    // Each sequence returns its reservation (and any
-                    // prefix borrow) exactly once — checked
-                    // subtraction in `return_reservation`.
-                    let seqs = std::mem::take(&mut self.core.groups[gi].active);
-                    for seq in seqs {
-                        let _ = self.core.groups[gi].session.release_lane(seq.lane);
+            let n = plain.len();
+            if n > 0 {
+                let heads = self.core.cfg.heads;
+                let d = self.core.cfg.d;
+                let mut q = HeadTensor::zeros(n, heads, 1, d);
+                let mut k = HeadTensor::zeros(n, heads, 1, d);
+                let mut v = HeadTensor::zeros(n, heads, 1, d);
+                let mut lanes: Vec<LaneId> = Vec::with_capacity(n);
+                for (bi, &ai) in plain.iter().enumerate() {
+                    let seq = &self.core.groups[gi].active[ai];
+                    let pos = self.core.groups[gi].session.lane_len(seq.lane);
+                    self.core
+                        .model
+                        .fill_decode_row(&mut q, &mut k, &mut v, bi, seq.last_token, pos);
+                    lanes.push(seq.lane);
+                }
+                match self.core.groups[gi].session.decode_step_lanes(&lanes, &q, &k, &v) {
+                    Err(e) => {
+                        // Unreachable under reservation accounting; fail
+                        // this batch defensively rather than panic. The
+                        // removal pass below returns each reservation
+                        // (and any prefix borrow) exactly once — checked
+                        // subtraction in `return_reservation`.
+                        for &ai in &plain {
+                            let lane = self.core.groups[gi].active[ai].lane;
+                            let _ = self.core.groups[gi].session.release_lane(lane);
+                            failed.push((ai, ServeError::from(e)));
+                        }
+                    }
+                    Ok(out) => {
+                        let now = Instant::now();
+                        for (bi, &ai) in plain.iter().enumerate() {
+                            let seq = &mut self.core.groups[gi].active[ai];
+                            let logits = self.core.model.logits_at(&out, bi, 0);
+                            let tok = sample(&logits, seq.req.sampling, &mut seq.rng);
+                            seq.last_token = tok;
+                            seq.generated.push(tok);
+                            emit(
+                                &seq.req,
+                                ServeEvent::Token {
+                                    id: seq.id,
+                                    index: seq.generated.len() - 1,
+                                    token: tok,
+                                },
+                            );
+                            self.core.metrics.record_token_latency(
+                                now.duration_since(seq.last_token_at).as_secs_f64(),
+                            );
+                            seq.last_token_at = now;
+                            self.core.metrics.record_decode(1);
+                            report.decoded_tokens += 1;
+                            if let Some(reason) = finish_reason(seq) {
+                                done.push((ai, reason));
+                            }
+                        }
+                    }
+                }
+            }
+            // Unified removal: descending active index keeps the
+            // remaining swap_remove targets stable.
+            let mut removals: Vec<(usize, Result<FinishReason, ServeError>)> = done
+                .into_iter()
+                .map(|(ai, r)| (ai, Ok(r)))
+                .chain(failed.into_iter().map(|(ai, e)| (ai, Err(e))))
+                .collect();
+            removals.sort_by(|a, b| b.0.cmp(&a.0));
+            for (ai, outcome) in removals {
+                let seq = self.core.groups[gi].active.swap_remove(ai);
+                match outcome {
+                    Ok(reason) => self.retire(gi, seq, reason, report),
+                    Err(e) => {
+                        // The target lane is already gone (auto-released
+                        // by the failing call, or released above); drop
+                        // the draft lane and hand the request back.
+                        if let (Some(dl), Some(draft)) =
+                            (seq.draft_lane, self.core.groups[gi].draft.as_mut())
+                        {
+                            let _ = draft.release_lane(dl);
+                        }
                         self.core.groups[gi].return_reservation(&seq);
-                        self.core.fail_request(seq.id, &seq.req, ServeError::from(e));
+                        self.core.fail_request(seq.id, &seq.req, e);
                         report.failed += 1;
                     }
-                    continue;
                 }
-            };
-            let now = Instant::now();
-            let mut done: Vec<(usize, FinishReason)> = Vec::new();
-            for (bi, &ai) in rows.iter().enumerate() {
-                let seq = &mut self.core.groups[gi].active[ai];
-                let logits = self.core.model.logits_at(&out, bi, 0);
-                let tok = sample(&logits, seq.req.sampling, &mut seq.rng);
-                seq.last_token = tok;
-                seq.generated.push(tok);
-                emit(
-                    &seq.req,
-                    ServeEvent::Token { id: seq.id, index: seq.generated.len() - 1, token: tok },
-                );
-                self.core
-                    .metrics
-                    .record_token_latency(now.duration_since(seq.last_token_at).as_secs_f64());
-                seq.last_token_at = now;
-                report.decoded_tokens += 1;
-                if let Some(reason) = finish_reason(seq) {
-                    done.push((ai, reason));
-                }
-            }
-            // Evict finished lanes immediately (descending active index
-            // keeps the remaining swap_remove targets stable).
-            for &(ai, reason) in done.iter().rev() {
-                let seq = self.core.groups[gi].active.swap_remove(ai);
-                self.retire(gi, seq, reason, report);
             }
         }
     }
+}
+
+/// Outcome of one [`ContinuousBatcher::speculate_lane`] attempt.
+enum SpecOutcome {
+    /// The speculative step committed ≥ 1 token; `Some(reason)` if the
+    /// sequence finished and must be retired.
+    Done(Option<FinishReason>),
+    /// Speculation could not run this step — decode the lane plainly
+    /// (the stream is unaffected; only the step's token count is).
+    Fallback,
+    /// The real lane's K/V commit failed (lane auto-released) — fail
+    /// the request.
+    Fatal(ServeError),
 }
 
 impl Scheduler for ContinuousBatcher {
@@ -1112,6 +1500,7 @@ mod tests {
             kv_policy: None,
             prefix_cache: None,
             prefill_chunk: 0,
+            speculate: None,
         }
     }
 

@@ -1,0 +1,202 @@
+//! Speculative decoding — draft-and-verify over the fork machinery.
+//!
+//! A cheap **draft** engine from the registry (an aggressively small-k
+//! SFA spec, a window engine, …) proposes γ tokens by greedy argmax on
+//! its own lane; the **target** engine then scores all γ+1 positions in
+//! one multi-position verify forward
+//! ([`AttentionSession::score_lanes`](crate::attention::AttentionSession::score_lanes))
+//! on a `fork_prefix`-forked lane, and the acceptance rule below keeps
+//! the agreed prefix. Rollback is `release_lane` on the fork, so paged
+//! accounting, the radix prefix cache, and page-budget admission
+//! survive speculation unchanged. `serve::ContinuousBatcher` drives
+//! the lifecycle; this module owns the config and the acceptance rule.
+//!
+//! ## The acceptance rule: exact-match, stream-preserving
+//!
+//! Classic speculative sampling accepts draft token x with probability
+//! `min(1, p_target(x) / p_draft(x))` — distribution-preserving, but
+//! it consumes a *different* rng draw sequence than plain decoding, so
+//! a request's token stream would change the moment speculation turns
+//! on. This repo's serving invariant is stronger than
+//! distribution-equality: **streams are bit-for-bit identical with
+//! speculation on or off**, for greedy *and* temperature sampling.
+//!
+//! So [`verify_emit`] instead replays exactly what non-speculative
+//! decoding would do: walk the verified positions in order, call the
+//! one true [`sample`] per position (greedy consumes zero rng draws,
+//! temperature exactly one — the same draws, in the same order, as
+//! sequential decoding), and keep going while the sampled token equals
+//! the draft's next candidate. The first disagreement (or the bonus
+//! position after a fully accepted draft) ends the step. Accepted
+//! positions are "free" target-quality tokens; the draft only ever
+//! decides how far ahead the target got to look, never what is
+//! emitted.
+
+use crate::attention::registry::{parse_spec, EngineSpec, SpecError};
+use crate::serve::model::sample;
+use crate::serve::request::ServeSampling;
+use crate::util::rng::Rng;
+
+/// Speculative-decoding knobs carried by
+/// [`ServeConfig`](crate::serve::ServeConfig).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeculateConfig {
+    /// The draft engine (registry spec, e.g. `sfa:k=2` or
+    /// `window:w=64`) — one draft session per engine group, shared by
+    /// every lane in the group.
+    pub draft: EngineSpec,
+    /// Draft tokens proposed per speculative step (γ ≥ 1).
+    pub gamma: usize,
+}
+
+impl SpeculateConfig {
+    /// Parse the CLI surface: a draft spec (with or without the
+    /// `draft=` prefix `--speculate draft=<spec>` passes through) plus
+    /// γ. The draft's compatibility with a *target* spec is checked
+    /// per-request at admission
+    /// ([`validate_draft_spec`](crate::attention::registry::validate_draft_spec))
+    /// — targets are a request property, not a config property.
+    pub fn parse(draft: &str, gamma: usize) -> Result<SpeculateConfig, SpecError> {
+        let raw = draft.trim();
+        let raw = raw.strip_prefix("draft=").unwrap_or(raw);
+        if gamma == 0 {
+            return Err(SpecError("speculate: gamma must be >= 1".into()));
+        }
+        Ok(SpeculateConfig { draft: parse_spec(raw)?, gamma })
+    }
+}
+
+/// Walk one verify step's logits and emit the step's tokens under the
+/// exact-match acceptance rule (module docs).
+///
+/// `candidates` are the draft's proposals for positions `1..`;
+/// `logits[j]` is the target's distribution at verified position `j`
+/// (`logits.len() == candidates.len() + 1` — the extra row is the
+/// bonus position after a fully accepted draft). Emission `j` draws
+/// through the one true [`sample`] on `rng`, so the rng stream
+/// advances exactly as sequential decoding would for the same emitted
+/// tokens — the batch-composition / step-boundary invariance the
+/// property test pins.
+///
+/// Returns the emitted tokens (1 ..= γ+1 of them). The number of
+/// *accepted* draft candidates is always `emitted.len() - 1`: a
+/// mismatch at position `j` emits `j` accepted tokens plus the
+/// target's correction, and a full accept emits all γ plus the bonus.
+pub fn verify_emit(
+    candidates: &[i32],
+    logits: &[Vec<f32>],
+    sampling: ServeSampling,
+    rng: &mut Rng,
+) -> Vec<i32> {
+    assert_eq!(
+        logits.len(),
+        candidates.len() + 1,
+        "one logits row per draft candidate plus the bonus position"
+    );
+    let mut emitted = Vec::with_capacity(logits.len());
+    for (j, row) in logits.iter().enumerate() {
+        let tok = sample(row, sampling, rng);
+        emitted.push(tok);
+        if j == candidates.len() || tok != candidates[j] {
+            break;
+        }
+    }
+    emitted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    /// One-hot-ish logits that make `sample` (greedy or any
+    /// temperature) pick `tok` with near-certainty.
+    fn peaked(vocab: usize, tok: i32) -> Vec<f32> {
+        let mut l = vec![-50.0; vocab];
+        l[tok as usize] = 50.0;
+        l
+    }
+
+    #[test]
+    fn parse_accepts_prefix_and_rejects_zero_gamma() {
+        let a = SpeculateConfig::parse("sfa:k=2", 4).unwrap();
+        let b = SpeculateConfig::parse("draft=sfa:k=2", 4).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.gamma, 4);
+        assert_eq!(a.draft, parse_spec("sfa:k=2").unwrap());
+        assert!(SpeculateConfig::parse("sfa:k=2", 0).unwrap_err().0.contains("gamma"));
+        assert!(SpeculateConfig::parse("warp", 4).is_err());
+    }
+
+    #[test]
+    fn full_accept_mismatch_and_empty_draft() {
+        let mut rng = Rng::new(1);
+        // All candidates agree: γ accepted + the bonus emission.
+        let logits: Vec<Vec<f32>> =
+            [3, 5, 7, 2].iter().map(|&t| peaked(16, t)).collect();
+        let out = verify_emit(&[3, 5, 7], &logits, ServeSampling::Greedy, &mut rng);
+        assert_eq!(out, vec![3, 5, 7, 2]);
+        // Mismatch at position 1: one accepted token + the correction.
+        let out = verify_emit(&[3, 9, 7], &logits, ServeSampling::Greedy, &mut rng);
+        assert_eq!(out, vec![3, 5]);
+        // Immediate mismatch: just the correction.
+        let out = verify_emit(&[8, 5, 7], &logits, ServeSampling::Greedy, &mut rng);
+        assert_eq!(out, vec![3]);
+        // γ_eff == 0 (budget tail): plain single-token decode.
+        let out = verify_emit(&[], &logits[..1], ServeSampling::Greedy, &mut rng);
+        assert_eq!(out, vec![3]);
+        // accepted == emitted.len() - 1 in every case above.
+    }
+
+    /// Satellite property pin: the sampler stream is invariant to step
+    /// boundaries. One `verify_emit` call over γ positions must
+    /// produce the same emissions *and* leave the rng in the same
+    /// state as sampling the same logits rows one token at a time —
+    /// i.e. the accept/reject coin flips are identical whether γ
+    /// tokens arrive in one verify step or one per step, and whatever
+    /// the batch around them looks like (the rng is per-request, so
+    /// batch composition can't touch it by construction).
+    #[test]
+    fn verify_stream_matches_one_token_at_a_time_sampling() {
+        check("speculative rng stream invariance", 64, |g| {
+            let vocab = 8 + g.usize_in(0..9);
+            let gamma = g.usize_in(1..6);
+            let temp = 0.3 + g.f32_in(0.0..1.5);
+            let seed = g.usize_in(0..1 << 30) as u64;
+            // Random (sometimes flat, sometimes peaked) logits rows and
+            // random candidates — mismatches land at random depths.
+            let logits: Vec<Vec<f32>> = (0..gamma + 1)
+                .map(|_| (0..vocab).map(|_| g.f32_in(-4.0..4.0)).collect())
+                .collect();
+            let candidates: Vec<i32> =
+                (0..gamma).map(|_| g.usize_in(0..vocab) as i32).collect();
+            for sampling in [ServeSampling::Greedy, ServeSampling::Temperature(temp)] {
+                let mut r_spec = Rng::new(seed);
+                let emitted = verify_emit(&candidates, &logits, sampling, &mut r_spec);
+
+                // Sequential reference: sample position j only after
+                // positions 0..j emitted and matched the draft — the
+                // call sequence plain decoding makes for this stream.
+                let mut r_seq = Rng::new(seed);
+                let mut expect = Vec::new();
+                for (j, row) in logits.iter().enumerate() {
+                    let tok = sample(row, sampling, &mut r_seq);
+                    expect.push(tok);
+                    if j == candidates.len() || tok != candidates[j] {
+                        break;
+                    }
+                }
+                assert_eq!(emitted, expect, "emissions differ ({sampling:?})");
+                assert!(!emitted.is_empty() && emitted.len() <= gamma + 1);
+                // Same rng state afterwards: the next draws agree.
+                for _ in 0..4 {
+                    assert_eq!(
+                        r_spec.next_f64().to_bits(),
+                        r_seq.next_f64().to_bits(),
+                        "rng stream diverged after the step ({sampling:?})"
+                    );
+                }
+            }
+        });
+    }
+}

@@ -41,16 +41,16 @@ pub struct WaveScheduler {
 
 impl WaveScheduler {
     /// Panics on a degenerate config (see `ServeConfig::assert_valid`);
-    /// CLI layers should range-check user input first. Any configured
-    /// `kv_policy`, `prefix_cache`, or `prefill_chunk` is stripped:
-    /// the wave scheduler *is* the worst-case, cold-monolithic
-    /// baseline the policy-budgeted, prefix-sharing, chunk-prefilling
-    /// batcher is measured against.
-    pub fn new(mut cfg: ServeConfig) -> WaveScheduler {
-        cfg.kv_policy = None;
-        cfg.prefix_cache = None;
-        cfg.prefill_chunk = 0;
-        WaveScheduler { core: SchedulerCore::new(cfg) }
+    /// CLI layers should range-check user input first. Every
+    /// batcher-only knob (`kv_policy`, `prefix_cache`, `prefill_chunk`,
+    /// `speculate`) is stripped through the one shared
+    /// [`ServeConfig::strip_incompatible`]: the wave scheduler *is* the
+    /// worst-case, cold-monolithic baseline the policy-budgeted,
+    /// prefix-sharing, chunk-prefilling, speculating batcher is
+    /// measured against — a knob that leaked through here would
+    /// silently poison every baseline comparison.
+    pub fn new(cfg: ServeConfig) -> WaveScheduler {
+        WaveScheduler { core: SchedulerCore::new(cfg.strip_incompatible()) }
     }
 
     fn wave_active(&self) -> bool {
