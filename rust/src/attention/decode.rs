@@ -636,42 +636,36 @@ impl PagedKvPolicy {
 
     /// Parse a policy spec string; `"none"` means no policy
     /// (worst-case page reservations). Defaults: `budget=128`,
-    /// `recent=16`.
+    /// `recent=16`. Tokenization is the shared [`crate::util::spec`]
+    /// grammar, so malformed/duplicate parameters fail with the same
+    /// messages as every other spec surface.
     pub fn parse(spec: &str) -> Result<Option<PagedKvPolicy>, String> {
-        let spec = spec.trim();
-        let (family, rest) = match spec.split_once(':') {
-            Some((f, r)) => (f.trim(), r),
-            None => (spec, ""),
-        };
+        let raw = crate::util::spec::tokenize(spec)?;
+        let family = raw.family;
+        if family == "none" {
+            // `none:budget=64` is almost certainly a typo for a real
+            // policy — refuse rather than silently not evict.
+            if let Some(&(k, v)) = raw.pairs.first() {
+                return Err(format!("none takes no parameters, got {:?}", format!("{k}={v}")));
+            }
+            return Ok(None);
+        }
         let mut budget = 128usize;
         let mut recent = 16usize;
-        for part in rest.split(',') {
-            let part = part.trim();
-            if part.is_empty() {
-                continue;
-            }
-            if family == "none" {
-                // `none:budget=64` is almost certainly a typo for a
-                // real policy — refuse rather than silently not evict.
-                return Err(format!("none takes no parameters, got {part:?}"));
-            }
-            let (k, v) = part.split_once('=').ok_or_else(|| {
-                format!("{family}: malformed parameter {part:?} (expected key=value)")
+        for &(k, v) in &raw.pairs {
+            let n: usize = v.parse().map_err(|_| {
+                format!("{family}: key {k:?} expects an integer, got {v:?}")
             })?;
-            let n: usize = v.trim().parse().map_err(|_| {
-                format!("{family}: key {:?} expects an integer, got {v:?}", k.trim())
-            })?;
-            match k.trim() {
+            match k {
                 "budget" => budget = n,
                 "recent" if family != "quest" => recent = n,
                 other => return Err(format!("{family}: unknown key {other:?}")),
             }
         }
-        if family != "none" && budget == 0 {
+        if budget == 0 {
             return Err(format!("{family}: budget must be >= 1"));
         }
         match family {
-            "none" => Ok(None),
             "h2o" => Ok(Some(PagedKvPolicy::H2o { budget, recent })),
             "snapkv" => Ok(Some(PagedKvPolicy::SnapKv { budget, recent })),
             "quest" => Ok(Some(PagedKvPolicy::Quest { budget })),

@@ -41,6 +41,7 @@ use crate::attention::performer::PerformerAttention;
 use crate::attention::quant::QuantAttention;
 use crate::attention::window::WindowAttention;
 use crate::attention::{Engine, Scorer};
+use crate::util::spec::tokenize;
 use crate::util::threadpool::default_threads;
 
 /// Every spec family the registry understands (alias `flash_sfa` maps
@@ -168,30 +169,14 @@ impl<'a> Params<'a> {
 
 /// Parse a spec string into a typed [`EngineSpec`]. Bad specs return a
 /// descriptive error naming the family, key, or value at fault.
+/// Tokenization (trimming, `key=value` splitting, duplicate rejection)
+/// is the shared [`crate::util::spec`] grammar, so the registry's
+/// errors read identically to the KV-policy / speculation / SLO spec
+/// surfaces.
 pub fn parse_spec(spec: &str) -> Result<EngineSpec, SpecError> {
-    let spec = spec.trim();
-    if spec.is_empty() {
-        return Err(err("empty spec — expected `family[:key=value,...]`"));
-    }
-    let (family, rest) = match spec.split_once(':') {
-        Some((f, r)) => (f.trim(), Some(r)),
-        None => (spec, None),
-    };
-    let mut map: BTreeMap<&str, &str> = BTreeMap::new();
-    if let Some(rest) = rest {
-        for part in rest.split(',') {
-            let part = part.trim();
-            if part.is_empty() {
-                continue;
-            }
-            let (k, v) = part.split_once('=').ok_or_else(|| {
-                err(format!("{family}: malformed parameter {part:?} (expected key=value)"))
-            })?;
-            if map.insert(k.trim(), v.trim()).is_some() {
-                return Err(err(format!("{family}: duplicate key {:?}", k.trim())));
-            }
-        }
-    }
+    let raw = tokenize(spec).map_err(SpecError)?;
+    let family = raw.family;
+    let map: BTreeMap<&str, &str> = raw.pairs.iter().copied().collect();
     let mut p = Params { family, map };
     let parsed = match family {
         "dense" => EngineSpec::Dense,

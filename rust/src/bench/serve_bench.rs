@@ -9,16 +9,25 @@
 //! time-to-first-token, p50/p95/p99 per-token latency, page occupancy,
 //! pruned pages, and achieved concurrency; serializes the whole
 //! comparison to BENCH_serve.json.
+//!
+//! `--replicas N` switches to the multi-replica router comparison: a
+//! trace-driven workload (bursty on-off arrivals, heavy-tailed batch
+//! prompts, shared system prompts, an interactive/batch SLO mix)
+//! driven through [`ReplicaRouter`] under the SLO-aware cost model and
+//! under round-robin, plus a single-replica stream reference — pinning
+//! placement-independent streams and reporting goodput to
+//! BENCH_serve_router.json.
 
 use std::time::Instant;
 
 use crate::bench::table::{fmt_speedup, fmt_time, Table};
-use crate::coordinator::metrics::Percentiles;
+use crate::coordinator::metrics::{Goodput, Percentiles};
+use crate::coordinator::router::{tally_goodput, ReplicaRouter, RouterPolicy};
 use crate::attention::registry::{parse_spec, validate_draft_spec};
 use crate::serve::{
     pages_needed, ContinuousBatcher, FinishedRequest, PagedKvPolicy, PrefixCacheConfig,
     PrefixCacheStats, RequestId, RequestState, Scheduler, ServeConfig, ServeRequest,
-    ServeSampling, SpeculateConfig, WaveScheduler,
+    ServeSampling, SloClass, SpeculateConfig, WaveScheduler,
 };
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -59,6 +68,14 @@ pub struct ServeBenchConfig {
     /// speculating, pinning bit-identical token streams and recording
     /// acceptance rate and tokens per decode step vs the baseline.
     pub speculate: Option<SpeculateConfig>,
+    /// `Some` switches `bench serve` to the **multi-replica router
+    /// comparison** (`--replicas`): a trace-driven workload (bursty
+    /// on-off arrivals, heavy-tailed batch prompt lengths, shared
+    /// system prompts, a fixed interactive/batch SLO mix) driven
+    /// through the SLO-aware `ReplicaRouter` and a round-robin
+    /// baseline, pinning placement-independent streams and reporting
+    /// goodput (tokens/s within SLO).
+    pub router: Option<RouterBenchConfig>,
     pub serve: ServeConfig,
     pub seed: u64,
     /// Base for per-request sampler seeds: request `i` decodes with
@@ -119,6 +136,57 @@ impl Default for PrefixBenchConfig {
     }
 }
 
+/// Shape of the trace-driven multi-replica workload + SLO deadlines
+/// for the router comparison (`--replicas`).
+#[derive(Debug, Clone, Copy)]
+pub struct RouterBenchConfig {
+    /// Replica count behind the router (each its own page pool and
+    /// prefix cache).
+    pub replicas: usize,
+    /// Fraction of requests carrying the interactive SLO class,
+    /// assigned by stratified accumulator (the mix is exact, not a
+    /// coin flip).
+    pub interactive_frac: f64,
+    /// Interactive SLO deadlines, seconds.
+    pub ttft_s: f64,
+    pub tpot_s: f64,
+    /// Distinct shared system prompts — the prefix-affinity targets —
+    /// and their length in tokens.
+    pub system_prompts: usize,
+    pub system_prompt_len: usize,
+    /// Radix prefix-cache page budget per replica (affinity routing
+    /// needs warm caches to probe).
+    pub cache_pages: usize,
+    /// On-burst shape: arrivals per burst, and mean arrivals per
+    /// scheduler quantum inside a burst (exponential inter-arrival
+    /// gaps — the Poisson half of on-off traffic).
+    pub burst_len: usize,
+    pub burst_rate: f64,
+    /// Idle scheduler quanta between bursts (the off phase).
+    pub burst_gap_steps: usize,
+    /// Bounded-Pareto tail exponent for batch prompt lengths (smaller
+    /// = heavier tail; interactive prompts stay short).
+    pub tail_alpha: f64,
+}
+
+impl Default for RouterBenchConfig {
+    fn default() -> RouterBenchConfig {
+        RouterBenchConfig {
+            replicas: 2,
+            interactive_frac: 0.5,
+            ttft_s: 0.25,
+            tpot_s: 0.05,
+            system_prompts: 4,
+            system_prompt_len: 64,
+            cache_pages: 1024,
+            burst_len: 8,
+            burst_rate: 2.0,
+            burst_gap_steps: 12,
+            tail_alpha: 1.2,
+        }
+    }
+}
+
 /// Display label for one swept policy slot.
 pub fn policy_label(p: &Option<PagedKvPolicy>) -> String {
     match p {
@@ -145,6 +213,7 @@ impl Default for ServeBenchConfig {
             prefix: None,
             chunked: None,
             speculate: None,
+            router: None,
             // Enough lanes that the page budget, not the lane cap, is
             // what policy-budget admission relaxes.
             serve: ServeConfig { max_lanes: 32, ..ServeConfig::default() },
@@ -778,6 +847,351 @@ pub fn spec_to_json(cfg: &ServeBenchConfig, cmp: &SpecComparison) -> String {
     .to_string()
 }
 
+/// Build the trace-driven router workload: `(arrival_step, request)`
+/// pairs in nondecreasing arrival order. Arrivals are bursty on-off
+/// (exponential inter-arrival gaps inside a burst, an idle gap between
+/// bursts), interactive prompts are short while batch prompts draw a
+/// bounded-Pareto heavy tail up to `prompt_max`, every prompt opens
+/// with one of a small set of shared system prompts (the
+/// prefix-affinity targets), and the interactive/batch mix follows
+/// `interactive_frac` exactly via a stratified accumulator.
+pub fn workload_trace(
+    cfg: &ServeBenchConfig,
+    rb: &RouterBenchConfig,
+) -> Vec<(usize, ServeRequest)> {
+    let mut rng = Rng::new(cfg.seed ^ 0x2007_7E12);
+    let vocab = cfg.serve.vocab as u64;
+    let sys: Vec<Vec<i32>> = (0..rb.system_prompts.max(1))
+        .map(|_| (0..rb.system_prompt_len).map(|_| rng.below(vocab) as i32).collect())
+        .collect();
+    let slo = SloClass::Interactive { ttft_s: rb.ttft_s, tpot_s: rb.tpot_s };
+    let short_max =
+        (2 * cfg.prompt_min).clamp(cfg.prompt_min + 1, cfg.prompt_max.max(cfg.prompt_min + 1));
+    let mut step = 0usize;
+    let mut acc = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.requests);
+    for i in 0..cfg.requests {
+        if i > 0 && i % rb.burst_len.max(1) == 0 {
+            step += rb.burst_gap_steps; // the off phase between bursts
+        }
+        let u = rng.next_f64().max(1e-12);
+        step += (-u.ln() / rb.burst_rate.max(1e-9)) as usize;
+        acc += rb.interactive_frac;
+        let interactive = acc >= 1.0 - 1e-9;
+        if interactive {
+            acc -= 1.0;
+        }
+        let plen = if interactive {
+            rng.range(cfg.prompt_min, short_max + 1)
+        } else {
+            let u = rng.next_f64().max(1e-12);
+            let raw = cfg.prompt_min as f64 * u.powf(-1.0 / rb.tail_alpha.max(0.1));
+            (raw as usize).clamp(cfg.prompt_min, cfg.prompt_max)
+        };
+        let mut prompt = sys[rng.below(sys.len() as u64) as usize].clone();
+        // One forced-distinct token bounds the shared prefix at the
+        // system prompt even when random suffixes collide.
+        prompt.push((i % cfg.serve.vocab) as i32);
+        while prompt.len() < plen.max(rb.system_prompt_len + 2) {
+            prompt.push(rng.below(vocab) as i32);
+        }
+        let max_new = rng.range(cfg.max_new_min, cfg.max_new_max + 1);
+        let mut req = ServeRequest::new(prompt)
+            .max_new(max_new)
+            .engine(&cfg.engines[i % cfg.engines.len()])
+            .seed(cfg.sampler_seed.wrapping_add(i as u64))
+            .slo(if interactive { slo } else { SloClass::Batch });
+        if let Some(t) = cfg.temperature {
+            req = req.sampling(ServeSampling::Temperature(t));
+        }
+        out.push((step, req));
+    }
+    out
+}
+
+/// One router policy's measurements over the arrival trace.
+#[derive(Debug, Clone)]
+pub struct RouterRunStats {
+    pub policy: String,
+    pub requests: usize,
+    pub failed: usize,
+    pub tokens_out: u64,
+    pub wall_s: f64,
+    pub tok_s: f64,
+    /// SLO-meeting tokens per wall second — the headline.
+    pub goodput_tok_s: f64,
+    /// Fraction of requests that met their SLO class.
+    pub attainment: f64,
+    /// TTFT percentiles over the interactive / batch subsets.
+    pub interactive_ttft: Percentiles,
+    pub batch_ttft: Percentiles,
+    pub interactive_requests: usize,
+    /// Scheduler quanta stepped (every replica advances per quantum).
+    pub steps: usize,
+    /// Batch lanes preempted for interactive admission, all replicas.
+    pub preempted: usize,
+    /// Prefix-cache hit admissions summed across replicas.
+    pub prefix_hits: u64,
+    /// Routing decisions that landed on a replica with a warm prefix.
+    pub affinity_hits: usize,
+}
+
+/// Drive one [`ReplicaRouter`] through an arrival trace: at each
+/// scheduler quantum, submit every request whose arrival step has
+/// come, then advance all replicas by one step (idle quanta between
+/// bursts cost nothing). Returns the stats and the drained terminal
+/// records in global-id order.
+pub fn drive_router(
+    router: &mut ReplicaRouter,
+    label: &str,
+    trace: &[(usize, ServeRequest)],
+) -> (RouterRunStats, Vec<FinishedRequest>) {
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    let mut clock = 0usize;
+    let mut steps = 0usize;
+    let mut preempted = 0usize;
+    while next < trace.len() || router.has_work() {
+        while next < trace.len() && trace[next].0 <= clock {
+            router.submit(trace[next].1.clone()).expect("trace fits queue and budget");
+            next += 1;
+        }
+        if router.has_work() {
+            let r = router.step();
+            steps += 1;
+            preempted += r.preempted;
+        }
+        clock += 1;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let finished = router.take_finished();
+    let failed =
+        finished.iter().filter(|f| matches!(f.state, RequestState::Failed { .. })).count();
+    let mut goodput = Goodput::default();
+    tally_goodput(&mut goodput, &finished);
+    goodput.wall_s = wall_s;
+    let inter: Vec<f64> =
+        finished.iter().filter(|f| f.slo.is_interactive()).map(|f| f.ttft_s).collect();
+    let batch: Vec<f64> =
+        finished.iter().filter(|f| !f.slo.is_interactive()).map(|f| f.ttft_s).collect();
+    let m = router.metrics();
+    let stats = RouterRunStats {
+        policy: label.to_string(),
+        requests: finished.len(),
+        failed,
+        tokens_out: m.tokens_out,
+        wall_s,
+        tok_s: if wall_s > 0.0 { m.tokens_out as f64 / wall_s } else { 0.0 },
+        goodput_tok_s: goodput.goodput_tok_s(),
+        attainment: goodput.attainment(),
+        interactive_ttft: Percentiles::of(&inter),
+        batch_ttft: Percentiles::of(&batch),
+        interactive_requests: inter.len(),
+        steps,
+        preempted,
+        prefix_hits: router.prefix_hits(),
+        affinity_hits: router.decisions().iter().filter(|d| d.affinity > 0).count(),
+    };
+    (stats, finished)
+}
+
+/// The `--replicas` comparison: the SLO-aware cost model vs round-robin
+/// over the identical trace, plus a single-replica reference run that
+/// pins placement-independent streams (any placement of any request
+/// must produce the identical tokens).
+#[derive(Debug, Clone)]
+pub struct RouterComparison {
+    pub replicas: usize,
+    pub slo_aware: RouterRunStats,
+    pub round_robin: RouterRunStats,
+    pub single: RouterRunStats,
+    /// All three runs' per-request token streams bit-for-bit identical
+    /// (the correctness pin; the CI gate hard-fails when false).
+    pub streams_identical: bool,
+    /// round-robin interactive TTFT p95 ÷ SLO-aware p95 (> 1 means the
+    /// cost model shields interactive latency).
+    pub ttft_p95_gain: f64,
+    /// SLO-aware goodput ÷ round-robin goodput.
+    pub goodput_gain: f64,
+}
+
+/// Drive the arrival trace through the router three times — one
+/// replica (the stream reference), `replicas` under the SLO-aware cost
+/// model, and `replicas` under round-robin — and render the
+/// comparison. Every run gets a radix prefix cache (affinity routing
+/// probes it) and no KV eviction policy (mutually exclusive).
+pub fn bench_serve_router(cfg: &ServeBenchConfig) -> (Table, RouterComparison) {
+    let rb = cfg.router.unwrap_or_default();
+    let trace = workload_trace(cfg, &rb);
+    assert!(!trace.is_empty(), "router comparison needs at least one request");
+    let serve = ServeConfig {
+        kv_policy: None,
+        prefix_cache: Some(PrefixCacheConfig { max_pages: rb.cache_pages }),
+        ..cfg.serve
+    };
+    let mut run = |n: usize, policy: RouterPolicy, label: &str| {
+        let mut router =
+            ReplicaRouter::new(serve, n, policy).expect("bench serve config validates");
+        drive_router(&mut router, label, &trace)
+    };
+    let (single, single_fin) = run(1, RouterPolicy::SloAware, "single");
+    let (slo_aware, slo_fin) = run(rb.replicas, RouterPolicy::SloAware, "slo-aware");
+    let (round_robin, rr_fin) = run(rb.replicas, RouterPolicy::RoundRobin, "round-robin");
+    let same = |a: &[FinishedRequest], b: &[FinishedRequest]| {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| x.id == y.id && x.tokens == y.tokens)
+    };
+    let streams_identical = same(&single_fin, &slo_fin) && same(&single_fin, &rr_fin);
+    let ttft_p95_gain = if slo_aware.interactive_ttft.p95 > 0.0 {
+        round_robin.interactive_ttft.p95 / slo_aware.interactive_ttft.p95
+    } else {
+        0.0
+    };
+    let goodput_gain = if round_robin.goodput_tok_s > 0.0 {
+        slo_aware.goodput_tok_s / round_robin.goodput_tok_s
+    } else {
+        0.0
+    };
+    let cmp = RouterComparison {
+        replicas: rb.replicas,
+        slo_aware,
+        round_robin,
+        single,
+        streams_identical,
+        ttft_p95_gain,
+        goodput_gain,
+    };
+
+    let interactive = trace.iter().filter(|(_, r)| r.slo.is_interactive()).count();
+    let mut t = Table::new(
+        &format!(
+            "bench serve --replicas — SLO-aware routing vs round-robin over {} replicas \
+             ({} requests, {} interactive, system prompts {}×{}, prompts {}–{}, engines {})",
+            cmp.replicas,
+            cfg.requests,
+            interactive,
+            rb.system_prompts,
+            rb.system_prompt_len,
+            cfg.prompt_min,
+            cfg.prompt_max,
+            cfg.engines.join(";"),
+        ),
+        &[
+            "policy",
+            "goodput tok/s",
+            "attainment",
+            "int TTFT p50",
+            "int TTFT p95",
+            "batch TTFT p50",
+            "preempted",
+            "prefix hits",
+            "affinity routed",
+            "identical streams",
+        ],
+    );
+    for (label, s) in [
+        ("slo-aware", &cmp.slo_aware),
+        ("round-robin", &cmp.round_robin),
+        ("single (ref)", &cmp.single),
+    ] {
+        t.row(vec![
+            label.into(),
+            format!("{:.1}", s.goodput_tok_s),
+            format!("{:.0}%", s.attainment * 100.0),
+            fmt_time(s.interactive_ttft.p50),
+            fmt_time(s.interactive_ttft.p95),
+            fmt_time(s.batch_ttft.p50),
+            s.preempted.to_string(),
+            s.prefix_hits.to_string(),
+            s.affinity_hits.to_string(),
+            if label == "single (ref)" { "-".into() } else { cmp.streams_identical.to_string() },
+        ]);
+    }
+    let mut row = vec![
+        "gain (slo/rr)".into(),
+        fmt_speedup(cmp.goodput_gain),
+        String::new(),
+        String::new(),
+        fmt_speedup(cmp.ttft_p95_gain),
+    ];
+    row.resize(10, String::new());
+    t.row(row);
+    (t, cmp)
+}
+
+fn router_stats_json(s: &RouterRunStats) -> Json {
+    obj(vec![
+        ("policy", Json::from(s.policy.as_str())),
+        ("requests", Json::from(s.requests)),
+        ("failed", Json::from(s.failed)),
+        ("tokens_out", Json::from(s.tokens_out as usize)),
+        ("wall_s", Json::from(s.wall_s)),
+        ("tokens_per_s", Json::from(s.tok_s)),
+        ("goodput_tok_s", Json::from(s.goodput_tok_s)),
+        ("slo_attainment", Json::from(s.attainment)),
+        ("interactive_requests", Json::from(s.interactive_requests)),
+        ("interactive_ttft", pcts_json(&s.interactive_ttft)),
+        ("batch_ttft", pcts_json(&s.batch_ttft)),
+        ("steps", Json::from(s.steps)),
+        ("preempted", Json::from(s.preempted)),
+        ("prefix_hits", Json::from(s.prefix_hits as usize)),
+        ("affinity_hits", Json::from(s.affinity_hits)),
+    ])
+}
+
+/// The BENCH_serve_router.json document: trace-workload shape plus the
+/// `router` comparison block (stream pin, goodput, interactive TTFT
+/// percentiles per policy — what the CI gate asserts on).
+pub fn router_to_json(cfg: &ServeBenchConfig, cmp: &RouterComparison) -> String {
+    let rb = cfg.router.unwrap_or_default();
+    obj(vec![
+        (
+            "workload",
+            obj(vec![
+                ("requests", Json::from(cfg.requests)),
+                ("prompt_min", Json::from(cfg.prompt_min)),
+                ("prompt_max", Json::from(cfg.prompt_max)),
+                ("max_new_min", Json::from(cfg.max_new_min)),
+                ("max_new_max", Json::from(cfg.max_new_max)),
+                (
+                    "engines",
+                    Json::Arr(cfg.engines.iter().map(|e| Json::from(e.as_str())).collect()),
+                ),
+                ("replicas", Json::from(rb.replicas)),
+                ("interactive_frac", Json::from(rb.interactive_frac)),
+                ("slo_ttft_s", Json::from(rb.ttft_s)),
+                ("slo_tpot_s", Json::from(rb.tpot_s)),
+                ("system_prompts", Json::from(rb.system_prompts)),
+                ("system_prompt_len", Json::from(rb.system_prompt_len)),
+                ("cache_pages", Json::from(rb.cache_pages)),
+                ("burst_len", Json::from(rb.burst_len)),
+                ("burst_rate", Json::from(rb.burst_rate)),
+                ("burst_gap_steps", Json::from(rb.burst_gap_steps)),
+                ("tail_alpha", Json::from(rb.tail_alpha)),
+                ("max_lanes", Json::from(cfg.serve.max_lanes)),
+                ("max_pages", Json::from(cfg.serve.max_pages)),
+                ("page_size", Json::from(cfg.serve.page_size)),
+                ("heads", Json::from(cfg.serve.heads)),
+                ("d", Json::from(cfg.serve.d)),
+                ("seed", Json::from(cfg.seed as usize)),
+            ]),
+        ),
+        (
+            "router",
+            obj(vec![
+                ("replicas", Json::from(cmp.replicas)),
+                ("streams_identical", Json::from(cmp.streams_identical)),
+                ("interactive_ttft_p95_gain", Json::from(cmp.ttft_p95_gain)),
+                ("goodput_gain", Json::from(cmp.goodput_gain)),
+                ("slo_aware", router_stats_json(&cmp.slo_aware)),
+                ("round_robin", router_stats_json(&cmp.round_robin)),
+                ("single_replica", router_stats_json(&cmp.single)),
+            ]),
+        ),
+    ])
+    .to_string()
+}
+
 /// Run the workload through the wave baseline and the continuous
 /// batcher under every configured KV policy, and render the comparison.
 pub fn bench_serve(cfg: &ServeBenchConfig) -> (Table, Vec<RunStats>) {
@@ -1055,6 +1469,7 @@ mod tests {
             prefix: None,
             chunked: None,
             speculate: None,
+            router: None,
             serve: ServeConfig {
                 heads: 2,
                 d: 8,
@@ -1314,6 +1729,106 @@ mod tests {
         // First suffix token is forced distinct, so the shared prefix
         // is exactly the system prompt.
         assert_ne!(a[0].prompt[16], a[1].prompt[16]);
+    }
+
+    /// The trace generator is deterministic, arrival steps are
+    /// nondecreasing, the stratified SLO mix is exact, and every
+    /// prompt opens with one of the shared system prompts.
+    #[test]
+    fn router_trace_workload_shape() {
+        let mut cfg = tiny();
+        cfg.requests = 12;
+        cfg.prompt_min = 8;
+        cfg.prompt_max = 48;
+        let rb = RouterBenchConfig { system_prompt_len: 12, ..RouterBenchConfig::default() };
+        let a = workload_trace(&cfg, &rb);
+        let b = workload_trace(&cfg, &rb);
+        assert_eq!(a.len(), 12);
+        for ((sa, ra), (sb, rbq)) in a.iter().zip(&b) {
+            assert_eq!(sa, sb, "deterministic arrival steps");
+            assert_eq!(ra.prompt, rbq.prompt, "deterministic prompts");
+            assert_eq!(ra.slo.is_interactive(), rbq.slo.is_interactive());
+            assert!(ra.prompt.len() >= rb.system_prompt_len + 2);
+            assert!(ra.prompt.len() <= cfg.prompt_max.max(rb.system_prompt_len + 2));
+        }
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0), "arrivals in order");
+        // interactive_frac = 0.5 stratified: exactly half interactive.
+        let interactive = a.iter().filter(|(_, r)| r.slo.is_interactive()).count();
+        assert_eq!(interactive, 6, "stratified mix is exact, not a coin flip");
+        // Interactive prompts stay short; the heavy tail is batch-only.
+        for (_, r) in &a {
+            if r.slo.is_interactive() {
+                assert!(r.prompt.len() <= (2 * cfg.prompt_min).max(rb.system_prompt_len + 2));
+            }
+        }
+        // Some pair of requests shares a full system prompt (the
+        // affinity routing target).
+        let shared = a.iter().enumerate().any(|(i, (_, x))| {
+            a.iter().skip(i + 1).any(|(_, y)| {
+                x.prompt[..rb.system_prompt_len] == y.prompt[..rb.system_prompt_len]
+            })
+        });
+        assert!(shared, "system prompts must repeat across the trace");
+    }
+
+    /// Acceptance pin for `sfa bench serve --replicas`: streams are
+    /// bit-for-bit identical across single-replica, SLO-aware, and
+    /// round-robin placements (placement moves latency, never
+    /// content), every request terminates, goodput is positive, and
+    /// BENCH_serve_router.json carries the whole `router` block. (The
+    /// interactive-TTFT-p95 win over round-robin is asserted by the CI
+    /// bench at real scale, not here — wall-clock at toy sizes would
+    /// make it flaky.)
+    #[test]
+    fn router_bench_pins_streams_and_reports_goodput() {
+        let mut cfg = tiny();
+        cfg.requests = 10;
+        cfg.prompt_min = 8;
+        cfg.prompt_max = 40;
+        cfg.max_new_min = 2;
+        cfg.max_new_max = 6;
+        cfg.engines = vec!["sfa:k=4".into()];
+        cfg.serve.max_lanes = 2; // queueing pressure so routing matters
+        cfg.router = Some(RouterBenchConfig {
+            replicas: 2,
+            system_prompts: 2,
+            system_prompt_len: 12,
+            ..RouterBenchConfig::default()
+        });
+        let (table, cmp) = bench_serve_router(&cfg);
+        assert_eq!(cmp.replicas, 2);
+        for s in [&cmp.slo_aware, &cmp.round_robin, &cmp.single] {
+            assert_eq!(s.requests, 10, "{}: every request terminates", s.policy);
+            assert_eq!(s.failed, 0, "{}", s.policy);
+            assert!(s.tokens_out > 0 && s.steps > 0, "{}", s.policy);
+            assert!(s.goodput_tok_s > 0.0, "{}: goodput is positive", s.policy);
+            assert!((0.0..=1.0).contains(&s.attainment), "{}", s.policy);
+            assert_eq!(s.interactive_requests, 5, "stratified mix survives the run");
+        }
+        assert!(cmp.streams_identical, "placement must never change tokens");
+        assert_eq!(
+            cmp.slo_aware.tokens_out, cmp.single.tokens_out,
+            "identical trace, identical token count"
+        );
+        let rendered = table.render();
+        assert!(rendered.contains("slo-aware") && rendered.contains("round-robin"), "{rendered}");
+        let j = Json::parse(&router_to_json(&cfg, &cmp)).unwrap();
+        let r = j.get("router").unwrap();
+        assert!(r.get("streams_identical").unwrap().as_bool().unwrap());
+        assert!(r.get("slo_aware").unwrap().get("goodput_tok_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(
+            r.get("round_robin")
+                .unwrap()
+                .get("interactive_ttft")
+                .unwrap()
+                .get("p95_s")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+                >= 0.0
+        );
+        assert_eq!(r.get("single_replica").unwrap().get("requests").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(j.get("workload").unwrap().get("replicas").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]

@@ -65,6 +65,26 @@ impl ServeMetrics {
         self.record_finished(r.ttft_s, r.total_s, r.tokens.len());
     }
 
+    /// Fold another tally into this one — the multi-replica router
+    /// aggregates per-replica metrics this way. Sample vectors
+    /// concatenate and counters add; `wall_s` takes the max (replicas
+    /// step in lockstep under one driver clock, so summing walls would
+    /// double-count time and deflate throughput N-fold).
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.ttft_s.extend_from_slice(&other.ttft_s);
+        self.tpot_s.extend_from_slice(&other.tpot_s);
+        self.token_lat_s.extend_from_slice(&other.token_lat_s);
+        self.total_s.extend_from_slice(&other.total_s);
+        self.tokens_out += other.tokens_out;
+        self.requests += other.requests;
+        self.failed += other.failed;
+        self.wall_s = self.wall_s.max(other.wall_s);
+        self.decode_steps += other.decode_steps;
+        self.decode_tokens += other.decode_tokens;
+        self.spec_proposed += other.spec_proposed;
+        self.spec_accepted += other.spec_accepted;
+    }
+
     /// Record a finished request by its raw quantities (the serve-API
     /// path — no `GenResponse` envelope). TPOT is derived with the same
     /// definition as [`GenResponse::tpot_s`].
@@ -186,6 +206,58 @@ impl ServeMetrics {
     }
 }
 
+/// Tokens-within-SLO accounting — the router's headline number.
+/// Goodput counts only the tokens of requests whose latencies met
+/// their SLO class ([`SloClass::within`](crate::serve::request::SloClass::within)
+/// decides; batch-class requests always qualify), so an overloaded
+/// deployment that streams plenty of tokens *too late* scores low even
+/// though raw throughput looks healthy.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Goodput {
+    /// Tokens of SLO-meeting requests.
+    pub good_tokens: u64,
+    /// All tokens, SLO met or not.
+    pub total_tokens: u64,
+    /// Requests that met their SLO.
+    pub slo_met: u64,
+    /// Requests that missed it.
+    pub slo_missed: u64,
+    /// Driver wall clock, seconds (set once by the harness).
+    pub wall_s: f64,
+}
+
+impl Goodput {
+    /// Record one finished request: its token count and whether its
+    /// measured latencies met its SLO class.
+    pub fn record(&mut self, tokens: usize, within_slo: bool) {
+        self.total_tokens += tokens as u64;
+        if within_slo {
+            self.good_tokens += tokens as u64;
+            self.slo_met += 1;
+        } else {
+            self.slo_missed += 1;
+        }
+    }
+
+    /// Goodput: SLO-meeting tokens per second of wall time.
+    pub fn goodput_tok_s(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.good_tokens as f64 / self.wall_s
+    }
+
+    /// Fraction of requests that met their SLO; 1.0 with no requests
+    /// (an empty deployment violates nothing).
+    pub fn attainment(&self) -> f64 {
+        let n = self.slo_met + self.slo_missed;
+        if n == 0 {
+            return 1.0;
+        }
+        self.slo_met as f64 / n as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +325,43 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("spec accept=75.0%"), "{s}");
         assert!(s.contains("tok/step=1.75"), "{s}");
+    }
+
+    #[test]
+    fn merge_concatenates_samples_and_maxes_wall() {
+        let mut a = ServeMetrics::default();
+        a.record_finished(0.1, 1.0, 10);
+        a.wall_s = 2.0;
+        a.record_decode(1);
+        let mut b = ServeMetrics::default();
+        b.record_finished(0.2, 2.0, 20);
+        b.wall_s = 3.0;
+        b.record_failed();
+        b.record_speculation(4, 2);
+        a.merge(&b);
+        assert_eq!(a.requests, 2);
+        assert_eq!(a.tokens_out, 30);
+        assert_eq!(a.failed, 1);
+        assert_eq!(a.ttft_s, vec![0.1, 0.2]);
+        assert_eq!(a.wall_s, 3.0, "lockstep replicas share one wall clock");
+        assert_eq!((a.spec_proposed, a.spec_accepted), (4, 2));
+        // Throughput uses the merged (max) wall: 30 tokens / 3 s.
+        assert!((a.throughput_tok_s() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn goodput_counts_only_slo_meeting_tokens() {
+        let mut g = Goodput::default();
+        assert_eq!(g.attainment(), 1.0, "empty deployment violates nothing");
+        g.record(10, true);
+        g.record(30, false);
+        g.record(5, true);
+        g.wall_s = 3.0;
+        assert_eq!(g.good_tokens, 15);
+        assert_eq!(g.total_tokens, 45);
+        assert!((g.goodput_tok_s() - 5.0).abs() < 1e-9);
+        assert!((g.attainment() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(Goodput::default().goodput_tok_s(), 0.0);
     }
 
     #[test]

@@ -1,8 +1,14 @@
-//! The wave coordinator — **deprecated as a public serving API** in
-//! favor of [`crate::serve`] (the request-lifecycle scheduler with
-//! continuous batching over `AttentionSession`; see ARCHITECTURE.md
-//! §Serving lifecycle). The wave path remains as a thin shim for
-//! driving the AOT artifact executables:
+//! Cross-replica coordination. The primary content is
+//! [`router::ReplicaRouter`]: an SLO-aware front-end over N
+//! independent `serve::ContinuousBatcher` replicas, routing each
+//! request by prefix affinity + SLO-weighted load and reporting
+//! goodput (tokens/s within SLO) — see ARCHITECTURE.md §8.
+//!
+//! The wave coordinator this module grew from is **deprecated as a
+//! public serving API** in favor of [`crate::serve`] (the
+//! request-lifecycle scheduler with continuous batching over
+//! `AttentionSession`) and remains as a thin shim for driving the AOT
+//! artifact executables:
 //!
 //! * [`request`] — request/response types
 //! * [`batcher`] — admission queue + batch former (size/deadline
@@ -10,10 +16,11 @@
 //! * [`engine`] — generation engine: drives the AOT prefill/decode
 //!   executables for one batch wave (sparse or dense KV caches live
 //!   inside the executable's cache tensors); `run_wave` is deprecated
-//! * [`router`] — multi-worker dispatch: each worker owns a PJRT
-//!   runtime on its own thread; requests flow through the shared queue
-//! * [`metrics`] — TTFT / per-token / p50-p95-p99 latency accounting,
-//!   shared with the serve schedulers and `bench serve`
+//! * [`router`] — [`ReplicaRouter`] (primary), plus the deprecated
+//!   wave `Router` whose workers each own a PJRT runtime thread
+//! * [`metrics`] — TTFT / per-token / p50-p95-p99 latency accounting
+//!   plus [`metrics::Goodput`], shared with the serve schedulers and
+//!   `bench serve`
 
 pub mod batcher;
 pub mod engine;
@@ -23,6 +30,6 @@ pub mod router;
 
 pub use batcher::Batcher;
 pub use engine::Engine;
-pub use metrics::ServeMetrics;
+pub use metrics::{Goodput, Percentiles, ServeMetrics};
 pub use request::{GenRequest, GenResponse};
-pub use router::Router;
+pub use router::{tally_goodput, ReplicaRouter, RouteDecision, Router, RouterPolicy};

@@ -1,19 +1,40 @@
-//! Multi-worker router: a shared admission queue feeding N engine
-//! workers, each with its own PJRT runtime on its own OS thread (the
-//! PJRT handles are !Send, so workers own their runtimes end-to-end —
-//! the same process-per-device shape as a vLLM deployment, collapsed
-//! onto threads for the CPU testbed).
+//! Request routing across serving replicas.
 //!
-//! **Deprecated**: this is the wave-synchronous serving path — a
-//! finished sequence holds its batch slot (and the executable's cache
-//! tensors) until the slowest request in its wave completes, and the
-//! response is one blocking `GenResponse`. The primary serving API is
-//! [`crate::serve`]: a request-lifecycle scheduler with per-token
-//! streaming, typed errors, and true continuous batching over
-//! `AttentionSession`. The router remains for driving the AOT artifact
-//! engines; its submit queue is now bounded, surfacing
-//! [`ServeError::QueueFull`] backpressure like the serve API.
+//! The primary content is [`ReplicaRouter`]: a front-end over N
+//! independent [`ContinuousBatcher`] replicas — each with its own page
+//! pool, prefix cache, and (at session level) its own
+//! `SFA_THREADS`-sized threadpool — that places every request by a
+//! deterministic cost model and reports **goodput** (tokens/s within
+//! SLO) instead of raw throughput:
+//!
+//! * **Prefix affinity.** Each replica is probed with
+//!   [`ContinuousBatcher::prefix_probe`] (a read-only radix-trie walk
+//!   — it never touches a replica's LRU order or stats, so probing is
+//!   free of admission side effects). A replica that already caches a
+//!   long prefix of the prompt skips that much prefill work.
+//! * **Load.** Queued + live requests on a replica delay a new
+//!   arrival; interactive requests ([`SloClass::Interactive`]) weigh
+//!   waiting more heavily than batch requests, which care mostly about
+//!   landing where their prefix is warm.
+//! * **Page pressure** tie-breaks, and ties resolve to the lowest
+//!   replica index — routing is a pure function of (request, replica
+//!   states), so a run's routing trace ([`ReplicaRouter::decisions`])
+//!   is reproducible and the determinism tests can replay it.
+//!
+//! Streams are **bit-for-bit placement-independent**: every replica
+//! runs the same deterministic [`ToyLm`](crate::serve::ToyLm) from the
+//! same `model_seed`, and each request's sampler rng is derived from
+//! `(model_seed, req.seed)` alone, so a request produces the identical
+//! token stream on any replica, under any batch composition, and
+//! across batch-lane preemptions (restart semantics regenerate the
+//! same tokens). Routing therefore only ever moves *latency*, never
+//! *content* — the property the router determinism tests pin.
+//!
+//! The wave-synchronous, PJRT-artifact [`Router`] this file used to be
+//! about remains below as a deprecated shim for driving AOT artifact
+//! engines.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -22,23 +43,290 @@ use anyhow::Result;
 
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::engine::{Engine, Sampling};
+use crate::coordinator::metrics::{Goodput, ServeMetrics};
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::runtime::Runtime;
-use crate::serve::ServeError;
+use crate::serve::{
+    ContinuousBatcher, FinishedRequest, RequestId, RequestState, Scheduler, ServeConfig,
+    ServeConfigError, ServeError, ServeRequest, StepReport,
+};
+
+/// How [`ReplicaRouter`] places requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// The cost model: prefix affinity − SLO-weighted load − page
+    /// pressure (module docs). The default.
+    SloAware,
+    /// Ignore affinity, SLO class, and load: replica `i mod N` for the
+    /// i-th submission. The baseline `sfa bench serve --replicas`
+    /// measures the cost model against.
+    RoundRobin,
+}
+
+/// Queueing-delay charge per in-flight request, in prefix-token
+/// equivalents (one cached prefix token ≙ one token of prefill work
+/// saved). Interactive requests pay more per queue position — they
+/// would rather land on an idle replica than a warm busy one — while
+/// batch requests chase warm caches.
+const LOAD_TOKENS_INTERACTIVE: usize = 128;
+const LOAD_TOKENS_BATCH: usize = 32;
+
+/// One routing decision, in submission order — the trace that makes a
+/// router run replayable (the determinism tests partition requests by
+/// `replica` and re-run each partition on a standalone batcher).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteDecision {
+    /// Router-global request id (what [`ReplicaRouter::take_finished`]
+    /// reports).
+    pub id: RequestId,
+    /// Replica the request was placed on.
+    pub replica: usize,
+    /// Cached-prefix tokens the chosen replica's probe reported.
+    pub affinity: usize,
+    /// Whether the request carried an interactive SLO class.
+    pub interactive: bool,
+}
+
+/// A front-end router over N independent [`ContinuousBatcher`]
+/// replicas (module docs). Synchronous and deterministic: `submit`
+/// routes immediately against current replica states, `step` advances
+/// every replica by one scheduling quantum.
+pub struct ReplicaRouter {
+    replicas: Vec<ContinuousBatcher>,
+    policy: RouterPolicy,
+    next_global: RequestId,
+    rr_next: usize,
+    /// Global id → (replica, replica-local id).
+    fwd: BTreeMap<RequestId, (usize, RequestId)>,
+    /// (replica, replica-local id) → global id.
+    rev: BTreeMap<(usize, RequestId), RequestId>,
+    decisions: Vec<RouteDecision>,
+}
+
+impl ReplicaRouter {
+    /// Build `n` replicas of `cfg` (validated once, through the same
+    /// [`ServeConfig::validate`] the builder uses). Every replica gets
+    /// the full config — its own page pool, prefix cache, and draft
+    /// session; nothing is shared between replicas except the router's
+    /// maps.
+    pub fn new(
+        cfg: ServeConfig,
+        n: usize,
+        policy: RouterPolicy,
+    ) -> Result<ReplicaRouter, ServeConfigError> {
+        if n < 1 {
+            return Err(ServeConfigError("replicas must be >= 1".into()));
+        }
+        cfg.validate()?;
+        Ok(ReplicaRouter {
+            replicas: (0..n).map(|_| ContinuousBatcher::new(cfg)).collect(),
+            policy,
+            next_global: 0,
+            rr_next: 0,
+            fwd: BTreeMap::new(),
+            rev: BTreeMap::new(),
+            decisions: Vec::new(),
+        })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// The routing trace so far, in submission order.
+    pub fn decisions(&self) -> &[RouteDecision] {
+        &self.decisions
+    }
+
+    /// Score every replica for `req` and pick the best. Returns
+    /// `(replica, affinity)`. Pure: reads replica state, mutates
+    /// nothing (the round-robin cursor advances in `submit`).
+    fn route(&self, req: &ServeRequest) -> (usize, usize) {
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                let r = self.rr_next % self.replicas.len();
+                (r, self.replicas[r].prefix_probe(&req.prompt))
+            }
+            RouterPolicy::SloAware => {
+                let load_w = if req.slo.is_interactive() {
+                    LOAD_TOKENS_INTERACTIVE
+                } else {
+                    LOAD_TOKENS_BATCH
+                };
+                let mut best: Option<(i64, usize, usize)> = None; // (score, replica, affinity)
+                for (i, rep) in self.replicas.iter().enumerate() {
+                    let affinity = rep.prefix_probe(&req.prompt);
+                    let inflight = rep.queued() + rep.live();
+                    let heads = rep.config().heads.max(1);
+                    // Tokens-equivalent score: cached prefix saved,
+                    // minus queueing delay, minus a small page-pressure
+                    // tie-break (cached tokens ≈ pages/heads·page_size;
+                    // damped so it never outvotes a real affinity or
+                    // load difference).
+                    let pressure = rep.pages_in_use() / heads;
+                    let score =
+                        affinity as i64 - (inflight * load_w) as i64 - (pressure / 8) as i64;
+                    // Strict > keeps ties at the lowest index.
+                    if best.map_or(true, |(s, _, _)| score > s) {
+                        best = Some((score, i, affinity));
+                    }
+                }
+                let (_, replica, affinity) = best.expect("n >= 1 replicas");
+                (replica, affinity)
+            }
+        }
+    }
+
+    /// Route and submit. The returned id is **router-global**; terminal
+    /// records from [`Self::take_finished`] are remapped to it. A
+    /// submission the chosen replica rejects (queue full, never-fits)
+    /// surfaces the typed error and consumes nothing.
+    pub fn submit(&mut self, req: ServeRequest) -> Result<RequestId, ServeError> {
+        let (replica, affinity) = self.route(&req);
+        let interactive = req.slo.is_interactive();
+        let local = self.replicas[replica].submit(req)?;
+        if self.policy == RouterPolicy::RoundRobin {
+            self.rr_next += 1;
+        }
+        let id = self.next_global;
+        self.next_global += 1;
+        self.fwd.insert(id, (replica, local));
+        self.rev.insert((replica, local), id);
+        self.decisions.push(RouteDecision { id, replica, affinity, interactive });
+        Ok(id)
+    }
+
+    /// Advance every replica by one scheduling quantum; the returned
+    /// report is the field-wise sum across replicas.
+    pub fn step(&mut self) -> StepReport {
+        let mut total = StepReport::default();
+        for rep in &mut self.replicas {
+            let r = rep.step();
+            total.admitted += r.admitted;
+            total.prefill_tokens += r.prefill_tokens;
+            total.decoded_tokens += r.decoded_tokens;
+            total.finished += r.finished;
+            total.failed += r.failed;
+            total.pages_freed += r.pages_freed;
+            total.pages_pruned += r.pages_pruned;
+            total.prefix_hits += r.prefix_hits;
+            total.spec_accepted += r.spec_accepted;
+            total.preempted += r.preempted;
+            total.pages_in_use += r.pages_in_use;
+            total.live += r.live;
+        }
+        total
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.replicas.iter().any(|r| r.has_work())
+    }
+
+    /// Lifecycle state of a global id (delegates to its replica).
+    pub fn state(&self, id: RequestId) -> Option<&RequestState> {
+        let (replica, local) = *self.fwd.get(&id)?;
+        self.replicas[replica].state(local)
+    }
+
+    /// Drain terminal records from every replica, remapped to global
+    /// ids and sorted by them (deterministic drain order regardless of
+    /// which replica finished first).
+    pub fn take_finished(&mut self) -> Vec<FinishedRequest> {
+        let mut out = Vec::new();
+        for (ri, rep) in self.replicas.iter_mut().enumerate() {
+            for mut f in rep.take_finished() {
+                let global = self
+                    .rev
+                    .remove(&(ri, f.id))
+                    .expect("replica-local id was mapped at submit");
+                self.fwd.remove(&global);
+                f.id = global;
+                out.push(f);
+            }
+        }
+        out.sort_by_key(|f| f.id);
+        out
+    }
+
+    /// Step until idle, then drain.
+    pub fn run_to_completion(&mut self) -> Vec<FinishedRequest> {
+        while self.has_work() {
+            self.step();
+        }
+        self.take_finished()
+    }
+
+    /// Field-wise merge of every replica's metrics (wall time is the
+    /// driver's to set — replicas step in lockstep, so per-replica
+    /// walls would double-count).
+    pub fn metrics(&self) -> ServeMetrics {
+        let mut m = ServeMetrics::default();
+        for rep in &self.replicas {
+            m.merge(rep.metrics());
+        }
+        m
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.replicas.iter().map(|r| r.pages_in_use()).sum()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.replicas.iter().map(|r| r.queued()).sum()
+    }
+
+    pub fn live(&self) -> usize {
+        self.replicas.iter().map(|r| r.live()).sum()
+    }
+
+    /// Prefix-cache hit admissions summed across replicas.
+    pub fn prefix_hits(&self) -> u64 {
+        self.replicas.iter().map(|r| r.prefix_stats().hits).sum()
+    }
+}
+
+/// Fold a drained batch of terminal records into a [`Goodput`] tally:
+/// a request's tokens count as *good* iff its SLO class admits its
+/// measured TTFT and derived TPOT (`(total − ttft) / (tokens − 1)`;
+/// single-token requests have no decode phase and count by TTFT
+/// alone). Batch-class tokens always count — their deadline is "ever".
+/// Failed requests (no tokens) tally as an SLO miss with zero tokens.
+pub fn tally_goodput(tally: &mut Goodput, finished: &[FinishedRequest]) {
+    for f in finished {
+        let n = f.tokens.len();
+        let tpot = if n > 1 { (f.total_s - f.ttft_s) / (n - 1) as f64 } else { 0.0 };
+        let within = n > 0 && f.slo.within(f.ttft_s, tpot);
+        tally.record(n, within);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Legacy wave-synchronous artifact router (deprecated shim).
+// ---------------------------------------------------------------------
 
 struct Shared {
     queue: Mutex<(Batcher, bool)>, // (batcher, shutdown)
     cv: Condvar,
 }
 
-/// Router over N worker threads.
+/// **Deprecated** multi-worker router over the wave-synchronous PJRT
+/// artifact engines: a shared admission queue feeding N workers, each
+/// with its own PJRT runtime on its own OS thread (the PJRT handles
+/// are !Send). A finished sequence holds its batch slot until the
+/// slowest request in its wave completes and the response is one
+/// blocking [`GenResponse`]. New code serves through [`ReplicaRouter`]
+/// / [`crate::serve`].
 pub struct Router {
     shared: Arc<Shared>,
     workers: Vec<std::thread::JoinHandle<Result<()>>>,
     next_id: std::sync::atomic::AtomicU64,
 }
 
-/// Configuration for the worker pool.
+/// Configuration for the deprecated wave worker pool.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
     pub artifact_dir: String,
@@ -55,8 +343,8 @@ pub struct RouterConfig {
 
 impl Router {
     #[deprecated(
-        note = "wave-synchronous serving path; use serve::ContinuousBatcher \
-                (the request-lifecycle API) for new code"
+        note = "wave-synchronous artifact path; serve through ReplicaRouter over \
+                serve::ContinuousBatcher replicas for new code"
     )]
     pub fn start(cfg: RouterConfig) -> Router {
         let shared = Arc::new(Shared {

@@ -269,6 +269,18 @@ impl RadixPrefixCache {
         None
     }
 
+    /// Longest cached prefix of `prompt`, in tokens — the cheap
+    /// cross-replica affinity probe (`sfa bench serve --replicas`).
+    /// Unlike [`RadixPrefixCache::peek`] this is a pure trie walk: no
+    /// entry lookup, no `seqs` clone, no cap at `prompt.len() - 1` —
+    /// it answers "how warm is this cache for this prompt", not "which
+    /// entry should admission fork". Read-only (stats and LRU
+    /// untouched), so a router may probe every replica per request
+    /// without perturbing any replica's admission behaviour.
+    pub fn longest_prefix(&self, prompt: &[i32]) -> usize {
+        self.walk(prompt, prompt.len()).1
+    }
+
     /// Record a consumed hit: bump the borrow count (the entry is now
     /// backing a live lane and is exempt from LRU eviction) and touch
     /// the LRU clock.
@@ -544,6 +556,23 @@ mod tests {
         assert!(px.peek(&[9, 9, 9]).is_none());
         let s = px.stats();
         assert_eq!((s.misses, s.inserted), (1, 1));
+    }
+
+    #[test]
+    fn longest_prefix_probe_is_uncapped_and_stat_free() {
+        let mut c = cache();
+        let mut px = RadixPrefixCache::new(HEADS, PS, 1024);
+        let p = prompt(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(px.longest_prefix(&p), 0, "cold cache probes 0");
+        let src = seed(&mut c, &p);
+        assert!(px.insert(&p, &mut c, &src));
+        // Unlike peek, the probe reports the full match — including an
+        // exact repeat (peek caps at len - 1 to leave a suffix token).
+        assert_eq!(px.longest_prefix(&p), p.len());
+        assert_eq!(px.longest_prefix(&[1, 2, 3, 4, 9, 9]), 4);
+        assert_eq!(px.longest_prefix(&[9, 9]), 0);
+        let s = px.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "probing records nothing");
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //! `bench` invocation also writes the measurements it took to
 //! BENCH_attention.json (override with --bench-json PATH), and
 //! `bench serve` writes the continuous-vs-wave scheduling comparison
-//! to BENCH_serve.json (override with --serve-json PATH).
+//! to BENCH_serve.json (override with --serve-json PATH); `bench serve
+//! --replicas N` writes the SLO-aware multi-replica router comparison
+//! to BENCH_serve_router.json.
 
 use anyhow::{bail, Result};
 
@@ -26,7 +28,7 @@ use sfa::coordinator::ServeMetrics;
 use sfa::runtime::{HostTensor, Runtime};
 use sfa::bench::serve_bench::PrefixBenchConfig;
 use sfa::serve::{
-    ContinuousBatcher, PagedKvPolicy, PrefixCacheConfig, Scheduler, ServeConfig,
+    ContinuousBatcher, PagedKvPolicy, PrefixCacheConfig, Scheduler, ServeConfig, SloClass,
     SpeculateConfig, WaveScheduler,
 };
 use sfa::train::corpus::CorpusKind;
@@ -80,6 +82,15 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
               (chunked-prefill interference: one long prompt vs short
               decode lanes per chunk size; decode-lane TTFT p50/p95,
               bit-identical streams — recorded in BENCH_serve.json)
+  sfa bench   serve --replicas N [--slo interactive:ttft_ms=250,tpot_ms=50]
+              [--interactive-frac 0.5] [--system-prompts 4]
+              [--system-prompt-len 64] [--burst-len 8] [--burst-rate 2.0]
+              [--burst-gap 12] [--tail-alpha 1.2] [--prefix-pages 1024]
+              (SLO-aware ReplicaRouter vs round-robin over N replicas on a
+              trace-driven workload — bursty on-off arrivals, heavy-tailed
+              batch prompts, shared system prompts; reports goodput
+              (tokens/s within SLO), interactive TTFT p50/p95, preemptions,
+              bit-identical streams — writes BENCH_serve_router.json)
   sfa analyze entropy|svd|memory|session [--variant V] [--steps N] [--engine SPEC]
 engine SPECs: dense | flash_dense:bq=64,bk=64
               | sfa:k=8,bq=64,bk=64[,skip=on[,thresh=T|,mass=EPS]]
@@ -158,7 +169,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Assemble the serve-stack geometry/policy config from CLI options.
+/// Assemble the serve-stack geometry/policy config from CLI options
+/// through [`ServeConfig::builder`] — construction-time validation
+/// (geometry, budgets, mutual exclusions) lives in one place and
+/// surfaces here as the builder's typed error.
 fn serve_config(args: &Args) -> Result<ServeConfig> {
     let kv_policy = match args.get("policy") {
         Some(s) => PagedKvPolicy::parse(s).map_err(|e| anyhow::anyhow!("--policy: {e}"))?,
@@ -169,12 +183,6 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
     } else {
         None
     };
-    if kv_policy.is_some() && prefix_cache.is_some() {
-        bail!(
-            "--prefix-cache and --policy are mutually exclusive (a policy-pruned lane \
-             holds policy-dependent KV that a shared prefix must not serve)"
-        );
-    }
     let speculate = match args.get("speculate") {
         Some(s) => Some(
             SpeculateConfig::parse(s, args.usize_or("gamma", 4)?)
@@ -182,42 +190,22 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         ),
         None => None,
     };
-    if kv_policy.is_some() && speculate.is_some() {
-        bail!(
-            "--speculate and --policy are mutually exclusive (verify replays exact \
-             cached prefixes that an eviction policy cannot guarantee)"
-        );
-    }
-    let cfg = ServeConfig {
-        heads: args.usize_or("heads", 4)?,
-        d: args.usize_or("d", 32)?,
-        vocab: args.usize_or("vocab", 64)?,
-        page_size: args.usize_or("page-size", 16)?,
-        max_pages: args.usize_or("max-pages", 4096)?,
-        max_lanes: args.usize_or("lanes", 8)?,
-        queue_capacity: args.usize_or("queue-capacity", 4096)?,
-        max_seq: args.usize_or("max-seq", 4096)?,
-        model_seed: args.u64_or("model-seed", 0x5FA)?,
-        kv_policy,
-        prefix_cache,
-        prefill_chunk: args.usize_or("prefill-chunk", 0)?,
-        speculate,
-    };
-    if let Some(px) = &cfg.prefix_cache {
-        if px.max_pages < 1 {
-            bail!("--prefix-pages must be >= 1");
-        }
-    }
-    if cfg.heads < 1 || cfg.d < 1 || cfg.vocab < 2 {
-        bail!("--heads/--d must be >= 1 and --vocab >= 2");
-    }
-    if cfg.page_size < 1 || cfg.max_pages < 1 || cfg.max_lanes < 1 || cfg.queue_capacity < 1 {
-        bail!("--page-size, --max-pages, --lanes, and --queue-capacity must be >= 1");
-    }
-    if cfg.max_seq < 2 {
-        bail!("--max-seq must be >= 2 (one prompt token plus one generated token)");
-    }
-    Ok(cfg)
+    ServeConfig::builder()
+        .heads(args.usize_or("heads", 4)?)
+        .d(args.usize_or("d", 32)?)
+        .vocab(args.usize_or("vocab", 64)?)
+        .page_size(args.usize_or("page-size", 16)?)
+        .max_pages(args.usize_or("max-pages", 4096)?)
+        .max_lanes(args.usize_or("lanes", 8)?)
+        .queue_capacity(args.usize_or("queue-capacity", 4096)?)
+        .max_seq(args.usize_or("max-seq", 4096)?)
+        .model_seed(args.u64_or("model-seed", 0x5FA)?)
+        .kv_policy(kv_policy)
+        .prefix_cache(prefix_cache)
+        .prefill_chunk(args.usize_or("prefill-chunk", 0)?)
+        .speculate(speculate)
+        .build()
+        .map_err(|e| anyhow::anyhow!("serve config: {e}"))
 }
 
 /// Assemble a serve workload from CLI options (shared by `sfa serve`
@@ -242,6 +230,7 @@ fn serve_workload_cfg(
         prefix: None,
         chunked: None,
         speculate: serve.speculate,
+        router: None,
         sampler_seed: args.u64_or("sampler-seed", 0)?,
         temperature: match args.get("temperature") {
             Some(_) => Some(args.f64_or("temperature", 0.0)? as f32),
@@ -346,7 +335,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let policy = serve_bench::policy_label(&cfg.serve.kv_policy);
     let stats = match which.as_str() {
         "continuous" => {
-            let mut s = ContinuousBatcher::new(cfg.serve);
+            let mut s = ContinuousBatcher::try_new(cfg.serve)
+                .map_err(|e| anyhow::anyhow!("serve config: {e}"))?;
             let stats = serve_bench::drive(&mut s, "continuous", &policy, &reqs);
             if cfg.serve.speculate.is_some() {
                 println!(
@@ -358,7 +348,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             stats
         }
         "wave" => {
-            let mut s = WaveScheduler::new(cfg.serve);
+            let mut s = WaveScheduler::try_new(cfg.serve)
+                .map_err(|e| anyhow::anyhow!("serve config: {e}"))?;
             serve_bench::drive(&mut s, "wave", "none", &reqs)
         }
         other => bail!("--scheduler must be continuous or wave, got {other:?}"),
@@ -539,6 +530,84 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 // Sweep default: enough lanes that the page budget,
                 // not the lane cap, is what policy admission relaxes.
                 cfg.serve.max_lanes = 32;
+            }
+            if args.get("replicas").is_some() {
+                // Multi-replica router comparison: the same arrival
+                // trace driven through the SLO-aware ReplicaRouter and
+                // a round-robin baseline (plus a single-replica stream
+                // reference), goodput and interactive TTFT recorded.
+                if args.has("prefix-cache")
+                    || args.has("prefill-chunk")
+                    || args.get("speculate").is_some()
+                {
+                    bail!(
+                        "--replicas, --speculate, --prefix-cache, and --prefill-chunk \
+                         are separate bench comparisons — pick one"
+                    );
+                }
+                if cfg.serve.kv_policy.is_some() {
+                    bail!(
+                        "--replicas and --policy are mutually exclusive (affinity \
+                         routing probes the radix prefix cache, which a policy-pruned \
+                         lane cannot serve)"
+                    );
+                }
+                if args.get("lanes").is_none() {
+                    // Router default: few lanes per replica so queueing
+                    // pressure (what the cost model routes around) is
+                    // actually exercised.
+                    cfg.serve.max_lanes = 4;
+                }
+                let slo = SloClass::parse(&args.str_or("slo", "interactive"))
+                    .map_err(|e| anyhow::anyhow!("--slo: {e}"))?;
+                let (ttft_s, tpot_s) = match slo {
+                    SloClass::Interactive { ttft_s, tpot_s } => (ttft_s, tpot_s),
+                    SloClass::Batch => bail!(
+                        "--slo must be an interactive class (batch has no deadlines \
+                         to route against)"
+                    ),
+                };
+                let interactive_frac = args.f64_or("interactive-frac", 0.5)?;
+                if !(0.0..=1.0).contains(&interactive_frac) {
+                    bail!("--interactive-frac must be in [0, 1]");
+                }
+                let rb = serve_bench::RouterBenchConfig {
+                    replicas: args.usize_or("replicas", 2)?,
+                    interactive_frac,
+                    ttft_s,
+                    tpot_s,
+                    system_prompts: args.usize_or("system-prompts", 4)?,
+                    system_prompt_len: args.usize_or("system-prompt-len", 64)?,
+                    cache_pages: args.usize_or("prefix-pages", 1024)?,
+                    burst_len: args.usize_or("burst-len", 8)?,
+                    burst_rate: args.f64_or("burst-rate", 2.0)?,
+                    burst_gap_steps: args.usize_or("burst-gap", 12)?,
+                    tail_alpha: args.f64_or("tail-alpha", 1.2)?,
+                };
+                if rb.replicas < 1 {
+                    bail!("--replicas must be >= 1");
+                }
+                if rb.cache_pages < 1 {
+                    bail!("--prefix-pages must be >= 1");
+                }
+                if rb.system_prompt_len + 2 > cfg.prompt_max {
+                    bail!(
+                        "--system-prompt-len {} leaves no suffix room under --prompt-max {}",
+                        rb.system_prompt_len,
+                        cfg.prompt_max
+                    );
+                }
+                cfg.serve.prefix_cache = None; // bench_serve_router installs its own
+                cfg.router = Some(rb);
+                let (table, cmp) = serve_bench::bench_serve_router(&cfg);
+                table.print();
+                let path = args.str_or("serve-json", "BENCH_serve_router.json");
+                std::fs::write(&path, serve_bench::router_to_json(&cfg, &cmp))?;
+                println!("\n[bench] wrote multi-replica router comparison to {path}");
+                if !cmp.streams_identical {
+                    bail!("replica placement changed token streams — correctness bug");
+                }
+                return Ok(());
             }
             if args.get("speculate").is_some() {
                 // Speculative-decoding comparison: the same workload run

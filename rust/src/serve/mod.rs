@@ -68,11 +68,11 @@ pub use crate::kv_cache::radix::PrefixCacheStats;
 pub use model::ToyLm;
 pub use request::{
     FinishReason, FinishedRequest, RequestId, RequestState, ServeError, ServeEvent,
-    ServeRequest, ServeSampling,
+    ServeRequest, ServeSampling, SloClass,
 };
 pub use scheduler::{
     pages_needed, pages_reserved, pages_reserved_shared, ContinuousBatcher, PrefixCacheConfig,
-    Scheduler, ServeConfig, StepReport,
+    Scheduler, ServeConfig, ServeConfigBuilder, ServeConfigError, StepReport,
 };
 pub use speculate::SpeculateConfig;
 pub use wave::WaveScheduler;
@@ -1020,5 +1020,161 @@ mod tests {
             s.state(id).is_none(),
             "take_finished prunes terminal lifecycle entries (bounded memory)"
         );
+    }
+
+    /// Router determinism pin: routing is a pure function of (request,
+    /// replica states), so two identical runs produce the identical
+    /// routing trace — and placement never changes content: replaying
+    /// each replica's partition of the trace on a standalone batcher
+    /// reproduces the router's token streams bit-for-bit.
+    #[test]
+    fn router_trace_is_deterministic_and_partition_replayable() {
+        use crate::coordinator::router::{ReplicaRouter, RouterPolicy};
+        let cfg = tiny_cfg();
+        let reqs: Vec<ServeRequest> = (0..8)
+            .map(|i| {
+                let mut r = ServeRequest::new(prompt(40 + i, 6 + 3 * i as usize, 32))
+                    .max_new(3 + (i as usize % 4))
+                    .engine("sfa:k=4")
+                    .seed(i);
+                if i % 2 == 0 {
+                    r = r.slo(SloClass::Interactive { ttft_s: 0.25, tpot_s: 0.05 });
+                }
+                r
+            })
+            .collect();
+        let mut run = || {
+            let mut router = ReplicaRouter::new(cfg, 2, RouterPolicy::SloAware).unwrap();
+            for r in &reqs {
+                router.submit(r.clone()).unwrap();
+            }
+            let fin = router.run_to_completion();
+            (router.decisions().to_vec(), fin)
+        };
+        let (da, fa) = run();
+        let (db, fb) = run();
+        assert_eq!(da, db, "identical states must yield an identical routing trace");
+        assert_eq!(fa.len(), 8);
+        for (x, y) in fa.iter().zip(&fb) {
+            assert_eq!((x.id, &x.tokens), (y.id, &y.tokens));
+        }
+        assert!(
+            da.iter().any(|d| d.replica != da[0].replica),
+            "load spreading must use both replicas"
+        );
+        // Replay: global ids are assigned in submission order, so
+        // decision i refers to reqs[i]; each replica's partition run
+        // alone must regenerate the router's streams exactly.
+        for replica in 0..2 {
+            let part: Vec<_> = da.iter().filter(|d| d.replica == replica).collect();
+            let mut solo = ContinuousBatcher::new(cfg);
+            let locals: Vec<RequestId> = part
+                .iter()
+                .map(|d| solo.submit(reqs[d.id as usize].clone()).unwrap())
+                .collect();
+            let fin = solo.run_to_completion();
+            for (d, &lid) in part.iter().zip(&locals) {
+                let routed = fa.iter().find(|f| f.id == d.id).unwrap();
+                let alone = fin.iter().find(|f| f.id == lid).unwrap();
+                assert_eq!(
+                    alone.tokens, routed.tokens,
+                    "placement moved latency, not content (replica {replica})"
+                );
+            }
+        }
+    }
+
+    /// Preemption pin: under the global lane cap an interactive arrival
+    /// preempts the newest batch lane (observable as `StepReport::
+    /// preempted`), everything still finishes, and the preempted
+    /// request's restart regenerates its exact solo token stream.
+    #[test]
+    fn preempted_batch_lane_streams_are_bit_for_bit_identical() {
+        let spec = "sfa:k=4";
+        let cfg = ServeConfig { max_lanes: 2, ..tiny_cfg() };
+        let batch: Vec<Vec<i32>> = (0..2).map(|i| prompt(60 + i, 10, 32)).collect();
+        let inter = prompt(70, 6, 32);
+
+        let mut s = ContinuousBatcher::new(cfg);
+        let b0 = s
+            .submit(ServeRequest::new(batch[0].clone()).max_new(16).engine(spec))
+            .unwrap();
+        let b1 = s
+            .submit(ServeRequest::new(batch[1].clone()).max_new(16).engine(spec))
+            .unwrap();
+        s.step();
+        assert_eq!(s.live(), 2, "both batch lanes occupy the cap");
+        let it = s
+            .submit(
+                ServeRequest::new(inter.clone())
+                    .max_new(4)
+                    .engine(spec)
+                    .slo(SloClass::Interactive { ttft_s: 0.25, tpot_s: 0.05 }),
+            )
+            .unwrap();
+        let mut preempted = 0;
+        while s.has_work() {
+            preempted += s.step().preempted;
+        }
+        assert!(preempted >= 1, "interactive pressure must preempt a batch lane");
+        let fin = s.take_finished();
+        assert_eq!(fin.len(), 3);
+        for (id, p, m) in [(b0, &batch[0], 16), (b1, &batch[1], 16), (it, &inter, 4)] {
+            let f = fin.iter().find(|f| f.id == id).unwrap();
+            assert!(matches!(f.state, RequestState::Finished { .. }), "{:?}", f.state);
+            assert_eq!(
+                f.tokens,
+                solo_tokens(p, m, spec),
+                "preemption restart must not change the token stream"
+            );
+        }
+    }
+
+    /// Affinity pin: after one request warms a replica's radix cache,
+    /// the SLO-aware router sends shared-prefix followers to that
+    /// replica (positive `affinity` in the routing trace, prefix hits
+    /// at admission), while an unrelated prompt — zero affinity
+    /// everywhere — routes by load to the idle replica.
+    #[test]
+    fn router_routes_shared_prefixes_to_the_warm_replica() {
+        use crate::coordinator::router::{ReplicaRouter, RouterPolicy};
+        let cfg = ServeConfig {
+            prefix_cache: Some(PrefixCacheConfig { max_pages: 128 }),
+            ..tiny_cfg()
+        };
+        let sys = prompt(90, 80, 32); // long shared system prompt
+        let mut router = ReplicaRouter::new(cfg, 2, RouterPolicy::SloAware).unwrap();
+
+        // Warm: the first submission ties at zero everywhere and lands
+        // on replica 0; finishing records its prompt path there.
+        let mut warm = sys.clone();
+        warm.extend([1, 2]);
+        router.submit(ServeRequest::new(warm).max_new(2).engine("sfa:k=4")).unwrap();
+        router.run_to_completion();
+        assert_eq!(router.decisions()[0].replica, 0);
+        assert_eq!(router.prefix_hits(), 0, "a cold cache has nothing to hit");
+
+        // Followers share the system prompt; the unrelated prompt
+        // shares nothing and should flee replica 0's queue depth.
+        for i in 0..3 {
+            let mut p = sys.clone();
+            p.extend([10 + i, 3]);
+            router.submit(ServeRequest::new(p).max_new(2).engine("sfa:k=4")).unwrap();
+        }
+        let mut other = prompt(99, 20, 32);
+        other[0] = (sys[0] + 1) % 32; // guaranteed divergence at token 0
+        router.submit(ServeRequest::new(other).max_new(2).engine("sfa:k=4")).unwrap();
+        router.run_to_completion();
+
+        let d = router.decisions();
+        for dec in &d[1..4] {
+            assert_eq!(dec.replica, 0, "shared prefix must chase the warm cache");
+            let aff = dec.affinity;
+            assert!(aff >= 40, "probe must see the cached system prompt (got {aff})");
+        }
+        assert_eq!(d[4].affinity, 0, "unrelated prompt has no cached prefix");
+        assert_eq!(d[4].replica, 1, "no affinity → load routes to the idle replica");
+        let hits = router.prefix_hits();
+        assert!(hits >= 3, "each follower admission borrows the warm prefix (got {hits})");
     }
 }

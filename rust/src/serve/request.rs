@@ -86,6 +86,94 @@ pub enum ServeSampling {
     Temperature(f32),
 }
 
+/// Per-request service-level objective class — the router's admission
+/// priority and the goodput accounting unit (`bench serve --replicas`).
+///
+/// Spec grammar (shared [`crate::util::spec`] tokenizer):
+/// `interactive[:ttft_ms=250,tpot_ms=50]` | `batch`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SloClass {
+    /// Latency-sensitive traffic with deadlines: time-to-first-token
+    /// and mean per-output-token latency, both in seconds. Tokens from
+    /// a request that misses either deadline don't count as goodput.
+    Interactive { ttft_s: f64, tpot_s: f64 },
+    /// Throughput traffic: no deadline, every token is goodput, and
+    /// the scheduler may preempt its lanes under interactive pressure.
+    Batch,
+}
+
+impl Default for SloClass {
+    fn default() -> SloClass {
+        SloClass::Batch
+    }
+}
+
+impl SloClass {
+    pub fn is_interactive(&self) -> bool {
+        matches!(self, SloClass::Interactive { .. })
+    }
+
+    /// Canonical spec string (`SloClass::parse` round-trips it).
+    pub fn label(&self) -> String {
+        match *self {
+            SloClass::Batch => "batch".into(),
+            SloClass::Interactive { ttft_s, tpot_s } => format!(
+                "interactive:ttft_ms={},tpot_ms={}",
+                ttft_s * 1e3,
+                tpot_s * 1e3
+            ),
+        }
+    }
+
+    /// Parse `interactive[:ttft_ms=250,tpot_ms=50]` | `batch` through
+    /// the shared spec grammar (defaults: 250 ms TTFT, 50 ms TPOT).
+    pub fn parse(spec: &str) -> Result<SloClass, String> {
+        let raw = crate::util::spec::tokenize(spec)?;
+        let family = raw.family;
+        if family == "batch" {
+            if let Some(&(k, v)) = raw.pairs.first() {
+                return Err(format!("batch takes no parameters, got {:?}", format!("{k}={v}")));
+            }
+            return Ok(SloClass::Batch);
+        }
+        if family != "interactive" {
+            return Err(format!(
+                "unknown SLO class {family:?} — known: interactive, batch"
+            ));
+        }
+        let mut ttft_ms = 250.0f64;
+        let mut tpot_ms = 50.0f64;
+        for &(k, v) in &raw.pairs {
+            let ms: f64 = match v.parse() {
+                Ok(x) if x > 0.0 && f64::is_finite(x) => x,
+                _ => {
+                    return Err(format!(
+                        "{family}: key {k:?} expects a positive number of ms, got {v:?}"
+                    ))
+                }
+            };
+            match k {
+                "ttft_ms" => ttft_ms = ms,
+                "tpot_ms" => tpot_ms = ms,
+                other => return Err(format!("{family}: unknown key {other:?}")),
+            }
+        }
+        Ok(SloClass::Interactive { ttft_s: ttft_ms / 1e3, tpot_s: tpot_ms / 1e3 })
+    }
+
+    /// Did a request with this SLO meet its deadlines? `ttft_s` is its
+    /// observed time-to-first-token, `tpot_s` its mean per-output-token
+    /// latency after the first. Batch always passes.
+    pub fn within(&self, ttft_s: f64, tpot_s: f64) -> bool {
+        match *self {
+            SloClass::Batch => true,
+            SloClass::Interactive { ttft_s: ttft_max, tpot_s: tpot_max } => {
+                ttft_s <= ttft_max && tpot_s <= tpot_max
+            }
+        }
+    }
+}
+
 /// Why a request finished.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FinishReason {
@@ -149,6 +237,10 @@ pub struct ServeRequest {
     pub seed: u64,
     /// Generation stops when any of these tokens is emitted.
     pub stop_tokens: Vec<i32>,
+    /// Service-level objective class (default [`SloClass::Batch`]):
+    /// interactive requests get admission priority and may preempt
+    /// batch lanes; their tokens only count as goodput within deadline.
+    pub slo: SloClass,
     /// Streaming event sink; `None` means fire-and-collect (results via
     /// `Scheduler::take_finished`).
     pub events: Option<Sender<ServeEvent>>,
@@ -163,6 +255,7 @@ impl ServeRequest {
             sampling: ServeSampling::Greedy,
             seed: 0,
             stop_tokens: Vec::new(),
+            slo: SloClass::Batch,
             events: None,
         }
     }
@@ -192,6 +285,11 @@ impl ServeRequest {
         self
     }
 
+    pub fn slo(mut self, slo: SloClass) -> ServeRequest {
+        self.slo = slo;
+        self
+    }
+
     pub fn events(mut self, tx: Sender<ServeEvent>) -> ServeRequest {
         self.events = Some(tx);
         self
@@ -216,6 +314,9 @@ pub struct FinishedRequest {
     /// or when `ServeConfig::prefix_cache` is off) — the per-request
     /// hit observability `bench serve --prefix-cache` aggregates.
     pub prefix_shared: usize,
+    /// SLO class the request ran under — goodput accounting pairs it
+    /// with `ttft_s`/`total_s`/`tokens` after the fact.
+    pub slo: SloClass,
 }
 
 #[cfg(test)]
@@ -244,6 +345,40 @@ mod tests {
         assert!(!RequestState::Decoding.is_terminal());
         assert!(RequestState::Finished { reason: FinishReason::MaxTokens }.is_terminal());
         assert!(RequestState::Failed { error: ServeError::EmptyPrompt }.is_terminal());
+    }
+
+    #[test]
+    fn slo_class_parse_label_roundtrip_and_deadlines() {
+        assert_eq!(SloClass::parse("batch").unwrap(), SloClass::Batch);
+        assert_eq!(SloClass::default(), SloClass::Batch);
+        let slo = SloClass::parse("interactive").unwrap();
+        assert_eq!(slo, SloClass::Interactive { ttft_s: 0.25, tpot_s: 0.05 });
+        let slo = SloClass::parse("interactive:ttft_ms=100,tpot_ms=20").unwrap();
+        assert_eq!(slo, SloClass::Interactive { ttft_s: 0.1, tpot_s: 0.02 });
+        assert!(slo.is_interactive());
+        assert_eq!(SloClass::parse(&slo.label()).unwrap(), slo, "label round-trips");
+        assert_eq!(SloClass::parse(&SloClass::Batch.label()).unwrap(), SloClass::Batch);
+
+        // Deadlines: batch always passes; interactive needs both.
+        assert!(SloClass::Batch.within(1e9, 1e9));
+        assert!(slo.within(0.1, 0.02));
+        assert!(!slo.within(0.11, 0.01), "TTFT over deadline");
+        assert!(!slo.within(0.01, 0.03), "TPOT over deadline");
+
+        // Shared-grammar errors.
+        for (s, needle) in [
+            ("vip", "unknown SLO class"),
+            ("interactive:ttft", "key=value"),
+            ("interactive:ttft_ms=0", "positive number"),
+            ("interactive:ttft_ms=nan", "positive number"),
+            ("interactive:window=4", "unknown key"),
+            ("interactive:ttft_ms=1,ttft_ms=2", "duplicate"),
+            ("batch:ttft_ms=5", "no parameters"),
+            ("", "empty spec"),
+        ] {
+            let e = SloClass::parse(s).unwrap_err();
+            assert!(e.contains(needle), "{s:?} -> {e}");
+        }
     }
 
     #[test]

@@ -10,7 +10,11 @@
 //!    live wave can never run out of pages mid-decode. Admission is
 //!    FIFO with head-of-line blocking — a request that doesn't fit
 //!    *yet* waits (pages drain as sequences finish); a request that
-//!    could *never* fit fails at submission.
+//!    could *never* fit fails at submission. Requests carrying an
+//!    interactive [`SloClass`](crate::serve::request::SloClass) are
+//!    admitted before batch-class requests and may preempt batch
+//!    lanes under pressure (restart semantics — streams are
+//!    bit-for-bit preserved).
 //! 2. **Prefills** each admitted request at its own boundary (batch-1,
 //!    its own prompt length — no padding to a wave-wide length) and
 //!    samples its first token: time-to-first-token does not wait for
@@ -154,32 +158,88 @@ impl Default for ServeConfig {
     }
 }
 
+/// Why a [`ServeConfig`] failed construction-time validation — the
+/// typed error [`ServeConfig::validate`] and [`ServeConfigBuilder::build`]
+/// return, so CLI layers report the violated constraint instead of
+/// panicking deep inside a scheduler constructor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeConfigError(pub String);
+
+impl std::fmt::Display for ServeConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ServeConfigError {}
+
 impl ServeConfig {
-    /// Construction-time sanity: a zero in any of these knobs makes a
-    /// scheduler that can never admit work (e.g. `max_lanes == 0`
-    /// turns `step()` into a busy-wait that never drains the queue).
-    pub(crate) fn assert_valid(&self) {
-        assert!(self.heads >= 1 && self.d >= 1 && self.vocab >= 2, "degenerate model geometry");
-        assert!(self.page_size >= 1 && self.max_pages >= 1, "degenerate page budget");
-        assert!(self.max_lanes >= 1, "max_lanes must be >= 1 (a 0-lane scheduler never admits)");
-        assert!(self.queue_capacity >= 1, "queue_capacity must be >= 1");
-        assert!(self.max_seq >= 2, "max_seq must fit a prompt token plus a generated token");
-        assert!(
-            self.kv_policy.is_none() || self.prefix_cache.is_none(),
-            "prefix_cache and kv_policy are mutually exclusive: a policy-pruned lane holds \
-             policy-dependent KV that a shared prefix must not serve"
-        );
-        if let Some(px) = &self.prefix_cache {
-            assert!(px.max_pages >= 1, "prefix_cache.max_pages must be >= 1");
+    /// Construction-time sanity, as a typed result: a zero in any of
+    /// these knobs makes a scheduler that can never admit work (e.g.
+    /// `max_lanes == 0` turns `step()` into a busy-wait that never
+    /// drains the queue), and some feature pairs are semantically
+    /// incompatible. This is the single source of truth — the builder,
+    /// the panicking constructors, and CLI validation all delegate here.
+    pub fn validate(&self) -> Result<(), ServeConfigError> {
+        fn fail(msg: &str) -> Result<(), ServeConfigError> {
+            Err(ServeConfigError(msg.to_string()))
         }
-        if let Some(sp) = &self.speculate {
-            assert!(sp.gamma >= 1, "speculate.gamma must be >= 1");
-            assert!(
-                self.kv_policy.is_none(),
-                "speculate and kv_policy are mutually exclusive: a policy observes one \
-                 position per decode step, which a multi-position verify cannot reproduce"
+        if self.heads < 1 || self.d < 1 || self.vocab < 2 {
+            return fail("degenerate model geometry");
+        }
+        if self.page_size < 1 || self.max_pages < 1 {
+            return fail("degenerate page budget");
+        }
+        if self.max_lanes < 1 {
+            return fail("max_lanes must be >= 1 (a 0-lane scheduler never admits)");
+        }
+        if self.queue_capacity < 1 {
+            return fail("queue_capacity must be >= 1");
+        }
+        if self.max_seq < 2 {
+            return fail("max_seq must fit a prompt token plus a generated token");
+        }
+        if self.kv_policy.is_some() && self.prefix_cache.is_some() {
+            return fail(
+                "prefix_cache and kv_policy are mutually exclusive: a policy-pruned lane holds \
+                 policy-dependent KV that a shared prefix must not serve",
             );
         }
+        if let Some(px) = &self.prefix_cache {
+            if px.max_pages < 1 {
+                return fail("prefix_cache.max_pages must be >= 1");
+            }
+        }
+        if let Some(sp) = &self.speculate {
+            if sp.gamma < 1 {
+                return fail("speculate.gamma must be >= 1");
+            }
+            if self.kv_policy.is_some() {
+                return fail(
+                    "speculate and kv_policy are mutually exclusive: a policy observes one \
+                     position per decode step, which a multi-position verify cannot reproduce",
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Panicking shim over [`Self::validate`] for the internal
+    /// constructors (tests construct configs by struct literal and want
+    /// a loud failure, not error plumbing).
+    pub(crate) fn assert_valid(&self) {
+        if let Err(e) = self.validate() {
+            panic!("{e}");
+        }
+    }
+
+    /// A checked builder over [`ServeConfig::default`]:
+    /// [`ServeConfigBuilder::build`] runs [`Self::validate`] and
+    /// returns the typed error, so misconfiguration surfaces at
+    /// construction — before a scheduler exists — instead of as a panic
+    /// inside `SchedulerCore::new`.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::default() }
     }
 
     /// Drop every continuous-batcher-only feature in one place — the
@@ -193,6 +253,77 @@ impl ServeConfig {
         self.prefill_chunk = 0;
         self.speculate = None;
         self
+    }
+}
+
+/// Checked construction for [`ServeConfig`] (see
+/// [`ServeConfig::builder`]). Setters mirror the config fields
+/// one-to-one; [`Self::build`] validates and returns the typed
+/// [`ServeConfigError`] instead of panicking.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    pub fn heads(mut self, heads: usize) -> Self {
+        self.cfg.heads = heads;
+        self
+    }
+    pub fn d(mut self, d: usize) -> Self {
+        self.cfg.d = d;
+        self
+    }
+    pub fn vocab(mut self, vocab: usize) -> Self {
+        self.cfg.vocab = vocab;
+        self
+    }
+    pub fn page_size(mut self, page_size: usize) -> Self {
+        self.cfg.page_size = page_size;
+        self
+    }
+    pub fn max_pages(mut self, max_pages: usize) -> Self {
+        self.cfg.max_pages = max_pages;
+        self
+    }
+    pub fn max_lanes(mut self, max_lanes: usize) -> Self {
+        self.cfg.max_lanes = max_lanes;
+        self
+    }
+    pub fn queue_capacity(mut self, queue_capacity: usize) -> Self {
+        self.cfg.queue_capacity = queue_capacity;
+        self
+    }
+    pub fn max_seq(mut self, max_seq: usize) -> Self {
+        self.cfg.max_seq = max_seq;
+        self
+    }
+    pub fn model_seed(mut self, model_seed: u64) -> Self {
+        self.cfg.model_seed = model_seed;
+        self
+    }
+    pub fn kv_policy(mut self, kv_policy: Option<PagedKvPolicy>) -> Self {
+        self.cfg.kv_policy = kv_policy;
+        self
+    }
+    pub fn prefix_cache(mut self, prefix_cache: Option<PrefixCacheConfig>) -> Self {
+        self.cfg.prefix_cache = prefix_cache;
+        self
+    }
+    pub fn prefill_chunk(mut self, prefill_chunk: usize) -> Self {
+        self.cfg.prefill_chunk = prefill_chunk;
+        self
+    }
+    pub fn speculate(mut self, speculate: Option<SpeculateConfig>) -> Self {
+        self.cfg.speculate = speculate;
+        self
+    }
+
+    /// Validate and hand back the config, or the first violated
+    /// constraint as a [`ServeConfigError`].
+    pub fn build(self) -> Result<ServeConfig, ServeConfigError> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
     }
 }
 
@@ -268,6 +399,11 @@ pub struct StepReport {
     /// a decode token the target engine got "for free" — also counted
     /// in `decoded_tokens`.
     pub spec_accepted: usize,
+    /// Batch-class lanes preempted this step to admit interactive
+    /// requests under lane/page pressure (restart semantics: the
+    /// preempted request re-queues at its original position and
+    /// regenerates the identical stream — zero unless SLO classes mix).
+    pub preempted: usize,
     /// KV pages in use across all groups after the step.
     pub pages_in_use: usize,
     /// Live sequences after the step.
@@ -664,6 +800,7 @@ pub(crate) fn finished_record(
         ttft_s: seq.ttft_s,
         total_s: seq.submitted.elapsed().as_secs_f64(),
         prefix_shared: seq.prefix.map(|(_, shared)| shared).unwrap_or(0),
+        slo: seq.req.slo,
     }
 }
 
@@ -744,6 +881,7 @@ impl SchedulerCore {
             ttft_s: 0.0,
             total_s: 0.0,
             prefix_shared: 0,
+            slo: req.slo,
         });
         self.metrics.record_failed();
     }
@@ -762,6 +900,14 @@ impl ContinuousBatcher {
         ContinuousBatcher { core: SchedulerCore::new(cfg) }
     }
 
+    /// Checked constructor: validates first and hands back the typed
+    /// [`ServeConfigError`] instead of panicking — the CLI-facing path
+    /// (pair with [`ServeConfig::builder`]).
+    pub fn try_new(cfg: ServeConfig) -> Result<ContinuousBatcher, ServeConfigError> {
+        cfg.validate()?;
+        Ok(ContinuousBatcher::new(cfg))
+    }
+
     pub fn config(&self) -> &ServeConfig {
         &self.core.cfg
     }
@@ -776,16 +922,111 @@ impl ContinuousBatcher {
         self.core.queue.len()
     }
 
+    /// Longest cached prompt prefix (in tokens) across this batcher's
+    /// engine groups — the router's cross-replica affinity probe.
+    /// Read-only: walks the radix tries without touching LRU order,
+    /// borrows, or hit/miss stats, so probing N replicas before every
+    /// routing decision never perturbs any replica's admission
+    /// behaviour or blocks its step loop. Zero without a prefix cache
+    /// (or before the first admission creates the engine group).
+    pub fn prefix_probe(&self, prompt: &[i32]) -> usize {
+        self.core
+            .groups
+            .iter()
+            .filter_map(|g| g.prefix.as_ref().map(|px| px.longest_prefix(prompt)))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Preempt the newest-admitted batch-class sequence — optionally
+    /// restricted to one engine group, for page pressure (page budgets
+    /// are per group; the lane cap is global) — to make room for an
+    /// interactive admission. Returns `false` when no batch lane is
+    /// live (interactive lanes are never preempted).
+    ///
+    /// Restart semantics: the victim's lane, draft lane, reservation,
+    /// and prefix borrow are released (nothing is checkpointed), its
+    /// generated tokens are discarded, and the request re-queues at its
+    /// class-front position with its **original** submission time. The
+    /// per-request sampler rng is re-derived from `(model_seed,
+    /// req.seed)` at re-admission and the [`ToyLm`] is batch-composition
+    /// independent, so the restarted lane regenerates the identical
+    /// token stream — consumers observing the event channel see `State:
+    /// Queued` followed by a replay of the same `Token { index: 0.. }`
+    /// events, and the terminal [`FinishedRequest::tokens`] is
+    /// bit-for-bit what a never-preempted run produces.
+    fn preempt_batch_lane(&mut self, group: Option<usize>, report: &mut StepReport) -> bool {
+        let mut victim: Option<(usize, usize, RequestId)> = None;
+        for (gi, g) in self.core.groups.iter().enumerate() {
+            if group.map_or(false, |want| want != gi) {
+                continue;
+            }
+            for (ai, seq) in g.active.iter().enumerate() {
+                if seq.req.slo.is_interactive() {
+                    continue;
+                }
+                if victim.map_or(true, |(_, _, vid)| seq.id > vid) {
+                    victim = Some((gi, ai, seq.id));
+                }
+            }
+        }
+        let Some((gi, ai, _)) = victim else {
+            return false;
+        };
+        let seq = self.core.groups[gi].active.swap_remove(ai);
+        let g = &mut self.core.groups[gi];
+        if let (Some(dl), Some(draft)) = (seq.draft_lane, g.draft.as_mut()) {
+            let _ = draft.release_lane(dl);
+        }
+        let freed = g.session.release_lane(seq.lane).unwrap_or(0);
+        g.return_reservation(&seq);
+        report.pages_freed += freed;
+        report.preempted += 1;
+        set_state(&mut self.core.states, &seq.req, seq.id, RequestState::Queued);
+        // Re-queue at the batch-class front (behind every queued
+        // interactive request, ahead of batch requests that were never
+        // admitted — the victim is older than all of them).
+        let at = self
+            .core
+            .queue
+            .iter()
+            .position(|q| !q.req.slo.is_interactive())
+            .unwrap_or(self.core.queue.len());
+        self.core
+            .queue
+            .insert(at, QueuedReq { id: seq.id, req: seq.req, submitted: seq.submitted });
+        true
+    }
+
     /// Admission pass: fill free lanes from the queue under the page
     /// budget. FIFO with head-of-line blocking on a not-yet-fitting
-    /// request. With a prefix cache, the longest cached prompt prefix
-    /// is looked up first: a hit reserves only the un-shared suffix
-    /// ([`pages_reserved_shared`]), and admission pressure evicts LRU
-    /// prefix entries (never the entry about to be used) before giving
-    /// up and waiting.
+    /// request — within an SLO class: interactive requests are
+    /// considered before batch requests (stable within each class, so
+    /// a single-class queue is plain FIFO and this is exactly the
+    /// legacy policy), and an interactive request blocked on lanes or
+    /// pages may preempt batch lanes ([`Self::preempt_batch_lane`])
+    /// before giving up and waiting. With a prefix cache, the longest
+    /// cached prompt prefix is looked up first: a hit reserves only
+    /// the un-shared suffix ([`pages_reserved_shared`]), and admission
+    /// pressure evicts LRU prefix entries (never the entry about to be
+    /// used) before giving up and waiting.
     fn admit(&mut self, report: &mut StepReport) {
+        if self.core.queue.iter().any(|q| q.req.slo.is_interactive())
+            && self.core.queue.iter().any(|q| !q.req.slo.is_interactive())
+        {
+            let (hi, lo): (Vec<QueuedReq>, Vec<QueuedReq>) =
+                self.core.queue.drain(..).partition(|q| q.req.slo.is_interactive());
+            self.core.queue.extend(hi);
+            self.core.queue.extend(lo);
+        }
         while let Some(front) = self.core.queue.front() {
+            let interactive = front.req.slo.is_interactive();
             if self.live() >= self.core.cfg.max_lanes {
+                // The lane cap is global — interactive pressure may
+                // preempt the newest batch lane of any group.
+                if interactive && self.preempt_batch_lane(None, report) {
+                    continue;
+                }
                 break;
             }
             let gi = match group_index(&mut self.core.groups, &front.req.engine, &self.core.cfg)
@@ -829,6 +1070,11 @@ impl ContinuousBatcher {
                 }
             };
             if !fits {
+                // Page budgets are per group — only preempting one of
+                // *this* group's batch lanes can free the pages.
+                if interactive && self.preempt_batch_lane(Some(gi), report) {
+                    continue;
+                }
                 break; // wait for pages to drain
             }
             if self.core.cfg.kv_policy.is_some() {
@@ -841,6 +1087,9 @@ impl ContinuousBatcher {
                 let transient =
                     pages_needed(plen, 0, self.core.cfg.heads, self.core.cfg.page_size);
                 if transient > self.core.groups[gi].session.pages_free() {
+                    if interactive && self.preempt_batch_lane(Some(gi), report) {
+                        continue;
+                    }
                     break; // wait for pages to drain
                 }
             }
@@ -1502,6 +1751,23 @@ mod tests {
             prefill_chunk: 0,
             speculate: None,
         }
+    }
+
+    #[test]
+    fn builder_validates_and_mirrors_defaults() {
+        let built = ServeConfig::builder().build().expect("defaults are valid");
+        let d = ServeConfig::default();
+        assert_eq!(format!("{built:?}"), format!("{d:?}"), "builder defaults == Default");
+        let err = ServeConfig::builder().max_lanes(0).build().unwrap_err();
+        assert!(err.to_string().contains("max_lanes"), "{err}");
+        let err = ServeConfig::builder()
+            .kv_policy(Some(PagedKvPolicy::H2o { budget: 64, recent: 8 }))
+            .prefix_cache(Some(PrefixCacheConfig::default()))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
+        // try_new surfaces the same typed error without panicking.
+        assert!(ContinuousBatcher::try_new(ServeConfig { max_seq: 1, ..cfg() }).is_err());
     }
 
     #[test]

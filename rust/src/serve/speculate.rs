@@ -58,7 +58,13 @@ impl SpeculateConfig {
     /// — targets are a request property, not a config property.
     pub fn parse(draft: &str, gamma: usize) -> Result<SpeculateConfig, SpecError> {
         let raw = draft.trim();
-        let raw = raw.strip_prefix("draft=").unwrap_or(raw);
+        // `--speculate draft=<spec>` passes the `draft=` atom through;
+        // the shared grammar's kv splitter peels it off (anything else
+        // containing `=` is the spec's own parameter list).
+        let raw = match crate::util::spec::split_kv(raw) {
+            Some(("draft", v)) => v,
+            _ => raw,
+        };
         if gamma == 0 {
             return Err(SpecError("speculate: gamma must be >= 1".into()));
         }

@@ -53,6 +53,17 @@ impl WaveScheduler {
         WaveScheduler { core: SchedulerCore::new(cfg.strip_incompatible()) }
     }
 
+    /// Checked constructor: validates the (pre-strip) config through
+    /// [`ServeConfig::validate`] and returns the typed error instead of
+    /// panicking — the CLI-facing path (pair with
+    /// [`ServeConfig::builder`]).
+    pub fn try_new(
+        cfg: ServeConfig,
+    ) -> Result<WaveScheduler, crate::serve::scheduler::ServeConfigError> {
+        cfg.validate()?;
+        Ok(WaveScheduler::new(cfg))
+    }
+
     fn wave_active(&self) -> bool {
         self.core.groups.iter().any(|g| !g.active.is_empty())
     }

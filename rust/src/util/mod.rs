@@ -9,5 +9,6 @@ pub mod json;
 pub mod matrix;
 pub mod prop;
 pub mod rng;
+pub mod spec;
 pub mod stats;
 pub mod threadpool;

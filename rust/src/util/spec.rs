@@ -1,0 +1,106 @@
+//! Shared `family[:key=value,...]` spec-string grammar.
+//!
+//! Every spec surface consumes this one tokenizer — the engine
+//! registry ([`crate::attention::registry::parse_spec`]), the paged-KV
+//! policy surface (`PagedKvPolicy::parse`), the speculative-decoding
+//! config (`SpeculateConfig::parse`), and the serve router's SLO
+//! classes (`SloClass::parse`) — so every `--engine` / `--policy` /
+//! `--speculate` / `--slo` string splits, trims, and fails
+//! identically: `"<family>: malformed parameter ... (expected
+//! key=value)"` and `"<family>: duplicate key ..."` read the same no
+//! matter which parser raised them.
+
+/// One tokenized spec: the family name plus its `key=value` pairs in
+/// written order (both halves trimmed). Typing and key validation stay
+/// with the consumer — the grammar layer only splits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RawSpec<'a> {
+    pub family: &'a str,
+    pub pairs: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> RawSpec<'a> {
+    /// The value written for `key`, if any.
+    pub fn get(&self, key: &str) -> Option<&'a str> {
+        self.pairs.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+    }
+}
+
+/// Split one `key=value` atom (both halves trimmed). `None` when there
+/// is no `=` — the caller owns the error message so the family name
+/// can lead it.
+pub fn split_kv(part: &str) -> Option<(&str, &str)> {
+    let (k, v) = part.split_once('=')?;
+    Some((k.trim(), v.trim()))
+}
+
+/// Tokenize `family[:key=value,...]`: trim the whole spec, split the
+/// family off the first `:`, split parameters on `,` (empty parts
+/// skipped), and reject missing `=` and duplicate keys. Errors are
+/// plain `String`s; consumers wrap them in their own error types.
+pub fn tokenize(spec: &str) -> Result<RawSpec<'_>, String> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        return Err("empty spec — expected `family[:key=value,...]`".into());
+    }
+    let (family, rest) = match spec.split_once(':') {
+        Some((f, r)) => (f.trim(), r),
+        None => (spec, ""),
+    };
+    let mut pairs: Vec<(&str, &str)> = Vec::new();
+    for part in rest.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = split_kv(part).ok_or_else(|| {
+            format!("{family}: malformed parameter {part:?} (expected key=value)")
+        })?;
+        if pairs.iter().any(|&(pk, _)| pk == k) {
+            return Err(format!("{family}: duplicate key {k:?}"));
+        }
+        pairs.push((k, v));
+    }
+    Ok(RawSpec { family, pairs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_family_and_pairs() {
+        let r = tokenize("dense").unwrap();
+        assert_eq!(r.family, "dense");
+        assert!(r.pairs.is_empty());
+        let r = tokenize("h2o:budget=32,recent=8").unwrap();
+        assert_eq!(r.family, "h2o");
+        assert_eq!(r.pairs, vec![("budget", "32"), ("recent", "8")]);
+        assert_eq!(r.get("budget"), Some("32"));
+        assert_eq!(r.get("window"), None);
+    }
+
+    #[test]
+    fn trims_and_skips_empty_parts() {
+        let r = tokenize(" window : w=128 , , scorer=sfa_k4 ").unwrap();
+        assert_eq!(r.family, "window");
+        assert_eq!(r.pairs, vec![("w", "128"), ("scorer", "sfa_k4")]);
+    }
+
+    #[test]
+    fn errors_are_uniform() {
+        assert!(tokenize("").unwrap_err().contains("empty spec"));
+        assert!(tokenize("   ").unwrap_err().contains("empty spec"));
+        let e = tokenize("window:w").unwrap_err();
+        assert_eq!(e, "window: malformed parameter \"w\" (expected key=value)");
+        let e = tokenize("sfa:k=2,k=3").unwrap_err();
+        assert_eq!(e, "sfa: duplicate key \"k\"");
+    }
+
+    #[test]
+    fn split_kv_trims_both_halves() {
+        assert_eq!(split_kv("draft=sfa:k=2"), Some(("draft", "sfa:k=2")));
+        assert_eq!(split_kv(" ttft_ms = 250 "), Some(("ttft_ms", "250")));
+        assert_eq!(split_kv("batch"), None);
+    }
+}
