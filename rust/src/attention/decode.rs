@@ -249,6 +249,17 @@ pub trait KvPolicy: Send + Sync {
     /// (ascending): key `keep[i]` is now key `i`. Remap internal state.
     /// Default: no-op (stateless policies).
     fn compact(&mut self, _keep: &[u32]) {}
+    /// Tier-demotion verdict (the tiered paged KV's precision axis):
+    /// key ids, ascending, that should drop to the int8 cold tier.
+    /// This fires *before* the evict verdict in a token's lifecycle —
+    /// the cold set is the keys the policy would still `select`
+    /// (keep) but that sit outside its recency window: kept, old,
+    /// re-scored every step, tolerant of bounded dequantization error.
+    /// Keys outside the select set never need demoting (the next prune
+    /// evicts them outright). Default: empty (no tiering opinion).
+    fn demote(&mut self, _cache_len: usize) -> Vec<u32> {
+        Vec::new()
+    }
 }
 
 /// Top-`budget` ids from `[0, recent_lo)` by cumulative attention mass
@@ -322,6 +333,17 @@ impl KvPolicy for H2oPolicy {
     fn compact(&mut self, keep: &[u32]) {
         self.cumulative = remap_mass(&self.cumulative, keep);
     }
+
+    /// Cold set: the heavy hitters themselves — kept by mass but
+    /// outside the recent tail, exactly the keys `select` retains
+    /// beyond recency.
+    fn demote(&mut self, cache_len: usize) -> Vec<u32> {
+        self.cumulative.resize(cache_len, 0.0);
+        let recent_lo = cache_len.saturating_sub(self.recent);
+        let mut cold = top_by_mass(&self.cumulative, self.budget, recent_lo);
+        cold.sort_unstable();
+        cold
+    }
 }
 
 /// SnapKV-style: a fixed retained set chosen once (at prefill end, from
@@ -349,6 +371,16 @@ impl KvPolicy for SnapKvPolicy {
 
     fn compact(&mut self, keep: &[u32]) {
         self.keep = remap_ids(&self.keep, keep);
+    }
+
+    /// Cold set: the frozen retained ids outside the recent tail.
+    fn demote(&mut self, cache_len: usize) -> Vec<u32> {
+        let recent_lo = cache_len.saturating_sub(self.recent) as u32;
+        let mut cold: Vec<u32> =
+            self.keep.iter().copied().filter(|&j| j < recent_lo).collect();
+        cold.sort_unstable();
+        cold.dedup();
+        cold
     }
 }
 
@@ -426,6 +458,25 @@ impl KvPolicy for SnapKvOncePolicy {
                 .map(|(i, _)| i as u32)
                 .collect(),
         });
+    }
+
+    /// Cold set: the frozen snapped set (or, pre-freeze, the current
+    /// heavy hitters) outside the recent tail — the same non-tail keys
+    /// `select` keeps.
+    fn demote(&mut self, cache_len: usize) -> Vec<u32> {
+        let recent_lo = cache_len.saturating_sub(self.recent);
+        let mut cold: Vec<u32> = match &self.frozen {
+            Some(frozen) => {
+                frozen.iter().copied().filter(|&j| j < recent_lo as u32).collect()
+            }
+            None => {
+                self.cumulative.resize(cache_len, 0.0);
+                top_by_mass(&self.cumulative, self.budget, recent_lo)
+            }
+        };
+        cold.sort_unstable();
+        cold.dedup();
+        cold
     }
 }
 
@@ -540,6 +591,35 @@ impl KvPolicy for QuestPolicy {
         self.page_min = nmin;
         self.page_max = nmax;
         self.n_pages = n_new;
+    }
+
+    /// Cold set: the query-selected pages *except* the newest — Quest
+    /// keeps whole pages, so its verdict is naturally page-granular
+    /// (matching the paged cache's whole-page demotion) and always
+    /// spares the page still being appended to.
+    fn demote(&mut self, cache_len: usize) -> Vec<u32> {
+        let n_pages = cache_len.div_ceil(self.page);
+        if n_pages <= 1 {
+            return Vec::new();
+        }
+        let mut pages: Vec<usize> = (0..n_pages).collect();
+        if pages.len() > self.budget_pages {
+            pages.select_nth_unstable_by(self.budget_pages - 1, |&a, &b| {
+                self.page_bound(b).partial_cmp(&self.page_bound(a)).unwrap()
+            });
+            pages.truncate(self.budget_pages);
+        }
+        let mut keys = Vec::new();
+        for pg in pages {
+            if pg == n_pages - 1 {
+                continue;
+            }
+            let lo = pg * self.page;
+            let hi = ((pg + 1) * self.page).min(cache_len);
+            keys.extend(lo as u32..hi as u32);
+        }
+        keys.sort_unstable();
+        keys
     }
 }
 
@@ -849,6 +929,66 @@ mod tests {
         assert!(sel.contains(&4) && sel.contains(&7), "{sel:?}");
         assert!(sel.contains(&11));
         assert!(!sel.contains(&0));
+    }
+
+    /// The tier verdict fires before eviction: every cold id is one the
+    /// policy would *keep* (`demote ⊆ select`), and none sits in the
+    /// recent tail — H2O demotes its heavy hitters, not its window.
+    #[test]
+    fn h2o_demote_verdict_is_kept_heavy_hitters_outside_tail() {
+        let mut p = H2oPolicy::new(2, 2);
+        p.observe(&[(3, 0.9), (7, 0.5), (0, 0.1)]);
+        let sel = p.select(20);
+        let cold = p.demote(20);
+        assert!(cold.contains(&3) && cold.contains(&7), "heavy hitters go cold: {cold:?}");
+        assert_eq!(cold.len(), 2, "budget-bounded cold set");
+        for &j in &cold {
+            assert!(sel.contains(&j), "demote must be a subset of select");
+            assert!(j < 18, "recent tail never demotes");
+        }
+        assert!(cold.windows(2).all(|w| w[0] < w[1]), "ascending");
+    }
+
+    #[test]
+    fn snapkv_demote_verdicts_follow_the_frozen_set() {
+        // Plain SnapKV: the fixed keep set outside the tail goes cold.
+        let mut fixed = SnapKvPolicy { keep: vec![1, 5, 9], recent: 2 };
+        assert_eq!(fixed.demote(30), vec![1, 5, 9]);
+        assert_eq!(fixed.demote(10), vec![1, 5], "tail members spared");
+        // Serve-side SnapKV-once: pre-freeze it mirrors H2O's masses,
+        // post-freeze it demotes the snapped set.
+        let mut p = SnapKvOncePolicy::new(2, 2);
+        p.observe(&[(1, 0.5), (4, 0.4), (0, 0.1)]);
+        assert_eq!(p.demote(8), vec![1, 4], "pre-freeze: heavy hitters");
+        let keep = p.select(8);
+        p.compact(&keep); // freezes {1,4} as {0,1}
+        assert_eq!(p.demote(6), vec![0, 1], "post-freeze: frozen set");
+        // A default-impl policy has no tiering opinion.
+        struct NoOpinion;
+        impl KvPolicy for NoOpinion {
+            fn name(&self) -> String {
+                "none".into()
+            }
+            fn select(&mut self, n: usize) -> Vec<u32> {
+                (0..n as u32).collect()
+            }
+            fn observe(&mut self, _p: &[(u32, f32)]) {}
+        }
+        assert!(NoOpinion.demote(64).is_empty());
+    }
+
+    #[test]
+    fn quest_demote_verdict_is_page_granular_and_spares_newest() {
+        let d = 4;
+        let mut p = QuestPolicy::new(4, 1, d);
+        for i in 0..12 {
+            let scale = if (4..8).contains(&i) { 10.0 } else { 0.1 };
+            p.ingest_key(i, &vec![scale; d]);
+        }
+        p.set_query(&[1.0; 4]);
+        let cold = p.demote(12);
+        assert_eq!(cold, vec![4, 5, 6, 7], "the selected non-newest page: {cold:?}");
+        assert!(p.demote(4).is_empty(), "single page never demotes");
     }
 
     #[test]

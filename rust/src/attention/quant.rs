@@ -96,6 +96,83 @@ mod tests {
         assert!(s.iter().all(|&x| x == 1.0));
     }
 
+    /// Satellite property (the tiered-KV accuracy contract): for any
+    /// matrix, `dequantize_rows(quantize_rows(x))` is within `scale/2`
+    /// of `x` per element, where `scale` is that row's own maxabs/127 —
+    /// including all-zero rows (scale pinned to 1.0, exact round trip)
+    /// and single-element rows (the element IS the maxabs: code ±127,
+    /// error exactly 0 up to fp rounding).
+    #[test]
+    fn property_quant_roundtrip_error_within_half_scale() {
+        crate::util::prop::check("quant round-trip bound", 48, |g| {
+            let rows = g.usize_in(1..12);
+            let cols = g.usize_in(1..24);
+            let mut x = Matrix::zeros(rows, cols);
+            for i in 0..rows {
+                match g.usize_in(0..4) {
+                    // All-zero row: must round-trip exactly.
+                    0 => {}
+                    // Uniform magnitudes across several decades.
+                    1 => {
+                        let mag = 10f32.powi(g.usize_in(0..7) as i32 - 3);
+                        for j in 0..cols {
+                            x.set(i, j, g.f32_in(-mag..mag));
+                        }
+                    }
+                    // Normal-ish data (the KV payload case).
+                    _ => {
+                        for j in 0..cols {
+                            x.set(i, j, g.f32_in(-2.0..2.0));
+                        }
+                    }
+                }
+            }
+            let (c, s) = quantize_rows(&x);
+            let deq = dequantize_rows(&c, &s, rows, cols);
+            for i in 0..rows {
+                let maxabs = x.row(i).iter().fold(0f32, |a, &b| a.max(b.abs()));
+                let scale = if maxabs == 0.0 { 1.0 } else { maxabs / 127.0 };
+                assert_eq!(s[i], scale, "scale definition is pinned");
+                for j in 0..cols {
+                    let err = (x.get(i, j) - deq.get(i, j)).abs();
+                    // Slack: the half-step bound plus ~2 fp roundings
+                    // of the div/mul pair at |code| <= 127.
+                    assert!(
+                        err <= 0.5 * scale * (1.0 + 1e-3) + 1e-7,
+                        "row {i} col {j}: err {err} > scale/2 {}",
+                        0.5 * scale
+                    );
+                }
+                if maxabs == 0.0 {
+                    for j in 0..cols {
+                        assert_eq!(deq.get(i, j), 0.0, "zero rows round-trip exactly");
+                    }
+                }
+            }
+        });
+    }
+
+    /// Single-element rows: the lone value is its own maxabs, so the
+    /// code saturates at ±127 and the round trip is exact (up to one
+    /// fp rounding of maxabs/127*127).
+    #[test]
+    fn single_element_rows_roundtrip_near_exactly() {
+        for &v in &[0.0f32, 1.0, -1.0, 3.25e-6, -7.5e4, 1e-30] {
+            let mut m = Matrix::zeros(1, 1);
+            m.set(0, 0, v);
+            let (c, s) = quantize_rows(&m);
+            let deq = dequantize_rows(&c, &s, 1, 1);
+            if v == 0.0 {
+                assert_eq!(deq.get(0, 0), 0.0);
+                assert_eq!(s[0], 1.0);
+            } else {
+                assert_eq!(c[0], if v > 0.0 { 127 } else { -127 });
+                let rel = ((deq.get(0, 0) - v) / v).abs();
+                assert!(rel <= 1e-6, "single element should be exact: {v} -> {}", deq.get(0, 0));
+            }
+        }
+    }
+
     #[test]
     fn quant_attention_close_to_dense() {
         let (q, k, v) = qkv(24, 16, 16, 1);

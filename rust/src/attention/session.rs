@@ -54,7 +54,9 @@ use crate::attention::flash_dense::FlashDense;
 use crate::attention::flash_sfa::FlashSfa;
 use crate::attention::registry::{parse_spec, EngineSpec, SpecError};
 use crate::attention::{Engine, HeadTensor, Scorer};
-use crate::kv_cache::paged::{PageError, PagedKvCache, SeqId, SlotLayout};
+use crate::kv_cache::paged::{
+    KvTierCfg, PageError, PagedKvCache, SeqId, SlotLayout, TierPolicy, TierScratch,
+};
 use crate::sparse::{topk_codes, CscFeat, TopkCodes};
 use crate::util::matrix::Matrix;
 use crate::util::threadpool::{default_threads, parallel_for_dynamic, SendPtr};
@@ -165,6 +167,10 @@ pub struct AttentionSession {
     /// Pages returned to the pool by policy pruning since the last
     /// [`Self::take_policy_freed`] drain.
     policy_freed: usize,
+    /// Cumulative cache demote/promote counters already reported by
+    /// [`Self::take_tier_counts`] (delta-drain watermarks).
+    tier_demote_seen: usize,
+    tier_promote_seen: usize,
 }
 
 impl AttentionSession {
@@ -209,7 +215,17 @@ impl AttentionSession {
                 prefill: None,
             })
             .collect();
-        AttentionSession { engine: spec.build(), cfg, spec, scorer, cache, lanes, policy_freed: 0 }
+        AttentionSession {
+            engine: spec.build(),
+            cfg,
+            spec,
+            scorer,
+            cache,
+            lanes,
+            policy_freed: 0,
+            tier_demote_seen: 0,
+            tier_promote_seen: 0,
+        }
     }
 
     pub fn spec(&self) -> &EngineSpec {
@@ -242,6 +258,12 @@ impl AttentionSession {
 
     pub fn pages_in_use(&self) -> usize {
         self.cache.pages_in_use()
+    }
+
+    /// Budget consumed in half-page units (fp32 page = 2, int8 = 1) —
+    /// `2 * pages_in_use()` exactly while nothing is demoted.
+    pub fn units_in_use(&self) -> usize {
+        self.cache.units_in_use()
     }
 
     /// Pages still allocatable before the cache's budget is exhausted.
@@ -299,6 +321,68 @@ impl AttentionSession {
     /// cache.pages_alloc_total() - cache.pages_rebuild_total()`.
     pub fn take_policy_freed(&mut self) -> usize {
         std::mem::take(&mut self.policy_freed)
+    }
+
+    /// Pages currently stored int8 across the whole session cache.
+    pub fn pages_demoted(&self) -> usize {
+        self.cache.pages_demoted()
+    }
+
+    /// Worst per-element |dequant − original| / (scale/2) ratio seen by
+    /// any demotion so far (`<= 1.0` means within the pinned accuracy
+    /// contract of `quantize_rows`).
+    pub fn tier_max_error_ratio(&self) -> f32 {
+        self.cache.tier_max_error_ratio()
+    }
+
+    /// Demote cold pages of every live, prefill-complete lane under the
+    /// given tier config. [`TierPolicy::Lru`] keeps the newest
+    /// `cold_after` tokens hot per head and demotes every full page
+    /// before them; [`TierPolicy::H2o`] asks each head's
+    /// [`KvPolicy::demote`] verdict for the cold token set (falling
+    /// back to the LRU cutoff on policy-free lanes). Only whole pages
+    /// ever change tier; partially-cold pages stay hot. Returns pages
+    /// demoted this pass.
+    pub fn demote_cold(&mut self, tier: KvTierCfg) -> usize {
+        let mut demoted = 0;
+        for lane in 0..self.lanes.len() {
+            if !self.lanes[lane].live || self.lanes[lane].prefill.is_some() {
+                continue;
+            }
+            for h in 0..self.cfg.heads {
+                let seq = self.lanes[lane].seqs[h];
+                let use_policy = tier.policy == TierPolicy::H2o
+                    && self.lanes[lane].policy.is_some();
+                if use_policy {
+                    let cached = self.cache.seq_len(seq).expect("lane sequence exists");
+                    let cold = self.lanes[lane]
+                        .policy
+                        .as_mut()
+                        .expect("checked above")
+                        .heads[h]
+                        .demote(cached);
+                    if !cold.is_empty() {
+                        demoted += self.cache.demote_token_set(seq, &cold).unwrap_or(0);
+                    }
+                } else {
+                    demoted += self.cache.demote_pages(seq, tier.cold_after).unwrap_or(0);
+                }
+            }
+        }
+        demoted
+    }
+
+    /// Drain the (demotions, promotions) performed since the last call
+    /// — the per-step deltas surfaced as `StepReport::pages_demoted` /
+    /// `pages_promoted`. Promotions include copy-on-write dequants of
+    /// shared cold pages, so the counters track *work done*, not just
+    /// explicit tier flips.
+    pub fn take_tier_counts(&mut self) -> (usize, usize) {
+        let d = self.cache.pages_demote_total() - self.tier_demote_seen;
+        let p = self.cache.pages_promote_total() - self.tier_promote_seen;
+        self.tier_demote_seen += d;
+        self.tier_promote_seen += p;
+        (d, p)
     }
 
     /// Admit a new empty lane (recycling a released slot when one
@@ -462,8 +546,11 @@ impl AttentionSession {
                 };
                 let eng = FlashDense { block_q: bq, block_k: bk, threads: default_threads() };
                 for h in 0..self.cfg.heads {
-                    let slots =
-                        self.cache.token_slices(l.seqs[h]).expect("lane sequence exists");
+                    let mut scratch = TierScratch::new();
+                    let slots = self
+                        .cache
+                        .token_slices_tiered(l.seqs[h], &mut scratch)
+                        .expect("lane sequence exists");
                     let total = slots.len();
                     let mut kmat = Matrix::zeros(total, self.cfg.d);
                     let mut vmat = Matrix::zeros(total, d_v);
@@ -501,8 +588,11 @@ impl AttentionSession {
                     skip_mass: 0.0,
                 };
                 for h in 0..self.cfg.heads {
-                    let slots =
-                        self.cache.token_slices(l.seqs[h]).expect("lane sequence exists");
+                    let mut scratch = TierScratch::new();
+                    let slots = self
+                        .cache
+                        .token_slices_tiered(l.seqs[h], &mut scratch)
+                        .expect("lane sequence exists");
                     let total = slots.len();
                     let mut kvals = Vec::with_capacity(total * k);
                     let mut kidx = Vec::with_capacity(total * k);
@@ -852,7 +942,9 @@ impl AttentionSession {
                 (tail, rows)
             };
             assert!(rows >= window.max(1).min(n), "q tail must cover the observe window");
-            let slots = self.cache.token_slices(seq).expect("lane sequence exists");
+            let mut scratch = TierScratch::new();
+            let slots =
+                self.cache.token_slices_tiered(seq, &mut scratch).expect("lane sequence exists");
             let mut observed: Vec<Vec<(u32, f32)>> = Vec::with_capacity(window);
             for i in rows - window..rows {
                 // Chunked prefill is causal: replay query at absolute
@@ -890,7 +982,9 @@ impl AttentionSession {
             self.lanes[lane].policy.as_ref().expect("policy lane").observe_window.min(n);
         for h in 0..self.cfg.heads {
             let seq = self.lanes[lane].seqs[h];
-            let slots = self.cache.token_slices(seq).expect("lane sequence exists");
+            let mut scratch = TierScratch::new();
+            let slots =
+                self.cache.token_slices_tiered(seq, &mut scratch).expect("lane sequence exists");
             let mut observed: Vec<Vec<(u32, f32)>> = Vec::with_capacity(window);
             for p in n - window..n {
                 // Match the prefill's masking: causal query p sees keys
@@ -1164,7 +1258,11 @@ impl AttentionSession {
         let threads = default_threads().min(bh.max(1));
         parallel_for_dynamic(bh, threads, 1, move |i| {
             let (bi, h) = (i / heads, i % heads);
-            let slots = this.cache.token_slices(seqs_ref[i]).expect("session sequence exists");
+            let mut scratch = TierScratch::new();
+            let slots = this
+                .cache
+                .token_slices_tiered(seqs_ref[i], &mut scratch)
+                .expect("session sequence exists");
             for t in 0..n {
                 // SAFETY: each (lane, head, position) owns a disjoint
                 // output range.
@@ -1230,7 +1328,9 @@ impl AttentionSession {
     /// with and without observation.
     fn decode_head(&self, seq: SeqId, q: &[f32], out: &mut [f32], probs_out: Option<&mut [f32]>) {
         let d_v = self.cfg.d_v;
-        let slots = self.cache.token_slices(seq).expect("session sequence exists");
+        let mut scratch = TierScratch::new();
+        let slots =
+            self.cache.token_slices_tiered(seq, &mut scratch).expect("session sequence exists");
         let scores = self.head_scores(&slots, q);
         let v_off = match self.scorer {
             Scorer::Dense => self.cfg.d,
@@ -1340,6 +1440,57 @@ mod tests {
     #[test]
     fn session_equivalence_sfa_layout_reference() {
         assert_session_matches_one_shot("sfa_ref:k=4", 3e-5);
+    }
+
+    /// Tiered-KV contract at the session layer: demoting the cold
+    /// prefix to int8 keeps decode outputs near-lossless (same bound
+    /// class as the quant engine tests), the per-step counters drain
+    /// exactly once, and the recorded worst-case dequant error stays
+    /// inside the `scale/2` contract. Runs both slot layouts — the
+    /// sparse one exercises bit-exact packed-index survival end to end.
+    #[test]
+    fn demote_cold_then_decode_stays_close_and_drains_counters() {
+        for spec in ["dense", "sfa_ref:k=8"] {
+            let (batch, heads, d) = (1, 2, 16);
+            let (n0, steps) = (12, 4);
+            let n = n0 + steps;
+            let (q, k, v) = full_qkv(batch, heads, n, d, 9);
+            let cfg = SessionConfig::new(batch, heads, d, d).with_paging(4, 4096);
+            let mut hot = AttentionSession::from_spec(spec, cfg).unwrap();
+            let mut cold = AttentionSession::from_spec(spec, cfg).unwrap();
+            let p0 = (&q.slice_rows(0, n0), &k.slice_rows(0, n0), &v.slice_rows(0, n0));
+            hot.prefill(p0.0, p0.1, p0.2, true).unwrap();
+            cold.prefill(p0.0, p0.1, p0.2, true).unwrap();
+            assert_eq!(cold.take_tier_counts(), (0, 0), "nothing demoted yet");
+
+            // keep_hot=4 of 12 cached tokens -> 2 full pages go cold
+            // per head sequence.
+            let tier = KvTierCfg { cold_after: 4, policy: TierPolicy::Lru };
+            let demoted = cold.demote_cold(tier);
+            assert_eq!(demoted, heads * 2, "{spec}: two cold pages per head");
+            assert_eq!(cold.pages_demoted(), demoted);
+            assert_eq!(cold.take_tier_counts(), (demoted, 0));
+            assert_eq!(cold.take_tier_counts(), (0, 0), "counters drain once");
+            assert!(
+                cold.tier_max_error_ratio() <= 1.0 + 1e-3,
+                "{spec}: dequant error outside the scale/2 contract: {}",
+                cold.tier_max_error_ratio()
+            );
+            // Idempotent: the cold prefix is already int8.
+            assert_eq!(cold.demote_cold(tier), 0);
+
+            let (mut err, mut norm) = (0.0f32, 0.0f32);
+            for t in n0..n {
+                let a = hot.decode_step(&at(&q, t), &at(&k, t), &at(&v, t)).unwrap();
+                let b = cold.decode_step(&at(&q, t), &at(&k, t), &at(&v, t)).unwrap();
+                for i in 0..a.data.len() {
+                    err += (a.data[i] - b.data[i]).powi(2);
+                    norm += a.data[i].powi(2);
+                }
+            }
+            let rel = (err / norm.max(1e-12)).sqrt();
+            assert!(rel < 0.05, "{spec}: int8 cold pages should be near-lossless: {rel}");
+        }
     }
 
     #[test]

@@ -25,9 +25,9 @@ use crate::coordinator::metrics::{Goodput, Percentiles};
 use crate::coordinator::router::{tally_goodput, ReplicaRouter, RouterPolicy};
 use crate::attention::registry::{parse_spec, validate_draft_spec};
 use crate::serve::{
-    pages_needed, ContinuousBatcher, FinishedRequest, PagedKvPolicy, PrefixCacheConfig,
-    PrefixCacheStats, RequestId, RequestState, Scheduler, ServeConfig, ServeRequest,
-    ServeSampling, SloClass, SpeculateConfig, WaveScheduler,
+    pages_needed, ContinuousBatcher, FinishedRequest, KvTierCfg, PagedKvPolicy,
+    PrefixCacheConfig, PrefixCacheStats, RequestId, RequestState, Scheduler, ServeConfig,
+    ServeRequest, ServeSampling, SloClass, SpeculateConfig, TierPolicy, WaveScheduler,
 };
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -76,6 +76,14 @@ pub struct ServeBenchConfig {
     /// baseline, pinning placement-independent streams and reporting
     /// goodput (tokens/s within SLO).
     pub router: Option<RouterBenchConfig>,
+    /// `Some` switches `bench serve` to the **tiered-KV comparison**
+    /// (`--kv-tier`): the same workload driven through the continuous
+    /// batcher all-fp32, with the configured cold tier, and with a
+    /// never-triggering tier (the bit-for-bit identity pin) —
+    /// recording demotions, the effective-capacity ratio the half-unit
+    /// accounting buys, achieved concurrency, and the worst dequant
+    /// error ratio.
+    pub tiered: Option<KvTierCfg>,
     pub serve: ServeConfig,
     pub seed: u64,
     /// Base for per-request sampler seeds: request `i` decodes with
@@ -214,6 +222,7 @@ impl Default for ServeBenchConfig {
             chunked: None,
             speculate: None,
             router: None,
+            tiered: None,
             // Enough lanes that the page budget, not the lane cap, is
             // what policy-budget admission relaxes.
             serve: ServeConfig { max_lanes: 32, ..ServeConfig::default() },
@@ -247,6 +256,20 @@ pub struct RunStats {
     pub peak_live: usize,
     /// Pages returned to the pool by policy eviction over the run.
     pub pages_pruned: usize,
+    /// Pages demoted to the int8 cold tier over the run (lane tiering
+    /// plus radix demote-before-drop; zero without `kv_tier`).
+    pub pages_demoted: usize,
+    /// Cold pages promoted back to fp32 over the run.
+    pub pages_promoted: usize,
+    /// Worst per-element dequant error / (scale/2) observed by any
+    /// demotion (`<= 1.0` is within the quantizer contract).
+    pub tier_error_ratio: f32,
+    /// Step-mean of `2 * pages_in_use / units_in_use` — 1.0 all-hot,
+    /// → 2.0 as the whole cache demotes: how many nominal pages one
+    /// physical page budget holds.
+    pub capacity_ratio_mean: f64,
+    /// Peak of the same ratio over the run's steps.
+    pub capacity_ratio_peak: f64,
     /// Mean time-to-first-token over all finished requests, s.
     pub ttft_mean_s: f64,
     /// Prompt-prefix cache counters (all-zero without a prefix cache).
@@ -303,6 +326,10 @@ pub fn drive_keep(
     let mut sum_live = 0f64;
     let mut peak_live = 0usize;
     let mut pages_pruned = 0usize;
+    let mut pages_demoted = 0usize;
+    let mut pages_promoted = 0usize;
+    let mut sum_ratio = 0f64;
+    let mut peak_ratio = 1f64;
     while sched.has_work() {
         let r = sched.step();
         steps += 1;
@@ -311,6 +338,17 @@ pub fn drive_keep(
         sum_live += r.live as f64;
         peak_live = peak_live.max(r.live);
         pages_pruned += r.pages_pruned;
+        pages_demoted += r.pages_demoted;
+        pages_promoted += r.pages_promoted;
+        // Nominal pages per half-unit of physical budget: the tiered
+        // capacity multiplier this step (1.0 when everything is hot).
+        let ratio = if r.kv_units_in_use > 0 {
+            2.0 * r.pages_in_use as f64 / r.kv_units_in_use as f64
+        } else {
+            1.0
+        };
+        sum_ratio += ratio;
+        peak_ratio = peak_ratio.max(ratio);
     }
     let wall_s = t0.elapsed().as_secs_f64();
     sched.metrics_mut().wall_s = wall_s;
@@ -335,6 +373,11 @@ pub fn drive_keep(
         mean_live: if steps == 0 { 0.0 } else { sum_live / steps as f64 },
         peak_live,
         pages_pruned,
+        pages_demoted,
+        pages_promoted,
+        tier_error_ratio: sched.tier_error_ratio(),
+        capacity_ratio_mean: if steps == 0 { 1.0 } else { sum_ratio / steps as f64 },
+        capacity_ratio_peak: peak_ratio,
         ttft_mean_s: mean(&m.ttft_s),
         prefix: sched.prefix_stats(),
     };
@@ -423,11 +466,18 @@ pub fn bench_serve_prefix(cfg: &ServeBenchConfig) -> (Table, PrefixComparison) {
             stats.mean_live = (w0.mean_live * w0.steps as f64
                 + stats.mean_live * stats.steps as f64)
                 / total_steps as f64;
+            stats.capacity_ratio_mean = (w0.capacity_ratio_mean * w0.steps as f64
+                + stats.capacity_ratio_mean * stats.steps as f64)
+                / total_steps as f64;
         }
         stats.steps = total_steps;
         stats.peak_pages = stats.peak_pages.max(w0.peak_pages);
         stats.peak_live = stats.peak_live.max(w0.peak_live);
         stats.pages_pruned += w0.pages_pruned;
+        stats.pages_demoted += w0.pages_demoted;
+        stats.pages_promoted += w0.pages_promoted;
+        stats.tier_error_ratio = stats.tier_error_ratio.max(w0.tier_error_ratio);
+        stats.capacity_ratio_peak = stats.capacity_ratio_peak.max(w0.capacity_ratio_peak);
         stats.requests += w0.requests;
         stats.failed += w0.failed;
         stats.wall_s = t0.elapsed().as_secs_f64();
@@ -841,6 +891,202 @@ pub fn spec_to_json(cfg: &ServeBenchConfig, cmp: &SpecComparison) -> String {
                 ("tokens_per_s_gain", Json::from(cmp.tok_s_gain)),
                 ("baseline", stats_json(&cmp.baseline)),
                 ("speculative_run", stats_json(&cmp.speculative)),
+            ]),
+        ),
+    ])
+    .to_string()
+}
+
+/// The tiered-KV comparison (`--kv-tier`): the same workload three
+/// ways through the continuous batcher.
+#[derive(Debug, Clone)]
+pub struct TieredComparison {
+    /// The tier config the `tiered` run demotes under.
+    pub tier: KvTierCfg,
+    /// All-fp32 reference (`kv_tier: None`).
+    pub base: RunStats,
+    /// The configured cold tier.
+    pub tiered: RunStats,
+    /// A tier whose hot window exceeds `max_seq` — configured but
+    /// unable to fire, the bit-for-bit identity pin.
+    pub no_trigger: RunStats,
+    /// Peak of `2 * pages_in_use / units_in_use` over the tiered run:
+    /// how many nominal pages the fixed physical budget held at the
+    /// most-compressed step (1.0 all-hot, → 2.0 fully cold).
+    pub effective_capacity_gain: f64,
+    /// tiered mean_live / base mean_live at the same `max_pages` — the
+    /// admission headroom compressed reservations buy.
+    pub concurrency_gain_mean_live: f64,
+    /// Tiered vs base stream equality. Legitimately false once pages
+    /// demote (int8 round-trip perturbs logits); recorded, not gated.
+    pub tiered_streams_identical: bool,
+    /// No-trigger vs base stream equality — must be true (a cold tier
+    /// that never fires is invisible).
+    pub streams_identical_no_trigger: bool,
+}
+
+/// Canonical spec string for a tier config (table + JSON labels).
+pub fn tier_label(t: &KvTierCfg) -> String {
+    format!("tier:cold_after={},policy={}", t.cold_after, t.policy.label())
+}
+
+/// The tiered-KV comparison: identical request streams driven all-fp32,
+/// under the configured cold tier, and under a tier that can never
+/// fire. Records demotion traffic, the worst dequant error ratio, the
+/// effective-capacity multiplier of the half-unit accounting, achieved
+/// concurrency at the fixed `max_pages`, and the two stream pins.
+pub fn bench_serve_tiered(cfg: &ServeBenchConfig) -> (Table, TieredComparison) {
+    let tier = cfg.tiered.expect("bench_serve_tiered requires ServeBenchConfig::tiered");
+    let reqs = workload(cfg);
+    let policy = policy_label(&cfg.serve.kv_policy);
+    let run = |kv_tier: Option<KvTierCfg>, label: &str| {
+        let serve = ServeConfig { kv_tier, ..cfg.serve };
+        let mut s = ContinuousBatcher::new(serve);
+        let (stats, mut fin) = drive_keep(&mut s, label, &policy, &reqs);
+        fin.sort_by_key(|f| f.id);
+        (stats, fin)
+    };
+    let (base, base_fin) = run(None, "fp32");
+    let (tiered, tiered_fin) = run(Some(tier), "tiered");
+    // Same machinery, hot window past any reachable sequence length:
+    // zero demotions, and the streams must match the fp32 run exactly.
+    let quiet = KvTierCfg { cold_after: cfg.serve.max_seq + 1, policy: TierPolicy::Lru };
+    let (no_trigger, quiet_fin) = run(Some(quiet), "no-trigger");
+    let same = |a: &[FinishedRequest], b: &[FinishedRequest]| {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| x.id == y.id && x.tokens == y.tokens)
+    };
+    let cmp = TieredComparison {
+        tier,
+        effective_capacity_gain: tiered.capacity_ratio_peak,
+        concurrency_gain_mean_live: if base.mean_live > 0.0 {
+            tiered.mean_live / base.mean_live
+        } else {
+            0.0
+        },
+        tiered_streams_identical: same(&base_fin, &tiered_fin),
+        streams_identical_no_trigger: same(&base_fin, &quiet_fin),
+        base,
+        tiered,
+        no_trigger,
+    };
+
+    let mut t = Table::new(
+        &format!(
+            "bench serve --kv-tier — fp32 vs int8 cold tier ({}) over {} requests \
+             (prompts {}–{}, max_new {}–{}, engines {}, policy {}, max_pages {})",
+            tier_label(&tier),
+            cfg.requests,
+            cfg.prompt_min,
+            cfg.prompt_max,
+            cfg.max_new_min,
+            cfg.max_new_max,
+            cfg.engines.join(";"),
+            policy,
+            cfg.serve.max_pages,
+        ),
+        &[
+            "run",
+            "tok/s",
+            "demoted",
+            "promoted",
+            "err ratio",
+            "capacity x̄",
+            "capacity peak",
+            "mean live",
+            "peak live",
+            "identical streams",
+        ],
+    );
+    for (label, s, ident) in [
+        ("fp32", &cmp.base, None),
+        ("tiered", &cmp.tiered, Some(cmp.tiered_streams_identical)),
+        ("no-trigger", &cmp.no_trigger, Some(cmp.streams_identical_no_trigger)),
+    ] {
+        t.row(vec![
+            label.into(),
+            format!("{:.1}", s.tok_s),
+            s.pages_demoted.to_string(),
+            s.pages_promoted.to_string(),
+            format!("{:.3}", s.tier_error_ratio),
+            format!("{:.2}", s.capacity_ratio_mean),
+            format!("{:.2}", s.capacity_ratio_peak),
+            format!("{:.2}", s.mean_live),
+            s.peak_live.to_string(),
+            match ident {
+                None => "-".into(),
+                Some(b) => b.to_string(),
+            },
+        ]);
+    }
+    let mut row = vec![
+        "gain".into(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        fmt_speedup(cmp.effective_capacity_gain),
+        fmt_speedup(cmp.concurrency_gain_mean_live),
+    ];
+    row.resize(10, String::new());
+    t.row(row);
+    (t, cmp)
+}
+
+/// The BENCH_serve_tiered.json document: workload shape, the three
+/// runs, and the `tiered_kv` block (capacity gain, concurrency gain,
+/// demotion traffic, dequant error bound, and both stream pins) the CI
+/// smoke gate reads.
+pub fn tiered_to_json(cfg: &ServeBenchConfig, cmp: &TieredComparison) -> String {
+    obj(vec![
+        (
+            "workload",
+            obj(vec![
+                ("requests", Json::from(cfg.requests)),
+                ("prompt_min", Json::from(cfg.prompt_min)),
+                ("prompt_max", Json::from(cfg.prompt_max)),
+                ("max_new_min", Json::from(cfg.max_new_min)),
+                ("max_new_max", Json::from(cfg.max_new_max)),
+                (
+                    "engines",
+                    Json::Arr(cfg.engines.iter().map(|e| Json::from(e.as_str())).collect()),
+                ),
+                ("policy", Json::from(policy_label(&cfg.serve.kv_policy).as_str())),
+                ("max_lanes", Json::from(cfg.serve.max_lanes)),
+                ("max_pages", Json::from(cfg.serve.max_pages)),
+                ("page_size", Json::from(cfg.serve.page_size)),
+                ("heads", Json::from(cfg.serve.heads)),
+                ("d", Json::from(cfg.serve.d)),
+                ("seed", Json::from(cfg.seed as usize)),
+            ]),
+        ),
+        (
+            "runs",
+            Json::Arr(
+                [&cmp.base, &cmp.tiered, &cmp.no_trigger].into_iter().map(stats_json).collect(),
+            ),
+        ),
+        (
+            "tiered_kv",
+            obj(vec![
+                ("tier", Json::from(tier_label(&cmp.tier).as_str())),
+                ("cold_after", Json::from(cmp.tier.cold_after)),
+                ("pages_demoted", Json::from(cmp.tiered.pages_demoted)),
+                ("pages_promoted", Json::from(cmp.tiered.pages_promoted)),
+                ("max_error_ratio", Json::from(cmp.tiered.tier_error_ratio as f64)),
+                ("effective_capacity_gain", Json::from(cmp.effective_capacity_gain)),
+                ("capacity_ratio_mean", Json::from(cmp.tiered.capacity_ratio_mean)),
+                ("base_mean_live", Json::from(cmp.base.mean_live)),
+                ("tiered_mean_live", Json::from(cmp.tiered.mean_live)),
+                ("base_peak_live", Json::from(cmp.base.peak_live)),
+                ("tiered_peak_live", Json::from(cmp.tiered.peak_live)),
+                ("concurrency_gain_mean_live", Json::from(cmp.concurrency_gain_mean_live)),
+                ("tiered_streams_identical", Json::from(cmp.tiered_streams_identical)),
+                (
+                    "streams_identical_no_trigger",
+                    Json::from(cmp.streams_identical_no_trigger),
+                ),
             ]),
         ),
     ])
@@ -1283,6 +1529,11 @@ fn stats_json(s: &RunStats) -> Json {
         ("mean_live", Json::from(s.mean_live)),
         ("peak_live", Json::from(s.peak_live)),
         ("pages_pruned", Json::from(s.pages_pruned)),
+        ("pages_demoted", Json::from(s.pages_demoted)),
+        ("pages_promoted", Json::from(s.pages_promoted)),
+        ("tier_error_ratio", Json::from(s.tier_error_ratio as f64)),
+        ("capacity_ratio_mean", Json::from(s.capacity_ratio_mean)),
+        ("capacity_ratio_peak", Json::from(s.capacity_ratio_peak)),
         ("ttft_mean_s", Json::from(s.ttft_mean_s)),
         (
             "prefix_cache",
@@ -1291,6 +1542,8 @@ fn stats_json(s: &RunStats) -> Json {
                 ("misses", Json::from(s.prefix.misses as usize)),
                 ("inserted", Json::from(s.prefix.inserted as usize)),
                 ("evicted", Json::from(s.prefix.evicted as usize)),
+                ("demoted", Json::from(s.prefix.demoted as usize)),
+                ("promoted", Json::from(s.prefix.promoted as usize)),
                 ("pages_nominal", Json::from(s.prefix.pages_nominal)),
             ]),
         ),
@@ -1470,6 +1723,7 @@ mod tests {
             chunked: None,
             speculate: None,
             router: None,
+            tiered: None,
             serve: ServeConfig {
                 heads: 2,
                 d: 8,
@@ -1484,6 +1738,7 @@ mod tests {
                 prefix_cache: None,
                 prefill_chunk: 0,
                 speculate: None,
+                kv_tier: None,
             },
             seed: 1,
             sampler_seed: 0,
@@ -1515,6 +1770,45 @@ mod tests {
             j.get("workload").unwrap().get("requests").unwrap().as_usize().unwrap(),
             6
         );
+    }
+
+    /// `--kv-tier` comparison: the tiered run demotes, its dequant
+    /// error stays within the quantizer contract, the capacity ratio
+    /// shows the half-unit headroom, and the never-firing tier leaves
+    /// streams bit-for-bit identical to the fp32 run.
+    #[test]
+    fn tiered_bench_demotes_and_pins_no_trigger_streams() {
+        let mut cfg = tiny();
+        cfg.requests = 8;
+        cfg.prompt_min = 8;
+        cfg.prompt_max = 24;
+        cfg.max_new_min = 8;
+        cfg.max_new_max = 16;
+        cfg.tiered = Some(KvTierCfg { cold_after: 4, policy: TierPolicy::Lru });
+        let (table, cmp) = bench_serve_tiered(&cfg);
+        for r in [&cmp.base, &cmp.tiered, &cmp.no_trigger] {
+            assert_eq!(r.requests, cfg.requests, "{}: every request terminates", r.scheduler);
+            assert_eq!(r.failed, 0, "{}", r.scheduler);
+        }
+        assert!(cmp.tiered.pages_demoted > 0, "cold_after 4 over ≥16-token lanes must demote");
+        assert_eq!(cmp.no_trigger.pages_demoted, 0);
+        assert_eq!(cmp.base.pages_demoted, 0);
+        assert!(cmp.streams_identical_no_trigger, "untriggered tier changed streams");
+        assert!(cmp.effective_capacity_gain > 1.0, "{}", cmp.effective_capacity_gain);
+        assert!(cmp.tiered.tier_error_ratio <= 1.0 + 1e-3, "{}", cmp.tiered.tier_error_ratio);
+        assert_eq!(cmp.base.tier_error_ratio, 0.0);
+        // All-hot runs sit exactly at capacity ratio 1.0.
+        assert_eq!(cmp.base.capacity_ratio_mean, 1.0);
+        assert_eq!(cmp.base.capacity_ratio_peak, 1.0);
+        assert_eq!(cmp.no_trigger.capacity_ratio_peak, 1.0);
+        let doc = tiered_to_json(&cfg, &cmp);
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.get("runs").unwrap().as_arr().unwrap().len(), 3);
+        let tk = j.get("tiered_kv").unwrap();
+        assert!(tk.get("effective_capacity_gain").unwrap().as_f64().unwrap() > 1.0);
+        assert!(tk.get("streams_identical_no_trigger").unwrap().as_bool().unwrap());
+        assert!(tk.get("pages_demoted").unwrap().as_usize().unwrap() > 0);
+        assert!(table.render().contains("no-trigger"));
     }
 
     /// Acceptance invariant: at a fixed `max_pages` the policy sweep

@@ -46,9 +46,10 @@ use crate::coordinator::engine::{Engine, Sampling};
 use crate::coordinator::metrics::{Goodput, ServeMetrics};
 use crate::coordinator::request::{GenRequest, GenResponse};
 use crate::runtime::Runtime;
+use crate::serve::scheduler::emit;
 use crate::serve::{
-    ContinuousBatcher, FinishedRequest, RequestId, RequestState, Scheduler, ServeConfig,
-    ServeConfigError, ServeError, ServeRequest, StepReport,
+    pages_reserved_tiered, ContinuousBatcher, FinishedRequest, RequestId, RequestState,
+    Scheduler, ServeConfig, ServeConfigError, ServeError, ServeEvent, ServeRequest, StepReport,
 };
 
 /// How [`ReplicaRouter`] places requests.
@@ -85,6 +86,12 @@ pub struct RouteDecision {
     pub affinity: usize,
     /// Whether the request carried an interactive SLO class.
     pub interactive: bool,
+    /// `true` for a decision made by the admission-time re-routing
+    /// pass ([`ReplicaRouter::step`]): the request was still queued on
+    /// a page-pressured replica and migrated to the current cost-model
+    /// winner before prefill started. A migrated request has two trace
+    /// entries — the original placement and this one.
+    pub migrated: bool,
 }
 
 /// A front-end router over N independent [`ContinuousBatcher`]
@@ -196,13 +203,80 @@ impl ReplicaRouter {
         self.next_global += 1;
         self.fwd.insert(id, (replica, local));
         self.rev.insert((replica, local), id);
-        self.decisions.push(RouteDecision { id, replica, affinity, interactive });
+        self.decisions.push(RouteDecision { id, replica, affinity, interactive, migrated: false });
         Ok(id)
+    }
+
+    /// A queued request is **page-pressured** on its replica when the
+    /// replica's pages in use plus the request's own reservation exceed
+    /// the per-group budget — it will sit behind the head-of-line block
+    /// until live lanes drain. Conservative on purpose: `pages_in_use`
+    /// under-counts reservations, so this only flags requests that are
+    /// certainly not admitting this step.
+    fn pressured(rep: &ContinuousBatcher, req: &ServeRequest) -> bool {
+        let cfg = rep.config();
+        let plen = req.prompt.len();
+        let budget = req.max_new.min(cfg.max_seq.saturating_sub(plen));
+        rep.pages_in_use() + pages_reserved_tiered(plen, budget, 0, cfg) > cfg.max_pages
+    }
+
+    /// Admission-time re-routing (SLO-aware policy only): every request
+    /// still `Queued` on a page-pressured replica is re-scored against
+    /// current replica states, and migrates — withdraw, resubmit,
+    /// remap, new trace entry with `migrated: true` — when the cost
+    /// model now prefers a different replica. Only queued requests
+    /// move: they hold no lane, pages, or prefix borrow, and samplers
+    /// derive from `(model_seed, req.seed)`, so migration re-places a
+    /// stream without changing a single token. Round-robin never
+    /// migrates (it is the placement-blind baseline).
+    fn rebalance(&mut self) {
+        if self.policy != RouterPolicy::SloAware {
+            return;
+        }
+        let ids: Vec<RequestId> = self.fwd.keys().copied().collect();
+        for id in ids {
+            let (r0, l0) = self.fwd[&id];
+            if !matches!(self.replicas[r0].state(l0), Some(RequestState::Queued)) {
+                continue;
+            }
+            let (r1, affinity) = {
+                let Some(req) = self.replicas[r0].queued_request(l0) else { continue };
+                if !Self::pressured(&self.replicas[r0], req) {
+                    continue;
+                }
+                self.route(req)
+            };
+            if r1 == r0 {
+                continue;
+            }
+            // The target's queue must have room; its page/lane fit is
+            // the admission pass's job, same as any fresh submission.
+            if self.replicas[r1].queued() >= self.replicas[r1].config().queue_capacity {
+                continue;
+            }
+            let Some(req) = self.replicas[r0].withdraw(l0) else { continue };
+            let interactive = req.slo.is_interactive();
+            emit(&req, ServeEvent::Migrated { id, from: r0, to: r1 });
+            let local = self.replicas[r1]
+                .submit(req)
+                .expect("the origin replica accepted this request under the same config");
+            self.rev.remove(&(r0, l0));
+            self.fwd.insert(id, (r1, local));
+            self.rev.insert((r1, local), id);
+            self.decisions.push(RouteDecision {
+                id,
+                replica: r1,
+                affinity,
+                interactive,
+                migrated: true,
+            });
+        }
     }
 
     /// Advance every replica by one scheduling quantum; the returned
     /// report is the field-wise sum across replicas.
     pub fn step(&mut self) -> StepReport {
+        self.rebalance();
         let mut total = StepReport::default();
         for rep in &mut self.replicas {
             let r = rep.step();
@@ -216,6 +290,8 @@ impl ReplicaRouter {
             total.prefix_hits += r.prefix_hits;
             total.spec_accepted += r.spec_accepted;
             total.preempted += r.preempted;
+            total.pages_demoted += r.pages_demoted;
+            total.pages_promoted += r.pages_promoted;
             total.pages_in_use += r.pages_in_use;
             total.live += r.live;
         }

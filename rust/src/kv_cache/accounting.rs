@@ -41,6 +41,46 @@ impl CacheConfig {
             / 2048.0;
         (budget as f64 / per_tok) as usize
     }
+
+    /// Total K+V cache bytes when a `cold_fraction` of the context sits
+    /// in the int8 cold tier (the serve stack's page demotion): cold
+    /// value bytes halve (f16 payload → int8 codes + one f32 scale per
+    /// row, amortized over `d_head` elements), while index/structure
+    /// bytes (CSR indices, indptr) stay full width — exactly how
+    /// `PagePayload::Int8` keeps SFA's packed index pairs verbatim.
+    /// `cold_fraction: 0.0` is bit-identical to [`Self::bytes`].
+    pub fn bytes_tiered(
+        &self,
+        seq: usize,
+        batch: usize,
+        w: Widths,
+        cold_fraction: f64,
+    ) -> usize {
+        debug_assert!((0.0..=1.0).contains(&cold_fraction));
+        let full = self.bytes(seq, batch, w);
+        let cold_seq = (seq as f64 * cold_fraction) as usize;
+        if cold_seq == 0 {
+            return full;
+        }
+        // Value-payload bytes of the cold span: these are what the
+        // int8 tier halves. Per row: d_head values (V) plus k sparse
+        // values (SFA K) or qk_dim values (dense K).
+        let value_elems_per_tok = self.d_head
+            + match self.sparsity {
+                Some(k) => k,
+                None => self.qk_dim,
+            };
+        let cold_value_bytes =
+            self.n_layers * self.n_heads * batch * cold_seq * value_elems_per_tok * w.s_val;
+        // int8 code (1 byte) per element + one f32 scale per quantized
+        // row; each token contributes two rows (one K, one V).
+        let tiered_value_bytes = self.n_layers
+            * self.n_heads
+            * batch
+            * cold_seq
+            * (value_elems_per_tok + 2 * 4);
+        full - cold_value_bytes + tiered_value_bytes.min(cold_value_bytes)
+    }
 }
 
 #[cfg(test)]
@@ -75,6 +115,25 @@ mod tests {
         let sfa_ctx = qwen_like(Some(16)).max_context_for_budget(budget, w);
         assert!(sfa_ctx as f64 > 1.5 * dense_ctx as f64,
                 "{sfa_ctx} vs {dense_ctx}");
+    }
+
+    #[test]
+    fn tiered_bytes_shrink_monotonically_with_cold_fraction() {
+        let cfg = qwen_like(Some(16));
+        let w = Widths::PAPER;
+        let seq = 8192;
+        // No cold pages -> identical to the flat accounting.
+        assert_eq!(cfg.bytes_tiered(seq, 1, w, 0.0), cfg.bytes(seq, 1, w));
+        let mut prev = cfg.bytes_tiered(seq, 1, w, 0.0);
+        for cf in [0.25, 0.5, 0.75, 1.0] {
+            let b = cfg.bytes_tiered(seq, 1, w, cf);
+            assert!(b < prev, "cold_fraction {cf}: {b} !< {prev}");
+            prev = b;
+        }
+        // Fully cold at fp16 widths: value payload roughly halves,
+        // CSR index/indptr bytes are untouched.
+        let ratio = cfg.bytes_tiered(seq, 1, w, 1.0) as f64 / cfg.bytes(seq, 1, w) as f64;
+        assert!((0.5..0.65).contains(&ratio), "ratio {ratio}");
     }
 
     #[test]

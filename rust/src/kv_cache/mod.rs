@@ -5,10 +5,15 @@
 //!   table per sequence, copy-free append, reference-counted sharing
 //!   ([`PagedKvCache::fork`] / [`PagedKvCache::fork_prefix`], with
 //!   [`PagedKvCache::pin_seq`] pinning sequences out of every eviction
-//!   surface), and token eviction ([`PagedKvCache::retain`] /
+//!   surface), token eviction ([`PagedKvCache::retain`] /
 //!   [`PagedKvCache::evict_tokens`] — compaction that returns whole
 //!   pages to the pool, copy-on-evict safe under `fork`, the substrate
-//!   the serve stack's KV eviction policies prune through).
+//!   the serve stack's KV eviction policies prune through), and a
+//!   two-tier page payload ([`paged::PagePayload`]): cold pages demote
+//!   to per-row int8 at half the budget cost
+//!   ([`PagedKvCache::demote_pages`] / [`PagedKvCache::promote_pages`],
+//!   configured by [`paged::KvTierCfg`]), read tier-transparently via
+//!   [`PagedKvCache::token_slices_tiered`].
 //!   SFA shrinks the K-page payload to top-k codes (App. J memory).
 //! * [`radix`] — the radix/trie prompt-prefix cache mapping prompt
 //!   token prefixes to pinned forked sequences (the serve stack's
@@ -20,5 +25,7 @@ pub mod accounting;
 pub mod paged;
 pub mod radix;
 
-pub use paged::{PageError, PagedKvCache, SeqId, SlotLayout};
+pub use paged::{
+    KvTierCfg, PageError, PagePayload, PagedKvCache, SeqId, SlotLayout, TierPolicy, TierScratch,
+};
 pub use radix::{PrefixCacheStats, PrefixHit, RadixPrefixCache};

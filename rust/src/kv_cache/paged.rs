@@ -1,11 +1,34 @@
 //! Paged KV-cache allocator (vLLM-style), with a dense and a sparse
-//! (SFA top-k codes) page payload.
+//! (SFA top-k codes) page payload and a two-tier page representation.
 //!
 //! The coordinator assigns each live sequence a page table; pages are
 //! allocated on append and freed when the sequence finishes. Prefix
 //! sharing is supported through per-page reference counts (fork).
+//!
+//! Tiering: every page starts **hot** ([`PagePayload::Fp32`]). Cold
+//! pages — old tokens a [`KvTierCfg`] marks past `cold_after`, or
+//! radix-cache entries no lane is borrowing — demote to the per-row
+//! symmetric int8 layout `attention::quant` already implements
+//! ([`PagePayload::Int8`]), at **half** the budget cost. The budget is
+//! therefore tracked internally in half-page *units* (fp32 page = 2
+//! units, int8 page = 1), so the same physical `max_pages` byte budget
+//! holds up to ~2x the nominal tokens once pages go cold. With no
+//! demotion the unit arithmetic is exactly the old page arithmetic —
+//! streams, errors, and counters are bit-for-bit unchanged.
+//!
+//! Reads are tier-transparent: [`PagedKvCache::token_slices_tiered`]
+//! dequantizes cold pages into a caller-borrowed [`TierScratch`] (zero
+//! cost when nothing is demoted), [`PagedKvCache::slot_values`] returns
+//! one owned slot, and appends promote a cold tail page in place
+//! (copy-on-write from a shared cold page dequantizes into the fresh
+//! hot copy). Sparse layouts carry packed u16 index pairs as f32 bit
+//! patterns; those floats are stored verbatim beside the scales and
+//! survive demotion bit-exactly — only genuine values are quantized.
 
 use std::collections::{HashMap, HashSet};
+
+use crate::attention::quant::{dequantize_rows, quantize_rows};
+use crate::util::matrix::Matrix;
 
 /// Sequence handle.
 pub type SeqId = u64;
@@ -51,6 +74,193 @@ impl SlotLayout {
             SlotLayout::Sparse { k, d_v } => k + k.div_ceil(2) + d_v,
         }
     }
+
+    /// Quantizable floats *before* the packed-index region of a slot
+    /// (Sparse: the k top-k key values; Dense: the whole slot — there
+    /// is no index region).
+    pub fn value_head(&self) -> usize {
+        match *self {
+            SlotLayout::Dense { d, d_v } => d + d_v,
+            SlotLayout::Sparse { k, .. } => k,
+        }
+    }
+
+    /// Packed u16 index floats per token — raw bit patterns that must
+    /// never pass through the quantizer.
+    pub fn idx_cols(&self) -> usize {
+        match *self {
+            SlotLayout::Dense { .. } => 0,
+            SlotLayout::Sparse { k, .. } => k.div_ceil(2),
+        }
+    }
+
+    /// Quantizable floats per token: everything except packed indices.
+    pub fn value_cols(&self) -> usize {
+        self.floats_per_token() - self.idx_cols()
+    }
+}
+
+/// Tier-demotion policy for [`KvTierCfg`]: who decides which pages go
+/// cold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierPolicy {
+    /// Positional: everything but the last `cold_after` tokens of a
+    /// lane demotes; unborrowed LRU radix entries demote whole.
+    Lru,
+    /// Attention-mass: the lane's KV policy (H2O family) nominates the
+    /// cold set from its eviction scores *before* it would evict.
+    H2o,
+}
+
+impl TierPolicy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TierPolicy::Lru => "lru",
+            TierPolicy::H2o => "h2o",
+        }
+    }
+}
+
+/// Tiered-KV configuration, parsed from the shared
+/// `family[:key=value,...]` grammar: `tier:cold_after=N,policy=lru|h2o`
+/// (`ServeConfig::kv_tier` / `--kv-tier`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvTierCfg {
+    /// Tokens at the tail of every lane kept hot; everything older is
+    /// demotion-eligible. Must be >= 1 (0 would demote the slot the
+    /// next decode step writes).
+    pub cold_after: usize,
+    pub policy: TierPolicy,
+}
+
+impl Default for KvTierCfg {
+    fn default() -> Self {
+        KvTierCfg { cold_after: 64, policy: TierPolicy::Lru }
+    }
+}
+
+impl KvTierCfg {
+    /// Parse `tier:cold_after=N,policy=lru|h2o` (both keys optional;
+    /// defaults `cold_after=64`, `policy=lru`).
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let raw = crate::util::spec::tokenize(spec)?;
+        if raw.family != "tier" {
+            return Err(format!(
+                "unknown kv-tier family {:?} (expected `tier:cold_after=N,policy=lru|h2o`)",
+                raw.family
+            ));
+        }
+        let mut cfg = KvTierCfg::default();
+        for &(k, v) in &raw.pairs {
+            match k {
+                "cold_after" => {
+                    cfg.cold_after = v
+                        .parse()
+                        .map_err(|_| format!("tier: cold_after must be an integer, got {v:?}"))?;
+                    if cfg.cold_after == 0 {
+                        return Err("tier: cold_after must be >= 1".into());
+                    }
+                }
+                "policy" => {
+                    cfg.policy = match v {
+                        "lru" => TierPolicy::Lru,
+                        "h2o" => TierPolicy::H2o,
+                        other => {
+                            return Err(format!(
+                                "tier: unknown policy {other:?} (expected lru|h2o)"
+                            ))
+                        }
+                    };
+                }
+                other => return Err(format!("tier: unknown key {other:?}")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn label(&self) -> String {
+        format!("tier:cold_after={},policy={}", self.cold_after, self.policy.label())
+    }
+}
+
+/// One page's backing store, by tier.
+#[derive(Debug, Clone)]
+pub enum PagePayload {
+    /// Hot tier: fp32 slots, directly sliceable.
+    Fp32(Vec<f32>),
+    /// Cold tier: per-slot symmetric int8 codes over the quantizable
+    /// columns ([`SlotLayout::value_cols`]); `scales` holds, per slot,
+    /// `[scale, packed idx floats...]` so a sparse layout's u16 index
+    /// bit patterns ride along verbatim and survive round trips
+    /// bit-exactly.
+    Int8 { codes: Vec<i8>, scales: Vec<f32> },
+}
+
+fn payload_units(p: &PagePayload) -> usize {
+    match p {
+        PagePayload::Fp32(_) => 2,
+        PagePayload::Int8 { .. } => 1,
+    }
+}
+
+/// Reconstruct one slot of a cold page as owned fp32 floats.
+fn dequant_slot(codes: &[i8], scales: &[f32], slot: usize, layout: SlotLayout) -> Vec<f32> {
+    let (vh, ic, vc) = (layout.value_head(), layout.idx_cols(), layout.value_cols());
+    let chunk = &scales[slot * (1 + ic)..(slot + 1) * (1 + ic)];
+    let scale = chunk[0];
+    let row = &codes[slot * vc..(slot + 1) * vc];
+    let mut out = vec![0.0f32; layout.floats_per_token()];
+    for (dst, &c) in out[..vh].iter_mut().zip(&row[..vh]) {
+        *dst = c as f32 * scale;
+    }
+    out[vh..vh + ic].copy_from_slice(&chunk[1..]);
+    for (dst, &c) in out[vh + ic..].iter_mut().zip(&row[vh..]) {
+        *dst = c as f32 * scale;
+    }
+    out
+}
+
+/// Reconstruct a whole cold page as an fp32 buffer (the promote /
+/// scratch-fill primitive), built on [`dequantize_rows`].
+fn dequant_page(codes: &[i8], scales: &[f32], page_size: usize, layout: SlotLayout) -> Vec<f32> {
+    let fpt = layout.floats_per_token();
+    let (vh, ic, vc) = (layout.value_head(), layout.idx_cols(), layout.value_cols());
+    let plain: Vec<f32> = (0..page_size).map(|s| scales[s * (1 + ic)]).collect();
+    let m = dequantize_rows(codes, &plain, page_size, vc);
+    let mut out = vec![0.0f32; page_size * fpt];
+    for (s, slot) in out.chunks_mut(fpt).enumerate() {
+        let row = m.row(s);
+        slot[..vh].copy_from_slice(&row[..vh]);
+        slot[vh..vh + ic].copy_from_slice(&scales[s * (1 + ic) + 1..(s + 1) * (1 + ic)]);
+        slot[vh + ic..].copy_from_slice(&row[vh..]);
+    }
+    out
+}
+
+/// Caller-borrowed dequantization scratch for tier-transparent reads:
+/// [`PagedKvCache::token_slices_tiered`] fills it with the cold pages a
+/// walk touches and hands out slices that borrow either the page or the
+/// scratch. Empty (no allocation) while nothing is demoted. Buffers are
+/// snapshots — create a fresh scratch (or [`TierScratch::clear`]) after
+/// any cache mutation.
+#[derive(Debug, Default)]
+pub struct TierScratch {
+    bufs: HashMap<u32, Vec<f32>>,
+}
+
+impl TierScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.bufs.clear();
+    }
+
+    /// Cold pages currently materialized in this scratch.
+    pub fn pages_buffered(&self) -> usize {
+        self.bufs.len()
+    }
 }
 
 /// A paged KV cache for one layer-head group.
@@ -58,22 +268,38 @@ impl SlotLayout {
 pub struct PagedKvCache {
     pub page_size: usize,
     pub layout: SlotLayout,
-    /// Backing store: one Vec<f32> per page (allocated lazily).
-    pages: Vec<Vec<f32>>,
+    /// Backing store: one payload per page (allocated lazily).
+    pages: Vec<PagePayload>,
     free_list: Vec<u32>,
     ref_counts: Vec<u32>,
     /// seq -> (page ids, token count)
     tables: HashMap<SeqId, (Vec<u32>, usize)>,
     /// Sequences pinned out of `retain`/`evict_tokens`/`free` (prefix
-    /// cache entries — see [`crate::kv_cache::radix`]).
+    /// cache entries — see [`crate::kv_cache::radix`]). Demotion is a
+    /// representation change, not an eviction: pinned sequences may
+    /// still demote/promote.
     pinned: HashSet<SeqId>,
     next_seq: SeqId,
     max_pages: usize,
+    /// Budget actually consumed, in half-page units (fp32 page = 2,
+    /// int8 page = 1, free-listed = 0) against `2 * max_pages`.
+    units_in_use: usize,
+    /// In-use pages currently on the int8 tier.
+    int8_in_use: usize,
     /// Cumulative successful page allocations (appends + rebuilds).
     alloc_total: usize,
     /// Cumulative pages consumed by `retain` rebuilds — the share of
     /// `alloc_total` that is compaction traffic, not new tokens.
     rebuild_total: usize,
+    /// Cumulative demote / promote transitions (promote counts both
+    /// in-place promotions and copy-on-write re-materializations).
+    demote_total: usize,
+    promote_total: usize,
+    /// Worst observed per-element |v - dequant(quant(v))| across every
+    /// demotion, and the same error as a fraction of the contractual
+    /// half-step bound `scale/2` (<= 1.0 by construction).
+    tier_max_err: f32,
+    tier_max_ratio: f32,
 }
 
 impl PagedKvCache {
@@ -88,26 +314,140 @@ impl PagedKvCache {
             pinned: HashSet::new(),
             next_seq: 0,
             max_pages,
+            units_in_use: 0,
+            int8_in_use: 0,
             alloc_total: 0,
             rebuild_total: 0,
+            demote_total: 0,
+            promote_total: 0,
+            tier_max_err: 0.0,
+            tier_max_ratio: 0.0,
         }
     }
 
+    /// Allocate one hot page. The budget check is in half-page units,
+    /// which reduces exactly to the old `max_pages` check while nothing
+    /// is demoted; once cold pages hold units back, the physical page
+    /// vector may legitimately grow past `max_pages` (same bytes, more
+    /// pages).
     fn alloc_page(&mut self) -> Result<u32, PageError> {
+        if self.units_in_use + 2 > 2 * self.max_pages {
+            return Err(PageError::OutOfPages);
+        }
+        let fpt = self.layout.floats_per_token();
         if let Some(p) = self.free_list.pop() {
             self.ref_counts[p as usize] = 1;
+            // Recycled pages come back hot; a buffer freed while cold
+            // is re-materialized at full width (contents are dead —
+            // every slot is rewritten before it becomes readable).
+            if matches!(self.pages[p as usize], PagePayload::Int8 { .. }) {
+                self.pages[p as usize] = PagePayload::Fp32(vec![0.0; self.page_size * fpt]);
+            }
+            self.units_in_use += 2;
             self.alloc_total += 1;
             return Ok(p);
         }
-        if self.pages.len() >= self.max_pages {
-            return Err(PageError::OutOfPages);
-        }
         let id = self.pages.len() as u32;
         self.pages
-            .push(vec![0.0; self.page_size * self.layout.floats_per_token()]);
+            .push(PagePayload::Fp32(vec![0.0; self.page_size * fpt]));
         self.ref_counts.push(1);
+        self.units_in_use += 2;
         self.alloc_total += 1;
         Ok(id)
+    }
+
+    /// Drop one reference; on the last, return the page (and its units)
+    /// to the pool. Returns true when the page was actually freed.
+    fn release_page(&mut self, p: u32) -> bool {
+        self.ref_counts[p as usize] -= 1;
+        if self.ref_counts[p as usize] > 0 {
+            return false;
+        }
+        self.units_in_use -= payload_units(&self.pages[p as usize]);
+        if matches!(self.pages[p as usize], PagePayload::Int8 { .. }) {
+            self.int8_in_use -= 1;
+        }
+        self.free_list.push(p);
+        true
+    }
+
+    /// Borrow a page's hot buffer; panics on a cold page (internal
+    /// callers must promote or go through the tiered read path).
+    fn page_f32(&self, page: u32) -> &[f32] {
+        match &self.pages[page as usize] {
+            PagePayload::Fp32(buf) => buf,
+            PagePayload::Int8 { .. } => panic!(
+                "page {page} is demoted to int8 — read via slot_values/token_slices_tiered \
+                 or promote_pages first"
+            ),
+        }
+    }
+
+    /// Demote one hot page to int8. Returns false when already cold.
+    fn demote_page(&mut self, page: u32) -> bool {
+        let fpt = self.layout.floats_per_token();
+        let (vh, ic, vc) =
+            (self.layout.value_head(), self.layout.idx_cols(), self.layout.value_cols());
+        let (codes, scales, max_err, max_ratio) = {
+            let buf = match &self.pages[page as usize] {
+                PagePayload::Fp32(buf) => buf,
+                PagePayload::Int8 { .. } => return false,
+            };
+            // Gather the quantizable columns (skipping packed-index
+            // floats) into one matrix row per slot.
+            let mut m = Matrix::zeros(self.page_size, vc);
+            for (s, slot) in buf.chunks(fpt).enumerate() {
+                let row = m.row_mut(s);
+                row[..vh].copy_from_slice(&slot[..vh]);
+                row[vh..].copy_from_slice(&slot[vh + ic..]);
+            }
+            let (codes, plain) = quantize_rows(&m);
+            let mut max_err = 0f32;
+            let mut max_ratio = 0f32;
+            for (s, &scale) in plain.iter().enumerate() {
+                let crow = &codes[s * vc..(s + 1) * vc];
+                for (&v, &c) in m.row(s).iter().zip(crow) {
+                    let err = (v - c as f32 * scale).abs();
+                    max_err = max_err.max(err);
+                    if scale > 0.0 {
+                        max_ratio = max_ratio.max(err / (0.5 * scale));
+                    }
+                }
+            }
+            // Interleave [scale, idx floats...] per slot so packed
+            // sparse indices survive bit-exactly.
+            let mut scales = Vec::with_capacity(self.page_size * (1 + ic));
+            for (s, slot) in buf.chunks(fpt).enumerate() {
+                scales.push(plain[s]);
+                scales.extend_from_slice(&slot[vh..vh + ic]);
+            }
+            (codes, scales, max_err, max_ratio)
+        };
+        self.pages[page as usize] = PagePayload::Int8 { codes, scales };
+        self.units_in_use -= 1;
+        self.int8_in_use += 1;
+        self.demote_total += 1;
+        self.tier_max_err = self.tier_max_err.max(max_err);
+        self.tier_max_ratio = self.tier_max_ratio.max(max_ratio);
+        true
+    }
+
+    /// Promote one cold page back to fp32 in place. Never fails: a
+    /// promotion may transiently overshoot the unit budget — page
+    /// *allocation* is the enforced boundary. Returns false when
+    /// already hot.
+    fn promote_page(&mut self, page: u32) -> bool {
+        let buf = match &self.pages[page as usize] {
+            PagePayload::Int8 { codes, scales } => {
+                dequant_page(codes, scales, self.page_size, self.layout)
+            }
+            PagePayload::Fp32(_) => return false,
+        };
+        self.pages[page as usize] = PagePayload::Fp32(buf);
+        self.units_in_use += 1;
+        self.int8_in_use -= 1;
+        self.promote_total += 1;
+        true
     }
 
     /// Register a new sequence; returns its handle.
@@ -137,48 +477,199 @@ impl PagedKvCache {
             let (table, _) = self.tables.get(&seq).unwrap();
             table[n_pages - 1]
         };
-        // Copy-on-write if the page is shared.
+        // Copy-on-write if the page is shared (tier-transparently: a
+        // shared cold page dequantizes straight into the hot copy).
         let page_id = if self.ref_counts[page_id as usize] > 1 {
             let copy = self.alloc_page()?;
             self.ref_counts[page_id as usize] -= 1;
-            let src = self.pages[page_id as usize].clone();
-            self.pages[copy as usize].copy_from_slice(&src);
+            let (src, was_cold) = match &self.pages[page_id as usize] {
+                PagePayload::Fp32(buf) => (buf.clone(), false),
+                PagePayload::Int8 { codes, scales } => {
+                    (dequant_page(codes, scales, self.page_size, self.layout), true)
+                }
+            };
+            if was_cold {
+                self.promote_total += 1;
+            }
+            match &mut self.pages[copy as usize] {
+                PagePayload::Fp32(buf) => buf.copy_from_slice(&src),
+                PagePayload::Int8 { .. } => unreachable!("alloc_page returns hot pages"),
+            }
             let (table, _) = self.tables.get_mut(&seq).unwrap();
             *table.last_mut().unwrap() = copy;
             copy
         } else {
+            // Exclusively-owned cold tail page: promote in place before
+            // the write lands.
+            if matches!(self.pages[page_id as usize], PagePayload::Int8 { .. }) {
+                self.promote_page(page_id);
+            }
             page_id
         };
-        let page = &mut self.pages[page_id as usize];
-        page[slot * fpt..(slot + 1) * fpt].copy_from_slice(payload);
+        match &mut self.pages[page_id as usize] {
+            PagePayload::Fp32(page) => {
+                page[slot * fpt..(slot + 1) * fpt].copy_from_slice(payload)
+            }
+            PagePayload::Int8 { .. } => unreachable!("append target was promoted above"),
+        }
         let (_, len) = self.tables.get_mut(&seq).unwrap();
         *len += 1;
         Ok(())
     }
 
-    /// Read one token slot.
+    /// Read one token slot (hot pages only — panics on a demoted page;
+    /// use [`PagedKvCache::slot_values`] for tier-transparent reads).
     pub fn get(&self, seq: SeqId, pos: usize) -> Result<&[f32], PageError> {
         let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
         assert!(pos < *len, "pos {pos} >= len {len}");
         let fpt = self.layout.floats_per_token();
         let page = table[pos / self.page_size];
         let slot = pos % self.page_size;
-        Ok(&self.pages[page as usize][slot * fpt..(slot + 1) * fpt])
+        Ok(&self.page_f32(page)[slot * fpt..(slot + 1) * fpt])
+    }
+
+    /// Read one token slot tier-transparently: hot slots are copied,
+    /// cold slots dequantized (packed index floats verbatim).
+    pub fn slot_values(&self, seq: SeqId, pos: usize) -> Result<Vec<f32>, PageError> {
+        let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
+        assert!(pos < *len, "pos {pos} >= len {len}");
+        let fpt = self.layout.floats_per_token();
+        let page = table[pos / self.page_size];
+        let slot = pos % self.page_size;
+        match &self.pages[page as usize] {
+            PagePayload::Fp32(buf) => Ok(buf[slot * fpt..(slot + 1) * fpt].to_vec()),
+            PagePayload::Int8 { codes, scales } => {
+                Ok(dequant_slot(codes, scales, slot, self.layout))
+            }
+        }
     }
 
     /// Borrow every token slot of a sequence in order, one slice per
     /// token — the decode path's scan view (attention sessions walk the
-    /// whole cached sequence per step).
+    /// whole cached sequence per step). Hot pages only — panics on a
+    /// demoted page; mixed-tier lanes go through
+    /// [`PagedKvCache::token_slices_tiered`].
     pub fn token_slices(&self, seq: SeqId) -> Result<Vec<&[f32]>, PageError> {
         let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
         let fpt = self.layout.floats_per_token();
         let mut out = Vec::with_capacity(*len);
         for pos in 0..*len {
-            let page = table[pos / self.page_size] as usize;
+            let page = table[pos / self.page_size];
             let slot = pos % self.page_size;
-            out.push(&self.pages[page][slot * fpt..(slot + 1) * fpt]);
+            out.push(&self.page_f32(page)[slot * fpt..(slot + 1) * fpt]);
         }
         Ok(out)
+    }
+
+    /// Tier-transparent [`PagedKvCache::token_slices`]: cold pages the
+    /// walk touches dequantize once into the caller's [`TierScratch`];
+    /// the returned slices borrow either the page or the scratch. While
+    /// nothing is demoted this is exactly `token_slices` (the scratch
+    /// stays empty). The scratch holds snapshots — reuse it across
+    /// *reads* freely, refresh it after any cache mutation.
+    pub fn token_slices_tiered<'a>(
+        &'a self,
+        seq: SeqId,
+        scratch: &'a mut TierScratch,
+    ) -> Result<Vec<&'a [f32]>, PageError> {
+        let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
+        let fpt = self.layout.floats_per_token();
+        // Phase 1: materialize every cold page the walk touches.
+        for &p in &table[..len.div_ceil(self.page_size)] {
+            if let PagePayload::Int8 { codes, scales } = &self.pages[p as usize] {
+                scratch
+                    .bufs
+                    .entry(p)
+                    .or_insert_with(|| dequant_page(codes, scales, self.page_size, self.layout));
+            }
+        }
+        // Phase 2: build the walk over shared reborrows.
+        let bufs = &scratch.bufs;
+        let mut out = Vec::with_capacity(*len);
+        for pos in 0..*len {
+            let p = table[pos / self.page_size];
+            let slot = pos % self.page_size;
+            let base: &[f32] = match &self.pages[p as usize] {
+                PagePayload::Fp32(buf) => buf,
+                PagePayload::Int8 { .. } => &bufs[&p],
+            };
+            out.push(&base[slot * fpt..(slot + 1) * fpt]);
+        }
+        Ok(out)
+    }
+
+    /// Demote every fully-cold page of `seq` to int8, keeping the last
+    /// `keep_hot` tokens hot. Pages spanning the hot boundary stay hot;
+    /// `keep_hot == 0` demotes the partial tail page too (the radix
+    /// cache's whole-entry demotion). Allowed on pinned sequences —
+    /// demotion is a representation change, not an eviction. Shared
+    /// (forked) pages demote in place for every sharer; reads stay
+    /// tier-transparent and the first append copy-on-writes hot.
+    /// Returns the number of pages that transitioned.
+    pub fn demote_pages(&mut self, seq: SeqId, keep_hot: usize) -> Result<usize, PageError> {
+        let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
+        let cold_tokens = len.saturating_sub(keep_hot);
+        let cold_pages = if keep_hot == 0 {
+            cold_tokens.div_ceil(self.page_size)
+        } else {
+            cold_tokens / self.page_size
+        };
+        let targets: Vec<u32> = table[..cold_pages.min(table.len())].to_vec();
+        let mut n = 0;
+        for p in targets {
+            if self.demote_page(p) {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Demote every page of `seq` whose in-range tokens are *all* in
+    /// `cold` (the KV-policy verdict path: H2O-family scores nominate
+    /// cold tokens; only wholly-cold pages transition). Positions out
+    /// of range are ignored. Returns pages transitioned.
+    pub fn demote_token_set(&mut self, seq: SeqId, cold: &[u32]) -> Result<usize, PageError> {
+        let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
+        let len = *len;
+        let mut is_cold = vec![false; len];
+        for &pos in cold {
+            if (pos as usize) < len {
+                is_cold[pos as usize] = true;
+            }
+        }
+        let mut targets = Vec::new();
+        for (pi, &p) in table.iter().enumerate() {
+            let start = pi * self.page_size;
+            if start >= len {
+                break;
+            }
+            let end = (start + self.page_size).min(len);
+            if is_cold[start..end].iter().all(|&c| c) {
+                targets.push(p);
+            }
+        }
+        let mut n = 0;
+        for p in targets {
+            if self.demote_page(p) {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Promote every cold page of `seq` back to fp32 (the radix cache's
+    /// borrow path: a lane about to read a cached prefix every step
+    /// re-heats it once). Never fails; returns pages transitioned.
+    pub fn promote_pages(&mut self, seq: SeqId) -> Result<usize, PageError> {
+        let (table, _) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
+        let targets: Vec<u32> = table.clone();
+        let mut n = 0;
+        for p in targets {
+            if self.promote_page(p) {
+                n += 1;
+            }
+        }
+        Ok(n)
     }
 
     /// Fork a sequence sharing all current pages (prefix caching).
@@ -189,12 +680,12 @@ impl PagedKvCache {
 
     /// Fork only the first `n_tokens` of a sequence: the new sequence
     /// shares the `⌈n_tokens / page_size⌉` pages covering that prefix
-    /// (refcounted — never copied). A partially filled last page is
-    /// shared too: its beyond-prefix slots are unreachable (reads are
-    /// length-bounded) and the first append into it copy-on-writes
-    /// while the page is shared. This is the radix prefix cache's hit
-    /// path: seed a lane with a cached prompt prefix, then append only
-    /// the suffix.
+    /// (refcounted — never copied, hot or cold). A partially filled
+    /// last page is shared too: its beyond-prefix slots are unreachable
+    /// (reads are length-bounded) and the first append into it
+    /// copy-on-writes while the page is shared. This is the radix
+    /// prefix cache's hit path: seed a lane with a cached prompt
+    /// prefix, then append only the suffix.
     pub fn fork_prefix(&mut self, seq: SeqId, n_tokens: usize) -> Result<SeqId, PageError> {
         let (table, len) = self.tables.get(&seq).ok_or(PageError::UnknownSeq)?;
         assert!(n_tokens <= *len, "fork_prefix of {n_tokens} tokens from a {len}-token seq");
@@ -212,7 +703,8 @@ impl PagedKvCache {
     /// Pin a sequence: `retain`/`evict_tokens`/`free` refuse it until
     /// [`PagedKvCache::unpin_seq`]. The radix prefix cache pins its
     /// entries so no eviction path can prune pages a cached prefix
-    /// still references.
+    /// still references. Tier transitions remain allowed — a pinned
+    /// entry can go cold and come back without ever being evictable.
     pub fn pin_seq(&mut self, seq: SeqId) -> Result<(), PageError> {
         if !self.tables.contains_key(&seq) {
             return Err(PageError::UnknownSeq);
@@ -244,10 +736,7 @@ impl PagedKvCache {
         let (table, _) = self.tables.remove(&seq).ok_or(PageError::UnknownSeq)?;
         let mut freed = 0;
         for p in table {
-            let rc = &mut self.ref_counts[p as usize];
-            *rc -= 1;
-            if *rc == 0 {
-                self.free_list.push(p);
+            if self.release_page(p) {
                 freed += 1;
             }
         }
@@ -260,9 +749,12 @@ impl PagedKvCache {
     /// last reference drops go back to the pool. Pages shared with a
     /// fork are never mutated (copy-on-evict): the sequence is rebuilt
     /// onto exclusively-owned pages, so forks keep reading the original
-    /// data. Returns how many pages the call returned to the
-    /// allocatable budget (0 when the rebuild consumed as many fresh
-    /// pages as it released, which can happen under heavy sharing).
+    /// data. Cold source pages are read tier-transparently and the
+    /// rebuilt sequence comes back fully hot (a tier policy may
+    /// re-demote it later). Returns how many pages the call returned to
+    /// the allocatable budget (0 when the rebuild consumed as many
+    /// fresh pages as it released, which can happen under heavy
+    /// sharing).
     ///
     /// Fails with [`PageError::OutOfPages`] — leaving the sequence
     /// untouched — only when every surviving page is fork-shared *and*
@@ -283,28 +775,38 @@ impl PagedKvCache {
             return Ok(0); // ascending + in-range + full length == identity
         }
         let free_before = self.pages_free();
-        // Feasibility before mutating anything: the rebuild needs
-        // `new_pages` allocations, fed by the pool plus whatever this
-        // sequence exclusively owns (shared pages only drop a ref).
+        // Feasibility before mutating anything, in half-page units: the
+        // rebuild needs `2 * new_pages` hot units, fed by the pool plus
+        // whatever this sequence exclusively owns (shared pages only
+        // drop a ref; cold exclusives give back one unit, hot two).
         let new_pages = keep.len().div_ceil(self.page_size);
-        let reclaimable =
-            table.iter().filter(|&&p| self.ref_counts[p as usize] == 1).count();
-        if new_pages > self.pages_free() + reclaimable {
+        let reclaimable_units: usize = table
+            .iter()
+            .filter(|&&p| self.ref_counts[p as usize] == 1)
+            .map(|&p| payload_units(&self.pages[p as usize]))
+            .sum();
+        let pool_units = (2 * self.max_pages).saturating_sub(self.units_in_use);
+        if 2 * new_pages > pool_units + reclaimable_units {
             return Err(PageError::OutOfPages);
         }
-        // Gather the surviving payloads, release the old table, rebuild.
+        // Gather the surviving payloads tier-transparently (each cold
+        // page dequantizes at most once), release the old table,
+        // rebuild onto hot pages.
         let mut kept: Vec<f32> = Vec::with_capacity(keep.len() * fpt);
+        let mut cold_bufs: HashMap<u32, Vec<f32>> = HashMap::new();
         for &pos in keep {
-            let page = table[pos / self.page_size] as usize;
+            let page = table[pos / self.page_size];
             let slot = pos % self.page_size;
-            kept.extend_from_slice(&self.pages[page][slot * fpt..(slot + 1) * fpt]);
+            let base: &[f32] = match &self.pages[page as usize] {
+                PagePayload::Fp32(buf) => buf,
+                PagePayload::Int8 { codes, scales } => cold_bufs
+                    .entry(page)
+                    .or_insert_with(|| dequant_page(codes, scales, self.page_size, self.layout)),
+            };
+            kept.extend_from_slice(&base[slot * fpt..(slot + 1) * fpt]);
         }
         for &p in &table {
-            let rc = &mut self.ref_counts[p as usize];
-            *rc -= 1;
-            if *rc == 0 {
-                self.free_list.push(p);
-            }
+            self.release_page(p);
         }
         let mut new_table = Vec::with_capacity(new_pages);
         for _ in 0..new_pages {
@@ -312,7 +814,10 @@ impl PagedKvCache {
         }
         self.rebuild_total += new_pages;
         for (i, chunk) in kept.chunks(self.page_size * fpt).enumerate() {
-            self.pages[new_table[i] as usize][..chunk.len()].copy_from_slice(chunk);
+            match &mut self.pages[new_table[i] as usize] {
+                PagePayload::Fp32(buf) => buf[..chunk.len()].copy_from_slice(chunk),
+                PagePayload::Int8 { .. } => unreachable!("alloc_page returns hot pages"),
+            }
         }
         *self.tables.get_mut(&seq).unwrap() = (new_table, keep.len());
         Ok(self.pages_free().saturating_sub(free_before))
@@ -342,24 +847,50 @@ impl PagedKvCache {
         self.tables.get(&seq).map(|(t, _)| t.len())
     }
 
+    /// Pages of one sequence currently on the int8 tier.
+    pub fn seq_pages_demoted(&self, seq: SeqId) -> Option<usize> {
+        self.tables.get(&seq).map(|(t, _)| {
+            t.iter()
+                .filter(|&&p| matches!(self.pages[p as usize], PagePayload::Int8 { .. }))
+                .count()
+        })
+    }
+
     /// Hard page cap this cache was constructed with.
     pub fn max_pages(&self) -> usize {
         self.max_pages
     }
 
-    /// Pages still allocatable before [`PageError::OutOfPages`]: the
-    /// recycled free list plus the never-allocated headroom below the
-    /// cap.
+    /// Whole hot pages still allocatable before
+    /// [`PageError::OutOfPages`]: the unit headroom below the cap,
+    /// floored to full (2-unit) pages. Equals the classic
+    /// `free list + never-allocated headroom` while nothing is demoted.
     pub fn pages_free(&self) -> usize {
-        self.free_list.len() + (self.max_pages - self.pages.len())
+        (2 * self.max_pages).saturating_sub(self.units_in_use) / 2
     }
 
     pub fn pages_in_use(&self) -> usize {
         self.pages.len() - self.free_list.len()
     }
 
+    /// In-use pages currently demoted to the int8 tier.
+    pub fn pages_demoted(&self) -> usize {
+        self.int8_in_use
+    }
+
+    /// Budget consumed in half-page units (fp32 page = 2, int8 = 1)
+    /// against `2 * max_pages` — the tiered capacity bookkeeping the
+    /// bench reports effective-capacity gain from.
+    pub fn units_in_use(&self) -> usize {
+        self.units_in_use
+    }
+
     pub fn bytes_in_use(&self) -> usize {
-        self.pages_in_use() * self.page_size * self.layout.floats_per_token() * 4
+        let hot_bytes = self.page_size * self.layout.floats_per_token() * 4;
+        let cold_bytes = self.page_size * self.layout.value_cols()
+            + self.page_size * (1 + self.layout.idx_cols()) * 4;
+        let hot = self.pages_in_use() - self.int8_in_use;
+        hot * hot_bytes + self.int8_in_use * cold_bytes
     }
 
     /// Cumulative successful page allocations over the cache's life
@@ -374,6 +905,29 @@ impl PagedKvCache {
     /// Cumulative pages consumed by `retain`/`evict_tokens` rebuilds.
     pub fn pages_rebuild_total(&self) -> usize {
         self.rebuild_total
+    }
+
+    /// Cumulative hot→cold page transitions.
+    pub fn pages_demote_total(&self) -> usize {
+        self.demote_total
+    }
+
+    /// Cumulative cold→hot transitions (in-place promotions plus
+    /// copy-on-write re-materializations of shared cold pages).
+    pub fn pages_promote_total(&self) -> usize {
+        self.promote_total
+    }
+
+    /// Worst per-element absolute dequantization error observed across
+    /// every demotion so far (the accuracy contract's empirical side).
+    pub fn tier_max_dequant_error(&self) -> f32 {
+        self.tier_max_err
+    }
+
+    /// The same worst error as a fraction of the contractual `scale/2`
+    /// half-step bound — <= 1.0 by construction of `quantize_rows`.
+    pub fn tier_max_error_ratio(&self) -> f32 {
+        self.tier_max_ratio
     }
 }
 
@@ -789,6 +1343,343 @@ mod tests {
                 expect_pages += lens[i].div_ceil(page_size);
             }
             assert_eq!(c.pages_in_use(), expect_pages);
+        });
+    }
+
+    // ---- tiered-page tests (PR 10) ----
+
+    /// A slot payload with distinct per-column values so quantization
+    /// error is visible and positional mixups impossible.
+    fn graded(layout: SlotLayout, tag: f32) -> Vec<f32> {
+        (0..layout.floats_per_token())
+            .map(|j| tag + 0.13 * j as f32 - 1.7)
+            .collect()
+    }
+
+    /// Demoted pages read back within the quantization contract: each
+    /// element within `scale/2` of the original (ratio <= 1), via both
+    /// `slot_values` and the scratch-backed `token_slices_tiered`.
+    #[test]
+    fn demote_then_read_roundtrip_within_bound() {
+        let layout = SlotLayout::Dense { d: 3, d_v: 2 };
+        let mut c = PagedKvCache::new(8, 4, layout);
+        let s = c.create_seq();
+        let originals: Vec<Vec<f32>> = (0..8).map(|i| graded(layout, i as f32)).collect();
+        for p in &originals {
+            c.append(s, p).unwrap();
+        }
+        assert_eq!(c.demote_pages(s, 0).unwrap(), 2);
+        assert_eq!(c.pages_demoted(), 2);
+        assert_eq!(c.seq_pages_demoted(s), Some(2));
+        let mut scratch = TierScratch::new();
+        let slots = c.token_slices_tiered(s, &mut scratch).unwrap();
+        assert_eq!(scratch.pages_buffered(), 2);
+        for (i, orig) in originals.iter().enumerate() {
+            let via_slot = c.slot_values(s, i).unwrap();
+            let maxabs = orig.iter().fold(0f32, |a, &b| a.max(b.abs()));
+            let half_step = 0.5 * maxabs / 127.0 + 1e-6;
+            for ((&v, &a), &b) in orig.iter().zip(&via_slot).zip(slots[i]) {
+                assert!((v - a).abs() <= half_step, "slot_values outside bound: {v} vs {a}");
+                assert_eq!(a, b, "both tiered read paths must agree exactly");
+            }
+        }
+        assert!(c.tier_max_error_ratio() <= 1.0 + 1e-4, "contract: err <= scale/2");
+        assert!(c.tier_max_dequant_error() > 0.0, "graded data must quantize lossily");
+    }
+
+    /// Demotion returns budget: cold pages cost half a page, so a full
+    /// cache gains headroom for new hot pages without evicting a token,
+    /// and the enlarged footprint drains back to a full pool.
+    #[test]
+    fn demote_frees_budget_and_raises_effective_capacity() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(4, 2, layout);
+        let s = c.create_seq();
+        for i in 0..8 {
+            c.append(s, &graded(layout, i as f32)).unwrap();
+        }
+        assert_eq!(c.pages_free(), 0);
+        assert_eq!(c.append(s, &graded(layout, 8.0)), Err(PageError::OutOfPages));
+        // Demote everything: 4 pages x 1 unit = half the budget back.
+        assert_eq!(c.demote_pages(s, 0).unwrap(), 4);
+        assert_eq!(c.pages_free(), 2);
+        assert_eq!(c.units_in_use(), 4);
+        // The freed headroom admits 4 more tokens (2 hot pages) at the
+        // same max_pages — effective capacity 12 tokens vs nominal 8.
+        for i in 8..12 {
+            c.append(s, &graded(layout, i as f32)).unwrap();
+        }
+        assert_eq!(c.pages_free(), 0);
+        assert_eq!(c.append(s, &graded(layout, 12.0)), Err(PageError::OutOfPages));
+        assert_eq!(c.seq_len(s), Some(12));
+        assert_eq!(c.pages_in_use(), 6, "physical pages legitimately exceed max_pages");
+        // Old cold tokens and new hot tokens both read back.
+        for i in 0..12 {
+            let v = c.slot_values(s, i).unwrap();
+            let orig = graded(layout, i as f32);
+            let half = 0.5 * orig.iter().fold(0f32, |a, &b| a.max(b.abs())) / 127.0 + 1e-6;
+            assert!((v[0] - orig[0]).abs() <= half);
+        }
+        // Drain: all units come back.
+        c.free(s).unwrap();
+        assert_eq!(c.pages_in_use(), 0);
+        assert_eq!(c.units_in_use(), 0);
+        assert_eq!(c.pages_free(), 4);
+    }
+
+    /// Sparse layouts carry packed u16 index pairs as raw f32 bit
+    /// patterns; a demote/promote round trip must preserve those bits
+    /// exactly (a quantized index would address the wrong feature).
+    #[test]
+    fn sparse_packed_indices_survive_demotion_bit_exactly() {
+        let layout = SlotLayout::Sparse { k: 4, d_v: 3 }; // idx_cols = 2
+        let mut c = PagedKvCache::new(8, 2, layout);
+        let s = c.create_seq();
+        let idx_bits: [u32; 2] = [0x1234_5678, 0xABCD_0001];
+        let mut slots = Vec::new();
+        for i in 0..4 {
+            let mut p = graded(layout, i as f32);
+            // Overwrite the index region (cols k..k+2) with bit patterns
+            // (including a signaling-NaN-adjacent one).
+            p[4] = f32::from_bits(idx_bits[0] ^ i);
+            p[5] = f32::from_bits(idx_bits[1] ^ i);
+            slots.push(p);
+        }
+        for p in &slots {
+            c.append(s, p).unwrap();
+        }
+        assert_eq!(c.demote_pages(s, 0).unwrap(), 2);
+        for (i, orig) in slots.iter().enumerate() {
+            let v = c.slot_values(s, i).unwrap();
+            assert_eq!(v[4].to_bits(), orig[4].to_bits(), "idx float 0 must be bit-exact");
+            assert_eq!(v[5].to_bits(), orig[5].to_bits(), "idx float 1 must be bit-exact");
+        }
+        // Promote back in place: still bit-exact.
+        assert_eq!(c.promote_pages(s).unwrap(), 2);
+        assert_eq!(c.pages_demoted(), 0);
+        for (i, orig) in slots.iter().enumerate() {
+            let v = c.get(s, i).unwrap();
+            assert_eq!(v[4].to_bits(), orig[4].to_bits());
+            assert_eq!(v[5].to_bits(), orig[5].to_bits());
+        }
+    }
+
+    /// Satellite 3: fork_prefix over a mixed-tier prefix — shared cold
+    /// pages stay shared, an append into the shared cold tail page
+    /// copy-on-writes *hot* while the parent's page stays cold, and the
+    /// parent promotes back losslessly w.r.t. its own cold copy.
+    #[test]
+    fn fork_prefix_of_mixed_tier_prefix_and_cow_from_cold() {
+        let layout = SlotLayout::Dense { d: 2, d_v: 1 };
+        let mut c = PagedKvCache::new(16, 2, layout);
+        let a = c.create_seq();
+        for i in 0..6 {
+            c.append(a, &graded(layout, i as f32)).unwrap();
+        }
+        // Demote the first 2 of 3 pages: mixed-tier parent.
+        assert_eq!(c.demote_pages(a, 2).unwrap(), 2);
+        assert_eq!(c.seq_pages_demoted(a), Some(2));
+        // Fork 3 tokens: ceil(3/2) = 2 shared pages, second cold+partial.
+        let b = c.fork_prefix(a, 3).unwrap();
+        assert_eq!(c.pages_in_use(), 3, "fork allocates nothing");
+        let parent_view: Vec<Vec<f32>> =
+            (0..3).map(|i| c.slot_values(a, i).unwrap()).collect();
+        // Child appends into the shared cold partial page: CoW must
+        // land hot without touching the parent's cold page.
+        c.append(b, &graded(layout, 42.0)).unwrap();
+        assert_eq!(c.seq_pages_demoted(a), Some(2), "parent pages stay cold");
+        assert_eq!(c.seq_pages_demoted(b), Some(1), "child still shares cold page 0");
+        assert_eq!(c.pages_promote_total(), 1, "CoW from cold counts as a promote");
+        let cow = c.slot_values(b, 3).unwrap();
+        assert_eq!(cow, graded(layout, 42.0), "CoW page is hot: write is exact");
+        // The child's view of the shared prefix equals the parent's.
+        for (i, pv) in parent_view.iter().enumerate() {
+            assert_eq!(&c.slot_values(b, i).unwrap(), pv);
+        }
+        // Promoting the parent reproduces its cold-read view exactly
+        // (dequantization is deterministic).
+        c.promote_pages(a).unwrap();
+        for (i, pv) in parent_view.iter().enumerate() {
+            assert_eq!(c.get(a, i).unwrap(), &pv[..]);
+        }
+        c.free(a).unwrap();
+        c.free(b).unwrap();
+        assert_eq!(c.units_in_use(), 0);
+        assert_eq!(c.pages_free(), 16);
+    }
+
+    /// Satellite 3: a pinned radix-style entry demoted to int8 stays
+    /// borrowable — fork_prefix works off the cold entry, reads flow
+    /// through the tiered paths, eviction surfaces still refuse, and
+    /// promote-on-borrow restores hot reads.
+    #[test]
+    fn pinned_entry_demotes_and_stays_borrowable() {
+        let layout = SlotLayout::Dense { d: 2, d_v: 2 };
+        let mut c = PagedKvCache::new(32, 2, layout);
+        let parent = c.create_seq();
+        for i in 0..6 {
+            c.append(parent, &graded(layout, i as f32)).unwrap();
+        }
+        let entry = c.fork_prefix(parent, 6).unwrap();
+        c.pin_seq(entry).unwrap();
+        c.free(parent).unwrap();
+        // Pinned entries demote (tiering is not eviction)...
+        assert_eq!(c.demote_pages(entry, 0).unwrap(), 3);
+        assert!(c.is_pinned(entry));
+        // ...but still refuse every true eviction surface.
+        assert_eq!(c.retain(entry, &[0]).unwrap_err(), PageError::PinnedSeq);
+        assert_eq!(c.free(entry).unwrap_err(), PageError::PinnedSeq);
+        // A lane can still borrow the cold entry and extend it.
+        let lane = c.fork_prefix(entry, 6).unwrap();
+        c.append(lane, &graded(layout, 9.0)).unwrap();
+        let mut scratch = TierScratch::new();
+        let slots = c.token_slices_tiered(lane, &mut scratch).unwrap();
+        assert_eq!(slots.len(), 7);
+        // Promote-on-borrow: the entry re-heats in place; the lane's
+        // already-forked cold view is unaffected (pages are shared, so
+        // the promotion re-heats the lane's prefix too).
+        c.promote_pages(entry).unwrap();
+        assert_eq!(c.seq_pages_demoted(entry), Some(0));
+        assert_eq!(c.token_slices(entry).unwrap().len(), 6);
+        c.free(lane).unwrap();
+        c.unpin_seq(entry).unwrap();
+        c.free(entry).unwrap();
+        assert_eq!(c.units_in_use(), 0);
+    }
+
+    /// Satellite 3: the conservation law extended to tier counters —
+    /// after demotes, promotes, CoW, retain, and a full drain, the pool
+    /// is whole again and every counter agrees.
+    #[test]
+    fn tier_conservation_after_full_drain() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(16, 2, layout);
+        let a = c.create_seq();
+        for i in 0..8 {
+            c.append(a, &graded(layout, i as f32)).unwrap();
+        }
+        assert_eq!(c.demote_pages(a, 2).unwrap(), 3); // pages 0-2 cold
+        let b = c.fork_prefix(a, 4).unwrap(); // shares 2 cold pages
+        c.append(b, &graded(layout, 77.0)).unwrap(); // fresh hot page (boundary)
+        c.retain(a, &[0, 2, 5, 7]).unwrap(); // mixed-tier gather, hot rebuild
+        assert_eq!(c.seq_pages_demoted(a), Some(0), "retain rebuilds hot");
+        c.promote_pages(b).unwrap();
+        assert_eq!(c.pages_demoted(), 0);
+        let freed = c.free(a).unwrap() + c.free(b).unwrap();
+        assert!(freed > 0);
+        assert_eq!(c.pages_in_use(), 0);
+        assert_eq!(c.units_in_use(), 0);
+        assert_eq!(c.pages_free(), 16);
+        assert_eq!(c.pages_demote_total(), 3);
+        // b's promote_pages re-heated the 2 surviving shared cold pages.
+        assert_eq!(c.pages_promote_total(), 2);
+        assert!(c.tier_max_error_ratio() <= 1.0 + 1e-4);
+    }
+
+    /// Appending into an exclusively-owned cold tail page promotes it
+    /// in place first — the write lands exact, older slots of that page
+    /// keep their (dequantized) values.
+    #[test]
+    fn append_into_cold_tail_promotes_in_place() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(8, 4, layout);
+        let s = c.create_seq();
+        for i in 0..3 {
+            c.append(s, &graded(layout, i as f32)).unwrap();
+        }
+        // keep_hot = 0 demotes the partial tail page too.
+        assert_eq!(c.demote_pages(s, 0).unwrap(), 1);
+        let cold_view: Vec<Vec<f32>> = (0..3).map(|i| c.slot_values(s, i).unwrap()).collect();
+        c.append(s, &graded(layout, 3.0)).unwrap();
+        assert_eq!(c.pages_demoted(), 0, "tail page promoted in place");
+        assert_eq!(c.pages_promote_total(), 1);
+        assert_eq!(c.get(s, 3).unwrap(), &graded(layout, 3.0)[..], "write is exact");
+        for (i, cv) in cold_view.iter().enumerate() {
+            assert_eq!(c.get(s, i).unwrap(), &cv[..], "promoted slots match cold reads");
+        }
+    }
+
+    /// The policy-verdict path: only pages whose tokens are *all* cold
+    /// transition; a page with one hot token stays hot.
+    #[test]
+    fn demote_token_set_requires_whole_pages() {
+        let layout = SlotLayout::Dense { d: 1, d_v: 1 };
+        let mut c = PagedKvCache::new(8, 2, layout);
+        let s = c.create_seq();
+        for i in 0..6 {
+            c.append(s, &graded(layout, i as f32)).unwrap();
+        }
+        // Tokens 0,1 (page 0) and 2 (half of page 1) are cold.
+        assert_eq!(c.demote_token_set(s, &[0, 1, 2]).unwrap(), 1);
+        assert_eq!(c.seq_pages_demoted(s), Some(1));
+        // Completing page 1's cold set demotes it; page 2 stays hot.
+        assert_eq!(c.demote_token_set(s, &[2, 3]).unwrap(), 1);
+        assert_eq!(c.seq_pages_demoted(s), Some(2));
+        assert_eq!(c.demote_token_set(s, &[0, 1]).unwrap(), 0, "already cold");
+        assert_eq!(c.demote_token_set(99, &[0]).unwrap_err(), PageError::UnknownSeq);
+    }
+
+    #[test]
+    fn kv_tier_cfg_parses_and_labels() {
+        let d = KvTierCfg::parse("tier").unwrap();
+        assert_eq!(d, KvTierCfg { cold_after: 64, policy: TierPolicy::Lru });
+        let t = KvTierCfg::parse("tier:cold_after=16,policy=h2o").unwrap();
+        assert_eq!(t, KvTierCfg { cold_after: 16, policy: TierPolicy::H2o });
+        assert_eq!(t.label(), "tier:cold_after=16,policy=h2o");
+        assert_eq!(KvTierCfg::parse(&t.label()).unwrap(), t, "label round-trips");
+        assert!(KvTierCfg::parse("tiers:cold_after=1").unwrap_err().contains("family"));
+        assert!(KvTierCfg::parse("tier:cold_after=0").unwrap_err().contains(">= 1"));
+        assert!(KvTierCfg::parse("tier:cold_after=x").unwrap_err().contains("integer"));
+        assert!(KvTierCfg::parse("tier:policy=fifo").unwrap_err().contains("unknown policy"));
+        assert!(KvTierCfg::parse("tier:budget=4").unwrap_err().contains("unknown key"));
+        assert!(KvTierCfg::parse("tier:cold_after=1,cold_after=2")
+            .unwrap_err()
+            .contains("duplicate"));
+    }
+
+    /// Property: random append/demote/promote/free traffic never breaks
+    /// the unit ledger — `units_in_use` always equals the sum of
+    /// per-page costs, and a full drain restores the whole pool.
+    #[test]
+    fn property_tier_transitions_conserve_units() {
+        check("tiered page unit ledger", 24, |g| {
+            let page_size = g.usize_in(1..5);
+            let layout = SlotLayout::Dense { d: 2, d_v: 1 };
+            let mut c = PagedKvCache::new(64, page_size, layout);
+            let n_seqs = g.usize_in(1..4);
+            let mut seqs: Vec<SeqId> = (0..n_seqs).map(|_| c.create_seq()).collect();
+            for step in 0..g.usize_in(1..80) {
+                let i = g.usize_in(0..seqs.len());
+                let s = seqs[i];
+                match g.usize_in(0..6) {
+                    0 | 1 | 2 => {
+                        let _ = c.append(s, &graded(layout, step as f32));
+                    }
+                    3 => {
+                        let keep_hot = g.usize_in(0..4);
+                        c.demote_pages(s, keep_hot).unwrap();
+                    }
+                    4 => {
+                        c.promote_pages(s).unwrap();
+                    }
+                    _ => {
+                        if c.seq_len(s).unwrap() > 0 && g.usize_in(0..2) == 0 {
+                            let f = c.fork_prefix(s, g.usize_in(0..c.seq_len(s).unwrap())).unwrap();
+                            seqs.push(f);
+                        }
+                    }
+                }
+                let expect_units = 2 * (c.pages_in_use() - c.pages_demoted())
+                    + c.pages_demoted();
+                assert_eq!(c.units_in_use(), expect_units, "unit ledger out of sync");
+            }
+            for s in seqs {
+                c.free(s).unwrap();
+            }
+            assert_eq!(c.pages_in_use(), 0);
+            assert_eq!(c.units_in_use(), 0);
+            assert_eq!(c.pages_free(), 64);
+            assert!(c.tier_max_error_ratio() <= 1.0 + 1e-4);
         });
     }
 }

@@ -32,6 +32,15 @@
 //!   first. Entries currently borrowed by a live lane are never
 //!   evicted — their shared pages back that lane's suffix-only page
 //!   reservation.
+//! * **Demote before drop.** Under the tiered page payload
+//!   ([`crate::kv_cache::paged::PagePayload`]) an LRU victim is first
+//!   *demoted* — its pinned sequences' pages quantize to int8 in place
+//!   ([`PagedKvCache::demote_pages`]) and its nominal charge halves —
+//!   and only dropped if pressure persists while it is already cold.
+//!   A cold entry still serves hits (forks read tier-transparently);
+//!   [`RadixPrefixCache::borrow`] promotes it back to fp32, so a
+//!   prefix that proves hot again pays the dequant once, not a full
+//!   re-prefill.
 
 use std::collections::HashMap;
 
@@ -51,6 +60,10 @@ pub struct PrefixCacheStats {
     pub inserted: u64,
     /// Entries evicted (LRU) over the cache's life.
     pub evicted: u64,
+    /// Entries demoted to int8 under LRU pressure (tiered payload).
+    pub demoted: u64,
+    /// Cold entries promoted back to fp32 on borrow.
+    pub promoted: u64,
     /// Nominal pages currently attributed to live entries.
     pub pages_nominal: usize,
 }
@@ -69,11 +82,14 @@ struct Entry {
     id: EntryId,
     /// One pinned sequence per head; each holds exactly `depth` tokens.
     seqs: Vec<SeqId>,
-    /// `heads × ⌈depth / page_size⌉` — the LRU budget charge.
+    /// The LRU budget charge: `heads × ⌈depth / page_size⌉` while hot,
+    /// halved (rounded up) once demoted to int8.
     pages_nominal: usize,
     last_used: u64,
     /// Live lanes currently sharing this entry's pages.
     borrowers: usize,
+    /// Entry pages are int8-demoted (half charge, lossy-but-bounded).
+    cold: bool,
 }
 
 struct Node {
@@ -104,6 +120,8 @@ pub struct RadixPrefixCache {
     misses: u64,
     inserted: u64,
     evicted: u64,
+    demoted: u64,
+    promoted: u64,
 }
 
 impl RadixPrefixCache {
@@ -131,6 +149,8 @@ impl RadixPrefixCache {
             misses: 0,
             inserted: 0,
             evicted: 0,
+            demoted: 0,
+            promoted: 0,
         }
     }
 
@@ -170,6 +190,8 @@ impl RadixPrefixCache {
             misses: self.misses,
             inserted: self.inserted,
             evicted: self.evicted,
+            demoted: self.demoted,
+            promoted: self.promoted,
             pages_nominal: self.pages_nominal,
         }
     }
@@ -283,13 +305,32 @@ impl RadixPrefixCache {
 
     /// Record a consumed hit: bump the borrow count (the entry is now
     /// backing a live lane and is exempt from LRU eviction) and touch
-    /// the LRU clock.
-    pub fn borrow(&mut self, entry: EntryId) {
+    /// the LRU clock. A cold (int8-demoted) entry is promoted back to
+    /// fp32 in place — a borrowed prefix is hot again by definition —
+    /// restoring its full nominal charge (the transient may overshoot
+    /// the budget; the next insert's eviction loop settles it).
+    pub fn borrow(&mut self, entry: EntryId, cache: &mut PagedKvCache) {
         let t = self.tick();
         let node = self.entries[&entry];
-        let e = self.node_mut(node).entry.as_mut().expect("entry node");
-        e.borrowers += 1;
-        e.last_used = t;
+        let full = self.nominal(self.node(node).depth);
+        let mut restored = 0;
+        {
+            let e = self.node_mut(node).entry.as_mut().expect("entry node");
+            e.borrowers += 1;
+            e.last_used = t;
+            if e.cold {
+                for &s in &e.seqs {
+                    cache.promote_pages(s).expect("entry sequence exists");
+                }
+                restored = full - e.pages_nominal;
+                e.pages_nominal = full;
+                e.cold = false;
+            }
+        }
+        if restored > 0 {
+            self.pages_nominal += restored;
+            self.promoted += 1;
+        }
         self.hits += 1;
     }
 
@@ -421,6 +462,7 @@ impl RadixPrefixCache {
             pages_nominal: nominal,
             last_used: t,
             borrowers: 0,
+            cold: false,
         });
         self.entries.insert(id, cur);
         self.pages_nominal += nominal;
@@ -428,9 +470,13 @@ impl RadixPrefixCache {
         true
     }
 
-    /// Evict the least-recently-used unborrowed entry (skipping
-    /// `exclude`), unpinning and freeing its sequences. Returns false
-    /// when nothing is evictable.
+    /// Reclaim budget from the least-recently-used unborrowed entry
+    /// (skipping `exclude`). Two-phase: a hot victim is *demoted* —
+    /// its pages quantize to int8 and its nominal charge halves — and
+    /// only an already-cold victim (or one whose charge a halving
+    /// cannot shrink) is removed, unpinning and freeing its sequences.
+    /// Returns false when nothing is reclaimable; each true strictly
+    /// lowers `pages_nominal`, so the insert loop always terminates.
     pub fn evict_lru(&mut self, cache: &mut PagedKvCache, exclude: Option<EntryId>) -> bool {
         let victim = self
             .entries
@@ -443,11 +489,38 @@ impl RadixPrefixCache {
             .map(|(_, id)| id);
         match victim {
             Some(id) => {
-                self.remove_entry(id, cache);
+                let node = self.entries[&id];
+                let e = self.node(node).entry.as_ref().expect("entry node");
+                if !e.cold && e.pages_nominal >= 2 {
+                    self.demote_entry(id, cache);
+                } else {
+                    self.remove_entry(id, cache);
+                }
                 true
             }
             None => false,
         }
+    }
+
+    /// Demote a hot entry's pinned sequences to int8 (whole pages, the
+    /// partial tail included — nothing appends to an entry) and halve
+    /// its nominal budget charge.
+    fn demote_entry(&mut self, id: EntryId, cache: &mut PagedKvCache) {
+        let node = self.entries[&id];
+        let (old, cold_nominal);
+        {
+            let e = self.node_mut(node).entry.as_mut().expect("entry node");
+            debug_assert!(!e.cold);
+            for &s in &e.seqs {
+                cache.demote_pages(s, 0).expect("entry sequence exists");
+            }
+            old = e.pages_nominal;
+            cold_nominal = old.div_ceil(2);
+            e.pages_nominal = cold_nominal;
+            e.cold = true;
+        }
+        self.pages_nominal -= old - cold_nominal;
+        self.demoted += 1;
     }
 
     fn remove_entry(&mut self, id: EntryId, cache: &mut PagedKvCache) {
@@ -632,7 +705,7 @@ mod tests {
         assert!(px.insert(&p2, &mut c, &s2));
         // Touch p1 so p2 is the LRU victim.
         let h1 = px.peek(&[1, 1, 1, 1, 1, 1, 1, 1, 7]).unwrap();
-        px.borrow(h1.entry);
+        px.borrow(h1.entry, &mut c);
         px.release(h1.entry);
         assert!(px.insert(&p3, &mut c, &s3));
         assert_eq!(px.len(), 2);
@@ -644,8 +717,8 @@ mod tests {
         // then try to insert a third.
         let h1 = px.peek(&[1, 1, 1, 1, 1, 1, 1, 1, 7]).unwrap();
         let h3 = px.peek(&[3, 3, 3, 3, 3, 3, 3, 3, 7]).unwrap();
-        px.borrow(h1.entry);
-        px.borrow(h3.entry);
+        px.borrow(h1.entry, &mut c);
+        px.borrow(h3.entry, &mut c);
         let p4 = prompt(&[4; 8]);
         let s4 = seed(&mut c, &p4);
         assert!(!px.insert(&p4, &mut c, &s4), "no unborrowed victim -> insert refused");
@@ -653,6 +726,107 @@ mod tests {
         px.release(h1.entry);
         px.release(h3.entry);
         assert!(px.insert(&p4, &mut c, &s4), "room after borrows release");
+    }
+
+    /// Tiered lifecycle (satellite regression): LRU pressure demotes
+    /// the victim's pinned sequences to int8 instead of dropping them
+    /// when the halved charge alone makes room; the cold entry still
+    /// serves hits (forks read tier-transparently via `slot_values`),
+    /// and borrowing it promotes the pages back to fp32 in place.
+    #[test]
+    fn lru_pressure_demotes_before_dropping_and_borrow_promotes() {
+        let mut c = cache();
+        // Budget 10: two hot 8-token entries charge 8; a third needs 4
+        // more, and halving the LRU victim (4 -> 2) is exactly enough.
+        let mut px = RadixPrefixCache::new(HEADS, PS, 10);
+        let p1 = prompt(&[1; 8]);
+        let p2 = prompt(&[2; 8]);
+        let p3 = prompt(&[3; 8]);
+        let s1 = seed(&mut c, &p1);
+        let s2 = seed(&mut c, &p2);
+        let s3 = seed(&mut c, &p3);
+        assert!(px.insert(&p1, &mut c, &s1));
+        assert!(px.insert(&p2, &mut c, &s2));
+        for s in s1.into_iter().chain(s2) {
+            c.free(s).unwrap();
+        }
+        assert_eq!(px.pages_nominal(), 8);
+        assert_eq!(c.pages_demoted(), 0);
+
+        assert!(px.insert(&p3, &mut c, &s3));
+        for s in s3 {
+            c.free(s).unwrap();
+        }
+        let st = px.stats();
+        assert_eq!((st.demoted, st.evicted), (1, 0), "p1 demoted, nothing dropped");
+        assert_eq!(px.len(), 3, "all three entries resident");
+        assert_eq!(px.pages_nominal(), 2 + 4 + 4, "cold p1 charges half");
+        assert_eq!(c.pages_demoted(), HEADS * 2, "p1's 2 pages per head are int8");
+
+        // The cold entry still serves: fork it and read the prefix
+        // tier-transparently (plain `get` is hot-only by contract).
+        let hit = px.peek(&[1, 1, 1, 1, 1, 1, 1, 1, 9]).expect("cold entry still cached");
+        assert_eq!(hit.shared, 8);
+        let f = c.fork_prefix(hit.seqs[0], hit.shared).unwrap();
+        for i in 0..hit.shared {
+            let v = c.slot_values(f, i).unwrap()[0];
+            // One int8 round trip: |err| <= scale/2 = maxabs/254.
+            assert!((v - 1.0).abs() <= 1.0 / 254.0 + 1e-6, "slot {i}: {v}");
+        }
+        c.free(f).unwrap();
+
+        // Borrowing the cold entry promotes every head's pages back to
+        // fp32 and restores the full nominal charge (transiently over
+        // budget — settled by the next insert's eviction loop).
+        px.borrow(hit.entry, &mut c);
+        assert_eq!(c.pages_demoted(), 0, "borrow promoted the entry");
+        assert_eq!(px.stats().promoted, 1);
+        assert_eq!(px.pages_nominal(), 12);
+        let f2 = c.fork_prefix(hit.seqs[0], hit.shared).unwrap();
+        for i in 0..hit.shared {
+            let v = c.get(f2, i).unwrap()[0]; // hot again: plain reads work
+            assert!((v - 1.0).abs() <= 1.0 / 254.0 + 1e-6, "slot {i}: {v}");
+        }
+        c.free(f2).unwrap();
+        px.release(hit.entry);
+
+        // Full drain: cold and hot entries both return all pages.
+        px.clear(&mut c);
+        assert_eq!(c.pages_in_use(), 0);
+        assert_eq!(px.pages_nominal(), 0);
+    }
+
+    /// When one demotion is not enough, the same LRU victim is removed
+    /// on the next pass — demote, then drop, never a stuck loop.
+    #[test]
+    fn persistent_pressure_drops_the_already_cold_victim() {
+        let mut c = cache();
+        // Budget 8: fits two hot 8-token entries exactly; a third
+        // demotes p1 (8 -> 6, not enough) and then drops it (6 -> 2).
+        let mut px = RadixPrefixCache::new(HEADS, PS, 2 * HEADS * 2);
+        let p1 = prompt(&[1; 8]);
+        let p2 = prompt(&[2; 8]);
+        let p3 = prompt(&[3; 8]);
+        let s1 = seed(&mut c, &p1);
+        let s2 = seed(&mut c, &p2);
+        let s3 = seed(&mut c, &p3);
+        assert!(px.insert(&p1, &mut c, &s1));
+        assert!(px.insert(&p2, &mut c, &s2));
+        // Touch p2 so p1 is the LRU victim for both phases.
+        let h2 = px.peek(&[2, 2, 2, 2, 2, 2, 2, 2, 9]).unwrap();
+        px.borrow(h2.entry, &mut c);
+        px.release(h2.entry);
+        assert!(px.insert(&p3, &mut c, &s3));
+        let st = px.stats();
+        assert_eq!((st.demoted, st.evicted), (1, 1), "demote first, then drop");
+        assert_eq!(px.len(), 2);
+        assert!(px.peek(&[1, 1, 1, 1, 1, 1, 1, 1, 9]).is_none(), "p1 gone");
+        assert!(px.peek(&[2, 2, 2, 2, 2, 2, 2, 2, 9]).is_some(), "p2 stays hot");
+        for s in s1.into_iter().chain(s2).chain(s3) {
+            c.free(s).unwrap();
+        }
+        px.clear(&mut c);
+        assert_eq!(c.pages_in_use(), 0, "dropping a cold entry frees its int8 pages");
     }
 
     #[test]
@@ -706,7 +880,7 @@ mod tests {
         // Hit path: borrow the entry, fork a serving lane from the
         // pinned parent, extend it past the shared prefix (decode).
         let hit = px.peek(&[1, 2, 3, 4, 5, 6, 7, 8, 9]).expect("warm hit");
-        px.borrow(hit.entry);
+        px.borrow(hit.entry, &mut c);
         let lanes: Vec<SeqId> = hit
             .seqs
             .iter()
@@ -745,7 +919,7 @@ mod tests {
         px.release(hit.entry);
         let hit2 = px.peek(&[1, 2, 3, 4, 5, 6, 7, 8, 9]).expect("still cached");
         assert_eq!(hit2.shared, hit.shared);
-        px.borrow(hit2.entry);
+        px.borrow(hit2.entry, &mut c);
         let f2 = c.fork_prefix(hit2.seqs[0], hit2.shared).unwrap();
         for (i, &t) in p[..hit2.shared].iter().enumerate() {
             assert_eq!(c.get(f2, i).unwrap()[0], t as f32);
@@ -771,7 +945,7 @@ mod tests {
             tc.free(s).unwrap();
         }
         let th = tpx.peek(&[1, 2, 3, 4, 5, 6, 7, 8, 9]).expect("warm hit");
-        tpx.borrow(th.entry);
+        tpx.borrow(th.entry, &mut tc);
         let tl: Vec<SeqId> =
             th.seqs.iter().map(|&s| tc.fork_prefix(s, th.shared).unwrap()).collect();
         for &l in &tl {

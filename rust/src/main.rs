@@ -28,8 +28,8 @@ use sfa::coordinator::ServeMetrics;
 use sfa::runtime::{HostTensor, Runtime};
 use sfa::bench::serve_bench::PrefixBenchConfig;
 use sfa::serve::{
-    ContinuousBatcher, PagedKvPolicy, PrefixCacheConfig, Scheduler, ServeConfig, SloClass,
-    SpeculateConfig, WaveScheduler,
+    ContinuousBatcher, KvTierCfg, PagedKvPolicy, PrefixCacheConfig, Scheduler, ServeConfig,
+    SloClass, SpeculateConfig, WaveScheduler,
 };
 use sfa::train::corpus::CorpusKind;
 use sfa::train::experiments;
@@ -47,6 +47,7 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
               --lanes 8 --page-size 16 --max-pages 4096 [--policy KVPOLICY]
               [--prefix-cache [--prefix-pages 1024]] [--prefill-chunk N]
               [--speculate draft=SPEC [--gamma 4]]
+              [--kv-tier tier:cold_after=N[,policy=lru|h2o]]
               [--sampler-seed N] [--temperature T]
               (synthetic load, request-lifecycle API over AttentionSession —
               no artifacts needed; --policy enables KV eviction with
@@ -82,6 +83,12 @@ USAGE: sfa <info|train|serve|exp|bench|analyze> [item] [--options]
               (chunked-prefill interference: one long prompt vs short
               decode lanes per chunk size; decode-lane TTFT p50/p95,
               bit-identical streams — recorded in BENCH_serve.json)
+  sfa bench   serve --kv-tier tier:cold_after=N[,policy=lru|h2o]
+              (fp32 vs int8 cold-page tier on the same workload:
+              demotions, effective-capacity gain from half-cost cold
+              pages, achieved concurrency at fixed --max-pages, dequant
+              error bound, bit-identical streams when the tier never
+              fires — writes BENCH_serve_tiered.json)
   sfa bench   serve --replicas N [--slo interactive:ttft_ms=250,tpot_ms=50]
               [--interactive-frac 0.5] [--system-prompts 4]
               [--system-prompt-len 64] [--burst-len 8] [--burst-rate 2.0]
@@ -190,6 +197,10 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         ),
         None => None,
     };
+    let kv_tier = match args.get("kv-tier") {
+        Some(s) => Some(KvTierCfg::parse(s).map_err(|e| anyhow::anyhow!("--kv-tier: {e}"))?),
+        None => None,
+    };
     ServeConfig::builder()
         .heads(args.usize_or("heads", 4)?)
         .d(args.usize_or("d", 32)?)
@@ -204,6 +215,7 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
         .prefix_cache(prefix_cache)
         .prefill_chunk(args.usize_or("prefill-chunk", 0)?)
         .speculate(speculate)
+        .kv_tier(kv_tier)
         .build()
         .map_err(|e| anyhow::anyhow!("serve config: {e}"))
 }
@@ -231,6 +243,7 @@ fn serve_workload_cfg(
         chunked: None,
         speculate: serve.speculate,
         router: None,
+        tiered: None,
         sampler_seed: args.u64_or("sampler-seed", 0)?,
         temperature: match args.get("temperature") {
             Some(_) => Some(args.f64_or("temperature", 0.0)? as f32),
@@ -322,7 +335,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         && (cfg.serve.kv_policy.is_some()
             || cfg.serve.prefix_cache.is_some()
             || cfg.serve.prefill_chunk > 0
-            || cfg.serve.speculate.is_some())
+            || cfg.serve.speculate.is_some()
+            || cfg.serve.kv_tier.is_some())
     {
         // The wave baseline ignores every batcher-only knob (worst-case,
         // cold-prefill, one-token-per-step semantics); strip them through
@@ -372,6 +386,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "prefix-cache: hits={} misses={} inserted={} evicted={} pages_nominal={}",
             px.hits, px.misses, px.inserted, px.evicted, px.pages_nominal
+        );
+    }
+    if cfg.serve.kv_tier.is_some() {
+        println!(
+            "kv-tier: demoted={} promoted={} err_ratio={:.3} capacity_peak={:.2}x",
+            stats.pages_demoted,
+            stats.pages_promoted,
+            stats.tier_error_ratio,
+            stats.capacity_ratio_peak,
         );
     }
     println!(
@@ -530,6 +553,34 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 // Sweep default: enough lanes that the page budget,
                 // not the lane cap, is what policy admission relaxes.
                 cfg.serve.max_lanes = 32;
+            }
+            if args.get("kv-tier").is_some() {
+                // Tiered-KV comparison: the same workload all-fp32,
+                // under the configured int8 cold tier, and under a tier
+                // that can never fire (the bit-for-bit identity pin).
+                if args.get("replicas").is_some()
+                    || args.get("speculate").is_some()
+                    || args.has("prefix-cache")
+                    || args.has("prefill-chunk")
+                    || args.get("prefill-chunk").is_some()
+                {
+                    bail!(
+                        "--kv-tier, --replicas, --speculate, --prefix-cache, and \
+                         --prefill-chunk are separate bench comparisons — pick one"
+                    );
+                }
+                let tier = cfg.serve.kv_tier.expect("serve_config parsed --kv-tier");
+                cfg.serve.kv_tier = None; // bench_serve_tiered toggles it per run
+                cfg.tiered = Some(tier);
+                let (table, cmp) = serve_bench::bench_serve_tiered(&cfg);
+                table.print();
+                let path = args.str_or("serve-json", "BENCH_serve_tiered.json");
+                std::fs::write(&path, serve_bench::tiered_to_json(&cfg, &cmp))?;
+                println!("\n[bench] wrote tiered-KV comparison to {path}");
+                if !cmp.streams_identical_no_trigger {
+                    bail!("an untriggered cold tier changed token streams — correctness bug");
+                }
+                return Ok(());
             }
             if args.get("replicas").is_some() {
                 // Multi-replica router comparison: the same arrival

@@ -70,9 +70,11 @@ pub use request::{
     FinishReason, FinishedRequest, RequestId, RequestState, ServeError, ServeEvent,
     ServeRequest, ServeSampling, SloClass,
 };
+pub use crate::kv_cache::paged::{KvTierCfg, TierPolicy};
 pub use scheduler::{
-    pages_needed, pages_reserved, pages_reserved_shared, ContinuousBatcher, PrefixCacheConfig,
-    Scheduler, ServeConfig, ServeConfigBuilder, ServeConfigError, StepReport,
+    pages_needed, pages_reserved, pages_reserved_shared, pages_reserved_tiered,
+    ContinuousBatcher, PrefixCacheConfig, Scheduler, ServeConfig, ServeConfigBuilder,
+    ServeConfigError, StepReport,
 };
 pub use speculate::SpeculateConfig;
 pub use wave::WaveScheduler;
@@ -97,6 +99,7 @@ mod tests {
             prefix_cache: None,
             prefill_chunk: 0,
             speculate: None,
+            kv_tier: None,
         }
     }
 
@@ -464,6 +467,7 @@ mod tests {
             prefix_cache: None,
             prefill_chunk: 0,
             speculate: None,
+            kv_tier: None,
         };
         let run = |pol: Option<PagedKvPolicy>| -> (f64, usize, usize, usize) {
             let mut s = ContinuousBatcher::new(ServeConfig { kv_policy: pol, ..base });
@@ -1176,5 +1180,66 @@ mod tests {
         assert_eq!(d[4].replica, 1, "no affinity → load routes to the idle replica");
         let hits = router.prefix_hits();
         assert!(hits >= 3, "each follower admission borrows the warm prefix (got {hits})");
+    }
+
+    /// Satellite pin (admission-time re-routing): a request that
+    /// followed its warm prefix onto a replica, then got stuck in that
+    /// replica's queue behind page pressure, is migrated by the
+    /// router's rebalance pass to the current cost-model winner
+    /// *before prefill starts* — visible in the routing trace as a
+    /// second decision with `migrated: true` — and the migrated
+    /// stream is bit-for-bit what a solo run produces.
+    #[test]
+    fn queued_request_on_pressured_replica_migrates_with_unchanged_stream() {
+        use crate::coordinator::router::{ReplicaRouter, RouterPolicy};
+        // 69 pages: the long-runner (22 reserved after its prefix hit)
+        // plus the 24-page pinned prefix entry fit, but the follower's
+        // worst-case 54-page reservation cannot join them.
+        let cfg = ServeConfig {
+            prefix_cache: Some(PrefixCacheConfig { max_pages: 128 }),
+            max_pages: 69,
+            ..tiny_cfg()
+        };
+        let sys = prompt(90, 48, 32);
+        let mut router = ReplicaRouter::new(cfg, 2, RouterPolicy::SloAware).unwrap();
+        // Warm replica 0 with the system prompt's path.
+        router.submit(ServeRequest::new(sys.clone()).max_new(1).engine("dense")).unwrap();
+        router.run_to_completion();
+        // A long-running lane occupies replica 0 (affinity 40 beats the
+        // idle replica's 0)...
+        let long = sys[..40].to_vec();
+        let f_id =
+            router.submit(ServeRequest::new(long.clone()).max_new(40).engine("dense")).unwrap();
+        router.step();
+        assert_eq!(router.live(), 1, "long-runner admitted on the warm replica");
+        // ...so the follower also chases the warm cache (affinity 48 −
+        // one in-flight's load beats 0) and lands in replica 0's queue.
+        let b_id =
+            router.submit(ServeRequest::new(sys.clone()).max_new(60).engine("dense")).unwrap();
+        let placed = *router.decisions().last().unwrap();
+        assert_eq!((placed.id, placed.replica, placed.migrated), (b_id, 0, false));
+        // Next step: the rebalance pass sees it still queued on a
+        // page-pressured replica, re-scores it (its own queue slot now
+        // counts against replica 0), and migrates it to replica 1.
+        router.step();
+        let mig: Vec<_> = router.decisions().iter().filter(|d| d.migrated).collect();
+        assert_eq!(mig.len(), 1, "exactly one migration in the trace");
+        assert_eq!((mig[0].id, mig[0].replica), (b_id, 1));
+        assert_eq!(
+            router.decisions().iter().filter(|d| d.id == b_id).count(),
+            2,
+            "a migrated request has both its placement and its migration in the trace"
+        );
+        let fin = router.run_to_completion();
+        assert_eq!(fin.len(), 2);
+        for (id, p, m) in [(f_id, &long, 40), (b_id, &sys, 60)] {
+            let f = fin.iter().find(|f| f.id == id).unwrap();
+            assert!(matches!(f.state, RequestState::Finished { .. }), "{:?}", f.state);
+            assert_eq!(
+                f.tokens,
+                solo_tokens(p, m, "dense"),
+                "migration re-places a stream without changing a token"
+            );
+        }
     }
 }

@@ -218,6 +218,11 @@ pub enum ServeEvent {
     /// One generated token (`index` counts from 0; index 0 is the
     /// time-to-first-token sample produced by prefill).
     Token { id: RequestId, index: usize, token: i32 },
+    /// Admission-time re-routing: the router withdrew this still-queued
+    /// request from a page-pressured replica and resubmitted it to the
+    /// current cost-model winner. Fires before any prefill work, so the
+    /// token stream is unaffected (`id` is the router-global id).
+    Migrated { id: RequestId, from: usize, to: usize },
 }
 
 /// A generation request: build with [`ServeRequest::new`], refine with

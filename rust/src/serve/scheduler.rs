@@ -43,6 +43,7 @@ use crate::attention::registry::{parse_spec, validate_draft_spec};
 use crate::attention::session::{AttentionSession, LaneId, PrefillState, SessionConfig};
 use crate::attention::HeadTensor;
 use crate::coordinator::metrics::ServeMetrics;
+use crate::kv_cache::paged::{KvTierCfg, TierPolicy};
 use crate::kv_cache::radix::{EntryId, PrefixCacheStats, PrefixHit, RadixPrefixCache};
 use crate::serve::model::{sample, ToyLm};
 use crate::serve::request::{
@@ -136,6 +137,23 @@ pub struct ServeConfig {
     /// speculative step, after the target prefill completes). The
     /// wave baseline ignores this.
     pub speculate: Option<SpeculateConfig>,
+    /// Tiered KV storage. `Some` makes the [`ContinuousBatcher`] demote
+    /// each lane's cold pages (everything but the newest `cold_after`
+    /// tokens under the `lru` policy, or the tokens the lane's eviction
+    /// policy marks cold under `h2o`) to per-row int8 after every
+    /// decode pass. A demoted page costs **half** a page against the
+    /// budget, so admission — which charges tiered requests at their
+    /// compressed steady state ([`pages_reserved_tiered`]) — fits more
+    /// concurrent lanes into the same `max_pages`. Reads are
+    /// tier-transparent (cold pages dequantize into scratch), which
+    /// perturbs attention by at most the int8 round-trip error
+    /// (≤ scale/2 per element); streams are bit-for-bit identical
+    /// whenever no page is ever demoted (e.g. every sequence shorter
+    /// than `cold_after`). `h2o` tiering requires `kv_policy`; mutually
+    /// exclusive with `speculate` (a verify fork must reproduce the
+    /// target's cache bytes exactly, which mid-stream requantization
+    /// breaks). The wave baseline ignores this.
+    pub kv_tier: Option<KvTierCfg>,
 }
 
 impl Default for ServeConfig {
@@ -154,6 +172,7 @@ impl Default for ServeConfig {
             prefix_cache: None,
             prefill_chunk: 0,
             speculate: None,
+            kv_tier: None,
         }
     }
 }
@@ -221,6 +240,23 @@ impl ServeConfig {
                 );
             }
         }
+        if let Some(tier) = &self.kv_tier {
+            if tier.cold_after < 1 {
+                return fail("kv_tier.cold_after must be >= 1 (the newest token stays hot)");
+            }
+            if self.speculate.is_some() {
+                return fail(
+                    "kv_tier and speculate are mutually exclusive: a verify fork must read the \
+                     target's exact cache bytes, which mid-stream int8 demotion perturbs",
+                );
+            }
+            if tier.policy == TierPolicy::H2o && self.kv_policy.is_none() {
+                return fail(
+                    "kv_tier policy `h2o` requires kv_policy: the demote verdicts come from the \
+                     lanes' eviction-policy scores",
+                );
+            }
+        }
         Ok(())
     }
 
@@ -252,6 +288,7 @@ impl ServeConfig {
         self.prefix_cache = None;
         self.prefill_chunk = 0;
         self.speculate = None;
+        self.kv_tier = None;
         self
     }
 }
@@ -318,6 +355,10 @@ impl ServeConfigBuilder {
         self.cfg.speculate = speculate;
         self
     }
+    pub fn kv_tier(mut self, kv_tier: Option<KvTierCfg>) -> Self {
+        self.cfg.kv_tier = kv_tier;
+        self
+    }
 
     /// Validate and hand back the config, or the first violated
     /// constraint as a [`ServeConfigError`].
@@ -373,6 +414,41 @@ pub fn pages_reserved_shared(
     total - cfg.heads * (shared / cfg.page_size)
 }
 
+/// Pages one request reserves at admission under **tiered** KV storage
+/// (`ServeConfig::kv_tier`): start from the untied reservation
+/// ([`pages_reserved`], or [`pages_reserved_shared`] on a prefix hit)
+/// and discount the pages that will sit cold at steady state — every
+/// full page below the newest `cold_after` tokens demotes to int8 at
+/// half cost, refunding `⌊cold_pages / 2⌋` whole pages per head.
+/// Shared-prefix pages belong to the prefix cache's own nominal budget
+/// and are excluded from the discount. With `kv_tier: None` this is
+/// bit-for-bit the untied reservation — the seed-accounting identity
+/// the no-demotion stream pin rests on.
+pub fn pages_reserved_tiered(
+    prompt_len: usize,
+    steps: usize,
+    shared: usize,
+    cfg: &ServeConfig,
+) -> usize {
+    let base = if shared > 0 {
+        pages_reserved_shared(prompt_len, steps, shared, cfg)
+    } else {
+        pages_reserved(prompt_len, steps, cfg)
+    };
+    let Some(tier) = cfg.kv_tier else {
+        return base;
+    };
+    // Steady-state cached tokens: the policy-pruned footprint when a
+    // kv_policy caps it, the whole stream otherwise.
+    let tokens = match &cfg.kv_policy {
+        None => prompt_len + steps,
+        Some(p) => (prompt_len + steps).min(p.max_cached_tokens(cfg.page_size) + 1),
+    };
+    let cold_full_pages = (tokens.saturating_sub(tier.cold_after) / cfg.page_size)
+        .saturating_sub(shared / cfg.page_size);
+    base.saturating_sub(cfg.heads * (cold_full_pages / 2))
+}
+
 /// What one [`Scheduler::step`] did (the serving loop's observability
 /// surface; `bench serve` integrates these into page-occupancy curves).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -404,8 +480,21 @@ pub struct StepReport {
     /// preempted request re-queues at its original position and
     /// regenerates the identical stream — zero unless SLO classes mix).
     pub preempted: usize,
+    /// Pages demoted to the int8 cold tier this step (lane tiering
+    /// under `ServeConfig::kv_tier` plus radix-cache
+    /// demote-before-drop; zero when neither fires).
+    pub pages_demoted: usize,
+    /// Cold pages promoted back to f32 this step (appends landing on
+    /// a demoted tail, prefix-cache borrows of a demoted entry).
+    pub pages_promoted: usize,
     /// KV pages in use across all groups after the step.
     pub pages_in_use: usize,
+    /// Budget consumed in half-page units (fp32 page = 2, int8 = 1)
+    /// across all groups after the step — `2 * pages_in_use` exactly
+    /// while nothing is demoted. `bench serve --kv-tier` derives the
+    /// effective-capacity ratio `2 * pages_in_use / kv_units_in_use`
+    /// from this (1.0 all-hot, → 2.0 as everything demotes).
+    pub kv_units_in_use: usize,
     /// Live sequences after the step.
     pub live: usize,
 }
@@ -441,6 +530,14 @@ pub trait Scheduler {
         PrefixCacheStats::default()
     }
 
+    /// Worst per-element dequantization error seen by any cold-tier
+    /// demotion so far, as a fraction of the quantizer's `scale/2`
+    /// bound (`<= 1.0` means within contract; 0.0 for schedulers
+    /// without a cold tier).
+    fn tier_error_ratio(&self) -> f32 {
+        0.0
+    }
+
     /// Step until idle, then drain the terminal summaries.
     fn run_to_completion(&mut self) -> Vec<FinishedRequest> {
         while self.has_work() {
@@ -472,7 +569,7 @@ pub(crate) fn validate(req: &ServeRequest, cfg: &ServeConfig) -> Result<(), Serv
     // A request never fits if its steady-state reservation *or* its
     // prefill-time transient (the whole prompt is paged in before the
     // post-prefill prune) exceeds an empty cache.
-    let needed = pages_reserved(req.prompt.len(), budget_tokens, cfg)
+    let needed = pages_reserved_tiered(req.prompt.len(), budget_tokens, 0, cfg)
         .max(pages_needed(req.prompt.len(), 0, cfg.heads, cfg.page_size));
     if needed > cfg.max_pages {
         return Err(ServeError::PageBudgetExceeded {
@@ -869,6 +966,12 @@ impl SchedulerCore {
         self.groups.iter().map(|g| g.session.pages_in_use()).sum()
     }
 
+    /// Half-page units consumed across all engine groups (fp32 page =
+    /// 2, int8 = 1) — `2 * pages_in_use()` while nothing is demoted.
+    pub fn units_in_use(&self) -> usize {
+        self.groups.iter().map(|g| g.session.units_in_use()).sum()
+    }
+
     /// Terminal failure: `Failed` state, empty-token summary, metric.
     pub fn fail_request(&mut self, id: RequestId, req: &ServeRequest, e: ServeError) {
         set_state(&mut self.states, req, id, RequestState::Failed { error: e.clone() });
@@ -920,6 +1023,41 @@ impl ContinuousBatcher {
     /// Requests waiting for admission.
     pub fn queued(&self) -> usize {
         self.core.queue.len()
+    }
+
+    /// Peek a still-queued request by id — `None` once admission has
+    /// claimed it (or it never queued here). The router's re-routing
+    /// pass reads this to re-score a waiting request without touching
+    /// queue order.
+    pub fn queued_request(&self, id: RequestId) -> Option<&ServeRequest> {
+        self.core.queue.iter().find(|q| q.id == id).map(|q| &q.req)
+    }
+
+    /// Withdraw a still-queued request — the admission-time re-routing
+    /// primitive: a request that has not started prefill holds no
+    /// lane, pages, reservation, or prefix borrow, so removing it is
+    /// pure queue surgery and the request can be resubmitted elsewhere
+    /// with an identical stream (samplers derive from `(model_seed,
+    /// req.seed)`, never from placement). Returns `None` if the id is
+    /// not queued here (already admitted, finished, or unknown) — the
+    /// caller must treat that as "too late to migrate".
+    pub fn withdraw(&mut self, id: RequestId) -> Option<ServeRequest> {
+        let at = self.core.queue.iter().position(|q| q.id == id)?;
+        let qr = self.core.queue.remove(at).expect("position came from this queue");
+        self.core.states.remove(&id);
+        Some(qr.req)
+    }
+
+    /// Worst tier round-trip error observed by any engine group, as a
+    /// ratio of the per-row int8 bound (`scale/2` per element): ≤ 1.0
+    /// means every demoted page stayed within the quantizer's contract.
+    /// 0.0 until a demotion happens — the bench gate's accuracy probe.
+    pub fn tier_max_error_ratio(&self) -> f32 {
+        self.core
+            .groups
+            .iter()
+            .map(|g| g.session.tier_max_error_ratio())
+            .fold(0.0, f32::max)
     }
 
     /// Longest cached prompt prefix (in tokens) across this batcher's
@@ -1047,10 +1185,12 @@ impl ContinuousBatcher {
                 .prefix
                 .as_ref()
                 .and_then(|px| px.peek(&front.req.prompt));
-            let needed = match &hit {
-                Some(h) => pages_reserved_shared(plen, budget_tokens, h.shared, &self.core.cfg),
-                None => pages_reserved(plen, budget_tokens, &self.core.cfg),
-            };
+            // Tiered admission charges the compressed steady state —
+            // the concurrency lever: more lanes per fixed max_pages.
+            // With kv_tier off this is exactly the legacy reservation.
+            let shared_tokens = hit.as_ref().map(|h| h.shared).unwrap_or(0);
+            let needed =
+                pages_reserved_tiered(plen, budget_tokens, shared_tokens, &self.core.cfg);
             // Fit check, counting the prefix cache's nominal footprint
             // against the same budget; evict LRU entries under
             // pressure (never the entry about to be used).
@@ -1077,13 +1217,15 @@ impl ContinuousBatcher {
                 }
                 break; // wait for pages to drain
             }
-            if self.core.cfg.kv_policy.is_some() {
+            if self.core.cfg.kv_policy.is_some() || self.core.cfg.kv_tier.is_some() {
                 // Transient check: the whole prompt is paged in during
-                // prefill before the post-prefill prune shrinks it to
-                // the reservation. Live lanes never exceed their own
-                // reservations, so the instantaneously free pool is a
-                // safe bound; the transient resolves inside this same
-                // admission pass.
+                // prefill — at full fp32 width, before the post-prefill
+                // prune (kv_policy) or the post-decode demotion pass
+                // (kv_tier) shrinks it to the reservation. Live lanes
+                // never exceed their own reservations, so the
+                // instantaneously free pool is a safe bound; the
+                // transient resolves inside this same admission pass
+                // (policy) or by the next step's demotion (tier).
                 let transient =
                     pages_needed(plen, 0, self.core.cfg.heads, self.core.cfg.page_size);
                 if transient > self.core.groups[gi].session.pages_free() {
@@ -1123,10 +1265,13 @@ impl ContinuousBatcher {
             // a hit pins its entry against LRU eviction for the lane's
             // lifetime (the shared pages back this lane's suffix-only
             // reservation).
-            if let Some(px) = self.core.groups[gi].prefix.as_mut() {
+            let g = &mut self.core.groups[gi];
+            if let Some(px) = g.prefix.as_mut() {
                 match &hit {
                     Some(h) => {
-                        px.borrow(h.entry);
+                        // Borrowing promotes a pressure-demoted entry
+                        // back to f32 (the lane reads it hot).
+                        px.borrow(h.entry, g.session.cache_mut());
                         report.prefix_hits += 1;
                     }
                     None => px.note_miss(),
@@ -1685,7 +1830,23 @@ impl Scheduler for ContinuousBatcher {
         self.decode(&mut report);
         report.pages_pruned =
             self.core.groups.iter_mut().map(|g| g.session.take_policy_freed()).sum();
+        // Tiering pass: after the step's appends, every live lane's
+        // cold span demotes to int8 — the budget refund the compressed
+        // admission reservation counts on. Counter drain runs even
+        // without kv_tier: the radix cache demotes entries under LRU
+        // pressure (and promotes on borrow) on its own.
+        if let Some(tier) = self.core.cfg.kv_tier {
+            for g in &mut self.core.groups {
+                g.session.demote_cold(tier);
+            }
+        }
+        for g in &mut self.core.groups {
+            let (d, p) = g.session.take_tier_counts();
+            report.pages_demoted += d;
+            report.pages_promoted += p;
+        }
         report.pages_in_use = self.core.pages_in_use();
+        report.kv_units_in_use = self.core.units_in_use();
         report.live = self.live();
         report
     }
@@ -1714,6 +1875,10 @@ impl Scheduler for ContinuousBatcher {
         self.core.pages_in_use()
     }
 
+    fn tier_error_ratio(&self) -> f32 {
+        self.tier_max_error_ratio()
+    }
+
     fn prefix_stats(&self) -> PrefixCacheStats {
         let mut total = PrefixCacheStats::default();
         for g in &self.core.groups {
@@ -1723,6 +1888,8 @@ impl Scheduler for ContinuousBatcher {
                 total.misses += s.misses;
                 total.inserted += s.inserted;
                 total.evicted += s.evicted;
+                total.demoted += s.demoted;
+                total.promoted += s.promoted;
                 total.pages_nominal += s.pages_nominal;
             }
         }
@@ -1750,6 +1917,7 @@ mod tests {
             prefix_cache: None,
             prefill_chunk: 0,
             speculate: None,
+            kv_tier: None,
         }
     }
 
@@ -1844,5 +2012,181 @@ mod tests {
         core.groups[gi].return_reservation(&seq);
         assert_eq!(core.groups[gi].reserved_pages, 0);
         core.groups[gi].return_reservation(&seq); // must panic, not wrap
+    }
+
+    #[test]
+    fn tiered_reservation_discounts_cold_pages() {
+        let c = cfg(); // heads 2, page_size 4
+        // kv_tier: None is bit-for-bit the legacy accounting.
+        assert_eq!(pages_reserved_tiered(19, 5, 0, &c), pages_reserved(19, 5, &c));
+        assert_eq!(pages_reserved_tiered(19, 5, 16, &c), pages_reserved_shared(19, 5, 16, &c));
+        let t = ServeConfig {
+            kv_tier: Some(KvTierCfg { cold_after: 4, policy: TierPolicy::Lru }),
+            ..c
+        };
+        // 32 steady tokens: 28 cold -> 7 cold pages -> ⌊7/2⌋ = 3 pages
+        // refunded per head.
+        assert_eq!(pages_reserved(16, 16, &t), 16);
+        assert_eq!(pages_reserved_tiered(16, 16, 0, &t), 16 - 2 * 3);
+        // Shared-prefix pages belong to the prefix cache's nominal
+        // budget — excluded from the lane's cold discount.
+        assert_eq!(pages_reserved_shared(16, 16, 8, &t), 12);
+        assert_eq!(pages_reserved_tiered(16, 16, 8, &t), 12 - 2 * ((7 - 2) / 2));
+        // A short sequence never discounts below its hot tail.
+        assert_eq!(pages_reserved_tiered(4, 1, 0, &t), pages_reserved(4, 1, &t));
+    }
+
+    #[test]
+    fn tier_config_validation() {
+        let tier = KvTierCfg { cold_after: 4, policy: TierPolicy::Lru };
+        assert!(ServeConfig { kv_tier: Some(tier), ..cfg() }.validate().is_ok());
+        let err = ServeConfig {
+            kv_tier: Some(KvTierCfg { cold_after: 0, policy: TierPolicy::Lru }),
+            ..cfg()
+        }
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("cold_after"), "{err}");
+        let err = ServeConfig {
+            kv_tier: Some(tier),
+            speculate: Some(SpeculateConfig { draft: parse_spec("dense").unwrap(), gamma: 2 }),
+            ..cfg()
+        }
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
+        let err = ServeConfig {
+            kv_tier: Some(KvTierCfg { cold_after: 4, policy: TierPolicy::H2o }),
+            ..cfg()
+        }
+        .validate()
+        .unwrap_err();
+        assert!(err.to_string().contains("requires kv_policy"), "{err}");
+        assert!(ServeConfig {
+            kv_tier: Some(KvTierCfg { cold_after: 4, policy: TierPolicy::H2o }),
+            kv_policy: Some(PagedKvPolicy::H2o { budget: 16, recent: 4 }),
+            ..cfg()
+        }
+        .validate()
+        .is_ok());
+        // The baseline strip drops tiering with the rest.
+        assert!(ServeConfig { kv_tier: Some(tier), ..cfg() }
+            .strip_incompatible()
+            .kv_tier
+            .is_none());
+    }
+
+    fn prompt(seed: u64, len: usize, vocab: usize) -> Vec<i32> {
+        let mut r = Rng::new(seed);
+        (0..len).map(|_| r.below(vocab as u64) as i32).collect()
+    }
+
+    fn run_tokens(c: ServeConfig, prompts: &[Vec<i32>], max_new: usize) -> Vec<Vec<i32>> {
+        let mut s = ContinuousBatcher::new(c);
+        for p in prompts {
+            s.submit(ServeRequest::new(p.clone()).max_new(max_new).engine("dense")).unwrap();
+        }
+        let mut fin = s.run_to_completion();
+        fin.sort_by_key(|f| f.id);
+        fin.into_iter().map(|f| f.tokens).collect()
+    }
+
+    /// The no-demotion identity pin: with `cold_after` longer than any
+    /// sequence ever gets, tiering never fires — zero demote/promote
+    /// counters and greedy streams bit-for-bit identical to a
+    /// tier-free run.
+    #[test]
+    fn tiering_that_never_triggers_is_bit_for_bit_invisible() {
+        let prompts: Vec<Vec<i32>> = (0..3).map(|i| prompt(40 + i, 12, 32)).collect();
+        let plain = run_tokens(cfg(), &prompts, 8);
+        let tier = ServeConfig {
+            kv_tier: Some(KvTierCfg { cold_after: 128, policy: TierPolicy::Lru }),
+            ..cfg()
+        };
+        let mut s = ContinuousBatcher::new(tier);
+        for p in &prompts {
+            s.submit(ServeRequest::new(p.clone()).max_new(8).engine("dense")).unwrap();
+        }
+        let mut demoted = 0;
+        while s.has_work() {
+            let r = s.step();
+            demoted += r.pages_demoted + r.pages_promoted;
+        }
+        assert_eq!(demoted, 0, "cold_after beyond max_seq never demotes");
+        assert_eq!(s.tier_max_error_ratio(), 0.0);
+        let mut fin = s.take_finished();
+        fin.sort_by_key(|f| f.id);
+        let tokens: Vec<Vec<i32>> = fin.into_iter().map(|f| f.tokens).collect();
+        assert_eq!(tokens, plain, "untriggered tiering must not perturb streams");
+    }
+
+    /// Active LRU tiering: demotions land in `StepReport`, every
+    /// stream still finishes its full budget, and the observed
+    /// round-trip error stays within the quantizer's `scale/2` bound.
+    #[test]
+    fn tiered_serving_demotes_and_stays_within_error_bound() {
+        for tier_policy in [TierPolicy::Lru, TierPolicy::H2o] {
+            let c = ServeConfig {
+                kv_tier: Some(KvTierCfg { cold_after: 4, policy: tier_policy }),
+                kv_policy: (tier_policy == TierPolicy::H2o)
+                    .then_some(PagedKvPolicy::H2o { budget: 16, recent: 4 }),
+                ..cfg()
+            };
+            let mut s = ContinuousBatcher::new(c);
+            for i in 0..2u64 {
+                s.submit(ServeRequest::new(prompt(50 + i, 24, 32)).max_new(12).engine("dense"))
+                    .unwrap();
+            }
+            let mut demoted = 0;
+            while s.has_work() {
+                demoted += s.step().pages_demoted;
+            }
+            assert!(demoted > 0, "{tier_policy:?}: long lanes must shed cold pages");
+            assert!(
+                s.tier_max_error_ratio() <= 1.0 + 1e-3,
+                "{tier_policy:?}: dequant error ratio {} above the scale/2 bound",
+                s.tier_max_error_ratio()
+            );
+            let fin = s.take_finished();
+            assert_eq!(fin.len(), 2);
+            for f in fin {
+                assert_eq!(f.tokens.len(), 12, "tiered lanes decode their full budget");
+                assert!(matches!(f.state, RequestState::Finished { .. }));
+            }
+        }
+    }
+
+    /// The capacity lever: two requests whose fp32 reservations cannot
+    /// coexist under a tight `max_pages` are admitted **together** once
+    /// tiering charges them at the compressed steady state.
+    #[test]
+    fn tiered_admission_raises_concurrency_at_fixed_max_pages() {
+        let tight = ServeConfig { max_pages: 26, ..cfg() };
+        let prompts: Vec<Vec<i32>> = (0..2).map(|i| prompt(60 + i, 16, 32)).collect();
+        // fp32: each reserves 2·⌈32/4⌉ = 16 pages; 32 > 26 serializes.
+        let mut plain = ContinuousBatcher::new(tight);
+        for p in &prompts {
+            plain.submit(ServeRequest::new(p.clone()).max_new(16).engine("dense")).unwrap();
+        }
+        assert_eq!(plain.step().admitted, 1, "fp32 reservations head-of-line block");
+        // Tiered: 16 - ⌊7/2⌋·2 = 10 pages each; 20 <= 26 coexists.
+        let tier = ServeConfig {
+            kv_tier: Some(KvTierCfg { cold_after: 4, policy: TierPolicy::Lru }),
+            ..tight
+        };
+        let mut s = ContinuousBatcher::new(tier);
+        for p in &prompts {
+            s.submit(ServeRequest::new(p.clone()).max_new(16).engine("dense")).unwrap();
+        }
+        assert_eq!(s.step().admitted, 2, "compressed reservations admit the pair");
+        assert_eq!(s.live(), 2);
+        // Both lanes decode to completion inside the tight budget —
+        // the demotion pass keeps the physical pool under control.
+        let fin = s.run_to_completion();
+        assert_eq!(fin.len(), 2);
+        for f in &fin {
+            assert_eq!(f.tokens.len(), 16, "both lanes decode to completion inside 26 pages");
+            assert!(matches!(f.state, RequestState::Finished { .. }));
+        }
     }
 }

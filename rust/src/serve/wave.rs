@@ -289,6 +289,9 @@ impl Scheduler for WaveScheduler {
         }
         self.finalize_finished_waves(&mut report);
         report.pages_in_use = self.core.pages_in_use();
+        // Wave strips `kv_tier` (no demotion path), so every page is
+        // hot: units are exactly twice the page count.
+        report.kv_units_in_use = 2 * report.pages_in_use;
         report.live = self
             .core
             .groups
